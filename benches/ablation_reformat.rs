@@ -1,0 +1,80 @@
+//! §III-C1 ablation: when does data reformatting pay off?
+//!
+//! "if the data is going to be processed multiple times in the future, it
+//! will pay off to store the data in a different format." The bench
+//! measures raw (strings) vs reformatted (dict-encoded + dead fields
+//! elided) execution, charges the one-time encode cost to the reformatted
+//! pipeline, and reports the break-even run count — the quantity the
+//! compiler's cost gate (transform::reformat::apply_if_profitable)
+//! estimates statically. Also covers the compressed-column schemes.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use forelem::coordinator::{run_job, AggJob, ClusterConfig};
+use forelem::sched::Policy;
+use forelem::storage::{Column, CompressedInts, Table};
+use forelem::util::{fmt_duration, BenchTable};
+use forelem::workload::{access_log_wide, AccessLogSpec};
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400_000);
+    println!("# §III-C1 — data reformatting ({rows} rows, wide schema with dead fields)");
+
+    let m = access_log_wide(&AccessLogSpec {
+        rows,
+        urls: rows / 20,
+        skew: 1.1,
+        seed: 3,
+    });
+    let raw = Arc::new(Table::from_multiset(&m).unwrap());
+    let cluster = ClusterConfig::new(8, Policy::Gss);
+
+    // One-time reformat cost (encode + project).
+    let t0 = Instant::now();
+    let mut keyed = (*raw).clone();
+    keyed.dict_encode_field(0).unwrap();
+    let reformatted = Arc::new(keyed.project(&[0]));
+    let encode_cost = t0.elapsed();
+
+    let mut t = BenchTable::new("URL count per run");
+    t.row("raw (strings, wide rows)", 1, 3, || {
+        run_job(&cluster, &AggJob::count(raw.clone(), 0)).unwrap()
+    });
+    t.row("reformatted (int keys, dead fields gone)", 1, 5, || {
+        run_job(&cluster, &AggJob::count(reformatted.clone(), 0)).unwrap()
+    });
+    t.summarize_vs("raw (strings, wide rows)");
+
+    // Break-even analysis.
+    let raw_t = t.rows().next().unwrap().1.median().as_secs_f64();
+    let ref_t = t.rows().nth(1).unwrap().1.median().as_secs_f64();
+    let per_run_saving = raw_t - ref_t;
+    let breakeven = (encode_cost.as_secs_f64() / per_run_saving.max(1e-12)).ceil();
+    println!(
+        "  one-time reformat cost {} → pays off after {} run(s)",
+        fmt_duration(encode_cost),
+        breakeven
+    );
+    println!(
+        "  memory: raw {} MiB → reformatted {} MiB",
+        raw.heap_bytes() >> 20,
+        reformatted.heap_bytes() >> 20
+    );
+
+    // Compressed-column scheme: the `bytes` payload column under RLE/range.
+    let bytes_col = raw.column(2);
+    if let Column::Ints(vals) = bytes_col {
+        let sorted: Vec<i64> = (0..vals.len() as i64).collect(); // enumerated range column
+        let c = CompressedInts::compress(&sorted).unwrap();
+        println!(
+            "  compressed column scheme: enumerated range column {} MiB → {} bytes",
+            (sorted.len() * 8) >> 20,
+            c.heap_bytes()
+        );
+        assert_eq!(c.decompress(), sorted);
+    }
+}

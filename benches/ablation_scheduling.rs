@@ -1,0 +1,85 @@
+//! §III-A2/A3 ablation: loop-scheduling policies under (a) a uniform
+//! cluster, (b) a heterogeneous cluster (two nodes at 1/4 speed — the
+//! regime dynamic self-scheduling exists for), and (c) a node failure.
+//!
+//! Paper claims under test: dynamic schedules balance uneven progress;
+//! the hybrid scheme recovers from failure at chunk granularity while a
+//! static schedule forces a restart.
+
+use std::sync::Arc;
+
+use forelem::coordinator::{run_job, AggJob, ClusterConfig, Failure};
+use forelem::sched::Policy;
+use forelem::storage::Table;
+use forelem::util::BenchTable;
+use forelem::workload::{access_log, AccessLogSpec};
+
+const POLICIES: &[Policy] = &[
+    Policy::StaticBlock,
+    Policy::FixedChunk(8192),
+    Policy::Gss,
+    Policy::Trapezoid,
+    Policy::Factoring,
+    Policy::FeedbackGuided,
+    Policy::Hybrid {
+        super_chunks_per_worker: 8,
+    },
+];
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let m = access_log(&AccessLogSpec {
+        rows,
+        urls: rows / 50,
+        skew: 1.1,
+        seed: 21,
+    });
+    let mut t = Table::from_multiset(&m).unwrap();
+    t.dict_encode_field(0).unwrap();
+    let table = Arc::new(t);
+    let workers = 8;
+    println!("# §III-A2/3 — scheduling policies ({rows} rows, {workers} workers)");
+
+    // (a) uniform cluster.
+    let mut uniform = BenchTable::new("uniform cluster");
+    for &p in POLICIES {
+        let cfg = ClusterConfig::new(workers, p);
+        uniform.row(p.name(), 1, 5, || {
+            run_job(&cfg, &AggJob::count(table.clone(), 0)).unwrap()
+        });
+    }
+    uniform.summarize_vs("static");
+
+    // (b) heterogeneous: workers 0,1 run at quarter speed.
+    let mut hetero = BenchTable::new("heterogeneous cluster (2 of 8 nodes at 1/4 speed)");
+    for &p in POLICIES {
+        let cfg = ClusterConfig::new(workers, p).with_slowdown(vec![4.0, 4.0]);
+        hetero.row(p.name(), 1, 3, || {
+            run_job(&cfg, &AggJob::count(table.clone(), 0)).unwrap()
+        });
+    }
+    hetero.summarize_vs("static");
+
+    // (c) failure of one node at the start.
+    let mut fail = BenchTable::new("node 2 fails immediately");
+    for &p in POLICIES {
+        let cfg = ClusterConfig::new(workers, p).with_failure(Failure {
+            worker: 2,
+            after_chunks: 0,
+        });
+        let r = run_job(&cfg, &AggJob::count(table.clone(), 0)).unwrap();
+        println!(
+            "    {:<12} requeued={} restarts={}",
+            p.name(),
+            r.metrics.failures_recovered,
+            r.metrics.restarts
+        );
+        fail.row(p.name(), 0, 3, || {
+            run_job(&cfg, &AggJob::count(table.clone(), 0)).unwrap()
+        });
+    }
+    fail.summarize_vs("static");
+}

@@ -1,0 +1,93 @@
+//! Figure 1: one forelem join spec, different generated evaluation
+//! schemes (nested-loops scan vs hash index vs tree index).
+//!
+//! The paper's point: the IR fixes *what* to iterate; the compiler picks
+//! *how* late, from table statistics. This bench regenerates the
+//! comparison and shows where the cost model's crossover lies.
+
+use forelem::analysis::{choose_strategy, TableStats};
+use forelem::compiler::Engine;
+use forelem::prelude::*;
+use forelem::storage::StorageCatalog;
+use forelem::util::BenchTable;
+
+fn catalog(rows_a: usize, rows_b: usize, keys: usize) -> StorageCatalog {
+    let mut c = StorageCatalog::new();
+    let mut a = Multiset::new(Schema::new(vec![
+        ("b_id", DataType::Int),
+        ("field", DataType::Str),
+    ]));
+    for i in 0..rows_a as i64 {
+        a.push(vec![Value::Int(i % keys as i64), Value::str(format!("a{i}"))]);
+    }
+    let mut b = Multiset::new(Schema::new(vec![
+        ("id", DataType::Int),
+        ("field", DataType::Str),
+    ]));
+    for i in 0..rows_b as i64 {
+        b.push(vec![Value::Int(i % keys as i64), Value::str(format!("b{i}"))]);
+    }
+    c.insert_multiset("A", &a).unwrap();
+    c.insert_multiset("B", &b).unwrap();
+    c
+}
+
+fn with_strategy(p: &Program, s: Strategy) -> Program {
+    let mut p = p.clone();
+    if let Stmt::Loop(outer) = &mut p.body[0] {
+        if let Stmt::Loop(inner) = &mut outer.body[0] {
+            inner.index_set_mut().unwrap().strategy = s;
+        }
+    }
+    p
+}
+
+fn main() {
+    println!("# Figure 1 — index-set materialization schemes for the same join spec");
+    for (rows, keys) in [(2_000, 500), (20_000, 2_000), (60_000, 5_000)] {
+        let catalog = catalog(rows, keys * 2, keys);
+        let mut engine = Engine::new(catalog);
+        let compiled = engine
+            .compile("SELECT A.field, B.field FROM A JOIN B ON A.b_id = B.id")
+            .unwrap();
+        let mut table = BenchTable::new(&format!("join |A|={rows}, |B|={}, keys={keys}", keys * 2));
+        let reference = forelem::exec::run(
+            &with_strategy(&compiled.program, Strategy::Hash),
+            &engine.catalog,
+        )
+        .unwrap()
+        .result()
+        .unwrap()
+        .clone();
+        for strat in [Strategy::Scan, Strategy::Hash, Strategy::Tree] {
+            let p = with_strategy(&compiled.program, strat);
+            let catalog = &engine.catalog;
+            // Verify once, then time.
+            let out = forelem::exec::run(&p, catalog).unwrap();
+            assert!(out.result().unwrap().bag_eq(&reference), "{strat} wrong");
+            table.row(
+                &format!("{strat}"),
+                1,
+                if rows > 20_000 && strat == Strategy::Scan { 1 } else { 3 },
+                || forelem::exec::run(&p, catalog).unwrap(),
+            );
+        }
+        table.summarize_vs("scan");
+        // What the cost model itself picks at this size:
+        let stats = engine.catalog.stats("B", Some(0)).unwrap();
+        println!(
+            "  cost model chooses: {} (stats: rows={}, distinct={})",
+            choose_strategy(stats, rows as u64, false),
+            stats.rows,
+            stats.distinct_keys
+        );
+        // And the crossover: probes at which an index starts to win.
+        let crossover = (0..=20)
+            .map(|e| 1u64 << e)
+            .find(|&probes| {
+                choose_strategy(TableStats::new((keys * 2) as u64, keys as u64), probes, false)
+                    != Strategy::Scan
+            });
+        println!("  scan→index crossover at ~{crossover:?} probes");
+    }
+}

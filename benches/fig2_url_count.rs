@@ -1,0 +1,73 @@
+//! Figure 2, left group: URL access count — Hadoop vs forelem variants.
+//!
+//! Regenerates the paper's bars: hadoop / forelem-same-data /
+//! forelem-integer-keyed (+XLA) / forelem-relayout. Absolute numbers
+//! differ from DAS-4; the *shape* (who wins, roughly by how much, and
+//! that relayout adds little beyond integer keying) is the claim under
+//! test. Row count scales via BENCH_ROWS (default 500k to keep `cargo
+//! bench` turnaround reasonable; EXPERIMENTS.md records the 2M run).
+
+use std::sync::Arc;
+
+use forelem::coordinator::{run_job, AggJob, ClusterConfig};
+use forelem::exec::plan::KernelExec;
+use forelem::mapreduce::{self, HadoopConfig, MapFn, MapReduceProgram, ReduceFn};
+use forelem::runtime::Kernels;
+use forelem::sched::Policy;
+use forelem::storage::Table;
+use forelem::util::BenchTable;
+use forelem::workload::{access_log, AccessLogSpec};
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500_000);
+    let urls = (rows / 20).max(100);
+    let workers = 8;
+    println!("# Figure 2 (URL access count): {rows} rows, {urls} URLs, {workers} workers");
+
+    let m = access_log(&AccessLogSpec {
+        rows,
+        urls,
+        skew: 1.1,
+        seed: 42,
+    });
+    let table = Table::from_multiset(&m).unwrap();
+    let mut keyed = table.clone();
+    keyed.dict_encode_field(0).unwrap();
+    let relayout = keyed.project(&[0]);
+    let table = Arc::new(table);
+    let keyed = Arc::new(keyed);
+    let relayout = Arc::new(relayout);
+
+    let mr = MapReduceProgram {
+        map: MapFn::EmitKeyOne { key_field: 0 },
+        reduce: ReduceFn::CountValues,
+    };
+    let cluster = ClusterConfig::new(workers, Policy::Gss);
+
+    let mut t = BenchTable::new("URL access count");
+    t.row("hadoop", 0, 2, || {
+        mapreduce::run_hadoop(&HadoopConfig::default(), &mr, &table).unwrap()
+    });
+    t.row("forelem same-data (strings)", 1, 3, || {
+        run_job(&cluster, &AggJob::count(table.clone(), 0)).unwrap()
+    });
+    t.row("forelem integer-keyed", 1, 5, || {
+        run_job(&cluster, &AggJob::count(keyed.clone(), 0)).unwrap()
+    });
+    if let Ok(k) = Kernels::load_default() {
+        let keys: Vec<i64> = keyed.column(0).as_int_keys().unwrap();
+        let nk = keyed.column(0).dictionary().unwrap().len();
+        if nk <= forelem::exec::plan::KERNEL_KEYSPACE {
+            t.row("forelem integer-keyed via XLA", 1, 3, || {
+                k.group_count(&keys, nk).unwrap()
+            });
+        }
+    }
+    t.row("forelem full relayout", 1, 5, || {
+        run_job(&cluster, &AggJob::count(relayout.clone(), 0)).unwrap()
+    });
+    t.summarize_vs("hadoop");
+}

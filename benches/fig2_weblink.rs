@@ -1,0 +1,60 @@
+//! Figure 2, right group: reverse web-link graph — Hadoop vs forelem
+//! variants (see fig2_url_count.rs for methodology). The link table has a
+//! genuinely dead field (`source`) so the relayout variant also exercises
+//! dead-field elimination.
+
+use std::sync::Arc;
+
+use forelem::coordinator::{run_job, AggJob, ClusterConfig};
+use forelem::mapreduce::{self, HadoopConfig, MapFn, MapReduceProgram, ReduceFn};
+use forelem::sched::Policy;
+use forelem::storage::Table;
+use forelem::util::BenchTable;
+use forelem::workload::{link_graph, LinkGraphSpec};
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500_000);
+    let pages = (rows / 20).max(100);
+    let workers = 8;
+    println!("# Figure 2 (reverse web-link graph): {rows} edges, {pages} pages, {workers} workers");
+
+    let m = link_graph(&LinkGraphSpec {
+        edges: rows,
+        pages,
+        skew: 1.05,
+        seed: 43,
+    });
+    let table = Table::from_multiset(&m).unwrap();
+    let target = 1usize; // (source, target)
+    let mut keyed = table.clone();
+    keyed.dict_encode_field(target).unwrap();
+    // Relayout: dead `source` field elided + integer keyed.
+    let relayout = keyed.project(&[target]);
+    let table = Arc::new(table);
+    let keyed = Arc::new(keyed);
+    let relayout = Arc::new(relayout);
+
+    let mr = MapReduceProgram {
+        map: MapFn::EmitKeyOne { key_field: target },
+        reduce: ReduceFn::CountValues,
+    };
+    let cluster = ClusterConfig::new(workers, Policy::Gss);
+
+    let mut t = BenchTable::new("reverse web-link graph");
+    t.row("hadoop", 0, 2, || {
+        mapreduce::run_hadoop(&HadoopConfig::default(), &mr, &table).unwrap()
+    });
+    t.row("forelem same-data (strings)", 1, 3, || {
+        run_job(&cluster, &AggJob::count(table.clone(), target)).unwrap()
+    });
+    t.row("forelem integer-keyed", 1, 5, || {
+        run_job(&cluster, &AggJob::count(keyed.clone(), target)).unwrap()
+    });
+    t.row("forelem full relayout", 1, 5, || {
+        run_job(&cluster, &AggJob::count(relayout.clone(), 0)).unwrap()
+    });
+    t.summarize_vs("hadoop");
+}

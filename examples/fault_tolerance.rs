@@ -1,0 +1,60 @@
+//! §III-A3: loop scheduling as the fault-tolerance mechanism.
+//!
+//! Injects a node failure mid-computation and shows:
+//! * static schedule  → whole-job restart (the paper's caveat);
+//! * dynamic (GSS)    → only the in-flight chunk is re-queued;
+//! * hybrid           → recovery at super-chunk granularity with
+//!                      near-static overhead the rest of the time.
+//!
+//! Run: cargo run --release --example fault_tolerance
+
+use std::sync::Arc;
+
+use forelem::coordinator::{run_job, AggJob, ClusterConfig, Failure};
+use forelem::sched::Policy;
+use forelem::storage::Table;
+use forelem::util::fmt_duration;
+use forelem::workload::{access_log, AccessLogSpec};
+
+fn main() -> anyhow::Result<()> {
+    let m = access_log(&AccessLogSpec {
+        rows: 1_000_000,
+        urls: 20_000,
+        skew: 1.1,
+        seed: 5,
+    });
+    let mut t = Table::from_multiset(&m)?;
+    t.dict_encode_field(0)?;
+    let table = Arc::new(t);
+    let workers = 8;
+    let failure = Failure {
+        worker: 3,
+        after_chunks: 0,
+    };
+
+    println!("== node {} dies after {} completed chunks; {} workers, 1M rows ==\n", failure.worker, failure.after_chunks, workers);
+    for policy in [
+        Policy::StaticBlock,
+        Policy::Gss,
+        Policy::Trapezoid,
+        Policy::Hybrid {
+            super_chunks_per_worker: 8,
+        },
+    ] {
+        let cfg = ClusterConfig::new(workers, policy).with_failure(failure);
+        let r = run_job(&cfg, &AggJob::count(table.clone(), 0))?;
+        println!(
+            "{:<12} {:>12}   chunks={:<4} requeued={} whole-job-restarts={}",
+            policy.name(),
+            fmt_duration(r.metrics.elapsed),
+            r.metrics.chunks,
+            r.metrics.failures_recovered,
+            r.metrics.restarts,
+        );
+        // Correctness under failure: every variant counts every row.
+        let total: f64 = r.pairs.iter().map(|(_, n)| *n).sum();
+        assert_eq!(total as usize, 1_000_000);
+    }
+    println!("\nEvery policy produced exact counts; they differ only in recovery cost.");
+    Ok(())
+}

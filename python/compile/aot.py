@@ -1,0 +1,149 @@
+"""AOT-lower every L2 entry point to HLO text for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never runs on the
+request path.  The interchange format is HLO *text*, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and resources/aot_recipe.md).
+
+Output layout (``--out DIR``):
+
+* ``DIR/<entry>.hlo.txt``  — one HLO module per entry point;
+* ``DIR/manifest.tsv``     — one line per entry:
+  ``name<TAB>file<TAB>in0;in1;...<TAB>out`` where each spec is
+  ``dtype:dim0xdim1x...`` (e.g. ``i32:65536``).  The Rust runtime
+  (rust/src/runtime/artifacts.rs) parses exactly this format.
+
+Shape configurations are chosen to cover the Figure-2 workloads (chunked
+65536-key calls over a 131072-wide dictionary-encoded key space), the
+Pallas demo sizes, and small sizes the test suites use.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, fn, [input ShapeDtypeStruct-s], output spec string)
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _spec(dtype, *dims):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+def _fmt(dtype, *dims):
+    tag = {I32: "i32", F32: "f32"}[dtype]
+    return f"{tag}:{'x'.join(str(d) for d in dims)}"
+
+
+def entries():
+    """The artifact table: every (chunk, key-space) configuration we ship."""
+    out = []
+
+    # Scatter (large-K production) histograms and segment-sums. The 1M
+    # chunk exists to amortize the PJRT call overhead on multi-million-row
+    # tables (EXPERIMENTS.md §Perf).
+    for n, k in [(1048576, 131072), (65536, 131072), (8192, 1024), (1024, 256)]:
+        out.append(
+            (
+                f"count_scatter_{n}x{k}",
+                functools.partial(model.count_scatter, num_keys=k),
+                [_spec(I32, n)],
+                _fmt(F32, k),
+                [_fmt(I32, n)],
+            )
+        )
+        out.append(
+            (
+                f"segsum_scatter_{n}x{k}",
+                functools.partial(model.segsum_scatter, num_keys=k),
+                [_spec(I32, n), _spec(F32, n)],
+                _fmt(F32, k),
+                [_fmt(I32, n), _fmt(F32, n)],
+            )
+        )
+
+    # Pallas one-hot (TPU-adapted) variants at MXU-friendly tile sizes.
+    for n, k, block, k_tile in [(8192, 1024, 1024, 256), (1024, 256, 256, 128)]:
+        out.append(
+            (
+                f"count_onehot_{n}x{k}",
+                functools.partial(
+                    model.count_onehot, num_keys=k, block=block, k_tile=k_tile
+                ),
+                [_spec(I32, n)],
+                _fmt(F32, k),
+                [_fmt(I32, n)],
+            )
+        )
+        out.append(
+            (
+                f"segsum_onehot_{n}x{k}",
+                functools.partial(
+                    model.segsum_onehot, num_keys=k, block=block, k_tile=k_tile
+                ),
+                [_spec(I32, n), _spec(F32, n)],
+                _fmt(F32, k),
+                [_fmt(I32, n), _fmt(F32, n)],
+            )
+        )
+
+    # §III-B weighted-average fold.
+    for n in [65536, 8192, 1024]:
+        out.append(
+            (
+                f"weighted_avg_{n}",
+                model.weighted_average,
+                [_spec(F32, n), _spec(F32, n)],
+                _fmt(F32, 2),
+                [_fmt(F32, n), _fmt(F32, n)],
+            )
+        )
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="substring filter on entry names (for tests)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, in_specs, out_fmt, in_fmts in entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name}\t{fname}\t{';'.join(in_fmts)}\t{out_fmt}")
+        print(f"  {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts + manifest.tsv to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

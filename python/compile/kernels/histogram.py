@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: blocked count-by-key (histogram).
+
+This is the TPU re-think of the paper's per-partition counting loop
+(``count[Table[i].field1]++`` in the forelem intermediate, §IV):
+
+* the scalar increment loop becomes a **one-hot contraction**: a VMEM block
+  of ``BLOCK`` keys is expanded against a ``K_TILE``-wide slice of the key
+  space into a ``(BLOCK, K_TILE)`` one-hot matrix, and folded with a
+  ``ones(BLOCK) @ onehot`` vector-matrix product — the MXU-friendly form of
+  "count occurrences" (the paper's §III-C2 vectorization remark, mapped to
+  a systolic array instead of SSE/Phi lanes);
+* ``BlockSpec`` expresses the HBM->VMEM schedule the paper's generated
+  OpenMP code got from chunking: the key stream is tiled over the inner
+  grid dimension while the histogram tile stays resident in VMEM (output
+  revisiting over the innermost dimension, initialised at step 0);
+* grid = (num_keys/K_TILE, n/BLOCK) — the key-space tile is the *outer*
+  dimension so each output tile sees all its revisits consecutively, which
+  is the layout real Mosaic lowering requires.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime.  Real-TPU VMEM/MXU estimates for the
+chosen block shapes live in DESIGN.md §Perf.
+
+Complexity note: the one-hot form does O(n * num_keys) work — the right
+trade on an MXU for modest key spaces, the wrong one for 1e5+ keys.  The
+large-K production path is the scatter-based L2 graph in model.py; the
+Rust runtime picks per key-space size.  Both are validated against the
+same oracle (ref.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shapes. BLOCK is the number of keys streamed into VMEM per
+# grid step; K_TILE is the slice of the key space each output block covers.
+# VMEM per step = BLOCK*4 (keys) + BLOCK*K_TILE*4 (one-hot) + K_TILE*4
+# (accumulator) bytes; 1024x256 -> ~1.1 MiB, far under the 16 MiB budget.
+BLOCK = 1024
+K_TILE = 256
+
+
+def _count_kernel(k_tile: int, keys_ref, out_ref):
+    """One grid step: fold one key block into one histogram tile."""
+    step = pl.program_id(1)  # inner dimension: position in the key stream
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]
+    base = pl.program_id(0) * k_tile
+    lanes = base + jax.lax.iota(jnp.int32, k_tile)
+    # (BLOCK, K_TILE) one-hot; padding keys (-1 / out of range) match no lane.
+    onehot = (keys[:, None] == lanes[None, :]).astype(jnp.float32)
+    ones = jnp.ones((keys.shape[0],), jnp.float32)
+    # ones @ onehot == per-lane occurrence count for this block: the MXU form.
+    out_ref[...] += jnp.dot(ones, onehot, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "block", "k_tile"))
+def group_count(keys, *, num_keys: int, block: int = BLOCK, k_tile: int = K_TILE):
+    """Histogram of ``keys`` over ``[0, num_keys)`` as a Pallas kernel.
+
+    ``keys.shape[0]`` must be a multiple of ``block`` and ``num_keys`` a
+    multiple of ``k_tile`` (callers pad with -1, which drops out).
+    """
+    n = keys.shape[0]
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    assert num_keys % k_tile == 0, f"num_keys={num_keys} not a multiple of k_tile={k_tile}"
+    grid = (num_keys // k_tile, n // block)
+    return pl.pallas_call(
+        functools.partial(_count_kernel, k_tile),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda j, i: (i,))],
+        out_specs=pl.BlockSpec((k_tile,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((num_keys,), jnp.float32),
+        interpret=True,
+    )(keys)

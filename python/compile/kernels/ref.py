@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the *reference semantics* the Pallas kernels (histogram.py,
+segment_sum.py) are validated against in python/tests/.  They are also the
+semantics the Rust execution engine implements natively for the string
+variant of the Figure-2 workloads, so agreement here ties all three layers
+to one definition of the aggregation.
+
+Conventions shared by every kernel in this package:
+
+* keys are ``int32``; a key of ``-1`` (or any out-of-range value) is a
+  padding slot and must not contribute to any bucket;
+* counts/sums are ``float32``.  Chunks are bounded (<= 2**16 elements) so
+  per-chunk counts are exactly representable; cross-chunk accumulation is
+  done in Rust in wider types.
+"""
+
+import jax.numpy as jnp
+
+
+def _sanitize(keys, num_keys: int):
+    """Map negative (padding) keys out of range so ``mode='drop'`` drops them.
+
+    jax ``.at[]`` wraps negative indices numpy-style even under
+    ``mode='drop'``; a -1 padding slot would silently count into bucket
+    ``num_keys - 1``.  Remapping negatives to ``num_keys`` makes them
+    genuinely out-of-bounds.
+    """
+    return jnp.where(keys < 0, num_keys, keys)
+
+
+def group_count(keys, num_keys: int):
+    """counts[k] = |{ i : keys[i] == k }| for k in [0, num_keys).
+
+    Out-of-range keys (including the -1 padding convention) are dropped,
+    mirroring the one-hot kernels where such keys match no lane.
+    """
+    zeros = jnp.zeros((num_keys,), jnp.float32)
+    return zeros.at[_sanitize(keys, num_keys)].add(1.0, mode="drop")
+
+
+def group_sum(keys, values, num_keys: int):
+    """sums[k] = sum of values[i] where keys[i] == k (out-of-range dropped)."""
+    zeros = jnp.zeros((num_keys,), jnp.float32)
+    return zeros.at[_sanitize(keys, num_keys)].add(values, mode="drop")
+
+
+def weighted_average(values, weights):
+    """The paper's §III-B vertically-integrated grades example.
+
+    Returns (sum(values * weights), sum(weights)) so the caller can both
+    reproduce the paper's ``avg += grade*weight`` fold and a normalized
+    average without a second pass.
+    """
+    return jnp.dot(values, weights), jnp.sum(weights)

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: blocked segment-sum (sum-by-key).
+
+The generalisation the paper makes in §IV: replacing the counting loop's
+``count[Table[i].field1]++`` with ``sum[Table[i].field1] += Table[i].field2``
+(the MapReduce pair becomes ``(field1, field2)`` instead of ``(field1, 1)``).
+
+Structure is identical to histogram.py — same grid, same BlockSpec
+schedule, same output-revisiting accumulator — except the contraction
+folds the *value* vector instead of ones: ``values @ onehot``.  See
+histogram.py for the TPU-adaptation rationale and VMEM accounting (this
+kernel adds one BLOCK-sized f32 value block per step: +4 KiB at defaults).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .histogram import BLOCK, K_TILE
+
+
+def _segsum_kernel(k_tile: int, keys_ref, vals_ref, out_ref):
+    step = pl.program_id(1)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    base = pl.program_id(0) * k_tile
+    lanes = base + jax.lax.iota(jnp.int32, k_tile)
+    onehot = (keys[:, None] == lanes[None, :]).astype(jnp.float32)
+    # vals @ onehot: per-lane sum of values for this key block (MXU form).
+    out_ref[...] += jnp.dot(vals, onehot, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "block", "k_tile"))
+def group_sum(keys, values, *, num_keys: int, block: int = BLOCK, k_tile: int = K_TILE):
+    """Per-key sums of ``values`` as a Pallas kernel (padding keys drop)."""
+    n = keys.shape[0]
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    assert num_keys % k_tile == 0, f"num_keys={num_keys} not a multiple of k_tile={k_tile}"
+    assert values.shape == keys.shape
+    grid = (num_keys // k_tile, n // block)
+    return pl.pallas_call(
+        functools.partial(_segsum_kernel, k_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda j, i: (i,)),
+            pl.BlockSpec((block,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((k_tile,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((num_keys,), jnp.float32),
+        interpret=True,
+    )(keys, values)

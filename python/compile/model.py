@@ -1,0 +1,52 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Each entry point here corresponds to the numeric hot loop of one of the
+paper's evaluation kernels *after* the compiler's data-reformatting pass
+has made the data integer-keyed (§III-C1 / §IV).  Two families:
+
+* ``*_onehot`` — call the L1 Pallas kernels (histogram.py /
+  segment_sum.py): the TPU-adapted one-hot contraction.  O(n*K) work;
+  right for modest key spaces.
+* ``*_scatter`` — plain-XLA scatter-add: O(n) work; the production path
+  for large key spaces on the CPU PJRT backend.
+
+Both families share the oracle semantics of kernels/ref.py (padding key
+-1 drops out) so the Rust runtime can pick either per key-space size
+without changing results.
+
+Every entry point returns a SINGLE array (never a Python tuple) so the
+Rust side can uniformly unwrap the 1-tuple that ``return_tuple=True``
+lowering produces.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import histogram, ref, segment_sum
+
+
+def count_scatter(keys, *, num_keys: int):
+    """Histogram via XLA scatter-add (large-K production path)."""
+    return ref.group_count(keys, num_keys)
+
+
+def count_onehot(keys, *, num_keys: int, block: int, k_tile: int):
+    """Histogram via the L1 Pallas one-hot kernel."""
+    return histogram.group_count(keys, num_keys=num_keys, block=block, k_tile=k_tile)
+
+
+def segsum_scatter(keys, values, *, num_keys: int):
+    """Per-key sums via XLA scatter-add."""
+    return ref.group_sum(keys, values, num_keys)
+
+
+def segsum_onehot(keys, values, *, num_keys: int, block: int, k_tile: int):
+    """Per-key sums via the L1 Pallas one-hot kernel."""
+    return segment_sum.group_sum(
+        keys, values, num_keys=num_keys, block=block, k_tile=k_tile
+    )
+
+
+def weighted_average(values, weights):
+    """§III-B grades fold: returns [sum(v*w), sum(w)] as a length-2 array."""
+    dot, wsum = ref.weighted_average(values, weights)
+    return jnp.stack([dot, wsum])

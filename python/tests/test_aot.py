@@ -1,0 +1,65 @@
+"""AOT pipeline: entry table consistency, HLO text emission, manifest format."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+
+
+def test_entry_table_specs_consistent():
+    """Declared manifest spec strings must match the actual lowering specs."""
+    for name, _fn, in_specs, out_fmt, in_fmts in aot.entries():
+        assert len(in_specs) == len(in_fmts), name
+        for spec, fmt in zip(in_specs, in_fmts):
+            tag, dims = fmt.split(":")
+            want_dtype = {"i32": jnp.int32, "f32": jnp.float32}[tag]
+            assert spec.dtype == want_dtype, name
+            assert tuple(int(d) for d in dims.split("x")) == spec.shape, name
+        assert ":" in out_fmt
+
+
+def test_entry_names_unique():
+    names = [e[0] for e in aot.entries()]
+    assert len(names) == len(set(names))
+
+
+def test_lower_small_entry_to_hlo_text():
+    for name, fn, in_specs, _of, _if in aot.entries():
+        if name == "count_scatter_1024x256":
+            text = aot.to_hlo_text(jax.jit(fn).lower(*in_specs))
+            assert "ENTRY" in text and "HloModule" in text
+            assert "f32[256]" in text  # output key-space width
+            return
+    raise AssertionError("count_scatter_1024x256 missing from entry table")
+
+
+def test_output_shape_of_lowered_matches_manifest():
+    for name, fn, in_specs, out_fmt, _if in aot.entries():
+        if "1024" not in name:
+            continue  # keep the test fast: only small entries
+        out = jax.eval_shape(fn, *in_specs)
+        tag, dims = out_fmt.split(":")
+        assert out.shape == tuple(int(d) for d in dims.split("x")), name
+        assert out.dtype == {"i32": jnp.int32, "f32": jnp.float32}[tag], name
+
+
+def test_cli_writes_manifest_and_files():
+    with tempfile.TemporaryDirectory() as td:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", td, "--only", "1024x256"],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        manifest = open(os.path.join(td, "manifest.tsv")).read().strip().splitlines()
+        assert len(manifest) >= 2  # count + segsum at least
+        for line in manifest:
+            name, fname, ins, out = line.split("\t")
+            assert "1024x256" in name
+            path = os.path.join(td, fname)
+            assert os.path.exists(path)
+            assert "ENTRY" in open(path).read()

@@ -1,0 +1,110 @@
+"""L1 histogram kernel vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import histogram, ref
+
+SHAPES = [
+    # (n, num_keys, block, k_tile)
+    (256, 128, 256, 128),
+    (512, 256, 256, 128),
+    (1024, 256, 256, 256),
+    (1024, 512, 512, 128),
+    (2048, 256, 1024, 256),
+]
+
+
+def _run(keys, num_keys, block, k_tile):
+    got = histogram.group_count(
+        jnp.asarray(keys), num_keys=num_keys, block=block, k_tile=k_tile
+    )
+    want = ref.group_count(jnp.asarray(keys), num_keys)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+    return np.asarray(got)
+
+
+@pytest.mark.parametrize("n,num_keys,block,k_tile", SHAPES)
+def test_random_keys(n, num_keys, block, k_tile):
+    rng = np.random.default_rng(seed=n + num_keys)
+    keys = rng.integers(0, num_keys, size=n).astype(np.int32)
+    got = _run(keys, num_keys, block, k_tile)
+    assert got.sum() == n  # nothing dropped when all keys in range
+
+
+@pytest.mark.parametrize("n,num_keys,block,k_tile", SHAPES)
+def test_padding_keys_drop(n, num_keys, block, k_tile):
+    rng = np.random.default_rng(seed=7)
+    keys = rng.integers(-1, num_keys, size=n).astype(np.int32)
+    got = _run(keys, num_keys, block, k_tile)
+    assert got.sum() == (keys >= 0).sum()
+
+
+def test_all_same_key():
+    keys = np.full(512, 3, dtype=np.int32)
+    got = _run(keys, 128, 256, 128)
+    assert got[3] == 512 and got.sum() == 512
+
+
+def test_all_padding():
+    keys = np.full(256, -1, dtype=np.int32)
+    got = _run(keys, 128, 256, 128)
+    assert got.sum() == 0
+
+
+def test_extreme_out_of_range_values():
+    # Values far outside [0, num_keys) in both directions must drop, not wrap.
+    keys = np.array([0, 127, 128, 1 << 30, -(1 << 30), -2, 5, 5] + [-1] * 248, dtype=np.int32)
+    got = _run(keys, 128, 256, 128)
+    assert got.sum() == 4  # 0, 127, 5, 5
+    assert got[5] == 2
+
+
+def test_block_shape_invariance():
+    """The same data must produce the same histogram under any tiling."""
+    rng = np.random.default_rng(seed=42)
+    keys = rng.integers(0, 512, size=2048).astype(np.int32)
+    a = histogram.group_count(jnp.asarray(keys), num_keys=512, block=256, k_tile=128)
+    b = histogram.group_count(jnp.asarray(keys), num_keys=512, block=1024, k_tile=512)
+    c = histogram.group_count(jnp.asarray(keys), num_keys=512, block=2048, k_tile=256)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_shape_assertions():
+    keys = jnp.zeros(100, jnp.int32)
+    with pytest.raises(AssertionError):
+        histogram.group_count(keys, num_keys=128, block=256, k_tile=128)
+    with pytest.raises(AssertionError):
+        histogram.group_count(
+            jnp.zeros(256, jnp.int32), num_keys=100, block=256, k_tile=128
+        )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    keys=st.lists(st.integers(min_value=-1, max_value=127), min_size=1, max_size=256),
+)
+def test_hypothesis_arbitrary_keys(keys):
+    """Pad any key list to a block boundary; kernel must match the oracle."""
+    n = len(keys)
+    padded = np.full(256, -1, dtype=np.int32)
+    padded[:n] = np.asarray(keys, dtype=np.int32)
+    got = _run(padded, 128, 256, 128)
+    # Cross-check against a plain numpy histogram of the in-range keys.
+    want = np.zeros(128)
+    for k in keys:
+        if 0 <= k < 128:
+            want[k] += 1
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_zipfian_keys(seed):
+    """Skewed (zipf-like) key distributions — the Figure-2 regime."""
+    rng = np.random.default_rng(seed)
+    keys = np.minimum(rng.zipf(1.5, size=512) - 1, 255).astype(np.int32)
+    _run(keys, 256, 256, 128)

@@ -1,0 +1,67 @@
+"""L2 model entry points: scatter family vs oracle, weighted average."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_count_scatter_matches_numpy():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(-1, 512, size=4096).astype(np.int32)
+    got = np.asarray(model.count_scatter(jnp.asarray(keys), num_keys=512))
+    want = np.zeros(512)
+    for k in keys:
+        if k >= 0:
+            want[k] += 1
+    np.testing.assert_array_equal(got, want)
+
+
+def test_scatter_equals_onehot_family():
+    """The two artifact families must be bit-identical on counts."""
+    rng = np.random.default_rng(1)
+    keys = rng.integers(-1, 256, size=1024).astype(np.int32)
+    a = np.asarray(model.count_scatter(jnp.asarray(keys), num_keys=256))
+    b = np.asarray(
+        model.count_onehot(jnp.asarray(keys), num_keys=256, block=256, k_tile=128)
+    )
+    np.testing.assert_array_equal(a, b)
+
+
+def test_segsum_scatter_matches_oracle():
+    rng = np.random.default_rng(2)
+    keys = rng.integers(-1, 128, size=2048).astype(np.int32)
+    vals = rng.normal(size=2048).astype(np.float32)
+    got = np.asarray(model.segsum_scatter(jnp.asarray(keys), jnp.asarray(vals), num_keys=128))
+    want = np.asarray(ref.group_sum(jnp.asarray(keys), jnp.asarray(vals), 128))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_weighted_average_fold():
+    vals = np.array([8.0, 6.0, 9.0], dtype=np.float32)
+    wts = np.array([0.5, 0.25, 0.25], dtype=np.float32)
+    out = np.asarray(model.weighted_average(jnp.asarray(vals), jnp.asarray(wts)))
+    assert out.shape == (2,)
+    np.testing.assert_allclose(out[0], 7.75, rtol=1e-6)  # sum(v*w)
+    np.testing.assert_allclose(out[1], 1.0, rtol=1e-6)  # sum(w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vw=st.lists(
+        st.tuples(
+            st.floats(min_value=0, max_value=10, width=32),
+            st.floats(min_value=0, max_value=1, width=32),
+        ),
+        min_size=1,
+        max_size=128,
+    )
+)
+def test_hypothesis_weighted_average(vw):
+    vals = np.array([v for v, _ in vw], dtype=np.float32)
+    wts = np.array([w for _, w in vw], dtype=np.float32)
+    out = np.asarray(model.weighted_average(jnp.asarray(vals), jnp.asarray(wts)))
+    np.testing.assert_allclose(out[0], np.dot(vals, wts), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(out[1], wts.sum(), rtol=1e-4, atol=1e-4)

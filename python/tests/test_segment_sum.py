@@ -1,0 +1,87 @@
+"""L1 segment-sum kernel vs the pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, segment_sum
+
+SHAPES = [
+    (256, 128, 256, 128),
+    (1024, 256, 256, 256),
+    (2048, 512, 1024, 128),
+]
+
+
+def _run(keys, vals, num_keys, block, k_tile, atol=1e-3):
+    got = segment_sum.group_sum(
+        jnp.asarray(keys), jnp.asarray(vals), num_keys=num_keys, block=block, k_tile=k_tile
+    )
+    want = ref.group_sum(jnp.asarray(keys), jnp.asarray(vals), num_keys)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol)
+    return np.asarray(got)
+
+
+@pytest.mark.parametrize("n,num_keys,block,k_tile", SHAPES)
+def test_random(n, num_keys, block, k_tile):
+    rng = np.random.default_rng(seed=n)
+    keys = rng.integers(-1, num_keys, size=n).astype(np.int32)
+    vals = rng.normal(size=n).astype(np.float32)
+    _run(keys, vals, num_keys, block, k_tile)
+
+
+def test_sums_match_total():
+    rng = np.random.default_rng(seed=3)
+    keys = rng.integers(0, 128, size=512).astype(np.int32)
+    vals = rng.random(512).astype(np.float32)
+    got = _run(keys, vals, 128, 256, 128)
+    np.testing.assert_allclose(got.sum(), vals.sum(), rtol=1e-4)
+
+
+def test_padding_values_ignored():
+    keys = np.full(256, -1, dtype=np.int32)
+    keys[0] = 7
+    vals = np.full(256, 100.0, dtype=np.float32)
+    got = _run(keys, vals, 128, 256, 128)
+    assert got[7] == 100.0 and got.sum() == 100.0
+
+
+def test_negative_and_large_values():
+    keys = np.array([1, 1, 2] + [-1] * 253, dtype=np.int32)
+    vals = np.array([1e6, -1e6, -0.5] + [9.9] * 253, dtype=np.float32)
+    got = _run(keys, vals, 128, 256, 128, atol=1.0)
+    assert abs(got[1]) < 1.0 and got[2] == np.float32(-0.5)
+
+
+def test_value_dtype_is_f32():
+    out = segment_sum.group_sum(
+        jnp.zeros(256, jnp.int32), jnp.zeros(256, jnp.float32),
+        num_keys=128, block=256, k_tile=128,
+    )
+    assert out.dtype == jnp.float32
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(
+            st.integers(min_value=-1, max_value=63),
+            st.floats(min_value=-100, max_value=100, width=32),
+        ),
+        min_size=1,
+        max_size=256,
+    )
+)
+def test_hypothesis_pairs(data):
+    n = len(data)
+    keys = np.full(256, -1, dtype=np.int32)
+    vals = np.zeros(256, dtype=np.float32)
+    keys[:n] = [k for k, _ in data]
+    vals[:n] = [v for _, v in data]
+    got = _run(keys, vals, 64, 256, 64, atol=1e-2)
+    want = np.zeros(64)
+    for k, v in data:
+        if k >= 0:
+            want[k] += np.float32(v)
+    np.testing.assert_allclose(got, want, atol=1e-2)

@@ -1,0 +1,124 @@
+//! Cost model for index-set materialization and distribution decisions.
+//!
+//! The paper's compiler "determines how to actually execute the iteration
+//! specified by a forelem loop and accompanied index set" (§II). This
+//! model estimates the row-visit and build costs of each strategy given
+//! table statistics, so materialization.rs can pick scan vs hash vs tree
+//! the way Figure 1 shows.
+
+use crate::ir::Strategy;
+
+/// Statistics about one relation, supplied by the storage catalog.
+#[derive(Debug, Clone, Copy)]
+pub struct TableStats {
+    /// Number of tuples.
+    pub rows: u64,
+    /// Distinct values of the candidate key field (1 if unknown).
+    pub distinct_keys: u64,
+}
+
+impl TableStats {
+    pub fn new(rows: u64, distinct_keys: u64) -> Self {
+        TableStats {
+            rows,
+            distinct_keys: distinct_keys.max(1),
+        }
+    }
+}
+
+/// Relative per-row cost constants (calibrated on the exec engine; see
+/// EXPERIMENTS.md §Perf — only *ratios* matter for the decisions).
+const SCAN_VISIT: f64 = 1.0;
+const HASH_BUILD: f64 = 2.5;
+const HASH_PROBE: f64 = 1.5;
+const TREE_BUILD: f64 = 6.0;
+const TREE_PROBE: f64 = 4.0;
+
+/// Estimated cost of executing a filtered lookup `probes` times against a
+/// table, under each strategy.
+pub fn lookup_cost(strategy: Strategy, stats: TableStats, probes: u64) -> f64 {
+    let rows = stats.rows as f64;
+    let per_key = rows / stats.distinct_keys as f64; // expected matches/probe
+    match strategy {
+        // Every probe rescans the whole table.
+        Strategy::Scan | Strategy::Unspecified => probes as f64 * rows * SCAN_VISIT,
+        // Build once, then O(1 + matches) per probe.
+        Strategy::Hash => rows * HASH_BUILD + probes as f64 * (HASH_PROBE + per_key),
+        // Build once (sort), then O(log n + matches) per probe.
+        Strategy::Tree => {
+            rows * TREE_BUILD + probes as f64 * (TREE_PROBE * rows.log2().max(1.0) / 8.0 + per_key)
+        }
+    }
+}
+
+/// Pick the cheapest strategy for a filtered index set probed `probes`
+/// times. `need_order` forces tree when ordered iteration is required.
+pub fn choose_strategy(stats: TableStats, probes: u64, need_order: bool) -> Strategy {
+    if need_order {
+        return Strategy::Tree;
+    }
+    let candidates = [Strategy::Scan, Strategy::Hash, Strategy::Tree];
+    *candidates
+        .iter()
+        .min_by(|a, b| {
+            lookup_cost(**a, stats, probes)
+                .partial_cmp(&lookup_cost(**b, stats, probes))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+/// Estimated rows visited by a full scan of a table (used by the
+/// distribution optimizer to weigh redistribution against recompute).
+pub fn scan_cost(stats: TableStats) -> f64 {
+    stats.rows as f64 * SCAN_VISIT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_probe_prefers_scan() {
+        // One probe: building any index costs more than one scan.
+        let stats = TableStats::new(10_000, 1_000);
+        assert_eq!(choose_strategy(stats, 1, false), Strategy::Scan);
+    }
+
+    #[test]
+    fn many_probes_prefer_hash() {
+        // A join outer loop probing per tuple — the Figure-1 case.
+        let stats = TableStats::new(10_000, 1_000);
+        assert_eq!(choose_strategy(stats, 10_000, false), Strategy::Hash);
+    }
+
+    #[test]
+    fn ordered_need_forces_tree() {
+        let stats = TableStats::new(10_000, 1_000);
+        assert_eq!(choose_strategy(stats, 10_000, true), Strategy::Tree);
+    }
+
+    #[test]
+    fn hash_beats_scan_quadratic() {
+        let stats = TableStats::new(100_000, 10_000);
+        let scan = lookup_cost(Strategy::Scan, stats, 100_000);
+        let hash = lookup_cost(Strategy::Hash, stats, 100_000);
+        assert!(hash < scan / 100.0, "hash {hash} should crush scan {scan}");
+    }
+
+    #[test]
+    fn crossover_exists() {
+        // Somewhere between 1 probe and n probes the decision must flip.
+        let stats = TableStats::new(10_000, 1_000);
+        let mut flipped = false;
+        let mut prev = choose_strategy(stats, 1, false);
+        for probes in [2, 4, 8, 16, 64, 256, 1024, 8192] {
+            let cur = choose_strategy(stats, probes, false);
+            if cur != prev {
+                flipped = true;
+            }
+            prev = cur;
+        }
+        assert!(flipped, "strategy never flipped with probe count");
+    }
+}

@@ -1,0 +1,269 @@
+//! Def-Use analysis over the IR (§II: "Traditional analysis methods, such
+//! as Def-Use analysis, will detect and eliminate data access of which the
+//! results are unused, or will detect related data accesses that can be
+//! combined.")
+//!
+//! Tracks, per statement, which accumulator arrays / result multisets /
+//! scalars are *defined* (written) and *used* (read), plus which relation
+//! fields are read — the input for dead-code elimination, dead-field
+//! elimination (reformatting) and the fusion legality check.
+
+use std::collections::BTreeSet;
+
+use crate::ir::{Domain, Expr, Loop, Program, Stmt};
+
+/// Read/write sets of a statement (or subtree).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DefUse {
+    /// Arrays written (`count` in `count[x]++`).
+    pub arrays_def: BTreeSet<String>,
+    /// Arrays read.
+    pub arrays_use: BTreeSet<String>,
+    /// Result multisets appended to.
+    pub results_def: BTreeSet<String>,
+    /// Scalars written.
+    pub scalars_def: BTreeSet<String>,
+    /// Scalars/loop-vars read.
+    pub scalars_use: BTreeSet<String>,
+    /// Relation fields read, as `(relation-cursor-unresolved) field` pairs:
+    /// `(relation, field)` once cursors are resolved via loop domains.
+    pub fields_use: BTreeSet<(String, String)>,
+    /// Relations iterated.
+    pub relations_use: BTreeSet<String>,
+}
+
+impl DefUse {
+    pub fn merge(&mut self, other: &DefUse) {
+        self.arrays_def.extend(other.arrays_def.iter().cloned());
+        self.arrays_use.extend(other.arrays_use.iter().cloned());
+        self.results_def.extend(other.results_def.iter().cloned());
+        self.scalars_def.extend(other.scalars_def.iter().cloned());
+        self.scalars_use.extend(other.scalars_use.iter().cloned());
+        self.fields_use.extend(other.fields_use.iter().cloned());
+        self.relations_use.extend(other.relations_use.iter().cloned());
+    }
+
+    /// Do two statement subtrees conflict (write/write or read/write on any
+    /// shared array, result or scalar)? Loops that do NOT conflict can be
+    /// freely reordered — the §III-A4 statement-reordering legality test.
+    pub fn conflicts_with(&self, other: &DefUse) -> bool {
+        let ww = |a: &BTreeSet<String>, b: &BTreeSet<String>| a.intersection(b).next().is_some();
+        ww(&self.arrays_def, &other.arrays_def)
+            || ww(&self.arrays_def, &other.arrays_use)
+            || ww(&self.arrays_use, &other.arrays_def)
+            || ww(&self.results_def, &other.results_def)
+            || ww(&self.scalars_def, &other.scalars_def)
+            || ww(&self.scalars_def, &other.scalars_use)
+            || ww(&self.scalars_use, &other.scalars_def)
+    }
+}
+
+/// Compute def-use sets for one statement subtree.
+///
+/// `cursors` maps in-scope loop variables to the relation they iterate, so
+/// `A[i].field` can be attributed to relation `A`.
+pub fn stmt_defuse(s: &Stmt, cursors: &[(String, String)]) -> DefUse {
+    let mut du = DefUse::default();
+    collect(s, &mut cursors.to_vec(), &mut du);
+    du
+}
+
+/// Def-use of a whole program body.
+pub fn program_defuse(p: &Program) -> DefUse {
+    let mut du = DefUse::default();
+    let mut cursors = Vec::new();
+    for s in &p.body {
+        collect(s, &mut cursors, &mut du);
+    }
+    du
+}
+
+fn collect(s: &Stmt, cursors: &mut Vec<(String, String)>, du: &mut DefUse) {
+    let use_expr = |e: &Expr, cursors: &[(String, String)], du: &mut DefUse| {
+        e.walk(&mut |sub| match sub {
+            Expr::Var(v) => {
+                du.scalars_use.insert(v.clone());
+            }
+            Expr::Field { var, field } => {
+                if let Some((_, rel)) = cursors.iter().rev().find(|(c, _)| c == var) {
+                    du.fields_use.insert((rel.clone(), field.clone()));
+                }
+                du.scalars_use.insert(var.clone());
+            }
+            Expr::ArrayRef { array, .. } => {
+                du.arrays_use.insert(array.clone());
+            }
+            _ => {}
+        });
+    };
+
+    match s {
+        Stmt::Loop(l) => {
+            let rel = domain_relation(l);
+            match &l.domain {
+                Domain::IndexSet(ix) => {
+                    du.relations_use.insert(ix.relation.clone());
+                    if let Some((field, v)) = &ix.field_filter {
+                        du.fields_use.insert((ix.relation.clone(), field.clone()));
+                        use_expr(v, cursors, du);
+                    }
+                    if let Some(d) = &ix.distinct {
+                        du.fields_use.insert((ix.relation.clone(), d.clone()));
+                    }
+                    if let Some(p) = &ix.partition {
+                        use_expr(&p.part, cursors, du);
+                        use_expr(&p.parts, cursors, du);
+                    }
+                }
+                Domain::Range { lo, hi } => {
+                    use_expr(lo, cursors, du);
+                    use_expr(hi, cursors, du);
+                }
+                Domain::ValuePartition {
+                    relation,
+                    field,
+                    part,
+                    parts,
+                } => {
+                    du.relations_use.insert(relation.clone());
+                    du.fields_use.insert((relation.clone(), field.clone()));
+                    use_expr(part, cursors, du);
+                    use_expr(parts, cursors, du);
+                }
+                Domain::DistinctValues { relation, field } => {
+                    du.relations_use.insert(relation.clone());
+                    du.fields_use.insert((relation.clone(), field.clone()));
+                }
+            }
+            cursors.push((l.var.clone(), rel.unwrap_or_default()));
+            for b in &l.body {
+                collect(b, cursors, du);
+            }
+            cursors.pop();
+        }
+        Stmt::Accum {
+            array,
+            indices,
+            value,
+            ..
+        } => {
+            du.arrays_def.insert(array.clone());
+            // An accumulation also reads the old value.
+            du.arrays_use.insert(array.clone());
+            for i in indices {
+                use_expr(i, cursors, du);
+            }
+            use_expr(value, cursors, du);
+        }
+        Stmt::ResultUnion { result, tuple } => {
+            du.results_def.insert(result.clone());
+            for e in tuple {
+                use_expr(e, cursors, du);
+            }
+        }
+        Stmt::Assign { var, value } => {
+            du.scalars_def.insert(var.clone());
+            use_expr(value, cursors, du);
+        }
+        Stmt::If { cond, then, els } => {
+            use_expr(cond, cursors, du);
+            for b in then {
+                collect(b, cursors, du);
+            }
+            for b in els {
+                collect(b, cursors, du);
+            }
+        }
+        Stmt::Print { args, .. } => {
+            for a in args {
+                use_expr(a, cursors, du);
+            }
+        }
+    }
+}
+
+fn domain_relation(l: &Loop) -> Option<String> {
+    match &l.domain {
+        Domain::IndexSet(ix) => Some(ix.relation.clone()),
+        Domain::DistinctValues { relation, .. } => Some(relation.clone()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Expr, IndexSet, Loop, Stmt};
+
+    fn count_loop(array: &str, field: &str) -> Stmt {
+        Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![Stmt::increment(array, vec![Expr::field("i", field)])],
+        ))
+    }
+
+    #[test]
+    fn accum_defines_and_uses_array() {
+        let du = stmt_defuse(&count_loop("count", "url"), &[]);
+        assert!(du.arrays_def.contains("count"));
+        assert!(du.arrays_use.contains("count"));
+        assert!(du.fields_use.contains(&("T".into(), "url".into())));
+        assert!(du.relations_use.contains("T"));
+    }
+
+    #[test]
+    fn independent_loops_do_not_conflict() {
+        let a = stmt_defuse(&count_loop("c1", "f1"), &[]);
+        let b = stmt_defuse(&count_loop("c2", "f2"), &[]);
+        assert!(!a.conflicts_with(&b));
+    }
+
+    #[test]
+    fn same_array_conflicts() {
+        let a = stmt_defuse(&count_loop("c", "f1"), &[]);
+        let b = stmt_defuse(&count_loop("c", "f2"), &[]);
+        assert!(a.conflicts_with(&b));
+    }
+
+    #[test]
+    fn reader_conflicts_with_writer() {
+        let w = stmt_defuse(&count_loop("c", "f"), &[]);
+        let r = stmt_defuse(
+            &Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::distinct_of("T", "f"),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![Expr::array("c", vec![Expr::field("i", "f")])],
+                )],
+            )),
+            &[],
+        );
+        assert!(w.conflicts_with(&r));
+        // Two result writers to the same result also conflict (order matters
+        // for bag semantics only if dedup'd; we stay conservative).
+        assert!(r.conflicts_with(&r));
+    }
+
+    #[test]
+    fn cursor_resolution_through_nesting() {
+        let s = Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::Loop(Loop::forelem(
+                "j",
+                IndexSet::filtered("B", "id", Expr::field("i", "b_id")),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![Expr::field("i", "x"), Expr::field("j", "y")],
+                )],
+            ))],
+        ));
+        let du = stmt_defuse(&s, &[]);
+        assert!(du.fields_use.contains(&("A".into(), "x".into())));
+        assert!(du.fields_use.contains(&("B".into(), "y".into())));
+        assert!(du.fields_use.contains(&("A".into(), "b_id".into())));
+        assert!(du.fields_use.contains(&("B".into(), "id".into())));
+    }
+}

@@ -1,0 +1,209 @@
+//! Dependence tests between adjacent loops — the legality oracle for
+//! statement reordering and Loop Fusion (§III-A4).
+//!
+//! The paper reorders two parallelized counting loops next to each other
+//! "because these loops do not have a dependency on the other loops";
+//! this module decides exactly that from def-use sets.
+
+use crate::ir::{Domain, Loop, LoopKind, Stmt};
+
+use super::defuse::stmt_defuse;
+
+/// Can `a` and `b` (two statements in the same body) be swapped?
+pub fn can_reorder(a: &Stmt, b: &Stmt) -> bool {
+    let da = stmt_defuse(a, &[]);
+    let db = stmt_defuse(b, &[]);
+    !da.conflicts_with(&db)
+}
+
+/// Can two adjacent loops be fused into one?
+///
+/// Requirements (conservative):
+/// * same kind;
+/// * identical iteration domain (same index set / same range bounds /
+///   same value-partition source);
+/// * bodies don't carry a cross-iteration dependence through an array
+///   indexed differently — approximated by requiring the bodies not to
+///   write any array/result the other body reads or writes *unless* the
+///   domain is identical, in which case iteration-wise interleaving is
+///   exactly the sequential execution of both bodies for each element.
+///
+/// With identical domains, fusing `for x { A } ; for x { B }` into
+/// `for x { A; B }` is legal when B does not read state A writes *for a
+/// different iteration point*. Our accumulator arrays are only read back
+/// by reduction loops (distinct iteration), never inside the producing
+/// loop, so the body-level check reduces to: B must not read any array A
+/// writes (and vice versa for anti-dependence), and they must not write
+/// the same result multiset (which would change interleaving order — but
+/// multisets are order-free, so result/result is allowed).
+pub fn can_fuse(a: &Loop, b: &Loop) -> bool {
+    if a.kind != b.kind {
+        return false;
+    }
+    if !same_domain(&a.domain, &b.domain) {
+        return false;
+    }
+    let da = stmt_defuse(&Stmt::Loop(a.clone()), &[]);
+    let db = stmt_defuse(&Stmt::Loop(b.clone()), &[]);
+    // Flow/anti dependences through arrays forbid fusion; shared scalar
+    // writes likewise. Shared *result* appends are fine (bag semantics).
+    let arrays_conflict = da
+        .arrays_def
+        .intersection(&db.arrays_use)
+        .next()
+        .is_some()
+        || db.arrays_def.intersection(&da.arrays_use).next().is_some()
+        || da.arrays_def.intersection(&db.arrays_def).next().is_some();
+    let scalars_conflict = da
+        .scalars_def
+        .intersection(&db.scalars_def)
+        .next()
+        .is_some()
+        || da.scalars_def.intersection(&db.scalars_use).next().is_some()
+        || db.scalars_def.intersection(&da.scalars_use).next().is_some();
+    !arrays_conflict && !scalars_conflict
+}
+
+/// Structural domain equality modulo the loop variable name.
+pub fn same_domain(a: &Domain, b: &Domain) -> bool {
+    match (a, b) {
+        (Domain::IndexSet(x), Domain::IndexSet(y)) => {
+            x.relation == y.relation
+                && x.field_filter == y.field_filter
+                && x.distinct == y.distinct
+                && x.partition == y.partition
+        }
+        (Domain::Range { lo: a0, hi: a1 }, Domain::Range { lo: b0, hi: b1 }) => {
+            a0 == b0 && a1 == b1
+        }
+        (
+            Domain::ValuePartition {
+                relation: r1,
+                field: f1,
+                part: p1,
+                parts: n1,
+            },
+            Domain::ValuePartition {
+                relation: r2,
+                field: f2,
+                part: p2,
+                parts: n2,
+            },
+        ) => r1 == r2 && f1 == f2 && p1 == p2 && n1 == n2,
+        (
+            Domain::DistinctValues {
+                relation: r1,
+                field: f1,
+            },
+            Domain::DistinctValues {
+                relation: r2,
+                field: f2,
+            },
+        ) => r1 == r2 && f1 == f2,
+        _ => false,
+    }
+}
+
+/// Is this loop parallel-safe: a forelem/forall whose body carries no
+/// loop-carried dependence? Accumulator updates with commutative ops and
+/// result appends are reduction-style and parallelize with per-partition
+/// privatization (what the data-partitioning transforms generate), so the
+/// check is that the body contains no scalar assignment (non-reducible
+/// state) and no nested read of an array it also writes at a *different*
+/// subscript. We approximate the latter conservatively: any `Set`
+/// accumulation blocks parallelization.
+pub fn is_parallelizable(l: &Loop) -> bool {
+    if l.kind == LoopKind::For {
+        return false;
+    }
+    let mut ok = true;
+    for s in &l.body {
+        s.walk(&mut |sub| match sub {
+            Stmt::Assign { .. } => ok = false,
+            Stmt::Accum { op, .. } if *op == crate::ir::AccumOp::Set => ok = false,
+            _ => {}
+        });
+    }
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AccumOp, Expr, IndexSet, Stmt};
+
+    fn count(array: &str, field: &str) -> Loop {
+        Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![Stmt::increment(array, vec![Expr::field("i", field)])],
+        )
+    }
+
+    fn reduce(array: &str, field: &str) -> Loop {
+        Loop::forelem(
+            "i",
+            IndexSet::distinct_of("T", field),
+            vec![Stmt::result_union(
+                "R",
+                vec![
+                    Expr::field("i", field),
+                    Expr::array(array, vec![Expr::field("i", field)]),
+                ],
+            )],
+        )
+    }
+
+    #[test]
+    fn independent_counting_loops_reorder_and_fuse() {
+        // The §III-A4 case: two counting loops over the same table on
+        // different fields.
+        let a = count("count1", "field1");
+        let b = count("count2", "field2");
+        assert!(can_reorder(&Stmt::Loop(a.clone()), &Stmt::Loop(b.clone())));
+        assert!(can_fuse(&a, &b));
+    }
+
+    #[test]
+    fn producer_consumer_cannot_fuse_or_reorder() {
+        let w = count("count1", "field1");
+        let r = reduce("count1", "field1");
+        assert!(!can_reorder(&Stmt::Loop(w.clone()), &Stmt::Loop(r.clone())));
+        // Different domains anyway (distinct vs all).
+        assert!(!can_fuse(&w, &r));
+    }
+
+    #[test]
+    fn counting_loop_can_jump_over_unrelated_reduce() {
+        // count2's loop vs count1's reduce loop — the §III-A4 reordering.
+        let c2 = count("count2", "field2");
+        let r1 = reduce("count1", "field1");
+        assert!(can_reorder(&Stmt::Loop(c2), &Stmt::Loop(r1)));
+    }
+
+    #[test]
+    fn different_relations_do_not_fuse() {
+        let a = count("c1", "f");
+        let mut b = count("c2", "f");
+        if let Domain::IndexSet(ix) = &mut b.domain {
+            ix.relation = "U".into();
+        }
+        assert!(!can_fuse(&a, &b));
+    }
+
+    #[test]
+    fn parallelizable_judgement() {
+        assert!(is_parallelizable(&count("c", "f")));
+        let mut l = count("c", "f");
+        l.body.push(Stmt::assign("tmp", Expr::int(1)));
+        assert!(!is_parallelizable(&l));
+        let mut l2 = count("c", "f");
+        l2.body = vec![Stmt::accum(
+            "c",
+            vec![Expr::field("i", "f")],
+            AccumOp::Set,
+            Expr::int(1),
+        )];
+        assert!(!is_parallelizable(&l2));
+    }
+}

@@ -1,0 +1,11 @@
+//! Analyses over the single intermediate representation: def-use (§II),
+//! dependence tests for reordering/fusion legality (§III-A4), and the
+//! cost model driving index-set materialization (§II, Figure 1).
+
+pub mod cost;
+pub mod defuse;
+pub mod dependence;
+
+pub use cost::{choose_strategy, lookup_cost, scan_cost, TableStats};
+pub use defuse::{program_defuse, stmt_defuse, DefUse};
+pub use dependence::{can_fuse, can_reorder, is_parallelizable, same_domain};

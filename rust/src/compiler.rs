@@ -1,0 +1,499 @@
+//! The end-to-end compiler driver: source → single IR → transformation
+//! pipeline → (optional) parallelization + reformatting → execution.
+//!
+//! `Engine` is the embedder-facing API the examples and the CLI use: it
+//! owns the storage catalog, the optional XLA kernel runtime, and the
+//! compilation options, and exposes one-call `sql()` / `explain()` /
+//! `sql_distributed()` entry points.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{AggJob, ClusterConfig, JobResult};
+use crate::distrib::DistributionPlan;
+use crate::exec::{self, Output};
+use crate::ir::{pretty, Multiset, Program};
+use crate::runtime::Kernels;
+use crate::sql;
+use crate::storage::StorageCatalog;
+use crate::transform::{self, Pass, PassCtx, ReformatPlan, Trace};
+
+/// Reformatting policy (§III-C1's cost gate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReformatMode {
+    /// Never touch the stored data.
+    Off,
+    /// Apply when amortized over this many expected runs.
+    Auto { expected_runs: u64 },
+    /// Always apply (the Figure-2 "integer keyed" variants).
+    Force,
+}
+
+/// Compilation options.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// Parallelize to this many processors (1 = sequential).
+    pub processors: usize,
+    /// Indirect-partitioning field (None → direct blocking).
+    pub partition_field: Option<String>,
+    pub reformat: ReformatMode,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            processors: 1,
+            partition_field: None,
+            reformat: ReformatMode::Off,
+        }
+    }
+}
+
+/// Result post-processing carried outside the (order-free) IR:
+/// `ORDER BY` + `LIMIT` applied to the result multiset after execution.
+#[derive(Debug, Clone)]
+pub struct PostProcess {
+    /// Field id within the result schema.
+    pub sort_field: usize,
+    pub descending: bool,
+    pub limit: Option<usize>,
+}
+
+/// A compiled query with full provenance.
+pub struct Compiled {
+    pub program: Program,
+    pub trace: Trace,
+    pub reformat: Option<ReformatPlan>,
+    pub distribution: Option<DistributionPlan>,
+    pub post: Option<PostProcess>,
+}
+
+/// Apply ORDER BY / LIMIT to a result multiset.
+pub fn apply_post(m: &mut Multiset, post: &PostProcess) {
+    let f = post.sort_field;
+    m.rows_mut().sort_by(|a, b| {
+        let ord = a[f].cmp(&b[f]);
+        if post.descending {
+            ord.reverse()
+        } else {
+            ord
+        }
+    });
+    if let Some(k) = post.limit {
+        m.rows_mut().truncate(k);
+    }
+}
+
+/// The embedder API.
+pub struct Engine {
+    pub catalog: StorageCatalog,
+    pub kernels: Option<Kernels>,
+    pub options: CompileOptions,
+}
+
+impl Engine {
+    pub fn new(catalog: StorageCatalog) -> Self {
+        Engine {
+            catalog,
+            kernels: None,
+            options: CompileOptions::default(),
+        }
+    }
+
+    /// Attach the XLA kernel runtime (integer-keyed hot path).
+    pub fn with_kernels(mut self, k: Kernels) -> Self {
+        self.kernels = Some(k);
+        self
+    }
+
+    pub fn with_options(mut self, o: CompileOptions) -> Self {
+        self.options = o;
+        self
+    }
+
+    /// Compile a SQL query through the full pipeline. May rewrite the
+    /// stored tables when reformatting is enabled.
+    pub fn compile(&mut self, query: &str) -> Result<Compiled> {
+        let select = sql::parse(query)?;
+        let mut program = sql::lower(&select, &self.catalog.schemas())?;
+
+        // ORDER BY / LIMIT live outside the order-free IR: resolve the
+        // sort column against the result schema now, apply after
+        // execution (a tree-index-backed ordered emit in spirit).
+        let post = match (&select.order_by, select.limit) {
+            (None, None) => None,
+            (order, limit) => {
+                let schema = program
+                    .results
+                    .values()
+                    .next()
+                    .context("query has no result to order/limit")?;
+                let (sort_field, descending) = match order {
+                    Some((name, desc)) => (
+                        schema
+                            .field_id(name)
+                            .with_context(|| format!("ORDER BY unknown column `{name}`"))?,
+                        *desc,
+                    ),
+                    None => (0, false),
+                };
+                Some(PostProcess {
+                    sort_field,
+                    descending,
+                    limit,
+                })
+            }
+        };
+
+        // Reformat decision happens BEFORE materialization so strategy
+        // costs see the final layout.
+        let reformat = match self.options.reformat {
+            ReformatMode::Off => None,
+            ReformatMode::Auto { expected_runs } => {
+                let plan = transform::plan_reformat(&program);
+                let applied = transform::apply_if_profitable(
+                    &plan,
+                    &mut program,
+                    &mut self.catalog,
+                    expected_runs,
+                )?;
+                applied.then_some(plan)
+            }
+            ReformatMode::Force => {
+                let plan = transform::plan_reformat(&program);
+                transform::apply_reformat(&plan, &mut program, &mut self.catalog)?;
+                Some(plan)
+            }
+        };
+
+        // Classic pipeline.
+        let passes = transform::standard_pipeline();
+        let refs: Vec<&dyn Pass> = passes.iter().map(|b| b.as_ref()).collect();
+        let ctx = PassCtx::new()
+            .with_catalog(&self.catalog)
+            .with_processors(self.options.processors);
+        let mut trace = transform::run_pipeline(&mut program, &refs, &ctx)?;
+
+        // Parallelization + distribution optimization.
+        let distribution = if self.options.processors > 1 {
+            match &self.options.partition_field {
+                Some(field) => {
+                    // Indirect partitioning of the first eligible loop.
+                    let pass = transform::IndirectPartition {
+                        field: field.clone(),
+                    };
+                    let changed = pass.run(&mut program, &ctx)?;
+                    trace.steps.push(("indirect-partition".into(), changed));
+                }
+                None => {
+                    let changed = transform::DirectPartition.run(&mut program, &ctx)?;
+                    trace.steps.push(("direct-partition".into(), changed));
+                }
+            }
+            Some(crate::distrib::optimize(&mut program)?)
+        } else {
+            None
+        };
+
+        crate::ir::validate(&program)?;
+        Ok(Compiled {
+            program,
+            trace,
+            reformat,
+            distribution,
+            post,
+        })
+    }
+
+    /// Compile + execute in-process (compiled idioms + kernels when
+    /// available).
+    pub fn sql(&mut self, query: &str) -> Result<Output> {
+        let compiled = self.compile(query)?;
+        self.execute(&compiled)
+    }
+
+    pub fn execute(&self, compiled: &Compiled) -> Result<Output> {
+        let mut out = exec::run_compiled(
+            &compiled.program,
+            &self.catalog,
+            self.kernels
+                .as_ref()
+                .map(|k| k as &dyn crate::exec::plan::KernelExec),
+        )?;
+        if let Some(post) = &compiled.post {
+            for m in out.results.values_mut() {
+                apply_post(m, post);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Compile + execute a recognized aggregate on the simulated cluster.
+    pub fn sql_distributed(
+        &mut self,
+        query: &str,
+        cluster: &ClusterConfig,
+    ) -> Result<(JobResult, Multiset)> {
+        // The coordinator owns parallelization (partitioning + chunked
+        // scheduling); compile the sequential idiom form for recognition.
+        let saved = self.options.processors;
+        self.options.processors = 1;
+        let compiled = self.compile(query);
+        self.options.processors = saved;
+        let compiled = compiled?;
+        let Some(idiom) = exec::recognize(&compiled.program) else {
+            bail!("query does not lower to a distributable aggregate idiom");
+        };
+        let (table_name, key_field, result) = match &idiom {
+            exec::Idiom::GroupCount {
+                table,
+                key_field,
+                result,
+            } => (table.clone(), key_field.clone(), result.clone()),
+            exec::Idiom::GroupSum {
+                table,
+                key_field,
+                result,
+                ..
+            } => (table.clone(), key_field.clone(), result.clone()),
+        };
+        let table = self.catalog.get(&table_name)?.clone();
+        let kf = table
+            .schema
+            .field_id(&key_field)
+            .context("key field missing")?;
+        let job = match &idiom {
+            exec::Idiom::GroupCount { .. } => AggJob::count(table, kf),
+            exec::Idiom::GroupSum { val_field, .. } => {
+                let vf = self
+                    .catalog
+                    .get(&table_name)?
+                    .schema
+                    .field_id(val_field)
+                    .context("val field missing")?;
+                AggJob::sum(self.catalog.get(&table_name)?.clone(), kf, vf)
+            }
+        };
+        let r = crate::coordinator::run_job(cluster, &job)?;
+        let schema = compiled.program.results[&result].clone();
+        let mut m = r.to_multiset(schema);
+        if let Some(post) = &compiled.post {
+            apply_post(&mut m, post);
+        }
+        Ok((r, m))
+    }
+
+    /// Human-readable compilation report.
+    pub fn explain(&mut self, query: &str) -> Result<String> {
+        let compiled = self.compile(query)?;
+        let mut out = String::new();
+        out.push_str(&pretty::program(&compiled.program));
+        out.push_str("\n-- passes applied: ");
+        out.push_str(&compiled.trace.changed_passes().join(", "));
+        if let Some(r) = &compiled.reformat {
+            out.push_str(&format!("\n-- reformat: {:?}", r.relations));
+        }
+        if let Some(d) = &compiled.distribution {
+            out.push_str(&format!(
+                "\n-- distribution: {:?} redistributions={}",
+                d.resident,
+                d.redistribution_count()
+            ));
+        }
+        out.push('\n');
+        Ok(out)
+    }
+
+    /// Convenience for tests/examples: register a logical multiset.
+    pub fn register(&mut self, name: &str, m: &Multiset) -> Result<()> {
+        self.catalog.insert_multiset(name, m)
+    }
+
+    /// Shared handle to a stored table.
+    pub fn table(&self, name: &str) -> Result<Arc<crate::storage::Table>> {
+        Ok(self.catalog.get(name)?.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Policy;
+    use crate::workload::{access_log, AccessLogSpec};
+
+    fn engine(rows: usize) -> Engine {
+        let m = access_log(&AccessLogSpec {
+            rows,
+            urls: 50,
+            skew: 1.1,
+            seed: 9,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        Engine::new(c)
+    }
+
+    const Q: &str = "SELECT url, COUNT(url) FROM access GROUP BY url";
+
+    #[test]
+    fn sequential_compile_and_run() {
+        let mut e = engine(2000);
+        let out = e.sql(Q).unwrap();
+        assert_eq!(out.result().unwrap().len(), 50);
+    }
+
+    #[test]
+    fn forced_reformat_dict_encodes_and_preserves_results() {
+        let mut plain = engine(2000);
+        let reference = plain.sql(Q).unwrap();
+
+        let mut e = engine(2000);
+        e.options.reformat = ReformatMode::Force;
+        let out = e.sql(Q).unwrap();
+        assert!(out.result().unwrap().bag_eq(reference.result().unwrap()));
+        // Catalog now holds an integer-keyed table.
+        let t = e.table("access").unwrap();
+        assert!(t.column(0).dictionary().is_some());
+    }
+
+    #[test]
+    fn parallel_compile_produces_forall_and_same_results() {
+        let mut seq = engine(2000);
+        let reference = seq.sql(Q).unwrap();
+
+        let mut e = engine(2000);
+        e.options.processors = 4;
+        let compiled = e.compile(Q).unwrap();
+        let text = pretty::program(&compiled.program);
+        assert!(text.contains("forall"), "{text}");
+        let out = exec::run(&compiled.program, &e.catalog).unwrap();
+        assert!(out.result().unwrap().bag_eq(reference.result().unwrap()));
+    }
+
+    #[test]
+    fn distributed_execution_matches_in_process() {
+        let mut e = engine(5000);
+        e.options.reformat = ReformatMode::Force;
+        let reference = e.sql(Q).unwrap();
+        let (_r, m) = e
+            .sql_distributed(Q, &ClusterConfig::new(4, Policy::Gss))
+            .unwrap();
+        assert!(m.bag_eq(reference.result().unwrap()), "{m:?}");
+    }
+
+    #[test]
+    fn explain_mentions_passes() {
+        let mut e = engine(500);
+        e.options.processors = 2;
+        let text = e.explain(Q).unwrap();
+        assert!(text.contains("passes applied"), "{text}");
+        assert!(text.contains("materialize") || text.contains("direct-partition"), "{text}");
+    }
+
+    #[test]
+    fn auto_reformat_respects_cost_gate() {
+        let mut e = engine(500);
+        e.options.reformat = ReformatMode::Auto { expected_runs: 1 };
+        let _ = e.sql(Q).unwrap();
+        assert!(e.table("access").unwrap().column(0).dictionary().is_none());
+        let mut e2 = engine(500);
+        e2.options.reformat = ReformatMode::Auto { expected_runs: 1000 };
+        let _ = e2.sql(Q).unwrap();
+        assert!(e2.table("access").unwrap().column(0).dictionary().is_some());
+    }
+}
+
+#[cfg(test)]
+mod order_limit_tests {
+    use super::*;
+    use crate::ir::Value;
+    use crate::sched::Policy;
+    use crate::workload::{access_log, AccessLogSpec};
+
+    fn engine() -> Engine {
+        let m = access_log(&AccessLogSpec {
+            rows: 5_000,
+            urls: 40,
+            skew: 1.2,
+            seed: 4,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        Engine::new(c)
+    }
+
+    #[test]
+    fn top_k_urls_by_count() {
+        let mut e = engine();
+        let out = e
+            .sql("SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 5")
+            .unwrap();
+        let r = out.result().unwrap();
+        assert_eq!(r.len(), 5);
+        // Rows are non-increasing in count, and the first is the maximum.
+        let counts: Vec<i64> = r.rows().iter().map(|row| row[1].as_int().unwrap()).collect();
+        assert!(counts.windows(2).all(|w| w[0] >= w[1]), "{counts:?}");
+        let full = e
+            .sql("SELECT url, COUNT(url) AS n FROM access GROUP BY url")
+            .unwrap();
+        let max = full
+            .result()
+            .unwrap()
+            .rows()
+            .iter()
+            .map(|row| row[1].as_int().unwrap())
+            .max()
+            .unwrap();
+        assert_eq!(counts[0], max);
+    }
+
+    #[test]
+    fn order_by_key_ascending() {
+        let mut e = engine();
+        let out = e
+            .sql("SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY url ASC")
+            .unwrap();
+        let keys: Vec<String> = out
+            .result()
+            .unwrap()
+            .rows()
+            .iter()
+            .map(|r| r[0].to_string())
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn limit_without_order() {
+        let mut e = engine();
+        let out = e.sql("SELECT url FROM access LIMIT 7").unwrap();
+        assert_eq!(out.result().unwrap().len(), 7);
+    }
+
+    #[test]
+    fn order_limit_applies_to_distributed_results() {
+        let mut e = engine();
+        let (_, m) = e
+            .sql_distributed(
+                "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 3",
+                &ClusterConfig::new(4, Policy::Gss),
+            )
+            .unwrap();
+        assert_eq!(m.len(), 3);
+        let counts: Vec<Value> = m.rows().iter().map(|r| r[1].clone()).collect();
+        assert!(counts.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn unknown_order_column_errors() {
+        let mut e = engine();
+        assert!(e
+            .sql("SELECT url FROM access ORDER BY nope")
+            .unwrap_err()
+            .to_string()
+            .contains("unknown column"));
+    }
+}

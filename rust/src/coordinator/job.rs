@@ -1,0 +1,343 @@
+//! Job specifications and partial results for the coordinator.
+
+
+use crate::util::FxHashMap;
+use std::sync::Arc;
+
+use crate::ir::Value;
+use crate::storage::{Column, Table};
+
+/// The aggregation performed by a job (the paper's two evaluation kernels
+/// generalize to these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggOp {
+    /// `count[key]++` (URL access count, reverse web-link graph).
+    Count,
+    /// `sum[key] += val` (the §IV variant with a value field).
+    Sum,
+}
+
+/// A distributed aggregation job over a table.
+#[derive(Clone)]
+pub struct AggJob {
+    pub op: AggOp,
+    pub table: Arc<Table>,
+    pub key_field: usize,
+    /// Required for `Sum`.
+    pub val_field: Option<usize>,
+    /// Dense key-space width if the key column is integer-keyed
+    /// (dictionary-encoded); None → associative (string) accumulation.
+    pub num_keys: Option<usize>,
+}
+
+impl AggJob {
+    pub fn count(table: Arc<Table>, key_field: usize) -> Self {
+        let num_keys = dense_width(&table, key_field);
+        AggJob {
+            op: AggOp::Count,
+            table,
+            key_field,
+            val_field: None,
+            num_keys,
+        }
+    }
+
+    pub fn sum(table: Arc<Table>, key_field: usize, val_field: usize) -> Self {
+        let num_keys = dense_width(&table, key_field);
+        AggJob {
+            op: AggOp::Sum,
+            table,
+            key_field,
+            val_field: Some(val_field),
+            num_keys,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.table.len()
+    }
+}
+
+/// Dense key-space width when the key column is integer-keyed.
+fn dense_width(table: &Table, key_field: usize) -> Option<usize> {
+    match table.column(key_field) {
+        Column::DictStrs { dict, .. } => Some(dict.len()),
+        Column::Ints(v) => {
+            let max = v.iter().copied().max().unwrap_or(0);
+            let min = v.iter().copied().min().unwrap_or(0);
+            if min >= 0 && (max as usize) < v.len().max(1024) * 4 {
+                Some(max as usize + 1)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// A partial aggregate computed by one worker over one chunk.
+#[derive(Debug, Clone)]
+pub enum Partial {
+    /// Dense f64 accumulator over `[0, num_keys)`.
+    Dense(Vec<f64>),
+    /// Sparse (value, accum) pairs — the string path.
+    Assoc(Vec<(Value, f64)>),
+}
+
+impl Partial {
+    /// Approximate wire size for comm accounting.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Partial::Dense(v) => v.len() * 8,
+            Partial::Assoc(pairs) => pairs
+                .iter()
+                .map(|(v, _)| crate::distrib::tuple_bytes(std::slice::from_ref(v)) + 8)
+                .sum(),
+        }
+    }
+}
+
+/// The leader-side merged accumulator.
+#[derive(Debug)]
+pub enum Acc {
+    Dense(Vec<f64>),
+    Assoc(FxHashMap<Value, f64>),
+}
+
+impl Acc {
+    pub fn for_job(job: &AggJob) -> Acc {
+        match job.num_keys {
+            Some(k) => Acc::Dense(vec![0.0; k]),
+            None => Acc::Assoc(FxHashMap::default()),
+        }
+    }
+
+    pub fn merge(&mut self, p: Partial) {
+        match (self, p) {
+            (Acc::Dense(acc), Partial::Dense(part)) => {
+                for (a, b) in acc.iter_mut().zip(part) {
+                    *a += b;
+                }
+            }
+            (Acc::Assoc(acc), Partial::Assoc(pairs)) => {
+                for (v, x) in pairs {
+                    *acc.entry(v).or_insert(0.0) += x;
+                }
+            }
+            (Acc::Assoc(acc), Partial::Dense(part)) => {
+                for (k, x) in part.into_iter().enumerate() {
+                    if x != 0.0 {
+                        *acc.entry(Value::Int(k as i64)).or_insert(0.0) += x;
+                    }
+                }
+            }
+            (Acc::Dense(_), Partial::Assoc(_)) => {
+                panic!("dense accumulator fed a sparse partial — job misconfigured")
+            }
+        }
+    }
+
+    /// Convert a (worker-local) accumulator into a flushable partial.
+    pub fn into_partial(self) -> Partial {
+        match self {
+            Acc::Dense(v) => Partial::Dense(v),
+            Acc::Assoc(m) => Partial::Assoc(m.into_iter().collect()),
+        }
+    }
+
+    /// Nonzero entries as (key-value, total) pairs, decoding dictionary
+    /// keys back to strings via the job's table.
+    pub fn into_pairs(self, job: &AggJob) -> Vec<(Value, f64)> {
+        match self {
+            Acc::Dense(acc) => {
+                let dict = job.table.column(job.key_field).dictionary().cloned();
+                acc.into_iter()
+                    .enumerate()
+                    .filter(|(_, x)| *x != 0.0)
+                    .map(|(k, x)| {
+                        let key = match &dict {
+                            Some(d) => Value::Str(d.decode(k as u32).expect("key").clone()),
+                            None => Value::Int(k as i64),
+                        };
+                        (key, x)
+                    })
+                    .collect()
+            }
+            Acc::Assoc(acc) => acc.into_iter().collect(),
+        }
+    }
+}
+
+/// Compute the partial aggregate for chunk `[lo, hi)` of the job's table.
+/// This is the worker inner loop — the generated-code analogue, shared
+/// with exec::plan's sequential idioms.
+pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
+    let t = &job.table;
+    match job.num_keys {
+        Some(num_keys) => {
+            let mut acc = vec![0.0f64; num_keys];
+            match (job.op, t.column(job.key_field)) {
+                (AggOp::Count, Column::DictStrs { keys, .. }) => {
+                    for &k in &keys[lo..hi] {
+                        acc[k as usize] += 1.0;
+                    }
+                }
+                (AggOp::Count, Column::Ints(keys)) => {
+                    for &k in &keys[lo..hi] {
+                        acc[k as usize] += 1.0;
+                    }
+                }
+                (AggOp::Sum, kcol) => {
+                    let vals = t
+                        .column(job.val_field.expect("sum job needs val_field"))
+                        .float_slice()
+                        .map(|s| s.to_vec())
+                        .unwrap_or_else(|| {
+                            (lo..hi).map(|r| {
+                                t.value(r, job.val_field.unwrap()).as_float().unwrap_or(0.0)
+                            })
+                            .collect()
+                        });
+                    let val_at = |i: usize| {
+                        if vals.len() == t.len() {
+                            vals[i]
+                        } else {
+                            vals[i - lo]
+                        }
+                    };
+                    match kcol {
+                        Column::DictStrs { keys, .. } => {
+                            for (i, &k) in keys[lo..hi].iter().enumerate() {
+                                acc[k as usize] += val_at(lo + i);
+                            }
+                        }
+                        Column::Ints(keys) => {
+                            for (i, &k) in keys[lo..hi].iter().enumerate() {
+                                acc[k as usize] += val_at(lo + i);
+                            }
+                        }
+                        _ => {
+                            for r in lo..hi {
+                                let k = t.value(r, job.key_field).as_int().unwrap() as usize;
+                                acc[k] += val_at(r);
+                            }
+                        }
+                    }
+                }
+                (AggOp::Count, _) => {
+                    for r in lo..hi {
+                        let k = t.value(r, job.key_field).as_int().unwrap() as usize;
+                        acc[k] += 1.0;
+                    }
+                }
+            }
+            Partial::Dense(acc)
+        }
+        None => {
+            // Associative (string) path. Fast lane for plain string
+            // columns: hash the Arc<str> contents without constructing a
+            // Value per row (a Value clone + enum hash per tuple is the
+            // dominant cost otherwise — see EXPERIMENTS.md §Perf).
+            if job.op == AggOp::Count {
+                if let Column::Strs(vals) = t.column(job.key_field) {
+                    let mut map: FxHashMap<&std::sync::Arc<str>, f64> = FxHashMap::default();
+                    for s in &vals[lo..hi] {
+                        *map.entry(s).or_insert(0.0) += 1.0;
+                    }
+                    return Partial::Assoc(
+                        map.into_iter()
+                            .map(|(s, n)| (Value::Str(s.clone()), n))
+                            .collect(),
+                    );
+                }
+            }
+            let mut map: FxHashMap<Value, f64> = FxHashMap::default();
+            for r in lo..hi {
+                let k = t.value(r, job.key_field);
+                let x = match job.op {
+                    AggOp::Count => 1.0,
+                    AggOp::Sum => t
+                        .value(r, job.val_field.expect("sum job needs val_field"))
+                        .as_float()
+                        .unwrap_or(0.0),
+                };
+                *map.entry(k).or_insert(0.0) += x;
+            }
+            Partial::Assoc(map.into_iter().collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema};
+
+    fn string_table() -> Arc<Table> {
+        let schema = Schema::new(vec![("url", DataType::Str)]);
+        let mut m = Multiset::new(schema);
+        for u in ["/a", "/b", "/a", "/c", "/a"] {
+            m.push(vec![Value::str(u)]);
+        }
+        Arc::new(Table::from_multiset(&m).unwrap())
+    }
+
+    fn dict_table() -> Arc<Table> {
+        let mut t = (*string_table()).clone();
+        t.dict_encode_field(0).unwrap();
+        Arc::new(t)
+    }
+
+    #[test]
+    fn count_job_detects_density() {
+        assert!(AggJob::count(string_table(), 0).num_keys.is_none());
+        assert_eq!(AggJob::count(dict_table(), 0).num_keys, Some(3));
+    }
+
+    #[test]
+    fn chunked_processing_equals_whole() {
+        for table in [string_table(), dict_table()] {
+            let job = AggJob::count(table, 0);
+            let whole = process_chunk(&job, 0, 5);
+            let mut acc1 = Acc::for_job(&job);
+            acc1.merge(whole);
+            let mut acc2 = Acc::for_job(&job);
+            acc2.merge(process_chunk(&job, 0, 2));
+            acc2.merge(process_chunk(&job, 2, 4));
+            acc2.merge(process_chunk(&job, 4, 5));
+            let mut a: Vec<(Value, f64)> = acc1.into_pairs(&job);
+            let mut b: Vec<(Value, f64)> = acc2.into_pairs(&job);
+            a.sort_by(|x, y| x.0.cmp(&y.0));
+            b.sort_by(|x, y| x.0.cmp(&y.0));
+            assert_eq!(a, b);
+            assert_eq!(a.iter().map(|(_, n)| *n).sum::<f64>(), 5.0);
+        }
+    }
+
+    #[test]
+    fn dense_pairs_decode_dictionary() {
+        let job = AggJob::count(dict_table(), 0);
+        let mut acc = Acc::for_job(&job);
+        acc.merge(process_chunk(&job, 0, 5));
+        let mut pairs = acc.into_pairs(&job);
+        pairs.sort_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(pairs[0], (Value::str("/a"), 3.0));
+        assert_eq!(pairs[1], (Value::str("/b"), 1.0));
+    }
+
+    #[test]
+    fn sum_job() {
+        let schema = Schema::new(vec![("k", DataType::Int), ("v", DataType::Float)]);
+        let mut m = Multiset::new(schema);
+        for (k, v) in [(0, 1.5), (1, 2.0), (0, 0.5)] {
+            m.push(vec![Value::Int(k), Value::Float(v)]);
+        }
+        let t = Arc::new(Table::from_multiset(&m).unwrap());
+        let job = AggJob::sum(t, 0, 1);
+        let mut acc = Acc::for_job(&job);
+        acc.merge(process_chunk(&job, 0, 3));
+        let mut pairs = acc.into_pairs(&job);
+        pairs.sort_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(pairs, vec![(Value::Int(0), 2.0), (Value::Int(1), 2.0)]);
+    }
+}

@@ -1,0 +1,551 @@
+//! The L3 coordinator: leader/worker execution of parallelized loops on
+//! the simulated cluster.
+//!
+//! The leader owns the loop scheduler (§III-A2) and hands chunks to
+//! worker nodes over cost-accounted channels; workers run the generated
+//! inner loop (`job::process_chunk`) and stream partial aggregates back
+//! (bounded queue = backpressure). Node failures (§III-A3) are injected
+//! by configuration: a failing worker abandons its in-flight chunk, and
+//! the leader re-queues exactly that chunk under any dynamic policy — or
+//! reports that a restart is required under a static schedule, matching
+//! the paper's analysis.
+
+pub mod job;
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::distrib::{channel, CommStats, LinkModel, Tx};
+use crate::ir::{Multiset, Schema, Value};
+use crate::sched::{Chunk, Policy, Scheduler};
+
+pub use job::{process_chunk, Acc, AggJob, AggOp, Partial};
+
+/// Failure injection: `worker` dies after completing `after_chunks`.
+#[derive(Debug, Clone, Copy)]
+pub struct Failure {
+    pub worker: usize,
+    pub after_chunks: usize,
+}
+
+/// Cluster configuration (the DAS-4 stand-in).
+#[derive(Clone)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    pub policy: Policy,
+    pub link: LinkModel,
+    /// Per-worker slowdown multiplier (1.0 = full speed). Shorter than
+    /// `workers` → remaining workers run at 1.0.
+    pub slowdown: Vec<f64>,
+    pub failure: Option<Failure>,
+    /// Result-queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Workers merge this many chunks locally before flushing a partial
+    /// to the leader. 1 = per-chunk flush (finest failure granularity);
+    /// larger values amortize merge + comm cost, at the price of
+    /// re-queueing up to `flush_every` chunks when a node dies — the
+    /// static-inside-dynamic trade of the paper's hybrid scheme, applied
+    /// to result flushing (see EXPERIMENTS.md §Perf).
+    pub flush_every: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(workers: usize, policy: Policy) -> Self {
+        ClusterConfig {
+            workers,
+            policy,
+            link: LinkModel::instant(),
+            slowdown: vec![],
+            failure: None,
+            queue_capacity: 64,
+            flush_every: 8,
+        }
+    }
+
+    pub fn with_flush_every(mut self, n: usize) -> Self {
+        self.flush_every = n.max(1);
+        self
+    }
+
+    pub fn with_link(mut self, link: LinkModel) -> Self {
+        self.link = link;
+        self
+    }
+
+    pub fn with_slowdown(mut self, s: Vec<f64>) -> Self {
+        self.slowdown = s;
+        self
+    }
+
+    pub fn with_failure(mut self, f: Failure) -> Self {
+        self.failure = Some(f);
+        self
+    }
+
+    fn slowdown_of(&self, w: usize) -> f64 {
+        self.slowdown.get(w).copied().unwrap_or(1.0).max(1.0)
+    }
+}
+
+/// Execution metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub elapsed: Duration,
+    pub chunks: usize,
+    pub comm_bytes: u64,
+    pub comm_messages: u64,
+    pub failures_recovered: usize,
+    pub restarts: usize,
+    pub chunks_per_worker: BTreeMap<usize, usize>,
+}
+
+/// A completed job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub pairs: Vec<(Value, f64)>,
+    pub metrics: Metrics,
+}
+
+impl JobResult {
+    /// Render as a (key, count) multiset for oracle comparison.
+    pub fn to_multiset(&self, schema: Schema) -> Multiset {
+        let int_out = matches!(schema.dtype(1), crate::ir::DataType::Int);
+        let mut m = Multiset::new(schema);
+        for (k, x) in &self.pairs {
+            let v = if int_out {
+                Value::Int(*x as i64)
+            } else {
+                Value::Float(*x)
+            };
+            m.push(vec![k.clone(), v]);
+        }
+        m
+    }
+}
+
+enum WorkerMsg {
+    Request { worker: usize },
+    /// A flushed batch: the chunks covered + their merged partial.
+    Done {
+        worker: usize,
+        chunks: Vec<Chunk>,
+        partial: Partial,
+        elapsed: Duration,
+    },
+    Failed { worker: usize },
+}
+
+/// Run a distributed aggregation job, retrying whole-job restarts when a
+/// static schedule loses work (§III-A3: "the computation has to be
+/// restarted").
+pub fn run_job(cfg: &ClusterConfig, job: &AggJob) -> Result<JobResult> {
+    let t0 = Instant::now();
+    let mut restarts = 0;
+    loop {
+        match run_once(cfg, job, restarts) {
+            Ok(mut r) => {
+                r.metrics.restarts = restarts;
+                r.metrics.elapsed = t0.elapsed();
+                return Ok(r);
+            }
+            Err(e) if e.to_string().contains("restart required") => {
+                restarts += 1;
+                if restarts > 3 {
+                    bail!("job failed after {restarts} restarts: {e}");
+                }
+                // On restart the failed node is excluded (the cluster
+                // manager reprovisions): run with one fewer worker and no
+                // further injected failure.
+                let mut cfg2 = cfg.clone();
+                cfg2.failure = None;
+                cfg2.workers = (cfg.workers - 1).max(1);
+                let mut r = run_once(&cfg2, job, restarts)?;
+                r.metrics.restarts = restarts;
+                r.metrics.elapsed = t0.elapsed();
+                return Ok(r);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn run_once(cfg: &ClusterConfig, job: &AggJob, attempt: usize) -> Result<JobResult> {
+    let n = job.rows();
+    let stats = CommStats::new();
+    let mut scheduler = Scheduler::new(cfg.policy, n, cfg.workers);
+    let supports_requeue = scheduler.supports_requeue();
+
+    // Accounted, bounded worker→leader channel (backpressure).
+    let (msg_tx, msg_rx) = channel::<WorkerMsg>(cfg.queue_capacity, stats.clone(), cfg.link);
+    let job = job.clone();
+    let job_arc = Arc::new(job);
+
+    std::thread::scope(|scope| -> Result<JobResult> {
+        // Leader→worker chunk channels (plain; replies are tiny).
+        let mut chunk_txs: Vec<Option<Sender<Option<Chunk>>>> = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers {
+            let (ctx, crx) = std::sync::mpsc::channel::<Option<Chunk>>();
+            chunk_txs.push(Some(ctx));
+            let msg_tx = msg_tx.clone();
+            let job = job_arc.clone();
+            let slowdown = cfg.slowdown_of(w);
+            // Failure only fires on the first attempt.
+            let failure = cfg.failure.filter(|f| f.worker == w && attempt == 0);
+            let flush_every = cfg.flush_every.max(1);
+            handles.push(scope.spawn(move || {
+                worker_loop(w, &job, crx, msg_tx, slowdown, failure, flush_every);
+            }));
+        }
+        drop(msg_tx); // leader keeps only the rx side
+
+        let mut acc = Acc::for_job(&job_arc);
+        let mut metrics = Metrics::default();
+        let mut completed = 0usize;
+        let mut outstanding: Vec<Option<Chunk>> = vec![None; cfg.workers];
+        // Chunks a worker finished but has not flushed yet: lost with the
+        // node's memory if it dies (re-queued on failure).
+        let mut unflushed: Vec<Vec<Chunk>> = vec![Vec::new(); cfg.workers];
+        let mut lost_work = false;
+
+        while completed < n {
+            let Ok(msg) = msg_rx.recv() else {
+                // All workers gone before completion.
+                if lost_work || completed < n {
+                    bail!("workers exited early; restart required");
+                }
+                break;
+            };
+            match msg {
+                WorkerMsg::Request { worker } => {
+                    // The previously assigned chunk is now processed (the
+                    // worker asks again only after finishing) but unflushed.
+                    if let Some(done) = outstanding[worker].take() {
+                        unflushed[worker].push(done);
+                    }
+                    let chunk = scheduler.next_chunk(worker);
+                    outstanding[worker] = chunk;
+                    if let Some(tx) = &chunk_txs[worker] {
+                        let _ = tx.send(chunk);
+                    }
+                }
+                WorkerMsg::Done {
+                    worker,
+                    chunks,
+                    partial,
+                    elapsed,
+                } => {
+                    let batch: usize = chunks.iter().map(|c| c.len()).sum();
+                    for chunk in &chunks {
+                        scheduler.report(
+                            worker,
+                            *chunk,
+                            elapsed.mul_f64(chunk.len() as f64 / batch.max(1) as f64),
+                        );
+                    }
+                    // These chunks are now durable at the leader.
+                    unflushed[worker].retain(|c| !chunks.contains(c));
+                    if let Some(c) = outstanding[worker] {
+                        if chunks.contains(&c) {
+                            outstanding[worker] = None;
+                        }
+                    }
+                    acc.merge(partial);
+                    completed += batch;
+                    metrics.chunks += chunks.len();
+                    *metrics.chunks_per_worker.entry(worker).or_default() += chunks.len();
+                }
+                WorkerMsg::Failed { worker } => {
+                    // In-flight AND unflushed chunks are lost with the
+                    // node's memory.
+                    let mut lost: Vec<Chunk> = unflushed[worker].drain(..).collect();
+                    lost.extend(outstanding[worker].take());
+                    chunk_txs[worker] = None; // node is gone
+                    if !lost.is_empty() {
+                        if supports_requeue {
+                            for chunk in lost {
+                                scheduler.requeue(chunk);
+                            }
+                            metrics.failures_recovered += 1;
+                        } else {
+                            lost_work = true;
+                        }
+                    } else if !supports_requeue {
+                        // Even with no in-flight chunk, a static schedule
+                        // cannot move the node's unprocessed block.
+                        if !scheduler.exhausted() {
+                            lost_work = true;
+                        }
+                    }
+                    if lost_work {
+                        bail!(
+                            "node {worker} failed under a static schedule; restart required"
+                        );
+                    }
+                }
+            }
+        }
+
+        // Tell idle workers to stop.
+        for tx in chunk_txs.iter().flatten() {
+            let _ = tx.send(None);
+        }
+        drop(chunk_txs);
+        // Drain any in-flight messages so workers blocked on the bounded
+        // queue can exit, then join.
+        while msg_rx.try_recv().is_ok() {}
+        for h in handles {
+            let _ = h.join();
+        }
+
+        metrics.comm_bytes = stats.total_bytes();
+        metrics.comm_messages = stats.total_messages();
+        Ok(JobResult {
+            pairs: acc.into_pairs(&job_arc),
+            metrics,
+        })
+    })
+}
+
+fn worker_loop(
+    w: usize,
+    job: &AggJob,
+    chunk_rx: std::sync::mpsc::Receiver<Option<Chunk>>,
+    msg_tx: Tx<WorkerMsg>,
+    slowdown: f64,
+    failure: Option<Failure>,
+    flush_every: usize,
+) {
+    let mut processed = 0usize;
+    // Local accumulation between flushes (amortizes leader merge + comm).
+    let mut local = Acc::for_job(job);
+    let mut covered: Vec<Chunk> = Vec::new();
+    let mut batch_t = Duration::ZERO;
+
+    let flush = |local: &mut Acc,
+                 covered: &mut Vec<Chunk>,
+                 batch_t: &mut Duration|
+     -> bool {
+        if covered.is_empty() {
+            return true;
+        }
+        let partial = std::mem::replace(local, Acc::for_job(job)).into_partial();
+        let bytes = partial.wire_bytes();
+        let ok = msg_tx.send(
+            WorkerMsg::Done {
+                worker: w,
+                chunks: std::mem::take(covered),
+                partial,
+                elapsed: std::mem::replace(batch_t, Duration::ZERO),
+            },
+            bytes,
+        );
+        ok
+    };
+
+    loop {
+        if !msg_tx.send(WorkerMsg::Request { worker: w }, 16) {
+            return;
+        }
+        let chunk = match chunk_rx.recv() {
+            Ok(Some(c)) => c,
+            _ => {
+                // Loop exhausted: flush what we hold, then exit.
+                let _ = flush(&mut local, &mut covered, &mut batch_t);
+                return;
+            }
+        };
+        // Injected crash: die holding the in-flight chunk AND any
+        // unflushed local state (both are lost with this node's memory).
+        if let Some(f) = failure {
+            if processed >= f.after_chunks {
+                let _ = msg_tx.send(WorkerMsg::Failed { worker: w }, 16);
+                return;
+            }
+        }
+        let t0 = Instant::now();
+        let partial = process_chunk(job, chunk.lo, chunk.hi);
+        local.merge(partial);
+        covered.push(chunk);
+        let real = t0.elapsed();
+        if slowdown > 1.0 {
+            std::thread::sleep(real.mul_f64(slowdown - 1.0));
+        }
+        batch_t += t0.elapsed();
+        processed += 1;
+        if covered.len() >= flush_every && !flush(&mut local, &mut covered, &mut batch_t) {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema};
+    use crate::storage::Table;
+    use crate::util::forall_seeds;
+    use crate::workload::{access_log, AccessLogSpec};
+
+    fn table(rows: usize, urls: usize, dict: bool) -> Arc<Table> {
+        let m = access_log(&AccessLogSpec {
+            rows,
+            urls,
+            skew: 1.1,
+            seed: 11,
+        });
+        let mut t = Table::from_multiset(&m).unwrap();
+        if dict {
+            t.dict_encode_field(0).unwrap();
+        }
+        Arc::new(t)
+    }
+
+    fn oracle(t: &Arc<Table>) -> std::collections::HashMap<Value, f64> {
+        let mut m = std::collections::HashMap::new();
+        for r in 0..t.len() {
+            *m.entry(t.value(r, 0)).or_insert(0.0) += 1.0;
+        }
+        m
+    }
+
+    fn check(result: &JobResult, t: &Arc<Table>) {
+        let want = oracle(t);
+        assert_eq!(result.pairs.len(), want.len());
+        for (k, x) in &result.pairs {
+            assert_eq!(want[k], *x, "key {k}");
+        }
+    }
+
+    #[test]
+    fn all_policies_compute_correct_counts() {
+        let t = table(20_000, 500, true);
+        for policy in [
+            Policy::StaticBlock,
+            Policy::FixedChunk(1024),
+            Policy::Gss,
+            Policy::Trapezoid,
+            Policy::Factoring,
+            Policy::FeedbackGuided,
+            Policy::Hybrid {
+                super_chunks_per_worker: 4,
+            },
+        ] {
+            let cfg = ClusterConfig::new(8, policy);
+            let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+            check(&r, &t);
+        }
+    }
+
+    #[test]
+    fn string_tables_use_assoc_path() {
+        let t = table(5_000, 200, false);
+        let job = AggJob::count(t.clone(), 0);
+        assert!(job.num_keys.is_none());
+        let r = run_job(&ClusterConfig::new(4, Policy::Gss), &job).unwrap();
+        check(&r, &t);
+    }
+
+    #[test]
+    fn dynamic_policy_survives_node_failure() {
+        let t = table(50_000, 300, true);
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(512)).with_failure(Failure {
+            worker: 2,
+            after_chunks: 3,
+        });
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        assert_eq!(r.metrics.failures_recovered, 1);
+        assert_eq!(r.metrics.restarts, 0);
+        // The dead worker did limited work.
+        assert!(r.metrics.chunks_per_worker.get(&2).copied().unwrap_or(0) <= 3);
+    }
+
+    #[test]
+    fn static_policy_requires_restart_on_failure() {
+        let t = table(50_000, 300, true);
+        let cfg = ClusterConfig::new(4, Policy::StaticBlock).with_failure(Failure {
+            worker: 1,
+            after_chunks: 0,
+        });
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        assert_eq!(r.metrics.restarts, 1);
+    }
+
+    #[test]
+    fn hybrid_recovers_at_super_chunk_granularity() {
+        let t = table(50_000, 300, true);
+        let cfg = ClusterConfig::new(
+            4,
+            Policy::Hybrid {
+                super_chunks_per_worker: 8,
+            },
+        )
+        .with_failure(Failure {
+            worker: 0,
+            after_chunks: 2,
+        });
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        assert_eq!(r.metrics.failures_recovered, 1);
+    }
+
+    #[test]
+    fn coordinator_matches_exec_oracle_via_multiset() {
+        let t = table(3_000, 100, true);
+        let r = run_job(&ClusterConfig::new(3, Policy::Gss), &AggJob::count(t.clone(), 0))
+            .unwrap();
+        let schema = Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]);
+        let got = r.to_multiset(schema.clone());
+        let mut want = Multiset::new(schema);
+        for (k, v) in oracle(&t) {
+            want.push(vec![k, Value::Int(v as i64)]);
+        }
+        assert!(got.bag_eq(&want));
+    }
+
+    #[test]
+    fn property_random_configs_are_exact() {
+        // Seed-driven property: any (policy, workers, failure point)
+        // combination yields exact counts.
+        let t = table(8_000, 64, true);
+        let want = oracle(&t);
+        forall_seeds(12, |rng| {
+            let policies = [
+                Policy::FixedChunk(256 + rng.below(1024) as usize),
+                Policy::Gss,
+                Policy::Trapezoid,
+                Policy::Factoring,
+                Policy::Hybrid {
+                    super_chunks_per_worker: 1 + rng.below(8) as usize,
+                },
+            ];
+            let policy = policies[rng.below(policies.len() as u64) as usize];
+            let workers = 1 + rng.below(8) as usize;
+            let mut cfg = ClusterConfig::new(workers, policy);
+            if rng.below(2) == 1 && workers > 1 {
+                cfg = cfg.with_failure(Failure {
+                    worker: rng.below(workers as u64) as usize,
+                    after_chunks: rng.below(4) as usize,
+                });
+            }
+            let r = run_job(&cfg, &AggJob::count(t.clone(), 0))
+                .map_err(|e| format!("job failed: {e}"))?;
+            crate::prop_assert!(
+                r.pairs.len() == want.len(),
+                "distinct keys {} != {}",
+                r.pairs.len(),
+                want.len()
+            );
+            for (k, x) in &r.pairs {
+                crate::prop_assert!(want[k] == *x, "key {k}: {x} != {}", want[k]);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,171 @@
+//! Cost-accounted inter-node communication.
+//!
+//! The simulated cluster exchanges messages over in-process channels; this
+//! module wraps them with byte/message accounting and a configurable
+//! bandwidth/latency model so redistribution costs (§III-A4) show up in
+//! measured time, not just in counters. (DAS-4's real interconnect is
+//! substituted per DESIGN.md §Substitutions.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Global-ish communication statistics, shared by all channels of a run.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl CommStats {
+    pub fn new() -> Arc<Self> {
+        Arc::new(CommStats::default())
+    }
+
+    pub fn record(&self, bytes: usize) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+}
+
+/// Network model: per-message latency + bandwidth delay, imposed by
+/// busy-sleeping the *sender* (the simple, deterministic choice).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    pub latency: Duration,
+    /// Bytes per second; u64::MAX disables the bandwidth delay.
+    pub bytes_per_sec: u64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // Loosely GbE-flavoured: 50µs latency, ~1 GiB/s.
+        LinkModel {
+            latency: Duration::from_micros(50),
+            bytes_per_sec: 1 << 30,
+        }
+    }
+}
+
+impl LinkModel {
+    /// Instantaneous (no delay) — for unit tests.
+    pub fn instant() -> Self {
+        LinkModel {
+            latency: Duration::ZERO,
+            bytes_per_sec: u64::MAX,
+        }
+    }
+
+    pub fn delay_for(&self, bytes: usize) -> Duration {
+        if self.bytes_per_sec == u64::MAX {
+            return self.latency;
+        }
+        self.latency + Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec as f64)
+    }
+}
+
+/// A sending endpoint with accounting + delay model.
+pub struct Tx<T> {
+    inner: SyncSender<T>,
+    stats: Arc<CommStats>,
+    model: LinkModel,
+}
+
+impl<T> Clone for Tx<T> {
+    fn clone(&self) -> Self {
+        Tx {
+            inner: self.inner.clone(),
+            stats: self.stats.clone(),
+            model: self.model,
+        }
+    }
+}
+
+impl<T> Tx<T> {
+    /// Send `msg`, charging `bytes` to the accounting + delay model.
+    /// Returns false if the receiver hung up.
+    pub fn send(&self, msg: T, bytes: usize) -> bool {
+        self.stats.record(bytes);
+        let d = self.model.delay_for(bytes);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+        self.inner.send(msg).is_ok()
+    }
+}
+
+/// Create an accounted bounded channel (bounded = backpressure: a slow
+/// consumer stalls producers, exactly like a full TCP window).
+pub fn channel<T>(
+    capacity: usize,
+    stats: Arc<CommStats>,
+    model: LinkModel,
+) -> (Tx<T>, Receiver<T>) {
+    let (tx, rx) = std::sync::mpsc::sync_channel(capacity);
+    (
+        Tx {
+            inner: tx,
+            stats,
+            model,
+        },
+        rx,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_accumulates() {
+        let stats = CommStats::new();
+        let (tx, rx) = channel::<u32>(8, stats.clone(), LinkModel::instant());
+        assert!(tx.send(1, 100));
+        assert!(tx.send(2, 250));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(stats.total_bytes(), 350);
+        assert_eq!(stats.total_messages(), 2);
+    }
+
+    #[test]
+    fn send_reports_disconnect() {
+        let stats = CommStats::new();
+        let (tx, rx) = channel::<u32>(1, stats, LinkModel::instant());
+        drop(rx);
+        assert!(!tx.send(1, 10));
+    }
+
+    #[test]
+    fn bandwidth_model_delays() {
+        let m = LinkModel {
+            latency: Duration::from_millis(1),
+            bytes_per_sec: 1_000_000,
+        };
+        let d = m.delay_for(500_000);
+        assert!(d >= Duration::from_millis(500));
+    }
+
+    #[test]
+    fn bounded_channel_applies_backpressure() {
+        let stats = CommStats::new();
+        let (tx, rx) = channel::<u32>(2, stats, LinkModel::instant());
+        assert!(tx.send(1, 1));
+        assert!(tx.send(2, 1));
+        // Third send would block; verify via try-style workaround: consume
+        // one, then the next send proceeds.
+        let h = std::thread::spawn(move || tx.send(3, 1));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert!(h.join().unwrap());
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap(), 3);
+    }
+}

@@ -1,0 +1,270 @@
+//! The data-distribution optimizer (§III-A4).
+//!
+//! "At this stage, all parallel loops in the application are considered to
+//! choose the actual distribution of the data. Different loops in the
+//! application might be accessing the same data according to a different
+//! partitioning ... in optimizing the final data distribution, this
+//! communication should be minimized as much as possible."
+//!
+//! The optimizer:
+//! 1. collects, per relation, the partitioning each parallel loop wants
+//!    (the field of its indirect partitioning, or Direct for blocked
+//!    loops);
+//! 2. where two consecutive loops want *different* partitionings of the
+//!    same relation, first tries Loop Fusion (via the transform pass) to
+//!    make them share one — the paper's example;
+//! 3. otherwise picks the majority partitioning as the resident
+//!    distribution and records explicit `Redistribute` steps whose byte
+//!    cost the channel model will account.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::ir::{Domain, Program, Stmt};
+use crate::transform::{LoopFusion, Pass, PassCtx};
+
+use super::partition::Partitioning;
+
+/// What one parallel loop wants of one relation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopDemand {
+    /// Index of the top-level statement.
+    pub stmt_idx: usize,
+    pub relation: String,
+    pub partitioning: Partitioning,
+}
+
+/// The optimizer's decision.
+#[derive(Debug, Clone, Default)]
+pub struct DistributionPlan {
+    /// Resident distribution per relation.
+    pub resident: BTreeMap<String, Partitioning>,
+    /// Redistribution steps that remain necessary:
+    /// (before stmt idx, relation, from, to).
+    pub redistributions: Vec<(usize, String, Partitioning, Partitioning)>,
+    /// Whether fusion was applied while optimizing.
+    pub fused: bool,
+}
+
+impl DistributionPlan {
+    /// Total redistribution count — the § III-A4 metric.
+    pub fn redistribution_count(&self) -> usize {
+        self.redistributions.len()
+    }
+}
+
+/// Collect the partitioning demand of every top-level parallel loop.
+pub fn collect_demands(p: &Program) -> Vec<LoopDemand> {
+    let mut out = Vec::new();
+    for (idx, s) in p.body.iter().enumerate() {
+        let Stmt::Loop(l) = s else { continue };
+        if l.kind != crate::ir::LoopKind::Forall {
+            continue;
+        }
+        // Collect EVERY partitioned iteration inside the forall: a fused
+        // forall can carry several (the §III-A4 case where field1 ≠
+        // field2 — fusion aligns the outer loops but the second access
+        // pattern still demands a different distribution).
+        let mut found: Vec<(String, Partitioning)> = Vec::new();
+        s.walk(&mut |sub| {
+            if let Stmt::Loop(inner) = sub {
+                match &inner.domain {
+                    Domain::ValuePartition {
+                        relation, field, ..
+                    } => {
+                        found.push((relation.clone(), Partitioning::RangeKey(field.clone())));
+                    }
+                    Domain::IndexSet(ix) if ix.partition.is_some() => {
+                        found.push((ix.relation.clone(), Partitioning::Direct));
+                    }
+                    _ => {}
+                }
+            }
+        });
+        found.dedup();
+        for (relation, partitioning) in found {
+            out.push(LoopDemand {
+                stmt_idx: idx,
+                relation,
+                partitioning,
+            });
+        }
+    }
+    out
+}
+
+/// Optimize the distribution for a program: fuse where possible, then pick
+/// resident distributions and list the redistributions that remain.
+pub fn optimize(p: &mut Program) -> Result<DistributionPlan> {
+    let before = collect_demands(p);
+    let conflicted = has_conflict(&before);
+
+    let mut plan = DistributionPlan::default();
+    if conflicted {
+        // Try the paper's move: reorder + fuse so conflicting loops share
+        // one traversal (and hence one partitioning).
+        plan.fused = LoopFusion.run(p, &PassCtx::new())?;
+    }
+    let demands = collect_demands(p);
+
+    // Majority vote per relation for the resident distribution.
+    let mut votes: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    for d in &demands {
+        *votes
+            .entry(d.relation.clone())
+            .or_default()
+            .entry(part_key(&d.partitioning))
+            .or_default() += 1;
+    }
+    for (rel, tally) in &votes {
+        let winner = tally
+            .iter()
+            .max_by_key(|(_, n)| **n)
+            .map(|(k, _)| k.clone())
+            .unwrap();
+        let part = demands
+            .iter()
+            .find(|d| &d.relation == rel && part_key(&d.partitioning) == winner)
+            .unwrap()
+            .partitioning
+            .clone();
+        plan.resident.insert(rel.clone(), part);
+    }
+
+    // Any demand that differs from the resident distribution requires a
+    // redistribution before that loop.
+    for d in &demands {
+        let resident = &plan.resident[&d.relation];
+        if &d.partitioning != resident {
+            plan.redistributions.push((
+                d.stmt_idx,
+                d.relation.clone(),
+                resident.clone(),
+                d.partitioning.clone(),
+            ));
+        }
+    }
+    Ok(plan)
+}
+
+fn has_conflict(demands: &[LoopDemand]) -> bool {
+    for a in demands {
+        for b in demands {
+            if a.relation == b.relation && a.partitioning != b.partitioning {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn part_key(p: &Partitioning) -> String {
+    format!("{p:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDecl, DataType, Expr, IndexSet, Loop, LoopKind, Schema, Stmt, Value};
+    use crate::transform::parallelize_indirect;
+
+    /// The §III-A4 program: two aggregations over `Table`, partitioned on
+    /// different fields.
+    fn conflicted_program() -> Program {
+        let schema = Schema::new(vec![
+            ("field1", DataType::Int),
+            ("field2", DataType::Int),
+        ]);
+        let count = |arr: &str, f: &str| {
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("Table"),
+                vec![Stmt::increment(arr, vec![Expr::field("i", f)])],
+            ))
+        };
+        let mut p = Program::new("conflict")
+            .with_relation("Table", schema)
+            .with_array("count1", ArrayDecl::counter())
+            .with_array("count2", ArrayDecl::counter())
+            .with_result("R1", Schema::new(vec![("v", DataType::Int), ("n", DataType::Int)]))
+            .with_result("R2", Schema::new(vec![("v", DataType::Int), ("n", DataType::Int)]));
+        p.body = vec![count("count1", "field1"), count("count2", "field2")];
+        // Keep results alive so DCE-style reasoning doesn't matter here.
+        p.body.push(Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::distinct_of("Table", "field1"),
+            vec![Stmt::result_union(
+                "R1",
+                vec![
+                    Expr::field("i", "field1"),
+                    Expr::array("count1", vec![Expr::field("i", "field1")]),
+                ],
+            )],
+        )));
+        p.body.push(Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::distinct_of("Table", "field2"),
+            vec![Stmt::result_union(
+                "R2",
+                vec![
+                    Expr::field("i", "field2"),
+                    Expr::array("count2", vec![Expr::field("i", "field2")]),
+                ],
+            )],
+        )));
+        p
+    }
+
+    #[test]
+    fn detects_demands_after_parallelization() {
+        let mut p = conflicted_program();
+        parallelize_indirect(&mut p, 0, "field1", 4).unwrap();
+        parallelize_indirect(&mut p, 1, "field2", 4).unwrap();
+        let demands = collect_demands(&p);
+        assert_eq!(demands.len(), 2);
+        assert_eq!(demands[0].partitioning, Partitioning::RangeKey("field1".into()));
+        assert_eq!(demands[1].partitioning, Partitioning::RangeKey("field2".into()));
+    }
+
+    #[test]
+    fn conflicting_partitionings_force_redistribution_without_fusion() {
+        let mut p = conflicted_program();
+        parallelize_indirect(&mut p, 0, "field1", 4).unwrap();
+        parallelize_indirect(&mut p, 1, "field2", 4).unwrap();
+        // Parallelized loops cannot fuse (different domains) — the
+        // optimizer must schedule one redistribution.
+        let plan = optimize(&mut p).unwrap();
+        assert_eq!(plan.redistribution_count(), 1);
+    }
+
+    #[test]
+    fn fusion_before_parallelization_avoids_redistribution() {
+        // The paper's resolution: fuse FIRST (while the counting loops
+        // still share a domain), then parallelize the fused loop once.
+        let mut p = conflicted_program();
+        let plan0 = optimize(&mut p).unwrap(); // triggers fusion path (no parallel loops yet → no conflict)
+        assert_eq!(plan0.redistribution_count(), 0);
+        crate::transform::LoopFusion
+            .run(&mut p, &crate::transform::PassCtx::new())
+            .unwrap();
+        // One fused counting loop remains; parallelize it on field1.
+        parallelize_indirect(&mut p, 0, "field1", 4).unwrap();
+        let plan = optimize(&mut p).unwrap();
+        assert_eq!(plan.redistribution_count(), 0);
+        assert_eq!(
+            plan.resident["Table"],
+            Partitioning::RangeKey("field1".into())
+        );
+    }
+
+    #[test]
+    fn direct_blocking_demand_is_direct() {
+        let mut p = conflicted_program();
+        let _ = LoopKind::Forall;
+        let _ = Value::Int(0);
+        crate::transform::parallelize_direct(&mut p, 0, 4).unwrap();
+        let demands = collect_demands(&p);
+        assert_eq!(demands[0].partitioning, Partitioning::Direct);
+    }
+}

@@ -1,0 +1,16 @@
+//! The simulated cluster substrate: data partitioning, cost-accounted
+//! communication, redistribution, and the data-distribution optimizer
+//! (§III-A). Substitutes for the paper's DAS-4/MPI testbed per DESIGN.md.
+
+pub mod comm;
+pub mod distribution;
+pub mod partition;
+pub mod redistribute;
+
+pub use comm::{channel, CommStats, LinkModel, Tx};
+pub use distribution::{collect_demands, optimize, DistributionPlan, LoopDemand};
+pub use partition::{
+    hash_value, shard_bytes, split, split_direct, split_hash, split_range, tuple_bytes,
+    Partitioning,
+};
+pub use redistribute::{estimated_cost_bytes, redistribute};

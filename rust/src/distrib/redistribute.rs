@@ -1,0 +1,235 @@
+//! Physical redistribution (shuffle) between partitionings, with its
+//! communication cost accounted — the "expensive data re-distribution"
+//! §III-A4 teaches the compiler to avoid.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::exec::block_bounds;
+use crate::ir::{Multiset, Value};
+use crate::storage::Table;
+
+use super::comm::CommStats;
+use super::partition::{hash_value, shard_bytes, tuple_bytes, Partitioning};
+
+/// Redistribute shards to the `target` partitioning, charging every tuple
+/// that crosses nodes to `stats`. Tuples already resident on their target
+/// node are not charged (they never touch the network).
+pub fn redistribute(
+    shards: &[Table],
+    target: &Partitioning,
+    stats: &Arc<CommStats>,
+) -> Result<Vec<Table>> {
+    let n = shards.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let schema = shards[0].schema.clone();
+    let total_rows: usize = shards.iter().map(|t| t.len()).sum();
+
+    // Routing function: tuple + global position → target node.
+    let field_id = |f: &str| -> Result<usize> {
+        schema
+            .field_id(f)
+            .ok_or_else(|| anyhow::anyhow!("no field `{f}`"))
+    };
+    enum Router {
+        Direct,
+        Hash(usize),
+        Range(usize, HashMap<Value, usize>),
+        Replicate,
+    }
+    let router = match target {
+        Partitioning::None => Router::Replicate,
+        Partitioning::Direct => Router::Direct,
+        Partitioning::HashKey(f) => Router::Hash(field_id(f)?),
+        Partitioning::RangeKey(f) => {
+            let fid = field_id(f)?;
+            // Global sorted distinct values → segment map.
+            let mut distinct: Vec<Value> = {
+                let mut seen = std::collections::HashSet::new();
+                let mut out = Vec::new();
+                for t in shards {
+                    for row in 0..t.len() {
+                        let v = t.value(row, fid);
+                        if seen.insert(v.clone()) {
+                            out.push(v);
+                        }
+                    }
+                }
+                out
+            };
+            distinct.sort();
+            let mut seg = HashMap::new();
+            for k in 0..n {
+                let (lo, hi) = block_bounds(distinct.len(), n, k);
+                for v in &distinct[lo..hi] {
+                    seg.insert(v.clone(), k);
+                }
+            }
+            Router::Range(fid, seg)
+        }
+    };
+
+    if let Router::Replicate = router {
+        // Everything crosses to every other node.
+        let total: usize = shards.iter().map(shard_bytes).sum();
+        stats.record(total * (n - 1));
+        let mut union = Multiset::new(schema.clone());
+        for t in shards {
+            for row in 0..t.len() {
+                union.push(t.tuple(row));
+            }
+        }
+        let full = Table::from_multiset(&union)?;
+        return Ok((0..n).map(|_| full.clone()).collect());
+    }
+
+    let mut parts: Vec<Multiset> = (0..n).map(|_| Multiset::new(schema.clone())).collect();
+    let mut moved = 0usize;
+    let mut global = 0usize;
+    for (src, t) in shards.iter().enumerate() {
+        for row in 0..t.len() {
+            let tuple = t.tuple(row);
+            let dst = match &router {
+                Router::Direct => {
+                    // Target: contiguous blocks of the concatenated order.
+                    let mut node = n - 1;
+                    for k in 0..n {
+                        let (lo, hi) = block_bounds(total_rows, n, k);
+                        if global >= lo && global < hi {
+                            node = k;
+                            break;
+                        }
+                    }
+                    node
+                }
+                Router::Hash(fid) => (hash_value(&tuple[*fid]) % n as u64) as usize,
+                Router::Range(fid, seg) => *seg
+                    .get(&tuple[*fid])
+                    .ok_or_else(|| anyhow::anyhow!("value missing from segment map"))?,
+                Router::Replicate => unreachable!(),
+            };
+            if dst != src {
+                moved += tuple_bytes(&tuple);
+            }
+            parts[dst].push(tuple);
+            global += 1;
+        }
+    }
+    stats.record(moved);
+    parts
+        .iter()
+        .map(|m| Table::from_multiset(m))
+        .collect::<Result<Vec<_>>>()
+}
+
+/// The up-front cost estimate the distribution optimizer compares against
+/// recompute: full shard volume minus the expected resident fraction.
+pub fn estimated_cost_bytes(shards: &[Table]) -> usize {
+    let total: usize = shards.iter().map(shard_bytes).sum();
+    if shards.is_empty() {
+        return 0;
+    }
+    total - total / shards.len()
+}
+
+/// Sanity check used by tests and the fusion bench.
+pub fn total_rows(shards: &[Table]) -> usize {
+    shards.iter().map(|t| t.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distrib::partition::{split_direct, split_range};
+    use crate::ir::{DataType, Schema};
+
+    fn shards() -> Vec<Table> {
+        let schema = Schema::new(vec![("k", DataType::Int), ("j", DataType::Int)]);
+        let mut m = Multiset::new(schema);
+        for i in 0..100i64 {
+            m.push(vec![Value::Int(i % 10), Value::Int((i * 7) % 10)]);
+        }
+        let t = Table::from_multiset(&m).unwrap();
+        split_direct(&t, 4)
+    }
+
+    #[test]
+    fn redistribution_preserves_all_tuples_and_colocates_keys() {
+        let stats = CommStats::new();
+        let out = redistribute(&shards(), &Partitioning::HashKey("k".into()), &stats).unwrap();
+        assert_eq!(total_rows(&out), 100);
+        let mut owner: std::collections::HashMap<i64, usize> = Default::default();
+        for (s, t) in out.iter().enumerate() {
+            for row in 0..t.len() {
+                let k = t.value(row, 0).as_int().unwrap();
+                if let Some(prev) = owner.insert(k, s) {
+                    assert_eq!(prev, s, "key {k} split across shards");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conflicting_repartition_charges_most_tuples() {
+        // Resident on range(k); moving to range(j) must move ~(n-1)/n of
+        // the data — the §III-A4 "expensive redistribution".
+        let base = {
+            let merged = shards();
+            let mut union = Multiset::new(merged[0].schema.clone());
+            for t in &merged {
+                for r in 0..t.len() {
+                    union.push(t.tuple(r));
+                }
+            }
+            Table::from_multiset(&union).unwrap()
+        };
+        let resident = split_range(&base, 0, 4).unwrap();
+        let stats = CommStats::new();
+        let _ = redistribute(&resident, &Partitioning::RangeKey("j".into()), &stats).unwrap();
+        let total: usize = resident.iter().map(shard_bytes).sum();
+        let moved = stats.total_bytes() as usize;
+        assert!(
+            moved > total / 2,
+            "expected most bytes to move: {moved} of {total}"
+        );
+    }
+
+    #[test]
+    fn same_partitioning_is_nearly_free() {
+        let base = {
+            let merged = shards();
+            let mut union = Multiset::new(merged[0].schema.clone());
+            for t in &merged {
+                for r in 0..t.len() {
+                    union.push(t.tuple(r));
+                }
+            }
+            Table::from_multiset(&union).unwrap()
+        };
+        let resident = split_range(&base, 0, 4).unwrap();
+        let stats = CommStats::new();
+        let out = redistribute(&resident, &Partitioning::RangeKey("k".into()), &stats).unwrap();
+        assert_eq!(total_rows(&out), 100);
+        assert_eq!(stats.total_bytes(), 0, "no tuple should move");
+    }
+
+    #[test]
+    fn replicate_charges_full_broadcast() {
+        let stats = CommStats::new();
+        let out = redistribute(&shards(), &Partitioning::None, &stats).unwrap();
+        assert!(out.iter().all(|t| t.len() == 100));
+        assert!(stats.total_bytes() > 0);
+    }
+
+    #[test]
+    fn estimate_is_positive_and_below_total() {
+        let s = shards();
+        let est = estimated_cost_bytes(&s);
+        let total: usize = s.iter().map(shard_bytes).sum();
+        assert!(est > 0 && est < total);
+    }
+}

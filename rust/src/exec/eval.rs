@@ -1,0 +1,423 @@
+//! Expression evaluation: environments, value arithmetic, accumulator
+//! array store.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{AccumOp, BinOp, Expr, Program, Tuple, UnOp, Value};
+use crate::storage::Table;
+
+/// A tuple cursor: the binding a `forelem` variable gets.
+#[derive(Debug, Clone)]
+pub struct Cursor {
+    pub table: Arc<Table>,
+    pub row: usize,
+}
+
+/// Evaluation environment: scalar bindings + tuple cursors (scope stack).
+#[derive(Debug, Default)]
+pub struct Env {
+    vars: Vec<(String, Value)>,
+    cursors: Vec<(String, Cursor)>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Env::default()
+    }
+
+    pub fn push_var(&mut self, name: &str, v: Value) {
+        self.vars.push((name.to_string(), v));
+    }
+
+    pub fn pop_var(&mut self) {
+        self.vars.pop();
+    }
+
+    pub fn set_var(&mut self, name: &str, v: Value) {
+        if let Some(slot) = self.vars.iter_mut().rev().find(|(n, _)| n == name) {
+            slot.1 = v;
+        } else {
+            self.vars.push((name.to_string(), v));
+        }
+    }
+
+    pub fn var(&self, name: &str) -> Option<&Value> {
+        self.vars
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+    }
+
+    pub fn push_cursor(&mut self, name: &str, c: Cursor) {
+        self.cursors.push((name.to_string(), c));
+    }
+
+    pub fn pop_cursor(&mut self) {
+        self.cursors.pop();
+    }
+
+    pub fn cursor(&self, name: &str) -> Option<&Cursor> {
+        self.cursors
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c)
+    }
+}
+
+/// Storage for accumulator arrays: associative maps from subscript tuples
+/// to values. The recognized-idiom fast paths bypass this entirely.
+#[derive(Debug, Default, Clone)]
+pub struct ArrayStore {
+    arrays: HashMap<String, HashMap<Tuple, Value>>,
+}
+
+impl ArrayStore {
+    pub fn new() -> Self {
+        ArrayStore::default()
+    }
+
+    pub fn accum(&mut self, array: &str, index: Tuple, op: AccumOp, v: Value, init: &Value) {
+        let slot = self
+            .arrays
+            .entry(array.to_string())
+            .or_default()
+            .entry(index)
+            .or_insert_with(|| init.clone());
+        *slot = apply_accum(op, slot, &v);
+    }
+
+    pub fn read(&self, array: &str, index: &Tuple, init: &Value) -> Value {
+        self.arrays
+            .get(array)
+            .and_then(|m| m.get(index))
+            .cloned()
+            .unwrap_or_else(|| init.clone())
+    }
+
+    pub fn entries(&self, array: &str) -> impl Iterator<Item = (&Tuple, &Value)> {
+        self.arrays.get(array).into_iter().flat_map(|m| m.iter())
+    }
+
+    /// Merge another store into this one, combining same-key entries with
+    /// `Add` semantics for numeric values (parallel-partial merge).
+    pub fn merge_add(&mut self, other: ArrayStore) {
+        for (name, entries) in other.arrays {
+            let dst = self.arrays.entry(name).or_default();
+            for (k, v) in entries {
+                match dst.get_mut(&k) {
+                    Some(slot) => *slot = apply_accum(AccumOp::Add, slot, &v),
+                    None => {
+                        dst.insert(k, v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn apply_accum(op: AccumOp, old: &Value, new: &Value) -> Value {
+    match op {
+        AccumOp::Set => new.clone(),
+        AccumOp::Add => value_binop(BinOp::Add, old, new).unwrap_or_else(|_| new.clone()),
+        AccumOp::Max => {
+            if new > old {
+                new.clone()
+            } else {
+                old.clone()
+            }
+        }
+        AccumOp::Min => {
+            if new < old {
+                new.clone()
+            } else {
+                old.clone()
+            }
+        }
+    }
+}
+
+/// Evaluate a binary operation on two values (Int/Float promotion).
+pub fn value_binop(op: BinOp, l: &Value, r: &Value) -> Result<Value> {
+    use BinOp::*;
+    Ok(match op {
+        Add | Sub | Mul | Div | Mod => match (l, r) {
+            (Value::Int(a), Value::Int(b)) => match op {
+                Add => Value::Int(a.wrapping_add(*b)),
+                Sub => Value::Int(a.wrapping_sub(*b)),
+                Mul => Value::Int(a.wrapping_mul(*b)),
+                Div => {
+                    if *b == 0 {
+                        bail!("integer division by zero")
+                    }
+                    Value::Int(a / b)
+                }
+                Mod => {
+                    if *b == 0 {
+                        bail!("integer modulo by zero")
+                    }
+                    Value::Int(a % b)
+                }
+                _ => unreachable!(),
+            },
+            _ => {
+                let (a, b) = (
+                    l.as_float().context("non-numeric lhs")?,
+                    r.as_float().context("non-numeric rhs")?,
+                );
+                Value::Float(match op {
+                    Add => a + b,
+                    Sub => a - b,
+                    Mul => a * b,
+                    Div => a / b,
+                    Mod => a % b,
+                    _ => unreachable!(),
+                })
+            }
+        },
+        Eq => Value::Bool(l == r),
+        Ne => Value::Bool(l != r),
+        Lt => Value::Bool(l < r),
+        Le => Value::Bool(l <= r),
+        Gt => Value::Bool(l > r),
+        Ge => Value::Bool(l >= r),
+        And => Value::Bool(l.truthy() && r.truthy()),
+        Or => Value::Bool(l.truthy() || r.truthy()),
+    })
+}
+
+/// Evaluate an expression.
+pub fn eval(e: &Expr, env: &Env, arrays: &ArrayStore, program: &Program) -> Result<Value> {
+    Ok(match e {
+        Expr::Const(v) => v.clone(),
+        Expr::Var(name) => env
+            .var(name)
+            .or_else(|| program.params.get(name))
+            .or_else(|| program.scalars.get(name))
+            .with_context(|| format!("unbound variable `{name}`"))?
+            .clone(),
+        Expr::Field { var, field } => {
+            let c = env
+                .cursor(var)
+                .with_context(|| format!("unbound cursor `{var}`"))?;
+            let fid = c
+                .table
+                .schema
+                .field_id(field)
+                .with_context(|| format!("no field `{field}`"))?;
+            c.table.value(c.row, fid)
+        }
+        Expr::ArrayRef { array, indices } => {
+            let decl = program
+                .arrays
+                .get(array)
+                .with_context(|| format!("undeclared array `{array}`"))?;
+            let index: Tuple = indices
+                .iter()
+                .map(|i| eval(i, env, arrays, program))
+                .collect::<Result<_>>()?;
+            arrays.read(array, &index, &decl.init)
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            // Short-circuit booleans.
+            if *op == BinOp::And {
+                let l = eval(lhs, env, arrays, program)?;
+                if !l.truthy() {
+                    return Ok(Value::Bool(false));
+                }
+                return Ok(Value::Bool(eval(rhs, env, arrays, program)?.truthy()));
+            }
+            if *op == BinOp::Or {
+                let l = eval(lhs, env, arrays, program)?;
+                if l.truthy() {
+                    return Ok(Value::Bool(true));
+                }
+                return Ok(Value::Bool(eval(rhs, env, arrays, program)?.truthy()));
+            }
+            let l = eval(lhs, env, arrays, program)?;
+            let r = eval(rhs, env, arrays, program)?;
+            value_binop(*op, &l, &r)?
+        }
+        Expr::Unary { op, expr } => {
+            let v = eval(expr, env, arrays, program)?;
+            match op {
+                UnOp::Neg => match v {
+                    Value::Int(i) => Value::Int(-i),
+                    Value::Float(f) => Value::Float(-f),
+                    other => bail!("cannot negate {other}"),
+                },
+                UnOp::Not => Value::Bool(!v.truthy()),
+            }
+        }
+        Expr::SumOverParts { var, parts, body } => {
+            let n = eval(parts, env, arrays, program)?
+                .as_int()
+                .context("non-integer part count")?;
+            let mut total = Value::Int(0);
+            let mut local = Env::new();
+            // Copy: SumOverParts bodies only reference arrays + the sum var
+            // + enclosing cursors; build a child env referencing both.
+            for k in 1..=n {
+                local.set_var(var, Value::Int(k));
+                let v = eval_with_overlay(body, env, &local, arrays, program)?;
+                total = value_binop(BinOp::Add, &total, &v)?;
+            }
+            total
+        }
+    })
+}
+
+/// Evaluate with an overlay env consulted before the base env.
+fn eval_with_overlay(
+    e: &Expr,
+    base: &Env,
+    overlay: &Env,
+    arrays: &ArrayStore,
+    program: &Program,
+) -> Result<Value> {
+    // Cheap approach: temporarily push overlay vars onto a clone of base.
+    // Overlays are tiny (the sum variable), so this stays off hot paths.
+    match e {
+        Expr::Var(name) => {
+            if let Some(v) = overlay.var(name) {
+                return Ok(v.clone());
+            }
+            eval(e, base, arrays, program)
+        }
+        Expr::ArrayRef { array, indices } => {
+            let decl = program
+                .arrays
+                .get(array)
+                .with_context(|| format!("undeclared array `{array}`"))?;
+            let index: Tuple = indices
+                .iter()
+                .map(|i| eval_with_overlay(i, base, overlay, arrays, program))
+                .collect::<Result<_>>()?;
+            Ok(arrays.read(array, &index, &decl.init))
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            let l = eval_with_overlay(lhs, base, overlay, arrays, program)?;
+            let r = eval_with_overlay(rhs, base, overlay, arrays, program)?;
+            value_binop(*op, &l, &r)
+        }
+        other => eval(other, base, arrays, program),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema};
+
+    fn program() -> Program {
+        Program::new("t")
+            .with_param("N", Value::Int(4))
+            .with_array("count", crate::ir::ArrayDecl::counter())
+    }
+
+    fn table() -> Arc<Table> {
+        let schema = Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]);
+        let m = Multiset::with_rows(
+            schema,
+            vec![vec![Value::str("/a"), Value::Int(7)]],
+        );
+        Arc::new(Table::from_multiset(&m).unwrap())
+    }
+
+    #[test]
+    fn arithmetic_promotion() {
+        assert_eq!(
+            value_binop(BinOp::Add, &Value::Int(1), &Value::Float(0.5)).unwrap(),
+            Value::Float(1.5)
+        );
+        assert_eq!(
+            value_binop(BinOp::Mul, &Value::Int(3), &Value::Int(4)).unwrap(),
+            Value::Int(12)
+        );
+        assert!(value_binop(BinOp::Div, &Value::Int(1), &Value::Int(0)).is_err());
+    }
+
+    #[test]
+    fn field_access_via_cursor() {
+        let p = program();
+        let mut env = Env::new();
+        env.push_cursor("i", Cursor { table: table(), row: 0 });
+        let v = eval(&Expr::field("i", "n"), &env, &ArrayStore::new(), &p).unwrap();
+        assert_eq!(v, Value::Int(7));
+    }
+
+    #[test]
+    fn array_read_defaults_to_init() {
+        let p = program();
+        let v = eval(
+            &Expr::array("count", vec![Expr::int(5)]),
+            &Env::new(),
+            &ArrayStore::new(),
+            &p,
+        )
+        .unwrap();
+        assert_eq!(v, Value::Int(0));
+    }
+
+    #[test]
+    fn accum_and_read_back() {
+        let p = program();
+        let mut store = ArrayStore::new();
+        let init = Value::Int(0);
+        store.accum("count", vec![Value::str("/a")], AccumOp::Add, Value::Int(1), &init);
+        store.accum("count", vec![Value::str("/a")], AccumOp::Add, Value::Int(1), &init);
+        let v = eval(
+            &Expr::array("count", vec![Expr::str("/a")]),
+            &Env::new(),
+            &store,
+            &p,
+        )
+        .unwrap();
+        assert_eq!(v, Value::Int(2));
+    }
+
+    #[test]
+    fn sum_over_parts() {
+        let p = program();
+        let mut store = ArrayStore::new();
+        let init = Value::Int(0);
+        for k in 1..=4i64 {
+            store.accum("count", vec![Value::Int(k)], AccumOp::Add, Value::Int(10 * k), &init);
+        }
+        let e = Expr::SumOverParts {
+            var: "k".into(),
+            parts: Box::new(Expr::var("N")),
+            body: Box::new(Expr::array("count", vec![Expr::var("k")])),
+        };
+        let v = eval(&e, &Env::new(), &store, &p).unwrap();
+        assert_eq!(v, Value::Int(100));
+    }
+
+    #[test]
+    fn merge_add_combines_stores() {
+        let init = Value::Int(0);
+        let mut a = ArrayStore::new();
+        a.accum("c", vec![Value::Int(1)], AccumOp::Add, Value::Int(2), &init);
+        let mut b = ArrayStore::new();
+        b.accum("c", vec![Value::Int(1)], AccumOp::Add, Value::Int(3), &init);
+        b.accum("c", vec![Value::Int(2)], AccumOp::Add, Value::Int(5), &init);
+        a.merge_add(b);
+        assert_eq!(a.read("c", &vec![Value::Int(1)], &init), Value::Int(5));
+        assert_eq!(a.read("c", &vec![Value::Int(2)], &init), Value::Int(5));
+    }
+
+    #[test]
+    fn short_circuit_and() {
+        let p = program();
+        // (false && <unbound var>) must not error.
+        let e = Expr::bin(BinOp::And, Expr::Const(Value::Bool(false)), Expr::var("nope"));
+        assert_eq!(
+            eval(&e, &Env::new(), &ArrayStore::new(), &p).unwrap(),
+            Value::Bool(false)
+        );
+    }
+}

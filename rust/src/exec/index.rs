@@ -1,0 +1,217 @@
+//! Runtime index structures for filtered index sets.
+//!
+//! "the compiler will determine iteration methods for these loops and
+//! generate appropriate code. An iteration method may or may not involve
+//! the use of an additional index structure" (§III-B). These structures
+//! are generated at run time and are temporary, exactly as the paper
+//! describes; the cache lets one index serve several forelem loops.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::ir::Value;
+use crate::storage::Table;
+
+/// Hash index: field value → row ids (Figure 1 bottom).
+#[derive(Debug)]
+pub struct HashIndex {
+    map: HashMap<Value, Vec<u32>>,
+}
+
+impl HashIndex {
+    pub fn build(table: &Table, field: usize) -> Self {
+        let mut map: HashMap<Value, Vec<u32>> = HashMap::new();
+        for row in 0..table.len() {
+            map.entry(table.value(row, field))
+                .or_default()
+                .push(row as u32);
+        }
+        HashIndex { map }
+    }
+
+    pub fn probe(&self, key: &Value) -> &[u32] {
+        self.map.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &Value> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Sorted (tree) index: ordered field value → row ids.
+#[derive(Debug)]
+pub struct TreeIndex {
+    map: BTreeMap<Value, Vec<u32>>,
+}
+
+impl TreeIndex {
+    pub fn build(table: &Table, field: usize) -> Self {
+        let mut map: BTreeMap<Value, Vec<u32>> = BTreeMap::new();
+        for row in 0..table.len() {
+            map.entry(table.value(row, field))
+                .or_default()
+                .push(row as u32);
+        }
+        TreeIndex { map }
+    }
+
+    pub fn probe(&self, key: &Value) -> &[u32] {
+        self.map.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Ordered iteration over (value, rows) — what distinct loops with
+    /// ordering requirements use.
+    pub fn iter(&self) -> impl Iterator<Item = (&Value, &Vec<u32>)> {
+        self.map.iter()
+    }
+
+    pub fn range(
+        &self,
+        lo: &Value,
+        hi: &Value,
+    ) -> impl Iterator<Item = (&Value, &Vec<u32>)> {
+        self.map.range(lo.clone()..=hi.clone())
+    }
+}
+
+/// Distinct-value directory: value → first row (for `pA.distinct(f)`),
+/// in first-occurrence order.
+#[derive(Debug)]
+pub struct DistinctIndex {
+    pub firsts: Vec<u32>,
+}
+
+impl DistinctIndex {
+    pub fn build(table: &Table, field: usize) -> Self {
+        let mut seen = HashMap::new();
+        let mut firsts = Vec::new();
+        for row in 0..table.len() {
+            let v = table.value(row, field);
+            if seen.insert(v, ()).is_none() {
+                firsts.push(row as u32);
+            }
+        }
+        DistinctIndex { firsts }
+    }
+}
+
+/// Per-execution cache: one index per (table-ptr, field, kind).
+#[derive(Debug, Default)]
+pub struct IndexCache {
+    hash: HashMap<(usize, usize), Arc<HashIndex>>,
+    tree: HashMap<(usize, usize), Arc<TreeIndex>>,
+    distinct: HashMap<(usize, usize), Arc<DistinctIndex>>,
+    pub builds: usize,
+}
+
+impl IndexCache {
+    pub fn new() -> Self {
+        IndexCache::default()
+    }
+
+    fn key(table: &Arc<Table>, field: usize) -> (usize, usize) {
+        (Arc::as_ptr(table) as usize, field)
+    }
+
+    pub fn hash(&mut self, table: &Arc<Table>, field: usize) -> Arc<HashIndex> {
+        let key = Self::key(table, field);
+        if let Some(ix) = self.hash.get(&key) {
+            return ix.clone();
+        }
+        self.builds += 1;
+        let ix = Arc::new(HashIndex::build(table, field));
+        self.hash.insert(key, ix.clone());
+        ix
+    }
+
+    pub fn tree(&mut self, table: &Arc<Table>, field: usize) -> Arc<TreeIndex> {
+        let key = Self::key(table, field);
+        if let Some(ix) = self.tree.get(&key) {
+            return ix.clone();
+        }
+        self.builds += 1;
+        let ix = Arc::new(TreeIndex::build(table, field));
+        self.tree.insert(key, ix.clone());
+        ix
+    }
+
+    pub fn distinct(&mut self, table: &Arc<Table>, field: usize) -> Arc<DistinctIndex> {
+        let key = Self::key(table, field);
+        if let Some(ix) = self.distinct.get(&key) {
+            return ix.clone();
+        }
+        self.builds += 1;
+        let ix = Arc::new(DistinctIndex::build(table, field));
+        self.distinct.insert(key, ix.clone());
+        ix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema};
+
+    fn table() -> Arc<Table> {
+        let schema = Schema::new(vec![("k", DataType::Int)]);
+        let m = Multiset::with_rows(
+            schema,
+            vec![
+                vec![Value::Int(3)],
+                vec![Value::Int(1)],
+                vec![Value::Int(3)],
+                vec![Value::Int(2)],
+            ],
+        );
+        Arc::new(Table::from_multiset(&m).unwrap())
+    }
+
+    #[test]
+    fn hash_probe_finds_all_rows() {
+        let t = table();
+        let ix = HashIndex::build(&t, 0);
+        assert_eq!(ix.probe(&Value::Int(3)), &[0, 2]);
+        assert_eq!(ix.probe(&Value::Int(9)), &[] as &[u32]);
+        assert_eq!(ix.len(), 3);
+    }
+
+    #[test]
+    fn tree_iterates_in_order() {
+        let t = table();
+        let ix = TreeIndex::build(&t, 0);
+        let keys: Vec<i64> = ix.iter().map(|(v, _)| v.as_int().unwrap()).collect();
+        assert_eq!(keys, vec![1, 2, 3]);
+        let ranged: Vec<i64> = ix
+            .range(&Value::Int(2), &Value::Int(3))
+            .map(|(v, _)| v.as_int().unwrap())
+            .collect();
+        assert_eq!(ranged, vec![2, 3]);
+    }
+
+    #[test]
+    fn distinct_keeps_first_occurrence_order() {
+        let t = table();
+        let ix = DistinctIndex::build(&t, 0);
+        assert_eq!(ix.firsts, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn cache_reuses_indexes() {
+        let t = table();
+        let mut cache = IndexCache::new();
+        let a = cache.hash(&t, 0);
+        let b = cache.hash(&t, 0);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.builds, 1);
+        cache.tree(&t, 0);
+        assert_eq!(cache.builds, 2);
+    }
+}

@@ -1,0 +1,662 @@
+//! The reference interpreter: executes any valid program sequentially.
+//!
+//! This is the semantic oracle for everything else — the recognized-idiom
+//! compiled plans (plan.rs), the parallel executor and the distributed
+//! coordinator must all produce `bag_eq` results with this interpreter.
+//! (The paper generates C code from the IR; our analogue is plan.rs. The
+//! interpreter is the specification both are checked against.)
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{
+    Domain, Expr, Loop, LoopKind, Multiset, Program, Stmt, Strategy, Tuple, Value,
+};
+use crate::storage::{StorageCatalog, Table};
+
+use super::eval::{eval, ArrayStore, Cursor, Env};
+use super::index::IndexCache;
+
+/// Execution statistics (observability + test assertions).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    /// Tuples visited by index-set iteration.
+    pub rows_visited: u64,
+    /// Index structures built.
+    pub index_builds: usize,
+    /// Which compiled idioms fired (empty for the pure interpreter).
+    pub idioms: Vec<String>,
+    /// Calls into the XLA kernel runtime.
+    pub kernel_calls: usize,
+}
+
+/// The outcome of executing a program.
+#[derive(Debug, Default)]
+pub struct Output {
+    pub results: BTreeMap<String, Multiset>,
+    pub scalars: BTreeMap<String, Value>,
+    pub prints: Vec<String>,
+    pub stats: ExecStats,
+}
+
+impl Output {
+    /// The (single) result multiset `R`, when present.
+    pub fn result(&self) -> Option<&Multiset> {
+        self.results.get("R").or_else(|| self.results.values().next())
+    }
+}
+
+/// Execute a program sequentially against a storage catalog.
+pub fn run(program: &Program, catalog: &StorageCatalog) -> Result<Output> {
+    let mut interp = Interp::new(program, catalog);
+    interp.run_body(&program.body)?;
+    Ok(interp.finish())
+}
+
+pub(crate) struct Interp<'a> {
+    program: &'a Program,
+    catalog: &'a StorageCatalog,
+    pub arrays: ArrayStore,
+    pub(crate) env: Env,
+    pub(crate) results: BTreeMap<String, Multiset>,
+    cache: IndexCache,
+    pub(crate) prints: Vec<String>,
+    pub stats: ExecStats,
+}
+
+impl<'a> Interp<'a> {
+    pub fn new(program: &'a Program, catalog: &'a StorageCatalog) -> Self {
+        let mut results = BTreeMap::new();
+        for (name, schema) in &program.results {
+            results.insert(name.clone(), Multiset::new(schema.clone()));
+        }
+        let mut env = Env::new();
+        for (name, init) in &program.scalars {
+            env.set_var(name, init.clone());
+        }
+        Interp {
+            program,
+            catalog,
+            arrays: ArrayStore::new(),
+            env,
+            results,
+            cache: IndexCache::new(),
+            prints: Vec::new(),
+            stats: ExecStats::default(),
+        }
+    }
+
+    pub fn finish(mut self) -> Output {
+        self.stats.index_builds = self.cache.builds;
+        let mut scalars = BTreeMap::new();
+        for name in self.program.scalars.keys() {
+            if let Some(v) = self.env.var(name) {
+                scalars.insert(name.clone(), v.clone());
+            }
+        }
+        Output {
+            results: self.results,
+            scalars,
+            prints: self.prints,
+            stats: self.stats,
+        }
+    }
+
+    pub fn run_body(&mut self, body: &[Stmt]) -> Result<()> {
+        for s in body {
+            self.exec_stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn exec_stmt(&mut self, s: &Stmt) -> Result<()> {
+        match s {
+            Stmt::Loop(l) => self.exec_loop(l),
+            Stmt::Accum {
+                array,
+                indices,
+                op,
+                value,
+            } => {
+                let decl = self
+                    .program
+                    .arrays
+                    .get(array)
+                    .with_context(|| format!("undeclared array `{array}`"))?;
+                let index: Tuple = indices
+                    .iter()
+                    .map(|i| eval(i, &self.env, &self.arrays, self.program))
+                    .collect::<Result<_>>()?;
+                let v = eval(value, &self.env, &self.arrays, self.program)?;
+                self.arrays.accum(array, index, *op, v, &decl.init.clone());
+                Ok(())
+            }
+            Stmt::ResultUnion { result, tuple } => {
+                let row: Tuple = tuple
+                    .iter()
+                    .map(|e| eval(e, &self.env, &self.arrays, self.program))
+                    .collect::<Result<_>>()?;
+                self.results
+                    .get_mut(result)
+                    .with_context(|| format!("undeclared result `{result}`"))?
+                    .push(row);
+                Ok(())
+            }
+            Stmt::Assign { var, value } => {
+                let v = eval(value, &self.env, &self.arrays, self.program)?;
+                self.env.set_var(var, v);
+                Ok(())
+            }
+            Stmt::If { cond, then, els } => {
+                let c = eval(cond, &self.env, &self.arrays, self.program)?;
+                if c.truthy() {
+                    self.run_body(then)
+                } else {
+                    self.run_body(els)
+                }
+            }
+            Stmt::Print { format, args } => {
+                let mut text = format.clone();
+                for a in args {
+                    let v = eval(a, &self.env, &self.arrays, self.program)?;
+                    // Replace the first `{}`-style placeholder.
+                    if let Some(pos) = text.find("{}") {
+                        text.replace_range(pos..pos + 2, &v.to_string());
+                    } else {
+                        text.push_str(&format!(" {v}"));
+                    }
+                }
+                self.prints.push(text);
+                Ok(())
+            }
+        }
+    }
+
+    fn exec_loop(&mut self, l: &Loop) -> Result<()> {
+        match &l.domain {
+            Domain::IndexSet(ix) => {
+                let table = self.catalog.get(&ix.relation)?.clone();
+
+                // Partitioned index set: restrict to the k-th contiguous
+                // block (direct data partitioning, §III-A1).
+                let (lo, hi) = match &ix.partition {
+                    Some(p) => {
+                        let k = eval(&p.part, &self.env, &self.arrays, self.program)?
+                            .as_int()
+                            .context("partition id must be an int")?;
+                        let n = eval(&p.parts, &self.env, &self.arrays, self.program)?
+                            .as_int()
+                            .context("partition count must be an int")?;
+                        if k < 1 || k > n {
+                            bail!("partition {k} out of 1..={n}");
+                        }
+                        block_bounds(table.len(), n as usize, k as usize - 1)
+                    }
+                    None => (0, table.len()),
+                };
+
+                if let Some(dfield) = &ix.distinct {
+                    // Iterate one representative row per distinct value.
+                    let fid = table
+                        .schema
+                        .field_id(dfield)
+                        .with_context(|| format!("no field `{dfield}`"))?;
+                    let dix = self.cache.distinct(&table, fid);
+                    for &row in dix.firsts.iter() {
+                        let row = row as usize;
+                        if row < lo || row >= hi {
+                            continue;
+                        }
+                        self.iter_row(l, &table, row)?;
+                    }
+                    return Ok(());
+                }
+
+                if let Some((field, value_expr)) = &ix.field_filter {
+                    let fid = table
+                        .schema
+                        .field_id(field)
+                        .with_context(|| format!("no field `{field}`"))?;
+                    let key = eval(value_expr, &self.env, &self.arrays, self.program)?;
+                    match ix.strategy {
+                        Strategy::Hash => {
+                            let hix = self.cache.hash(&table, fid);
+                            for &row in hix.probe(&key) {
+                                let row = row as usize;
+                                if row < lo || row >= hi {
+                                    continue;
+                                }
+                                self.iter_row(l, &table, row)?;
+                            }
+                        }
+                        Strategy::Tree => {
+                            let tix = self.cache.tree(&table, fid);
+                            for &row in tix.probe(&key) {
+                                let row = row as usize;
+                                if row < lo || row >= hi {
+                                    continue;
+                                }
+                                self.iter_row(l, &table, row)?;
+                            }
+                        }
+                        Strategy::Scan | Strategy::Unspecified => {
+                            for row in lo..hi {
+                                self.stats.rows_visited += 1;
+                                if table.value(row, fid) == key {
+                                    self.iter_row(l, &table, row)?;
+                                }
+                            }
+                        }
+                    }
+                    return Ok(());
+                }
+
+                // Plain full (or partition-restricted) iteration.
+                for row in lo..hi {
+                    self.iter_row(l, &table, row)?;
+                }
+                Ok(())
+            }
+            Domain::Range { lo, hi } => {
+                let lo = eval(lo, &self.env, &self.arrays, self.program)?
+                    .as_int()
+                    .context("range lo must be an int")?;
+                let hi = eval(hi, &self.env, &self.arrays, self.program)?
+                    .as_int()
+                    .context("range hi must be an int")?;
+                for k in lo..=hi {
+                    self.env.push_var(&l.var, Value::Int(k));
+                    let r = self.run_body(&l.body);
+                    self.env.pop_var();
+                    r?;
+                }
+                Ok(())
+            }
+            Domain::ValuePartition {
+                relation,
+                field,
+                part,
+                parts,
+            } => {
+                let table = self.catalog.get(relation)?.clone();
+                let fid = table
+                    .schema
+                    .field_id(field)
+                    .with_context(|| format!("no field `{field}`"))?;
+                let k = eval(part, &self.env, &self.arrays, self.program)?
+                    .as_int()
+                    .context("partition id must be an int")?;
+                let n = eval(parts, &self.env, &self.arrays, self.program)?
+                    .as_int()
+                    .context("partition count must be an int")?;
+                if k < 1 || k > n {
+                    bail!("value partition {k} out of 1..={n}");
+                }
+                let values = partition_values(&mut self.cache, &table, fid, n as usize);
+                for v in values[k as usize - 1].clone() {
+                    self.env.push_var(&l.var, v);
+                    let r = self.run_body(&l.body);
+                    self.env.pop_var();
+                    r?;
+                }
+                Ok(())
+            }
+            Domain::DistinctValues { relation, field } => {
+                let table = self.catalog.get(relation)?.clone();
+                let fid = table
+                    .schema
+                    .field_id(field)
+                    .with_context(|| format!("no field `{field}`"))?;
+                let dix = self.cache.distinct(&table, fid);
+                for &row in dix.firsts.iter() {
+                    let v = table.value(row as usize, fid);
+                    self.env.push_var(&l.var, v);
+                    let r = self.run_body(&l.body);
+                    self.env.pop_var();
+                    r?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn iter_row(&mut self, l: &Loop, table: &Arc<Table>, row: usize) -> Result<()> {
+        self.stats.rows_visited += 1;
+        self.env.push_cursor(
+            &l.var,
+            Cursor {
+                table: table.clone(),
+                row,
+            },
+        );
+        let r = self.run_body(&l.body);
+        self.env.pop_cursor();
+        r
+    }
+}
+
+/// Contiguous block bounds for direct partitioning: block `k` of `n` over
+/// `len` rows, with remainders spread over the leading blocks.
+pub fn block_bounds(len: usize, n: usize, k: usize) -> (usize, usize) {
+    let base = len / n;
+    let rem = len % n;
+    let lo = k * base + k.min(rem);
+    let size = base + usize::from(k < rem);
+    (lo, (lo + size).min(len))
+}
+
+/// The sorted-value-range partitioning of `relation.field` into `n`
+/// segments (indirect partitioning's `X = X_1 ∪ ... ∪ X_N`).
+pub fn partition_values(
+    cache: &mut IndexCache,
+    table: &Arc<Table>,
+    field: usize,
+    n: usize,
+) -> Vec<Vec<Value>> {
+    let tix = cache.tree(table, field);
+    let sorted: Vec<Value> = tix.iter().map(|(v, _)| v.clone()).collect();
+    let mut parts = Vec::with_capacity(n);
+    for k in 0..n {
+        let (lo, hi) = block_bounds(sorted.len(), n, k);
+        parts.push(sorted[lo..hi].to_vec());
+    }
+    parts
+}
+
+/// Fraction of the loop kinds that the interpreter treats specially:
+/// `forall` runs sequentially here — parallel execution is the
+/// coordinator's job. Kept as a function so tests can assert the intent.
+pub fn forall_is_sequential_here(kind: LoopKind) -> bool {
+    kind == LoopKind::Forall
+}
+
+#[allow(unused_imports)]
+use Expr as _ExprUnused;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDecl, DataType, IndexSet, Schema};
+    use crate::sql::compile_sql;
+
+    fn access_catalog() -> StorageCatalog {
+        let schema = Schema::new(vec![("url", DataType::Str)]);
+        let mut m = Multiset::new(schema);
+        for u in ["/a", "/b", "/a", "/c", "/a", "/b"] {
+            m.push(vec![Value::str(u)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        c
+    }
+
+    #[test]
+    fn url_count_end_to_end() {
+        let catalog = access_catalog();
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &catalog.schemas(),
+        )
+        .unwrap();
+        let out = run(&p, &catalog).unwrap();
+        let r = out.result().unwrap();
+        assert_eq!(r.len(), 3);
+        let expected = Multiset::with_rows(
+            r.schema.clone(),
+            vec![
+                vec![Value::str("/a"), Value::Int(3)],
+                vec![Value::str("/b"), Value::Int(2)],
+                vec![Value::str("/c"), Value::Int(1)],
+            ],
+        );
+        assert!(r.bag_eq(&expected), "{r:?}");
+    }
+
+    #[test]
+    fn join_all_strategies_agree() {
+        let mut c = StorageCatalog::new();
+        let a = Multiset::with_rows(
+            Schema::new(vec![("b_id", DataType::Int), ("field", DataType::Str)]),
+            vec![
+                vec![Value::Int(1), Value::str("a1")],
+                vec![Value::Int(2), Value::str("a2")],
+                vec![Value::Int(1), Value::str("a3")],
+                vec![Value::Int(9), Value::str("a4")], // no partner
+            ],
+        );
+        let b = Multiset::with_rows(
+            Schema::new(vec![("id", DataType::Int), ("field", DataType::Str)]),
+            vec![
+                vec![Value::Int(1), Value::str("b1")],
+                vec![Value::Int(2), Value::str("b2")],
+                vec![Value::Int(1), Value::str("b3")],
+            ],
+        );
+        c.insert_multiset("A", &a).unwrap();
+        c.insert_multiset("B", &b).unwrap();
+
+        let base = compile_sql(
+            "SELECT A.field, B.field FROM A JOIN B ON A.b_id = B.id",
+            &c.schemas(),
+        )
+        .unwrap();
+        let reference = run(&base, &c).unwrap();
+        assert_eq!(reference.result().unwrap().len(), 5); // (a1,b1)(a1,b3)(a2,b2)(a3,b1)(a3,b3)
+
+        for strat in [Strategy::Scan, Strategy::Hash, Strategy::Tree] {
+            let mut p = base.clone();
+            // Set the inner loop's strategy.
+            if let Stmt::Loop(outer) = &mut p.body[0] {
+                if let Stmt::Loop(inner) = &mut outer.body[0] {
+                    inner.index_set_mut().unwrap().strategy = strat;
+                }
+            }
+            let out = run(&p, &c).unwrap();
+            assert!(
+                out.result().unwrap().bag_eq(reference.result().unwrap()),
+                "strategy {strat} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn hash_strategy_builds_one_index_and_visits_fewer_rows() {
+        let mut c = StorageCatalog::new();
+        let b = {
+            let mut m = Multiset::new(Schema::new(vec![("id", DataType::Int)]));
+            for i in 0..100 {
+                m.push(vec![Value::Int(i)]);
+            }
+            m
+        };
+        c.insert_multiset("A", &b).unwrap();
+        c.insert_multiset("B", &b).unwrap();
+        // Self-join style probe: for each A row, find B rows with same id.
+        let mut p = Program::new("t")
+            .with_relation("A", c.schemas()["A"].clone())
+            .with_relation("B", c.schemas()["B"].clone())
+            .with_result("R", Schema::new(vec![("x", DataType::Int)]));
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::Loop(Loop::forelem(
+                "j",
+                IndexSet::filtered("B", "id", Expr::field("i", "id"))
+                    .with_strategy(Strategy::Hash),
+                vec![Stmt::result_union("R", vec![Expr::field("j", "id")])],
+            ))],
+        ))];
+        let out = run(&p, &c).unwrap();
+        assert_eq!(out.result().unwrap().len(), 100);
+        assert_eq!(out.stats.index_builds, 1);
+        // Scan would visit 100*100 B-rows; hash visits 100 + 100.
+        assert!(out.stats.rows_visited <= 300, "{}", out.stats.rows_visited);
+    }
+
+    #[test]
+    fn partitioned_loop_covers_every_row_exactly_once() {
+        let catalog = access_catalog();
+        // forall k=1..3 { forelem i ∈ p_k access { count[i.url]++ } } then emit.
+        let mut p = Program::new("part")
+            .with_relation("access", catalog.schemas()["access"].clone())
+            .with_array("count", ArrayDecl::counter())
+            .with_param("N", Value::Int(3))
+            .with_result(
+                "R",
+                Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]),
+            );
+        p.body = vec![
+            Stmt::Loop(Loop::forall_range(
+                "k",
+                Expr::int(1),
+                Expr::var("N"),
+                vec![Stmt::Loop(Loop::forelem(
+                    "i",
+                    IndexSet::all("access").with_partition(Expr::var("k"), Expr::var("N")),
+                    vec![Stmt::increment("count", vec![Expr::field("i", "url")])],
+                ))],
+            )),
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::distinct_of("access", "url"),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![
+                        Expr::field("i", "url"),
+                        Expr::array("count", vec![Expr::field("i", "url")]),
+                    ],
+                )],
+            )),
+        ];
+        let out = run(&p, &catalog).unwrap();
+        let r = out.result().unwrap();
+        let expected = Multiset::with_rows(
+            r.schema.clone(),
+            vec![
+                vec![Value::str("/a"), Value::Int(3)],
+                vec![Value::str("/b"), Value::Int(2)],
+                vec![Value::str("/c"), Value::Int(1)],
+            ],
+        );
+        assert!(r.bag_eq(&expected));
+    }
+
+    #[test]
+    fn value_partition_covers_all_values() {
+        let catalog = access_catalog();
+        // forall k=1..2 { for l ∈ X_k { forelem i ∈ paccess.url[l] { count[i.url]++ } } }
+        let mut p = Program::new("vpart")
+            .with_relation("access", catalog.schemas()["access"].clone())
+            .with_array("count", ArrayDecl::counter())
+            .with_param("N", Value::Int(2))
+            .with_result(
+                "R",
+                Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]),
+            );
+        p.body = vec![
+            Stmt::Loop(Loop::forall_range(
+                "k",
+                Expr::int(1),
+                Expr::var("N"),
+                vec![Stmt::Loop(Loop {
+                    kind: LoopKind::For,
+                    var: "l".into(),
+                    domain: Domain::ValuePartition {
+                        relation: "access".into(),
+                        field: "url".into(),
+                        part: Expr::var("k"),
+                        parts: Expr::var("N"),
+                    },
+                    body: vec![Stmt::Loop(Loop::forelem(
+                        "i",
+                        IndexSet::filtered("access", "url", Expr::var("l"))
+                            .with_strategy(Strategy::Hash),
+                        vec![Stmt::increment("count", vec![Expr::field("i", "url")])],
+                    ))],
+                })],
+            )),
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::distinct_of("access", "url"),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![
+                        Expr::field("i", "url"),
+                        Expr::array("count", vec![Expr::field("i", "url")]),
+                    ],
+                )],
+            )),
+        ];
+        let out = run(&p, &catalog).unwrap();
+        let r = out.result().unwrap();
+        let expected = Multiset::with_rows(
+            r.schema.clone(),
+            vec![
+                vec![Value::str("/a"), Value::Int(3)],
+                vec![Value::str("/b"), Value::Int(2)],
+                vec![Value::str("/c"), Value::Int(1)],
+            ],
+        );
+        assert!(r.bag_eq(&expected), "{r:?}");
+    }
+
+    #[test]
+    fn weighted_average_vertical_integration() {
+        // §III-B merged loop: avg += grade*weight over one student.
+        let mut c = StorageCatalog::new();
+        let grades = Multiset::with_rows(
+            Schema::new(vec![
+                ("studentID", DataType::Int),
+                ("grade", DataType::Float),
+                ("weight", DataType::Float),
+            ]),
+            vec![
+                vec![Value::Int(25), Value::Float(8.0), Value::Float(0.5)],
+                vec![Value::Int(30), Value::Float(6.0), Value::Float(1.0)],
+                vec![Value::Int(25), Value::Float(6.0), Value::Float(0.5)],
+            ],
+        );
+        c.insert_multiset("Grades", &grades).unwrap();
+        let mut p = Program::new("avg")
+            .with_relation("Grades", c.schemas()["Grades"].clone())
+            .with_scalar("avg", Value::Float(0.0));
+        p.body = vec![
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::filtered("Grades", "studentID", Expr::int(25)),
+                vec![Stmt::assign(
+                    "avg",
+                    Expr::add(
+                        Expr::var("avg"),
+                        Expr::mul(Expr::field("i", "grade"), Expr::field("i", "weight")),
+                    ),
+                )],
+            )),
+            Stmt::Print {
+                format: "Average grade: {}".into(),
+                args: vec![Expr::var("avg")],
+            },
+        ];
+        let out = run(&p, &c).unwrap();
+        assert_eq!(out.scalars["avg"], Value::Float(7.0));
+        assert_eq!(out.prints, vec!["Average grade: 7".to_string()]);
+    }
+
+    #[test]
+    fn block_bounds_partition_exactly() {
+        for (len, n) in [(10, 3), (7, 7), (5, 8), (0, 4), (100, 1)] {
+            let mut covered = 0;
+            let mut prev_hi = 0;
+            for k in 0..n {
+                let (lo, hi) = block_bounds(len, n, k);
+                assert_eq!(lo, prev_hi);
+                prev_hi = hi;
+                covered += hi - lo;
+            }
+            assert_eq!(covered, len, "len={len} n={n}");
+            assert_eq!(prev_hi, len);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The execution engine: evaluates transformed IR against storage.
+//!
+//! * [`eval`]  — expression evaluation, environments, accumulator store;
+//! * [`index`] — temporary runtime index structures (hash/tree/distinct);
+//! * [`local`] — the sequential reference interpreter (semantic oracle);
+//! * [`plan`]  — compiled plans: recognized idioms executed by native
+//!   loops or the XLA kernel runtime (the analogue of the paper's
+//!   generated C code).
+
+pub mod eval;
+pub mod index;
+pub mod local;
+pub mod parallel;
+pub mod plan;
+
+pub use eval::{ArrayStore, Cursor, Env};
+pub use index::{DistinctIndex, HashIndex, IndexCache, TreeIndex};
+pub use local::{block_bounds, partition_values, run, ExecStats, Output};
+pub use parallel::run_parallel;
+pub use plan::{recognize, run_compiled, Idiom};

@@ -1,0 +1,171 @@
+//! In-process parallel execution of `forall` loops.
+//!
+//! The coordinator (crate::coordinator) is the *distributed* runtime; this
+//! module is its shared-memory little sibling — the OpenMP half of the
+//! paper's "MPI and OpenMP" generated code. Each top-level `forall`
+//! iteration runs on its own thread with a private accumulator store
+//! (the privatized `count_k` arrays of §IV write disjoint slices, so the
+//! end-of-loop merge is a plain union; `merge_add` also stays correct for
+//! overlapping commutative adds). Result-multiset appends concatenate —
+//! bag semantics make the interleaving irrelevant.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::ir::{Domain, LoopKind, Program, Stmt, Value};
+use crate::storage::StorageCatalog;
+
+use super::eval::ArrayStore;
+use super::local::{ExecStats, Interp, Output};
+
+/// Execute a program, running top-level `forall` range loops with one
+/// thread per iteration (bounded by `max_threads`).
+pub fn run_parallel(
+    program: &Program,
+    catalog: &StorageCatalog,
+    max_threads: usize,
+) -> Result<Output> {
+    let mut master = Interp::new(program, catalog);
+    for s in &program.body {
+        match s {
+            Stmt::Loop(l) if l.kind == LoopKind::Forall => {
+                if let Domain::Range { lo, hi } = &l.domain {
+                    // Evaluate bounds in the master environment.
+                    let lo = super::eval::eval(lo, &master.env, &master.arrays, program)?
+                        .as_int()
+                        .context("forall lo")?;
+                    let hi = super::eval::eval(hi, &master.env, &master.arrays, program)?
+                        .as_int()
+                        .context("forall hi")?;
+                    let iters: Vec<i64> = (lo..=hi).collect();
+
+                    // Fan out: each worker runs with a PRIVATE, empty
+                    // accumulator store. This is sound for the programs
+                    // the parallelizing transforms generate: privatized
+                    // bodies only touch their own k-slice of each array
+                    // and never read pre-loop accumulator state.
+                    let chunks: Vec<Vec<i64>> = iters
+                        .chunks(iters.len().div_ceil(max_threads.max(1)))
+                        .map(|c| c.to_vec())
+                        .collect();
+                    let results: Vec<Result<(ArrayStore, BTreeMap<String, crate::ir::Multiset>, ExecStats)>> =
+                        std::thread::scope(|scope| {
+                            let handles: Vec<_> = chunks
+                                .iter()
+                                .map(|chunk| {
+                                    let body = &l.body;
+                                    let var = &l.var;
+                                    scope.spawn(move || {
+                                        let mut worker = Interp::new(program, catalog);
+                                        for &k in chunk {
+                                            worker.env.push_var(var, Value::Int(k));
+                                            let r = worker.run_body(body);
+                                            worker.env.pop_var();
+                                            r?;
+                                        }
+                                        Ok((worker.arrays, worker.results, worker.stats))
+                                    })
+                                })
+                                .collect();
+                            handles
+                                .into_iter()
+                                .map(|h| h.join().expect("forall worker panicked"))
+                                .collect()
+                        });
+
+                    // Merge worker stores into the master: privatized
+                    // slices are disjoint, and any residual overlap is a
+                    // commutative Add (merge_add handles both).
+                    for r in results {
+                        let (arrays, results, stats) = r?;
+                        master.arrays.merge_add(arrays);
+                        for (name, m) in results {
+                            if let Some(dst) = master.results.get_mut(&name) {
+                                for row in m.into_rows() {
+                                    dst.push(row);
+                                }
+                            }
+                        }
+                        master.stats.rows_visited += stats.rows_visited;
+                        master.stats.index_builds += stats.index_builds;
+                    }
+                    continue;
+                }
+                // Non-range forall: run sequentially (rare).
+                master.run_body(std::slice::from_ref(s))?;
+            }
+            other => master.run_body(std::slice::from_ref(other))?,
+        }
+    }
+    Ok(master.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sql::compile_sql;
+    use crate::transform::{DirectPartition, Pass, PassCtx};
+    use crate::workload::{access_log, AccessLogSpec};
+
+    fn setup(rows: usize) -> (Program, StorageCatalog) {
+        let m = access_log(&AccessLogSpec {
+            rows,
+            urls: 200,
+            skew: 1.1,
+            seed: 3,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        let mut p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        DirectPartition
+            .run(&mut p, &PassCtx::new().with_processors(8))
+            .unwrap();
+        (p, c)
+    }
+
+    #[test]
+    fn parallel_forall_matches_sequential() {
+        let (p, c) = setup(20_000);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        for threads in [1, 2, 4, 8] {
+            let par = run_parallel(&p, &c, threads).unwrap();
+            assert!(
+                par.result().unwrap().bag_eq(seq.result().unwrap()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_handles_programs_without_forall() {
+        let m = access_log(&AccessLogSpec {
+            rows: 100,
+            urls: 10,
+            skew: 1.0,
+            seed: 1,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        let p = compile_sql("SELECT url FROM access", &c.schemas()).unwrap();
+        let out = run_parallel(&p, &c, 4).unwrap();
+        assert_eq!(out.result().unwrap().len(), 100);
+    }
+
+    #[test]
+    fn parallel_is_faster_on_big_input() {
+        // Not a strict assertion (CI noise), but sanity-log the ratio.
+        let (p, c) = setup(200_000);
+        let t0 = std::time::Instant::now();
+        let _ = super::super::local::run(&p, &c).unwrap();
+        let seq_t = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        let _ = run_parallel(&p, &c, 8).unwrap();
+        let par_t = t0.elapsed();
+        eprintln!("seq {seq_t:?} vs par {par_t:?}");
+    }
+}

@@ -1,0 +1,293 @@
+//! Expression trees of the single intermediate representation.
+//!
+//! Expressions appear in loop bounds, index-set filters (`pA.field[expr]`),
+//! accumulator subscripts (`count[A[i].url]`), result tuples and filter
+//! conditions. They are deliberately simple — "simple loop control"
+//! (§II) is what makes the re-targeted compiler transformations
+//! applicable.
+
+use std::fmt;
+
+use super::value::Value;
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn is_comparison(self) -> bool {
+        matches!(
+            self,
+            BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge
+        )
+    }
+}
+
+impl fmt::Display for BinOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Mod => "%",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// An expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Literal constant.
+    Const(Value),
+    /// A scalar/loop variable or program parameter (`l`, `k`, `N`, `avg`).
+    Var(String),
+    /// `A[i].field` — `var` is the tuple cursor (a forelem loop variable),
+    /// `field` the accessed field name.
+    Field { var: String, field: String },
+    /// `count[k][A[i].url]` — accumulator array subscript.
+    ArrayRef { array: String, indices: Vec<Expr> },
+    /// Binary operation.
+    Binary {
+        op: BinOp,
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+    },
+    /// Unary operation.
+    Unary { op: UnOp, expr: Box<Expr> },
+    /// `Σ_{v=1}^{parts} body` — the cross-partition reduction that closes a
+    /// parallelized aggregation (§IV's `Σ_k count_k[...]`).
+    SumOverParts {
+        var: String,
+        parts: Box<Expr>,
+        body: Box<Expr>,
+    },
+}
+
+impl Expr {
+    pub fn int(v: i64) -> Expr {
+        Expr::Const(Value::Int(v))
+    }
+
+    pub fn float(v: f64) -> Expr {
+        Expr::Const(Value::Float(v))
+    }
+
+    pub fn str(v: &str) -> Expr {
+        Expr::Const(Value::str(v))
+    }
+
+    pub fn var(name: &str) -> Expr {
+        Expr::Var(name.to_string())
+    }
+
+    pub fn field(var: &str, field: &str) -> Expr {
+        Expr::Field {
+            var: var.to_string(),
+            field: field.to_string(),
+        }
+    }
+
+    pub fn array(array: &str, indices: Vec<Expr>) -> Expr {
+        Expr::ArrayRef {
+            array: array.to_string(),
+            indices,
+        }
+    }
+
+    pub fn bin(op: BinOp, lhs: Expr, rhs: Expr) -> Expr {
+        Expr::Binary {
+            op,
+            lhs: Box::new(lhs),
+            rhs: Box::new(rhs),
+        }
+    }
+
+    pub fn eq(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Eq, lhs, rhs)
+    }
+
+    pub fn add(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Add, lhs, rhs)
+    }
+
+    pub fn mul(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Mul, lhs, rhs)
+    }
+
+    /// Visit every sub-expression (pre-order).
+    pub fn walk(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::ArrayRef { indices, .. } => {
+                for i in indices {
+                    i.walk(f);
+                }
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.walk(f);
+                rhs.walk(f);
+            }
+            Expr::Unary { expr, .. } => expr.walk(f),
+            Expr::SumOverParts { parts, body, .. } => {
+                parts.walk(f);
+                body.walk(f);
+            }
+            Expr::Const(_) | Expr::Var(_) | Expr::Field { .. } => {}
+        }
+    }
+
+    /// Mutate every sub-expression (post-order): used by substitution passes.
+    pub fn walk_mut(&mut self, f: &mut impl FnMut(&mut Expr)) {
+        match self {
+            Expr::ArrayRef { indices, .. } => {
+                for i in indices {
+                    i.walk_mut(f);
+                }
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.walk_mut(f);
+                rhs.walk_mut(f);
+            }
+            Expr::Unary { expr, .. } => expr.walk_mut(f),
+            Expr::SumOverParts { parts, body, .. } => {
+                parts.walk_mut(f);
+                body.walk_mut(f);
+            }
+            Expr::Const(_) | Expr::Var(_) | Expr::Field { .. } => {}
+        }
+        f(self);
+    }
+
+    /// All loop-variable / scalar names this expression reads.
+    pub fn used_vars(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.walk(&mut |e| match e {
+            Expr::Var(v) => out.push(v.clone()),
+            Expr::Field { var, .. } => out.push(var.clone()),
+            _ => {}
+        });
+        out
+    }
+
+    /// All accumulator arrays this expression reads.
+    pub fn used_arrays(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.walk(&mut |e| {
+            if let Expr::ArrayRef { array, .. } = e {
+                out.push(array.clone());
+            }
+        });
+        out
+    }
+
+    /// Rename a variable throughout (alpha-renaming during fusion).
+    pub fn rename_var(&mut self, from: &str, to: &str) {
+        self.walk_mut(&mut |e| match e {
+            Expr::Var(v) if v == from => *v = to.to_string(),
+            Expr::Field { var, .. } if var == from => *var = to.to_string(),
+            _ => {}
+        });
+    }
+
+    /// True if the expression is a compile-time constant.
+    pub fn is_const(&self) -> bool {
+        matches!(self, Expr::Const(_))
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Const(Value::Str(s)) => write!(f, "{s:?}"),
+            Expr::Const(v) => write!(f, "{v}"),
+            Expr::Var(v) => write!(f, "{v}"),
+            Expr::Field { var, field } => write!(f, "{var}.{field}"),
+            Expr::ArrayRef { array, indices } => {
+                write!(f, "{array}")?;
+                for i in indices {
+                    write!(f, "[{i}]")?;
+                }
+                Ok(())
+            }
+            Expr::Binary { op, lhs, rhs } => write!(f, "({lhs} {op} {rhs})"),
+            Expr::Unary { op, expr } => match op {
+                UnOp::Neg => write!(f, "(-{expr})"),
+                UnOp::Not => write!(f, "(!{expr})"),
+            },
+            Expr::SumOverParts { var, parts, body } => {
+                write!(f, "sum({var}=1..{parts}; {body})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_roundtrip_style() {
+        let e = Expr::add(
+            Expr::mul(Expr::field("g", "grade"), Expr::field("g", "weight")),
+            Expr::int(1),
+        );
+        assert_eq!(e.to_string(), "((g.grade * g.weight) + 1)");
+    }
+
+    #[test]
+    fn used_vars_and_arrays() {
+        let e = Expr::array("count", vec![Expr::var("k"), Expr::field("i", "url")]);
+        let vars = e.used_vars();
+        assert!(vars.contains(&"k".to_string()));
+        assert!(vars.contains(&"i".to_string()));
+        assert_eq!(e.used_arrays(), vec!["count".to_string()]);
+    }
+
+    #[test]
+    fn rename_var_touches_fields() {
+        let mut e = Expr::field("i", "url");
+        e.rename_var("i", "j");
+        assert_eq!(e, Expr::field("j", "url"));
+    }
+
+    #[test]
+    fn sum_over_parts_display() {
+        let e = Expr::SumOverParts {
+            var: "k".into(),
+            parts: Box::new(Expr::var("N")),
+            body: Box::new(Expr::array("count", vec![Expr::var("k"), Expr::var("u")])),
+        };
+        assert_eq!(e.to_string(), "sum(k=1..N; count[k][u])");
+    }
+}

@@ -1,0 +1,167 @@
+//! Index sets: the iteration descriptors of `forelem` loops.
+//!
+//! The paper's key abstraction (§II): a `forelem` loop iterates a subset
+//! of a multiset, and the *index set* (`pA`, `pA.field[v]`,
+//! `pA.distinct(field)`) encapsulates how. Early in compilation only the
+//! *what* is fixed; the *how* — full scan, hash index, tree index — is a
+//! `Strategy` the materialization pass (transform/materialization.rs)
+//! decides late, exactly as Figure 1 shows one spec generating both
+//! nested-loops and hash-based evaluation code.
+
+use std::fmt;
+
+use super::expr::Expr;
+
+/// How an index set is executed at runtime — decided by the compiler's
+/// materialization pass, not by the author of the IR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Strategy {
+    /// Not yet decided (the state SQL lowering leaves loops in).
+    #[default]
+    Unspecified,
+    /// Visit every tuple, testing the filter inline (Figure 1 middle).
+    Scan,
+    /// Build/use a hash index keyed on the filter field (Figure 1 bottom).
+    Hash,
+    /// Build/use a sorted (tree) index keyed on the filter field — wins
+    /// when range predicates or ordered output are required.
+    Tree,
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Strategy::Unspecified => "?",
+            Strategy::Scan => "scan",
+            Strategy::Hash => "hash",
+            Strategy::Tree => "tree",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A partition tag attached by the data-partitioning transformations
+/// (§III-A1): after loop blocking, `pA` becomes `p_k A`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    /// Expression selecting the partition (usually the `forall` variable).
+    pub part: Expr,
+    /// Total number of partitions (usually the parameter `N`).
+    pub parts: Expr,
+}
+
+/// An index set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexSet {
+    /// The multiset being iterated (the paper writes `pA` for multiset `A`).
+    pub relation: String,
+    /// `pA.field[v]`: restrict to tuples whose `field` equals `v`.
+    pub field_filter: Option<(String, Expr)>,
+    /// `pA.distinct(field)`: iterate one representative tuple per distinct
+    /// value of `field`.
+    pub distinct: Option<String>,
+    /// Direct data partitioning (`p_k A`), if applied.
+    pub partition: Option<Partition>,
+    /// Execution strategy (chosen late).
+    pub strategy: Strategy,
+}
+
+impl IndexSet {
+    /// `pA` — the whole multiset.
+    pub fn all(relation: &str) -> Self {
+        IndexSet {
+            relation: relation.to_string(),
+            field_filter: None,
+            distinct: None,
+            partition: None,
+            strategy: Strategy::Unspecified,
+        }
+    }
+
+    /// `pA.field[value]`.
+    pub fn filtered(relation: &str, field: &str, value: Expr) -> Self {
+        IndexSet {
+            field_filter: Some((field.to_string(), value)),
+            ..IndexSet::all(relation)
+        }
+    }
+
+    /// `pA.distinct(field)`.
+    pub fn distinct_of(relation: &str, field: &str) -> Self {
+        IndexSet {
+            distinct: Some(field.to_string()),
+            ..IndexSet::all(relation)
+        }
+    }
+
+    pub fn with_strategy(mut self, s: Strategy) -> Self {
+        self.strategy = s;
+        self
+    }
+
+    pub fn with_partition(mut self, part: Expr, parts: Expr) -> Self {
+        self.partition = Some(Partition { part, parts });
+        self
+    }
+
+    /// The field this index set would be keyed on, if an index structure is
+    /// built (the filter field).
+    pub fn key_field(&self) -> Option<&str> {
+        self.field_filter.as_ref().map(|(f, _)| f.as_str())
+    }
+}
+
+impl fmt::Display for IndexSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "p")?;
+        if let Some(p) = &self.partition {
+            write!(f, "_{}", p.part)?;
+        }
+        write!(f, "{}", self.relation)?;
+        if let Some((field, v)) = &self.field_filter {
+            write!(f, ".{field}[{v}]")?;
+        }
+        if let Some(d) = &self.distinct {
+            write!(f, ".distinct({d})")?;
+        }
+        if self.strategy != Strategy::Unspecified {
+            write!(f, " /*{}*/", self.strategy)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(IndexSet::all("A").to_string(), "pA");
+        assert_eq!(
+            IndexSet::filtered("B", "id", Expr::field("i", "b_id")).to_string(),
+            "pB.id[i.b_id]"
+        );
+        assert_eq!(
+            IndexSet::distinct_of("Access", "url").to_string(),
+            "pAccess.distinct(url)"
+        );
+        assert_eq!(
+            IndexSet::all("A")
+                .with_partition(Expr::var("k"), Expr::var("N"))
+                .to_string(),
+            "p_kA"
+        );
+        assert_eq!(
+            IndexSet::all("A").with_strategy(Strategy::Hash).to_string(),
+            "pA /*hash*/"
+        );
+    }
+
+    #[test]
+    fn key_field() {
+        let ix = IndexSet::filtered("B", "id", Expr::int(1));
+        assert_eq!(ix.key_field(), Some("id"));
+        assert_eq!(IndexSet::all("B").key_field(), None);
+    }
+}

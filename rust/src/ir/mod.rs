@@ -1,0 +1,25 @@
+//! The single intermediate representation (§II–III of the paper).
+//!
+//! Data is modelled as multisets of tuples; computation as `forelem`
+//! loop nests over index sets. Everything downstream — SQL lowering,
+//! MapReduce derivation, the transformation passes, parallelization and
+//! code generation — operates on the types in this module.
+
+pub mod expr;
+pub mod index_set;
+pub mod multiset;
+pub mod pretty;
+pub mod program;
+pub mod schema;
+pub mod stmt;
+pub mod validate;
+pub mod value;
+
+pub use expr::{BinOp, Expr, UnOp};
+pub use index_set::{IndexSet, Partition, Strategy};
+pub use multiset::Multiset;
+pub use program::{ArrayDecl, Program};
+pub use schema::{Field, FieldId, Schema};
+pub use stmt::{AccumOp, Domain, Loop, LoopKind, Stmt};
+pub use validate::validate;
+pub use value::{DataType, Tuple, Value};

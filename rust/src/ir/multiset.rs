@@ -1,0 +1,164 @@
+//! In-memory multisets of tuples — the universal data container of the IR.
+//!
+//! This is the *logical* container used by the compiler, the interpreter
+//! and the tests. Physical layouts (row files, column stores, compressed
+//! columns, dictionaries) live in `crate::storage` and are chosen by the
+//! code-generation stage (§III-C1); they all convert to/from this form.
+
+use std::collections::HashSet;
+
+use super::schema::{FieldId, Schema};
+use super::value::{Tuple, Value};
+
+/// A multiset of tuples with a schema.
+#[derive(Debug, Clone, Default)]
+pub struct Multiset {
+    pub schema: Schema,
+    rows: Vec<Tuple>,
+}
+
+impl Multiset {
+    pub fn new(schema: Schema) -> Self {
+        Multiset {
+            schema,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_rows(schema: Schema, rows: Vec<Tuple>) -> Self {
+        debug_assert!(rows.iter().all(|r| r.len() == schema.len()));
+        Multiset { schema, rows }
+    }
+
+    pub fn push(&mut self, tuple: Tuple) {
+        debug_assert_eq!(tuple.len(), self.schema.len());
+        self.rows.push(tuple);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn rows(&self) -> &[Tuple] {
+        &self.rows
+    }
+
+    pub fn rows_mut(&mut self) -> &mut Vec<Tuple> {
+        &mut self.rows
+    }
+
+    pub fn into_rows(self) -> Vec<Tuple> {
+        self.rows
+    }
+
+    pub fn get(&self, row: usize, field: FieldId) -> &Value {
+        &self.rows[row][field]
+    }
+
+    /// All distinct values of one field (the paper's `pA.distinct(field)`).
+    pub fn distinct(&self, field: FieldId) -> Vec<Value> {
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        for r in &self.rows {
+            if seen.insert(r[field].clone()) {
+                out.push(r[field].clone());
+            }
+        }
+        out
+    }
+
+    /// The multiset of values of one field (the paper's `A.field` notation,
+    /// used by indirect partitioning §III-A1).
+    pub fn field_values(&self, field: FieldId) -> Vec<Value> {
+        self.rows.iter().map(|r| r[field].clone()).collect()
+    }
+
+    /// Projection onto a subset of fields (dead-field elimination).
+    pub fn project(&self, keep: &[FieldId]) -> Multiset {
+        Multiset {
+            schema: self.schema.project(keep),
+            rows: self
+                .rows
+                .iter()
+                .map(|r| keep.iter().map(|&i| r[i].clone()).collect())
+                .collect(),
+        }
+    }
+
+    /// Multiset equality up to row order (bag semantics) — used by tests to
+    /// check that transformed programs compute the same result.
+    pub fn bag_eq(&self, other: &Multiset) -> bool {
+        if self.schema != other.schema || self.len() != other.len() {
+            return false;
+        }
+        let mut a: Vec<&Tuple> = self.rows.iter().collect();
+        let mut b: Vec<&Tuple> = other.rows.iter().collect();
+        a.sort();
+        b.sort();
+        a == b
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Tuple> {
+        self.rows.iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a Multiset {
+    type Item = &'a Tuple;
+    type IntoIter = std::slice::Iter<'a, Tuple>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.rows.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::value::DataType;
+
+    fn sample() -> Multiset {
+        let schema = Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]);
+        Multiset::with_rows(
+            schema,
+            vec![
+                vec![Value::str("a"), Value::Int(1)],
+                vec![Value::str("b"), Value::Int(2)],
+                vec![Value::str("a"), Value::Int(3)],
+            ],
+        )
+    }
+
+    #[test]
+    fn distinct_preserves_first_seen_order() {
+        let m = sample();
+        assert_eq!(m.distinct(0), vec![Value::str("a"), Value::str("b")]);
+    }
+
+    #[test]
+    fn field_values_is_a_multiset() {
+        let m = sample();
+        assert_eq!(m.field_values(0).len(), 3);
+    }
+
+    #[test]
+    fn bag_equality_ignores_order() {
+        let m = sample();
+        let mut rev = m.clone();
+        rev.rows_mut().reverse();
+        assert!(m.bag_eq(&rev));
+        let mut other = m.clone();
+        other.rows_mut()[0][1] = Value::Int(99);
+        assert!(!m.bag_eq(&other));
+    }
+
+    #[test]
+    fn projection_drops_dead_fields() {
+        let m = sample().project(&[1]);
+        assert_eq!(m.schema.len(), 1);
+        assert_eq!(m.get(2, 0), &Value::Int(3));
+    }
+}

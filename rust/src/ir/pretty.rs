@@ -1,0 +1,141 @@
+//! Pretty printer producing the paper's forelem syntax.
+//!
+//! Used by the CLI (`forelem compile --emit ir`), by documentation
+//! examples, and by golden tests that pin the shape of transformed
+//! programs (e.g. that parallelization produced the §IV code).
+
+use std::fmt::Write;
+
+use super::program::Program;
+use super::stmt::{Domain, Stmt};
+
+/// Render a whole program.
+pub fn program(p: &Program) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "// program {}", p.name);
+    for (name, schema) in &p.relations {
+        let _ = writeln!(out, "// multiset {name}: {schema}");
+    }
+    for (name, v) in &p.params {
+        let _ = writeln!(out, "// param {name} = {v}");
+    }
+    for s in &p.body {
+        stmt(s, 0, &mut out);
+    }
+    out
+}
+
+/// Render a single statement at an indent level.
+pub fn stmt(s: &Stmt, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    match s {
+        Stmt::Loop(l) => {
+            let header = match (&l.kind, &l.domain) {
+                (k, Domain::IndexSet(ix)) => format!("{k} ({}; {} ∈ {ix})", l.var, l.var),
+                (k, Domain::Range { lo, hi }) => {
+                    format!("{k} ({} = {lo}; {} <= {hi}; {}++)", l.var, l.var, l.var)
+                }
+                (k, Domain::ValuePartition {
+                    relation,
+                    field,
+                    part,
+                    ..
+                }) => format!("{k} ({} ∈ X_{part})  // X = {relation}.{field}", l.var),
+                (k, Domain::DistinctValues { relation, field }) => {
+                    format!("{k} ({} ∈ distinct({relation}.{field}))", l.var)
+                }
+            };
+            let _ = writeln!(out, "{pad}{header} {{");
+            for b in &l.body {
+                stmt(b, indent + 1, out);
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+        Stmt::Accum {
+            array,
+            indices,
+            op,
+            value,
+        } => {
+            let subs: String = indices.iter().map(|i| format!("[{i}]")).collect();
+            // Render `x += 1` as the paper's `x++`.
+            if matches!(op, super::stmt::AccumOp::Add)
+                && matches!(value, super::expr::Expr::Const(super::value::Value::Int(1)))
+            {
+                let _ = writeln!(out, "{pad}{array}{subs}++;");
+            } else {
+                let _ = writeln!(out, "{pad}{array}{subs} {op} {value};");
+            }
+        }
+        Stmt::ResultUnion { result, tuple } => {
+            let items: Vec<String> = tuple.iter().map(|e| e.to_string()).collect();
+            let _ = writeln!(out, "{pad}{result} = {result} ∪ ({});", items.join(", "));
+        }
+        Stmt::Assign { var, value } => {
+            let _ = writeln!(out, "{pad}{var} = {value};");
+        }
+        Stmt::If { cond, then, els } => {
+            let _ = writeln!(out, "{pad}if ({cond}) {{");
+            for b in then {
+                stmt(b, indent + 1, out);
+            }
+            if !els.is_empty() {
+                let _ = writeln!(out, "{pad}}} else {{");
+                for b in els {
+                    stmt(b, indent + 1, out);
+                }
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+        Stmt::Print { format, args } => {
+            let items: Vec<String> = args.iter().map(|e| e.to_string()).collect();
+            let _ = writeln!(out, "{pad}print(\"{format}\", {});", items.join(", "));
+        }
+    }
+}
+
+/// Convenience: render one statement to a fresh string.
+pub fn stmt_string(s: &Stmt) -> String {
+    let mut out = String::new();
+    stmt(s, 0, &mut out);
+    out
+}
+
+#[allow(unused_imports)]
+use super::{expr, value};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::index_set::IndexSet;
+    use crate::ir::stmt::Loop;
+
+    #[test]
+    fn renders_paper_syntax() {
+        // The §IV URL-count first loop.
+        let s = Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("Access"),
+            vec![Stmt::increment("count", vec![Expr::field("i", "url")])],
+        ));
+        let text = stmt_string(&s);
+        assert!(text.contains("forelem (i; i ∈ pAccess) {"), "{text}");
+        assert!(text.contains("count[i.url]++;"), "{text}");
+    }
+
+    #[test]
+    fn renders_result_union() {
+        let s = Stmt::result_union(
+            "R",
+            vec![Expr::field("i", "url"), Expr::array("count", vec![Expr::field("i", "url")])],
+        );
+        assert_eq!(stmt_string(&s).trim(), "R = R ∪ (i.url, count[i.url]);");
+    }
+
+    #[test]
+    fn renders_forall_range() {
+        let s = Stmt::Loop(Loop::forall_range("k", Expr::int(1), Expr::var("N"), vec![]));
+        assert!(stmt_string(&s).contains("forall (k = 1; k <= N; k++) {"));
+    }
+}

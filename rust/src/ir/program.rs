@@ -1,0 +1,215 @@
+//! Whole-program container: declarations + the statement body.
+//!
+//! A `Program` is the unit the pass pipeline (transform/) rewrites and the
+//! execution engine (exec/) compiles. It owns the declarations of every
+//! multiset (relation), accumulator array, result multiset and scalar
+//! parameter the body refers to.
+
+use std::collections::BTreeMap;
+
+use super::schema::Schema;
+use super::stmt::{Loop, Stmt};
+use super::value::{DataType, Value};
+
+/// Declaration of an accumulator array (`count`, `sum`, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayDecl {
+    /// Number of subscripts. Parallelization adds a leading partition
+    /// dimension (`count` → `count[k][...]`, the paper's `count_k`).
+    pub dims: usize,
+    /// Element type.
+    pub dtype: DataType,
+    /// Initial element value (usually 0).
+    pub init: Value,
+}
+
+impl ArrayDecl {
+    pub fn counter() -> Self {
+        ArrayDecl {
+            dims: 1,
+            dtype: DataType::Int,
+            init: Value::Int(0),
+        }
+    }
+
+    pub fn accumulator(dtype: DataType) -> Self {
+        ArrayDecl {
+            dims: 1,
+            dtype,
+            init: match dtype {
+                DataType::Float => Value::Float(0.0),
+                _ => Value::Int(0),
+            },
+        }
+    }
+}
+
+/// A complete program in the single intermediate representation.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub name: String,
+    /// Input multisets, by name (`Access`, `Links`, `Grades`, ...).
+    pub relations: BTreeMap<String, Schema>,
+    /// Accumulator arrays, by name.
+    pub arrays: BTreeMap<String, ArrayDecl>,
+    /// Result multisets (`R`), by name.
+    pub results: BTreeMap<String, Schema>,
+    /// Scalar parameters (`N` = number of processors) and their defaults.
+    pub params: BTreeMap<String, Value>,
+    /// Scalar variables (`avg`), with initial values.
+    pub scalars: BTreeMap<String, Value>,
+    /// The statement body.
+    pub body: Vec<Stmt>,
+}
+
+impl Program {
+    pub fn new(name: &str) -> Self {
+        Program {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn with_relation(mut self, name: &str, schema: Schema) -> Self {
+        self.relations.insert(name.to_string(), schema);
+        self
+    }
+
+    pub fn with_array(mut self, name: &str, decl: ArrayDecl) -> Self {
+        self.arrays.insert(name.to_string(), decl);
+        self
+    }
+
+    pub fn with_result(mut self, name: &str, schema: Schema) -> Self {
+        self.results.insert(name.to_string(), schema);
+        self
+    }
+
+    pub fn with_param(mut self, name: &str, v: Value) -> Self {
+        self.params.insert(name.to_string(), v);
+        self
+    }
+
+    pub fn with_scalar(mut self, name: &str, init: Value) -> Self {
+        self.scalars.insert(name.to_string(), init);
+        self
+    }
+
+    pub fn with_body(mut self, body: Vec<Stmt>) -> Self {
+        self.body = body;
+        self
+    }
+
+    /// Visit every statement in the program (pre-order, nested included).
+    pub fn walk(&self, f: &mut impl FnMut(&Stmt)) {
+        for s in &self.body {
+            s.walk(f);
+        }
+    }
+
+    /// All top-level loops (the units data-distribution reasons about).
+    pub fn top_loops(&self) -> Vec<&Loop> {
+        self.body
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::Loop(l) => Some(l),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Names of all relations read anywhere in the body.
+    pub fn relations_read(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.walk(&mut |s| {
+            if let Stmt::Loop(l) = s {
+                match &l.domain {
+                    super::stmt::Domain::IndexSet(ix) => out.push(ix.relation.clone()),
+                    super::stmt::Domain::ValuePartition { relation, .. }
+                    | super::stmt::Domain::DistinctValues { relation, .. } => {
+                        out.push(relation.clone())
+                    }
+                    _ => {}
+                }
+            }
+        });
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Fresh variable name not colliding with params/scalars/loop vars.
+    pub fn fresh_var(&self, base: &str) -> String {
+        let mut used: std::collections::HashSet<String> = self
+            .params
+            .keys()
+            .chain(self.scalars.keys())
+            .cloned()
+            .collect();
+        self.walk(&mut |s| {
+            if let Stmt::Loop(l) = s {
+                used.insert(l.var.clone());
+            }
+        });
+        if !used.contains(base) {
+            return base.to_string();
+        }
+        for i in 1.. {
+            let cand = format!("{base}{i}");
+            if !used.contains(&cand) {
+                return cand;
+            }
+        }
+        unreachable!()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::index_set::IndexSet;
+    use crate::ir::stmt::{Loop, Stmt};
+
+    fn url_count() -> Program {
+        Program::new("url_count")
+            .with_relation("Access", Schema::new(vec![("url", DataType::Str)]))
+            .with_array("count", ArrayDecl::counter())
+            .with_result("R", Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]))
+            .with_body(vec![
+                Stmt::Loop(Loop::forelem(
+                    "i",
+                    IndexSet::all("Access"),
+                    vec![Stmt::increment("count", vec![Expr::field("i", "url")])],
+                )),
+                Stmt::Loop(Loop::forelem(
+                    "i",
+                    IndexSet::distinct_of("Access", "url"),
+                    vec![Stmt::result_union(
+                        "R",
+                        vec![
+                            Expr::field("i", "url"),
+                            Expr::array("count", vec![Expr::field("i", "url")]),
+                        ],
+                    )],
+                )),
+            ])
+    }
+
+    #[test]
+    fn relations_read_dedups() {
+        assert_eq!(url_count().relations_read(), vec!["Access".to_string()]);
+    }
+
+    #[test]
+    fn top_loops_counts_only_top_level() {
+        assert_eq!(url_count().top_loops().len(), 2);
+    }
+
+    #[test]
+    fn fresh_var_avoids_loop_vars() {
+        let p = url_count();
+        assert_eq!(p.fresh_var("i"), "i1");
+        assert_eq!(p.fresh_var("k"), "k");
+    }
+}

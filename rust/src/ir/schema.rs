@@ -1,0 +1,177 @@
+//! Relation schemas: named, typed tuple layouts.
+//!
+//! In the paper the tuple structure ("the schema of a database") is *under
+//! compiler control* (§III-C1): the reformatting pass may drop dead fields
+//! or dictionary-encode string fields, producing a *new* schema. Schemas
+//! are therefore cheap immutable values the transformation passes can
+//! rewrite freely.
+
+use std::fmt;
+
+use super::value::DataType;
+
+/// Index of a field within a schema (stable across the compile).
+pub type FieldId = usize;
+
+/// One field: a name and a type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub dtype: DataType,
+}
+
+/// An ordered list of typed fields.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schema {
+    fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<(&str, DataType)>) -> Self {
+        Schema {
+            fields: fields
+                .into_iter()
+                .map(|(name, dtype)| Field {
+                    name: name.to_string(),
+                    dtype,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn from_fields(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+
+    pub fn field(&self, id: FieldId) -> &Field {
+        &self.fields[id]
+    }
+
+    /// Resolve a field name to its id.
+    pub fn field_id(&self, name: &str) -> Option<FieldId> {
+        self.fields.iter().position(|f| f.name == name)
+    }
+
+    pub fn dtype(&self, id: FieldId) -> DataType {
+        self.fields[id].dtype
+    }
+
+    /// Schema with only the given fields kept, in the given order
+    /// (dead-field elimination / projection).
+    pub fn project(&self, keep: &[FieldId]) -> Schema {
+        Schema {
+            fields: keep.iter().map(|&i| self.fields[i].clone()).collect(),
+        }
+    }
+
+    /// Schema with one field's type replaced (dictionary encoding turns a
+    /// `Str` field into an `Int` key field).
+    pub fn with_dtype(&self, id: FieldId, dtype: DataType) -> Schema {
+        let mut s = self.clone();
+        s.fields[id].dtype = dtype;
+        s
+    }
+
+    /// Concatenation of two schemas (join output), prefixing duplicate
+    /// names with the given labels.
+    pub fn join(&self, other: &Schema, left_label: &str, right_label: &str) -> Schema {
+        let mut fields = Vec::with_capacity(self.len() + other.len());
+        for f in &self.fields {
+            let dup = other.fields.iter().any(|g| g.name == f.name);
+            fields.push(Field {
+                name: if dup {
+                    format!("{left_label}.{}", f.name)
+                } else {
+                    f.name.clone()
+                },
+                dtype: f.dtype,
+            });
+        }
+        for f in &other.fields {
+            let dup = self.fields.iter().any(|g| g.name == f.name);
+            fields.push(Field {
+                name: if dup {
+                    format!("{right_label}.{}", f.name)
+                } else {
+                    f.name.clone()
+                },
+                dtype: f.dtype,
+            });
+        }
+        Schema { fields }
+    }
+}
+
+impl fmt::Display for Schema {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, fd) in self.fields.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}: {}", fd.name, fd.dtype)?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grades() -> Schema {
+        Schema::new(vec![
+            ("studentID", DataType::Int),
+            ("grade", DataType::Float),
+            ("weight", DataType::Float),
+        ])
+    }
+
+    #[test]
+    fn lookup() {
+        let s = grades();
+        assert_eq!(s.field_id("grade"), Some(1));
+        assert_eq!(s.field_id("nope"), None);
+        assert_eq!(s.dtype(0), DataType::Int);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn project_keeps_order() {
+        let s = grades().project(&[2, 0]);
+        assert_eq!(s.field(0).name, "weight");
+        assert_eq!(s.field(1).name, "studentID");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn dictionary_encoding_changes_dtype() {
+        let s = Schema::new(vec![("url", DataType::Str)]);
+        let e = s.with_dtype(0, DataType::Int);
+        assert_eq!(e.dtype(0), DataType::Int);
+        assert_eq!(e.field(0).name, "url");
+    }
+
+    #[test]
+    fn join_prefixes_duplicates() {
+        let a = Schema::new(vec![("id", DataType::Int), ("x", DataType::Int)]);
+        let b = Schema::new(vec![("id", DataType::Int), ("y", DataType::Int)]);
+        let j = a.join(&b, "A", "B");
+        assert_eq!(j.field_id("A.id"), Some(0));
+        assert_eq!(j.field_id("x"), Some(1));
+        assert_eq!(j.field_id("B.id"), Some(2));
+        assert_eq!(j.field_id("y"), Some(3));
+    }
+}

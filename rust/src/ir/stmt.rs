@@ -1,0 +1,370 @@
+//! Statements and loop nodes of the single intermediate representation.
+
+use std::fmt;
+
+use super::expr::Expr;
+use super::index_set::IndexSet;
+
+/// Loop flavours (§II–III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopKind {
+    /// `forelem` — inherently parallel iteration over an index set.
+    Forelem,
+    /// `for` — sequential iteration (over a range or value set).
+    For,
+    /// `forall` — explicitly parallelized iteration: the unit the
+    /// loop scheduler distributes over processors.
+    Forall,
+}
+
+impl fmt::Display for LoopKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LoopKind::Forelem => write!(f, "forelem"),
+            LoopKind::For => write!(f, "for"),
+            LoopKind::Forall => write!(f, "forall"),
+        }
+    }
+}
+
+/// What a loop iterates over.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Domain {
+    /// `i ∈ pA...` — tuples selected by an index set.
+    IndexSet(IndexSet),
+    /// `k = lo..=hi` — integer range (the `forall (k = 1; k <= N; k++)`
+    /// of the paper's parallelized loops).
+    Range { lo: Expr, hi: Expr },
+    /// `l ∈ X_k` — the k-th segment of a partitioning of the value range
+    /// of `relation.field` into `parts` segments (indirect partitioning,
+    /// §III-A1). `part` is usually the enclosing `forall` variable.
+    ValuePartition {
+        relation: String,
+        field: String,
+        part: Expr,
+        parts: Expr,
+    },
+    /// `v ∈ distinct(relation.field)` — all distinct values of a field.
+    DistinctValues { relation: String, field: String },
+}
+
+/// A loop node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Loop {
+    pub kind: LoopKind,
+    pub var: String,
+    pub domain: Domain,
+    pub body: Vec<Stmt>,
+}
+
+impl Loop {
+    pub fn forelem(var: &str, ix: IndexSet, body: Vec<Stmt>) -> Self {
+        Loop {
+            kind: LoopKind::Forelem,
+            var: var.to_string(),
+            domain: Domain::IndexSet(ix),
+            body,
+        }
+    }
+
+    pub fn forall_range(var: &str, lo: Expr, hi: Expr, body: Vec<Stmt>) -> Self {
+        Loop {
+            kind: LoopKind::Forall,
+            var: var.to_string(),
+            domain: Domain::Range { lo, hi },
+            body,
+        }
+    }
+
+    pub fn for_range(var: &str, lo: Expr, hi: Expr, body: Vec<Stmt>) -> Self {
+        Loop {
+            kind: LoopKind::For,
+            var: var.to_string(),
+            domain: Domain::Range { lo, hi },
+            body,
+        }
+    }
+
+    /// The index set, if this is a forelem-style loop.
+    pub fn index_set(&self) -> Option<&IndexSet> {
+        match &self.domain {
+            Domain::IndexSet(ix) => Some(ix),
+            _ => None,
+        }
+    }
+
+    pub fn index_set_mut(&mut self) -> Option<&mut IndexSet> {
+        match &mut self.domain {
+            Domain::IndexSet(ix) => Some(ix),
+            _ => None,
+        }
+    }
+}
+
+/// Accumulation operators (`count[x]++`, `sum[x] += v`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccumOp {
+    /// `+= value`
+    Add,
+    /// `= value` (plain store)
+    Set,
+    /// `= max(old, value)`
+    Max,
+    /// `= min(old, value)`
+    Min,
+}
+
+impl fmt::Display for AccumOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AccumOp::Add => write!(f, "+="),
+            AccumOp::Set => write!(f, "="),
+            AccumOp::Max => write!(f, "max="),
+            AccumOp::Min => write!(f, "min="),
+        }
+    }
+}
+
+/// A statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// A (possibly nested) loop.
+    Loop(Loop),
+    /// `array[i0][i1] op value` — accumulator update.
+    Accum {
+        array: String,
+        indices: Vec<Expr>,
+        op: AccumOp,
+        value: Expr,
+    },
+    /// `R = R ∪ (e0, e1, ...)` — append a tuple to a result multiset.
+    ResultUnion { result: String, tuple: Vec<Expr> },
+    /// `var = expr` — scalar assignment.
+    Assign { var: String, value: Expr },
+    /// Conditional.
+    If {
+        cond: Expr,
+        then: Vec<Stmt>,
+        els: Vec<Stmt>,
+    },
+    /// Diagnostic output (the paper's `print` in §III-B).
+    Print { format: String, args: Vec<Expr> },
+}
+
+impl Stmt {
+    pub fn accum(array: &str, indices: Vec<Expr>, op: AccumOp, value: Expr) -> Stmt {
+        Stmt::Accum {
+            array: array.to_string(),
+            indices,
+            op,
+            value,
+        }
+    }
+
+    /// `count[indices]++`
+    pub fn increment(array: &str, indices: Vec<Expr>) -> Stmt {
+        Stmt::accum(array, indices, AccumOp::Add, Expr::int(1))
+    }
+
+    pub fn result_union(result: &str, tuple: Vec<Expr>) -> Stmt {
+        Stmt::ResultUnion {
+            result: result.to_string(),
+            tuple,
+        }
+    }
+
+    pub fn assign(var: &str, value: Expr) -> Stmt {
+        Stmt::Assign {
+            var: var.to_string(),
+            value,
+        }
+    }
+
+    /// Visit this statement and all nested statements (pre-order).
+    pub fn walk(&self, f: &mut impl FnMut(&Stmt)) {
+        f(self);
+        match self {
+            Stmt::Loop(l) => {
+                for s in &l.body {
+                    s.walk(f);
+                }
+            }
+            Stmt::If { then, els, .. } => {
+                for s in then {
+                    s.walk(f);
+                }
+                for s in els {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Visit every expression in this statement tree.
+    pub fn walk_exprs(&self, f: &mut impl FnMut(&Expr)) {
+        self.walk(&mut |s| match s {
+            Stmt::Loop(l) => match &l.domain {
+                Domain::IndexSet(ix) => {
+                    if let Some((_, v)) = &ix.field_filter {
+                        v.walk(f);
+                    }
+                    if let Some(p) = &ix.partition {
+                        p.part.walk(f);
+                        p.parts.walk(f);
+                    }
+                }
+                Domain::Range { lo, hi } => {
+                    lo.walk(f);
+                    hi.walk(f);
+                }
+                Domain::ValuePartition { part, parts, .. } => {
+                    part.walk(f);
+                    parts.walk(f);
+                }
+                Domain::DistinctValues { .. } => {}
+            },
+            Stmt::Accum { indices, value, .. } => {
+                for i in indices {
+                    i.walk(f);
+                }
+                value.walk(f);
+            }
+            Stmt::ResultUnion { tuple, .. } => {
+                for e in tuple {
+                    e.walk(f);
+                }
+            }
+            Stmt::Assign { value, .. } => value.walk(f),
+            Stmt::If { cond, .. } => cond.walk(f),
+            Stmt::Print { args, .. } => {
+                for a in args {
+                    a.walk(f);
+                }
+            }
+        });
+    }
+
+    /// Mutate every expression in this statement tree (post-order).
+    pub fn walk_exprs_mut(&mut self, f: &mut impl FnMut(&mut Expr)) {
+        match self {
+            Stmt::Loop(l) => {
+                match &mut l.domain {
+                    Domain::IndexSet(ix) => {
+                        if let Some((_, v)) = &mut ix.field_filter {
+                            v.walk_mut(f);
+                        }
+                        if let Some(p) = &mut ix.partition {
+                            p.part.walk_mut(f);
+                            p.parts.walk_mut(f);
+                        }
+                    }
+                    Domain::Range { lo, hi } => {
+                        lo.walk_mut(f);
+                        hi.walk_mut(f);
+                    }
+                    Domain::ValuePartition { part, parts, .. } => {
+                        part.walk_mut(f);
+                        parts.walk_mut(f);
+                    }
+                    Domain::DistinctValues { .. } => {}
+                }
+                for s in &mut l.body {
+                    s.walk_exprs_mut(f);
+                }
+            }
+            Stmt::Accum { indices, value, .. } => {
+                for i in indices {
+                    i.walk_mut(f);
+                }
+                value.walk_mut(f);
+            }
+            Stmt::ResultUnion { tuple, .. } => {
+                for e in tuple {
+                    e.walk_mut(f);
+                }
+            }
+            Stmt::Assign { value, .. } => value.walk_mut(f),
+            Stmt::If { cond, then, els } => {
+                cond.walk_mut(f);
+                for s in then {
+                    s.walk_exprs_mut(f);
+                }
+                for s in els {
+                    s.walk_exprs_mut(f);
+                }
+            }
+            Stmt::Print { args, .. } => {
+                for a in args {
+                    a.walk_mut(f);
+                }
+            }
+        }
+    }
+
+    /// Rename a variable throughout the statement tree.
+    pub fn rename_var(&mut self, from: &str, to: &str) {
+        // Loop variables that shadow `from` are left alone only if they bind
+        // the same name; transformations in this codebase always generate
+        // fresh names, so plain substitution is sound here.
+        self.walk_exprs_mut(&mut |e| e.rename_var(from, to));
+        if let Stmt::Loop(l) = self {
+            if l.var == from {
+                l.var = to.to_string();
+            }
+            for s in &mut l.body {
+                s.rename_var(from, to);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_loop() -> Stmt {
+        // forelem (i; i ∈ pAccess) count[i.url]++
+        Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("Access"),
+            vec![Stmt::increment("count", vec![Expr::field("i", "url")])],
+        ))
+    }
+
+    #[test]
+    fn walk_visits_nested() {
+        let s = count_loop();
+        let mut n = 0;
+        s.walk(&mut |_| n += 1);
+        assert_eq!(n, 2); // the loop + the accum
+    }
+
+    #[test]
+    fn walk_exprs_sees_subscripts() {
+        let s = count_loop();
+        let mut fields = Vec::new();
+        s.walk_exprs(&mut |e| {
+            if let Expr::Field { field, .. } = e {
+                fields.push(field.clone());
+            }
+        });
+        assert_eq!(fields, vec!["url".to_string()]);
+    }
+
+    #[test]
+    fn rename_var_recurses_into_loops() {
+        let mut s = count_loop();
+        s.rename_var("i", "j");
+        if let Stmt::Loop(l) = &s {
+            assert_eq!(l.var, "j");
+            if let Stmt::Accum { indices, .. } = &l.body[0] {
+                assert_eq!(indices[0], Expr::field("j", "url"));
+            } else {
+                panic!("expected accum");
+            }
+        } else {
+            panic!("expected loop");
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Well-formedness checks over programs.
+//!
+//! Every pass in the pipeline must keep programs valid; `validate` is run
+//! after each pass in debug builds (transform/pipeline.rs) and by tests.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use super::expr::Expr;
+use super::program::Program;
+use super::stmt::{Domain, Loop, LoopKind, Stmt};
+
+/// Check a whole program. Returns the first problem found.
+pub fn validate(p: &Program) -> Result<()> {
+    let mut scope: HashSet<String> = p.params.keys().cloned().collect();
+    scope.extend(p.scalars.keys().cloned());
+    for s in &p.body {
+        check_stmt(p, s, &mut scope)?;
+    }
+    Ok(())
+}
+
+fn check_stmt(p: &Program, s: &Stmt, scope: &mut HashSet<String>) -> Result<()> {
+    match s {
+        Stmt::Loop(l) => check_loop(p, l, scope),
+        Stmt::Accum {
+            array,
+            indices,
+            value,
+            ..
+        } => {
+            let Some(decl) = p.arrays.get(array) else {
+                bail!("accum into undeclared array `{array}`");
+            };
+            if indices.len() != decl.dims {
+                bail!(
+                    "array `{array}` declared with {} dims, used with {}",
+                    decl.dims,
+                    indices.len()
+                );
+            }
+            for i in indices {
+                check_expr(p, i, scope)?;
+            }
+            check_expr(p, value, scope)
+        }
+        Stmt::ResultUnion { result, tuple } => {
+            let Some(schema) = p.results.get(result) else {
+                bail!("union into undeclared result `{result}`");
+            };
+            if tuple.len() != schema.len() {
+                bail!(
+                    "result `{result}` has {} fields, tuple has {}",
+                    schema.len(),
+                    tuple.len()
+                );
+            }
+            for e in tuple {
+                check_expr(p, e, scope)?;
+            }
+            Ok(())
+        }
+        Stmt::Assign { var, value } => {
+            check_expr(p, value, scope)?;
+            scope.insert(var.clone());
+            Ok(())
+        }
+        Stmt::If { cond, then, els } => {
+            check_expr(p, cond, scope)?;
+            for s in then {
+                check_stmt(p, s, scope)?;
+            }
+            for s in els {
+                check_stmt(p, s, scope)?;
+            }
+            Ok(())
+        }
+        Stmt::Print { args, .. } => {
+            for a in args {
+                check_expr(p, a, scope)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+fn check_loop(p: &Program, l: &Loop, scope: &mut HashSet<String>) -> Result<()> {
+    match &l.domain {
+        Domain::IndexSet(ix) => {
+            let Some(schema) = p.relations.get(&ix.relation) else {
+                bail!("loop over undeclared relation `{}`", ix.relation);
+            };
+            if let Some((field, v)) = &ix.field_filter {
+                if schema.field_id(field).is_none() {
+                    bail!("filter on unknown field `{}.{}`", ix.relation, field);
+                }
+                check_expr(p, v, scope)?;
+            }
+            if let Some(d) = &ix.distinct {
+                if schema.field_id(d).is_none() {
+                    bail!("distinct on unknown field `{}.{}`", ix.relation, d);
+                }
+            }
+            if ix.partition.is_some() && l.kind == LoopKind::Forall {
+                bail!("a forall loop cannot itself iterate a partitioned index set");
+            }
+        }
+        Domain::Range { lo, hi } => {
+            check_expr(p, lo, scope)?;
+            check_expr(p, hi, scope)?;
+        }
+        Domain::ValuePartition {
+            relation,
+            field,
+            part,
+            parts,
+        } => {
+            let Some(schema) = p.relations.get(relation) else {
+                bail!("value partition over undeclared relation `{relation}`");
+            };
+            if schema.field_id(field).is_none() {
+                bail!("value partition on unknown field `{relation}.{field}`");
+            }
+            check_expr(p, part, scope)?;
+            check_expr(p, parts, scope)?;
+        }
+        Domain::DistinctValues { relation, field } => {
+            let Some(schema) = p.relations.get(relation) else {
+                bail!("distinct-values over undeclared relation `{relation}`");
+            };
+            if schema.field_id(field).is_none() {
+                bail!("distinct-values on unknown field `{relation}.{field}`");
+            }
+        }
+    }
+    let added = scope.insert(l.var.clone());
+    for s in &l.body {
+        check_stmt(p, s, scope)?;
+    }
+    if added {
+        scope.remove(&l.var);
+    }
+    Ok(())
+}
+
+fn check_expr(p: &Program, e: &Expr, scope: &HashSet<String>) -> Result<()> {
+    let mut err = None;
+    e.walk(&mut |sub| {
+        if err.is_some() {
+            return;
+        }
+        match sub {
+            Expr::Var(v) => {
+                if !scope.contains(v) && !p.params.contains_key(v) && !p.scalars.contains_key(v) {
+                    // SumOverParts binds its own var; handled below by
+                    // pushing it into a local scope — here we only flag
+                    // genuinely free variables.
+                    if !bound_by_sum(e, v) {
+                        err = Some(format!("use of unbound variable `{v}`"));
+                    }
+                }
+            }
+            Expr::Field { var, .. } => {
+                if !scope.contains(var) && !bound_by_sum(e, var) {
+                    err = Some(format!("field access through unbound cursor `{var}`"));
+                }
+            }
+            Expr::ArrayRef { array, indices } => {
+                match p.arrays.get(array) {
+                    None => err = Some(format!("read of undeclared array `{array}`")),
+                    Some(d) if d.dims != indices.len() => {
+                        err = Some(format!(
+                            "array `{array}` declared with {} dims, read with {}",
+                            d.dims,
+                            indices.len()
+                        ))
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    });
+    match err {
+        Some(m) => bail!("{m}"),
+        None => Ok(()),
+    }
+}
+
+/// Is `v` bound by a `SumOverParts` node inside `e`?
+fn bound_by_sum(e: &Expr, v: &str) -> bool {
+    let mut found = false;
+    e.walk(&mut |sub| {
+        if let Expr::SumOverParts { var, .. } = sub {
+            if var == v {
+                found = true;
+            }
+        }
+    });
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::index_set::IndexSet;
+    use crate::ir::program::ArrayDecl;
+    use crate::ir::schema::Schema;
+    use crate::ir::value::DataType;
+
+    fn base() -> Program {
+        Program::new("t")
+            .with_relation("A", Schema::new(vec![("x", DataType::Int)]))
+            .with_array("count", ArrayDecl::counter())
+    }
+
+    #[test]
+    fn accepts_valid_program() {
+        let p = base().with_body(vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::increment("count", vec![Expr::field("i", "x")])],
+        ))]);
+        validate(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_relation() {
+        let p = base().with_body(vec![Stmt::Loop(Loop::forelem("i", IndexSet::all("B"), vec![]))]);
+        assert!(validate(&p).unwrap_err().to_string().contains("undeclared relation"));
+    }
+
+    #[test]
+    fn rejects_unknown_field_filter() {
+        let p = base().with_body(vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::filtered("A", "nope", Expr::int(1)),
+            vec![],
+        ))]);
+        assert!(validate(&p).unwrap_err().to_string().contains("unknown field"));
+    }
+
+    #[test]
+    fn rejects_unbound_cursor() {
+        let p = base().with_body(vec![Stmt::increment("count", vec![Expr::field("i", "x")])]);
+        assert!(validate(&p).unwrap_err().to_string().contains("unbound cursor"));
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let p = base().with_body(vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::increment(
+                "count",
+                vec![Expr::field("i", "x"), Expr::int(0)],
+            )],
+        ))]);
+        assert!(validate(&p).unwrap_err().to_string().contains("dims"));
+    }
+
+    #[test]
+    fn rejects_undeclared_result() {
+        let p = base().with_body(vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::result_union("R", vec![Expr::field("i", "x")])],
+        ))]);
+        assert!(validate(&p).unwrap_err().to_string().contains("undeclared result"));
+    }
+
+    #[test]
+    fn sum_over_parts_binds_its_var() {
+        let p = base()
+            .with_param("N", crate::ir::value::Value::Int(4))
+            .with_result("R", Schema::new(vec![("n", DataType::Int)]))
+            .with_body(vec![Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("A"),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![Expr::SumOverParts {
+                        var: "k".into(),
+                        parts: Box::new(Expr::var("N")),
+                        body: Box::new(Expr::array("count", vec![Expr::var("k")])),
+                    }],
+                )],
+            ))]);
+        // `count` has 1 dim and is indexed [k] — consistent; `k` bound by sum.
+        validate(&p).unwrap();
+    }
+}

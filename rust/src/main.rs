@@ -1,0 +1,341 @@
+//! `forelem` — CLI for the compiler-technology Big Data engine.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! forelem compile   --sql Q [--processors N] [--partition-field F]
+//!                   [--reformat off|auto|force]    show optimized IR + trace
+//! forelem run       --sql Q [--workload access|links|grades] [--rows N]
+//!                   [--processors N] [--reformat ...]  compile + execute
+//! forelem cluster   --sql Q [--workers N] [--policy P] [--fail W:C]
+//!                   [--rows N] [--reformat ...]   distributed execution
+//! forelem mapreduce --sql Q                       derive MR pseudo-code (§IV)
+//! forelem gen-data  --workload access|links|grades --rows N --out FILE.csv
+//! forelem fig2      [--rows N] [--workers N]      mini Figure-2 run
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use forelem::compiler::{CompileOptions, Engine, ReformatMode};
+use forelem::coordinator::{ClusterConfig, Failure};
+use forelem::ir::Multiset;
+use forelem::mapreduce;
+use forelem::runtime::Kernels;
+use forelem::sched::Policy;
+use forelem::storage::StorageCatalog;
+use forelem::util::fmt_duration;
+use forelem::workload;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "compile" => cmd_compile(&flags),
+        "run" => cmd_run(&flags),
+        "cluster" => cmd_cluster(&flags),
+        "mapreduce" => cmd_mapreduce(&flags),
+        "gen-data" => cmd_gen_data(&flags),
+        "fig2" => cmd_fig2(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `forelem help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "forelem — compiler-technology alternative for Big Data infrastructures\n\n\
+         USAGE: forelem <compile|run|cluster|mapreduce|gen-data|fig2> [flags]\n\n\
+         common flags:\n\
+           --sql Q              the query (tables: access(url[,agent,bytes]),\n\
+                                links(source,target), Grades(studentID,grade,weight))\n\
+           --workload W         access | links | grades   (default from query)\n\
+           --rows N             workload size              (default 100000)\n\
+           --processors N       parallelize IR to N procs  (compile/run)\n\
+           --partition-field F  indirect partitioning on F\n\
+           --reformat M         off | auto | force         (§III-C1)\n\
+           --workers N          cluster worker count       (cluster/fig2)\n\
+           --policy P           static|fixed|gss|trapezoid|factoring|feedback|hybrid\n\
+           --fail W:C           inject failure of worker W after C chunks\n\
+           --kernels            route integer-keyed aggregation through XLA artifacts"
+    );
+}
+
+fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(name) = a.strip_prefix("--") else {
+            bail!("expected flag, found `{a}`");
+        };
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            out.insert(name.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            out.insert(name.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn opt_usize(flags: &BTreeMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        Some(v) => v.parse().with_context(|| format!("bad --{key}")),
+        None => Ok(default),
+    }
+}
+
+fn reformat_mode(flags: &BTreeMap<String, String>) -> Result<ReformatMode> {
+    Ok(match flags.get("reformat").map(|s| s.as_str()) {
+        None | Some("off") => ReformatMode::Off,
+        Some("auto") => ReformatMode::Auto { expected_runs: 10 },
+        Some("force") => ReformatMode::Force,
+        Some(other) => bail!("bad --reformat `{other}`"),
+    })
+}
+
+fn policy(flags: &BTreeMap<String, String>) -> Result<Policy> {
+    Ok(match flags.get("policy").map(|s| s.as_str()) {
+        None | Some("gss") => Policy::Gss,
+        Some("static") => Policy::StaticBlock,
+        Some("fixed") => Policy::FixedChunk(4096),
+        Some("trapezoid") => Policy::Trapezoid,
+        Some("factoring") => Policy::Factoring,
+        Some("feedback") => Policy::FeedbackGuided,
+        Some("hybrid") => Policy::Hybrid {
+            super_chunks_per_worker: 4,
+        },
+        Some(other) => bail!("bad --policy `{other}`"),
+    })
+}
+
+/// Build the demo catalog for the workload a query references.
+fn demo_catalog(flags: &BTreeMap<String, String>, sql: &str) -> Result<StorageCatalog> {
+    let rows = opt_usize(flags, "rows", 100_000)?;
+    let workload = flags
+        .get("workload")
+        .cloned()
+        .unwrap_or_else(|| infer_workload(sql));
+    let mut c = StorageCatalog::new();
+    match workload.as_str() {
+        "access" => {
+            let m = workload::access_log_wide(&workload::AccessLogSpec {
+                rows,
+                urls: (rows / 20).max(10),
+                skew: 1.1,
+                seed: 42,
+            });
+            c.insert_multiset("access", &m)?;
+        }
+        "links" => {
+            let m = workload::link_graph(&workload::LinkGraphSpec {
+                edges: rows,
+                pages: (rows / 20).max(10),
+                skew: 1.05,
+                seed: 43,
+            });
+            c.insert_multiset("links", &m)?;
+        }
+        "grades" => {
+            let m = workload::grades((rows / 10).max(1), 10, 44);
+            c.insert_multiset("Grades", &m)?;
+        }
+        other => bail!("unknown workload `{other}`"),
+    }
+    Ok(c)
+}
+
+fn infer_workload(sql: &str) -> String {
+    let l = sql.to_lowercase();
+    if l.contains("links") {
+        "links".into()
+    } else if l.contains("grades") {
+        "grades".into()
+    } else {
+        "access".into()
+    }
+}
+
+fn engine(flags: &BTreeMap<String, String>) -> Result<Engine> {
+    let sql = flags.get("sql").context("missing --sql")?;
+    let catalog = demo_catalog(flags, sql)?;
+    let mut e = Engine::new(catalog).with_options(CompileOptions {
+        processors: opt_usize(flags, "processors", 1)?,
+        partition_field: flags.get("partition-field").cloned(),
+        reformat: reformat_mode(flags)?,
+    });
+    if flags.contains_key("kernels") {
+        e = e.with_kernels(Kernels::load_default().context("load XLA artifacts")?);
+    }
+    Ok(e)
+}
+
+fn cmd_compile(flags: &BTreeMap<String, String>) -> Result<()> {
+    let sql = flags.get("sql").context("missing --sql")?.clone();
+    let mut e = engine(flags)?;
+    print!("{}", e.explain(&sql)?);
+    Ok(())
+}
+
+fn cmd_run(flags: &BTreeMap<String, String>) -> Result<()> {
+    let sql = flags.get("sql").context("missing --sql")?.clone();
+    let mut e = engine(flags)?;
+    let t0 = std::time::Instant::now();
+    let out = e.sql(&sql)?;
+    let dt = t0.elapsed();
+    print_result(out.result(), 10);
+    for p in &out.prints {
+        println!("{p}");
+    }
+    println!(
+        "-- {} rows visited, {} index builds, {} kernel calls, {}",
+        out.stats.rows_visited,
+        out.stats.index_builds,
+        out.stats.kernel_calls,
+        fmt_duration(dt)
+    );
+    Ok(())
+}
+
+fn cmd_cluster(flags: &BTreeMap<String, String>) -> Result<()> {
+    let sql = flags.get("sql").context("missing --sql")?.clone();
+    let mut e = engine(flags)?;
+    let mut cfg = ClusterConfig::new(opt_usize(flags, "workers", 8)?, policy(flags)?);
+    if let Some(f) = flags.get("fail") {
+        let (w, c) = f
+            .split_once(':')
+            .context("--fail wants WORKER:AFTER_CHUNKS")?;
+        cfg = cfg.with_failure(Failure {
+            worker: w.parse()?,
+            after_chunks: c.parse()?,
+        });
+    }
+    let (r, m) = e.sql_distributed(&sql, &cfg)?;
+    print_result(Some(&m), 10);
+    println!(
+        "-- policy={} workers={} chunks={} comm={}B recovered={} restarts={} {}",
+        cfg.policy.name(),
+        cfg.workers,
+        r.metrics.chunks,
+        r.metrics.comm_bytes,
+        r.metrics.failures_recovered,
+        r.metrics.restarts,
+        fmt_duration(r.metrics.elapsed)
+    );
+    Ok(())
+}
+
+fn cmd_mapreduce(flags: &BTreeMap<String, String>) -> Result<()> {
+    let sql = flags.get("sql").context("missing --sql")?.clone();
+    let mut e = engine(flags)?;
+    let compiled = e.compile(&sql)?;
+    let (mr, info) = mapreduce::derive(&compiled.program)?;
+    println!("-- derived from the single intermediate (§IV), table `{}`:", info.table);
+    println!("{mr}");
+    Ok(())
+}
+
+fn cmd_gen_data(flags: &BTreeMap<String, String>) -> Result<()> {
+    let rows = opt_usize(flags, "rows", 100_000)?;
+    let out_path = flags.get("out").context("missing --out")?;
+    let kind = flags
+        .get("workload")
+        .context("missing --workload")?
+        .as_str();
+    let m: Multiset = match kind {
+        "access" => workload::access_log_wide(&workload::AccessLogSpec {
+            rows,
+            urls: (rows / 20).max(10),
+            skew: 1.1,
+            seed: 42,
+        }),
+        "links" => workload::link_graph(&workload::LinkGraphSpec {
+            edges: rows,
+            pages: (rows / 20).max(10),
+            skew: 1.05,
+            seed: 43,
+        }),
+        "grades" => workload::grades((rows / 10).max(1), 10, 44),
+        other => bail!("unknown workload `{other}`"),
+    };
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out_path)?);
+    use std::io::Write;
+    for row in m.rows() {
+        let cells: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    println!("wrote {} rows to {out_path}", m.len());
+    Ok(())
+}
+
+fn cmd_fig2(flags: &BTreeMap<String, String>) -> Result<()> {
+    // A compact version of examples/e2e_fig2.rs for quick CLI smoke runs.
+    let rows = opt_usize(flags, "rows", 200_000)?;
+    let workers = opt_usize(flags, "workers", 8)?;
+    println!("Figure-2 mini run: {rows} rows, {workers} workers (see examples/e2e_fig2.rs for the full experiment)");
+    let m = workload::access_log(&workload::AccessLogSpec {
+        rows,
+        urls: (rows / 20).max(10),
+        skew: 1.1,
+        seed: 42,
+    });
+    let table = forelem::storage::Table::from_multiset(&m)?;
+
+    // Hadoop baseline.
+    let mr = mapreduce::MapReduceProgram {
+        map: mapreduce::MapFn::EmitKeyOne { key_field: 0 },
+        reduce: mapreduce::ReduceFn::CountValues,
+    };
+    let h = mapreduce::run_hadoop(&mapreduce::HadoopConfig::default(), &mr, &table)?;
+    println!("  hadoop-sim           {}", fmt_duration(h.metrics.elapsed));
+
+    // forelem, same (string) data.
+    let t0 = std::time::Instant::now();
+    let job = forelem::coordinator::AggJob::count(std::sync::Arc::new(table.clone()), 0);
+    let cfg = ClusterConfig::new(workers, Policy::Gss);
+    let r1 = forelem::coordinator::run_job(&cfg, &job)?;
+    println!("  forelem (strings)    {}", fmt_duration(t0.elapsed()));
+    assert_eq!(r1.pairs.len(), h.pairs.len());
+
+    // forelem, integer-keyed.
+    let mut keyed = table;
+    keyed.dict_encode_field(0)?;
+    let t0 = std::time::Instant::now();
+    let job = forelem::coordinator::AggJob::count(std::sync::Arc::new(keyed), 0);
+    let r2 = forelem::coordinator::run_job(&cfg, &job)?;
+    println!("  forelem (int keyed)  {}", fmt_duration(t0.elapsed()));
+    assert_eq!(r2.pairs.len(), r1.pairs.len());
+    Ok(())
+}
+
+fn print_result(m: Option<&Multiset>, limit: usize) {
+    let Some(m) = m else {
+        println!("(no result)");
+        return;
+    };
+    println!("{}", m.schema);
+    for (i, row) in m.rows().iter().take(limit).enumerate() {
+        let cells: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+        println!("{:>4}  {}", i, cells.join("  "));
+    }
+    if m.len() > limit {
+        println!("  ... {} rows total", m.len());
+    }
+}

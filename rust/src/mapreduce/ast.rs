@@ -1,0 +1,92 @@
+//! MapReduce program model (the §IV pseudo-code, structured).
+//!
+//! The supported shapes are the ones the paper derives from the single
+//! intermediate: map emits `(key, 1)` or `(key, value)`; reduce counts or
+//! sums the values per unique key.
+
+use std::fmt;
+
+/// The map function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapFn {
+    /// `emitIntermediate(t[key_field], 1)` — the URL-count / weblink map.
+    EmitKeyOne { key_field: usize },
+    /// `emitIntermediate(t[key_field], t[val_field])` — the §IV sum
+    /// variant.
+    EmitKeyValue { key_field: usize, val_field: usize },
+}
+
+impl MapFn {
+    pub fn key_field(&self) -> usize {
+        match self {
+            MapFn::EmitKeyOne { key_field } | MapFn::EmitKeyValue { key_field, .. } => *key_field,
+        }
+    }
+}
+
+/// The reduce function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceFn {
+    /// `count++ per value` — emits (key, count).
+    CountValues,
+    /// `sum += value` — emits (key, sum).
+    SumValues,
+}
+
+/// A complete MapReduce program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MapReduceProgram {
+    pub map: MapFn,
+    pub reduce: ReduceFn,
+}
+
+impl fmt::Display for MapReduceProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Render as the paper's pseudo-code.
+        match self.map {
+            MapFn::EmitKeyOne { key_field } => {
+                writeln!(f, "map(key, value):")?;
+                writeln!(f, "  for t in value:")?;
+                writeln!(f, "    emitIntermediate(t[{key_field}], 1)")?;
+            }
+            MapFn::EmitKeyValue {
+                key_field,
+                val_field,
+            } => {
+                writeln!(f, "map(key, value):")?;
+                writeln!(f, "  for t in value:")?;
+                writeln!(f, "    emitIntermediate(t[{key_field}], t[{val_field}])")?;
+            }
+        }
+        match self.reduce {
+            ReduceFn::CountValues => {
+                writeln!(f, "reduce(key, values):")?;
+                writeln!(f, "  count = 0")?;
+                writeln!(f, "  for v in values: count++")?;
+                write!(f, "  emit(key, count)")
+            }
+            ReduceFn::SumValues => {
+                writeln!(f, "reduce(key, values):")?;
+                writeln!(f, "  sum = 0")?;
+                writeln!(f, "  for v in values: sum += v")?;
+                write!(f, "  emit(key, sum)")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_paper_pseudocode() {
+        let p = MapReduceProgram {
+            map: MapFn::EmitKeyOne { key_field: 0 },
+            reduce: ReduceFn::CountValues,
+        };
+        let text = p.to_string();
+        assert!(text.contains("emitIntermediate(t[0], 1)"));
+        assert!(text.contains("emit(key, count)"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Deriving a MapReduce program from the single intermediate (§IV).
+//!
+//! "In general, two adjacent forelem loops where the former loop stores
+//! values in an array subscripted by a field of the array being iterated,
+//! and the latter loop accesses elements of this array, can be written as
+//! a MapReduce program."
+//!
+//! Recognition is shared with the compiled-plan machinery
+//! (exec::plan::recognize) — the same idiom that compiles to a native/XLA
+//! kernel also exports to MapReduce, which is precisely the paper's
+//! genericity claim.
+
+use anyhow::{bail, Context, Result};
+
+use crate::exec::plan::{recognize, Idiom};
+use crate::ir::Program;
+
+use super::ast::{MapFn, MapReduceProgram, ReduceFn};
+
+/// Derive the MapReduce form of a forelem program (the §IV translation).
+pub fn derive(p: &Program) -> Result<(MapReduceProgram, DeriveInfo)> {
+    let idiom = recognize(p).context(
+        "program is not two adjacent accumulate/emit forelem loops — \
+         no MapReduce form exists (§IV's derivation precondition)",
+    )?;
+    match idiom {
+        Idiom::GroupCount {
+            table, key_field, ..
+        } => {
+            let schema = p
+                .relations
+                .get(&table)
+                .with_context(|| format!("unknown relation `{table}`"))?;
+            let kf = schema
+                .field_id(&key_field)
+                .with_context(|| format!("no field `{key_field}`"))?;
+            Ok((
+                MapReduceProgram {
+                    map: MapFn::EmitKeyOne { key_field: kf },
+                    reduce: ReduceFn::CountValues,
+                },
+                DeriveInfo { table, key_field },
+            ))
+        }
+        Idiom::GroupSum {
+            table,
+            key_field,
+            val_field,
+            ..
+        } => {
+            let schema = p
+                .relations
+                .get(&table)
+                .with_context(|| format!("unknown relation `{table}`"))?;
+            let kf = schema
+                .field_id(&key_field)
+                .with_context(|| format!("no field `{key_field}`"))?;
+            let vf = schema
+                .field_id(&val_field)
+                .with_context(|| format!("no field `{val_field}`"))?;
+            if kf == vf {
+                bail!("key and value fields coincide");
+            }
+            Ok((
+                MapReduceProgram {
+                    map: MapFn::EmitKeyValue {
+                        key_field: kf,
+                        val_field: vf,
+                    },
+                    reduce: ReduceFn::SumValues,
+                },
+                DeriveInfo { table, key_field },
+            ))
+        }
+    }
+}
+
+/// Context for running the derived program (which table feeds the map).
+#[derive(Debug, Clone)]
+pub struct DeriveInfo {
+    pub table: String,
+    pub key_field: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Schema};
+    use crate::sql::compile_sql;
+
+    fn catalog() -> std::collections::BTreeMap<String, Schema> {
+        let mut c = std::collections::BTreeMap::new();
+        c.insert("access".into(), Schema::new(vec![("url", DataType::Str)]));
+        c.insert(
+            "t".into(),
+            Schema::new(vec![("k", DataType::Str), ("v", DataType::Float)]),
+        );
+        c
+    }
+
+    #[test]
+    fn url_count_derives_to_the_papers_mapreduce() {
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &catalog(),
+        )
+        .unwrap();
+        let (mr, info) = derive(&p).unwrap();
+        assert_eq!(mr.map, MapFn::EmitKeyOne { key_field: 0 });
+        assert_eq!(mr.reduce, ReduceFn::CountValues);
+        assert_eq!(info.table, "access");
+    }
+
+    #[test]
+    fn sum_derives_to_key_value_emit() {
+        let p = compile_sql("SELECT k, SUM(v) FROM t GROUP BY k", &catalog()).unwrap();
+        let (mr, _) = derive(&p).unwrap();
+        assert_eq!(
+            mr.map,
+            MapFn::EmitKeyValue {
+                key_field: 0,
+                val_field: 1
+            }
+        );
+        assert_eq!(mr.reduce, ReduceFn::SumValues);
+    }
+
+    #[test]
+    fn non_idiomatic_programs_refuse() {
+        let p = compile_sql("SELECT url FROM access", &catalog()).unwrap();
+        assert!(derive(&p).is_err());
+    }
+}

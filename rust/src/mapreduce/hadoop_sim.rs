@@ -1,0 +1,323 @@
+//! Hadoop-like MapReduce executor: the Figure-2 baseline.
+//!
+//! Substituted for a real Hadoop cluster per DESIGN.md §Substitutions.
+//! The mechanics that dominate Hadoop's cost profile are REAL here, not
+//! modelled by a fudge factor:
+//!
+//! * map output is **string-serialized** (`key\tvalue\n`, as in Hadoop
+//!   streaming / Text formats), **sorted**, partitioned by key hash and
+//!   **spilled to actual disk files**;
+//! * reducers **read those files back**, merge-sort by key, and apply the
+//!   reduce function;
+//! * only the fixed overheads that come from the JVM/daemon architecture
+//!   are injected as calibrated constants: per-job startup (JVM spawn,
+//!   job submission, InputSplit computation) and per-task dispatch (task
+//!   tracker heartbeat scheduling), with a bounded number of concurrent
+//!   task slots (the paper's 7 data nodes).
+//!
+//! The Figure-2 gap then *emerges from mechanism*: the forelem pipeline
+//! computes the same aggregate in one pass over memory-resident columns
+//! with no serialization, no sort, and no disk round-trip.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::distrib::hash_value;
+use crate::ir::Value;
+use crate::storage::{temp_path, Table};
+
+use super::ast::{MapFn, MapReduceProgram, ReduceFn};
+
+/// Cluster/cost configuration.
+#[derive(Debug, Clone)]
+pub struct HadoopConfig {
+    /// Number of map tasks (≈ input splits).
+    pub map_tasks: usize,
+    /// Number of reduce tasks.
+    pub reducers: usize,
+    /// Concurrent task slots (nodes × slots-per-node).
+    pub task_slots: usize,
+    /// One-time job overhead: JVM spawn, submission, split computation.
+    pub job_startup: Duration,
+    /// Per-task dispatch latency (task-tracker heartbeat scheduling).
+    pub task_dispatch: Duration,
+}
+
+impl Default for HadoopConfig {
+    fn default() -> Self {
+        // Calibrated to a small, *favourable-to-Hadoop* rendition of the
+        // paper's 7-datanode deployment: generous slots, sub-second task
+        // dispatch, a few seconds of job startup.
+        HadoopConfig {
+            map_tasks: 16,
+            reducers: 7,
+            task_slots: 14,
+            job_startup: Duration::from_millis(2500),
+            task_dispatch: Duration::from_millis(120),
+        }
+    }
+}
+
+impl HadoopConfig {
+    /// Zero-overhead variant for unit tests: mechanics only.
+    pub fn instant(map_tasks: usize, reducers: usize) -> Self {
+        HadoopConfig {
+            map_tasks,
+            reducers,
+            task_slots: map_tasks.max(reducers),
+            job_startup: Duration::ZERO,
+            task_dispatch: Duration::ZERO,
+        }
+    }
+}
+
+/// Execution metrics.
+#[derive(Debug, Default, Clone)]
+pub struct HadoopMetrics {
+    pub elapsed: Duration,
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    pub spill_bytes: u64,
+    pub shuffle_records: u64,
+}
+
+/// The job result: (key, aggregate) pairs + metrics.
+#[derive(Debug)]
+pub struct HadoopResult {
+    pub pairs: Vec<(Value, f64)>,
+    pub metrics: HadoopMetrics,
+}
+
+/// Run a MapReduce program over a table.
+pub fn run(cfg: &HadoopConfig, mr: &MapReduceProgram, input: &Table) -> Result<HadoopResult> {
+    let t0 = Instant::now();
+    std::thread::sleep(cfg.job_startup);
+
+    let spill_bytes = Arc::new(AtomicU64::new(0));
+    let shuffle_records = Arc::new(AtomicU64::new(0));
+
+    // ---- Map phase -------------------------------------------------------
+    // spills[m][r] = file with map m's records destined for reducer r.
+    let m_tasks = cfg.map_tasks.max(1);
+    let reducers = cfg.reducers.max(1);
+    let mut spills: Vec<Vec<PathBuf>> = Vec::with_capacity(m_tasks);
+    for _ in 0..m_tasks {
+        spills.push((0..reducers).map(|_| temp_path("spill")).collect());
+    }
+    let spills = Arc::new(spills);
+
+    run_task_pool(cfg, m_tasks, |m| {
+        let (lo, hi) = crate::exec::block_bounds(input.len(), m_tasks, m);
+        // Partition buffers of serialized records.
+        let mut buffers: Vec<Vec<String>> = vec![Vec::new(); reducers];
+        for row in lo..hi {
+            let (key, val) = match mr.map {
+                MapFn::EmitKeyOne { key_field } => (input.value(row, key_field), 1.0),
+                MapFn::EmitKeyValue {
+                    key_field,
+                    val_field,
+                } => (
+                    input.value(row, key_field),
+                    input.value(row, val_field).as_float().unwrap_or(0.0),
+                ),
+            };
+            let r = (hash_value(&key) % reducers as u64) as usize;
+            // Text serialization, exactly what makes Hadoop's shuffle fat.
+            buffers[r].push(format!("{key}\t{val}"));
+        }
+        for (r, mut buf) in buffers.into_iter().enumerate() {
+            // Hadoop sorts map output per partition before spilling.
+            buf.sort_unstable();
+            let path = &spills[m][r];
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(path).context("create spill").unwrap(),
+            );
+            let mut bytes = 0u64;
+            for line in &buf {
+                bytes += line.len() as u64 + 1;
+                writeln!(f, "{line}").unwrap();
+            }
+            f.flush().unwrap();
+            spill_bytes.fetch_add(bytes, Ordering::Relaxed);
+            shuffle_records.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        }
+    });
+
+    // ---- Shuffle + Reduce phase ------------------------------------------
+    let outputs: Arc<Mutex<Vec<Vec<(Value, f64)>>>> =
+        Arc::new(Mutex::new(vec![Vec::new(); reducers]));
+    run_task_pool(cfg, reducers, |r| {
+        // Fetch this reducer's partition from every map's spill (disk read).
+        let mut records: Vec<(String, f64)> = Vec::new();
+        for m in 0..m_tasks {
+            let path = &spills[m][r];
+            let f = std::fs::File::open(path).context("open spill").unwrap();
+            for line in BufReader::new(f).lines() {
+                let line = line.unwrap();
+                if let Some((k, v)) = line.rsplit_once('\t') {
+                    records.push((k.to_string(), v.parse().unwrap_or(0.0)));
+                }
+            }
+        }
+        // Merge-sort by key (Hadoop's reduce-side sort).
+        records.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        // Apply the reduce function per key group.
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < records.len() {
+            let key = records[i].0.clone();
+            let mut agg = 0.0;
+            while i < records.len() && records[i].0 == key {
+                agg += match mr.reduce {
+                    ReduceFn::CountValues => 1.0,
+                    ReduceFn::SumValues => records[i].1,
+                };
+                i += 1;
+            }
+            out.push((Value::str(key), agg));
+        }
+        outputs.lock().unwrap()[r] = out;
+    });
+
+    // Cleanup spills.
+    for per_map in spills.iter() {
+        for p in per_map {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    let pairs: Vec<(Value, f64)> = Arc::try_unwrap(outputs)
+        .map_err(|_| anyhow::anyhow!("output refs leaked"))?
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .flatten()
+        .collect();
+
+    Ok(HadoopResult {
+        pairs,
+        metrics: HadoopMetrics {
+            elapsed: t0.elapsed(),
+            map_tasks: m_tasks,
+            reduce_tasks: reducers,
+            spill_bytes: spill_bytes.load(Ordering::Relaxed),
+            shuffle_records: shuffle_records.load(Ordering::Relaxed),
+        },
+    })
+}
+
+/// Run `n` tasks on `cfg.task_slots` concurrent slots, charging the
+/// per-task dispatch latency.
+fn run_task_pool(cfg: &HadoopConfig, n: usize, task: impl Fn(usize) + Sync) {
+    let next = AtomicUsize::new(0);
+    let slots = cfg.task_slots.max(1).min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..slots {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                if !cfg.task_dispatch.is_zero() {
+                    std::thread::sleep(cfg.task_dispatch);
+                }
+                task(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema};
+
+    fn access_table(rows: usize, urls: usize) -> Table {
+        let schema = Schema::new(vec![("url", DataType::Str)]);
+        let mut m = Multiset::new(schema);
+        for i in 0..rows {
+            m.push(vec![Value::str(format!("/page{}", i % urls))]);
+        }
+        Table::from_multiset(&m).unwrap()
+    }
+
+    fn count_program() -> MapReduceProgram {
+        MapReduceProgram {
+            map: MapFn::EmitKeyOne { key_field: 0 },
+            reduce: ReduceFn::CountValues,
+        }
+    }
+
+    #[test]
+    fn counts_are_exact() {
+        let t = access_table(5000, 37);
+        let r = run(&HadoopConfig::instant(8, 3), &count_program(), &t).unwrap();
+        assert_eq!(r.pairs.len(), 37);
+        for (_, n) in &r.pairs {
+            assert!((*n - 5000.0 / 37.0).abs() < 2.0);
+        }
+        assert_eq!(r.pairs.iter().map(|(_, n)| *n).sum::<f64>(), 5000.0);
+        assert!(r.metrics.spill_bytes > 0);
+        assert_eq!(r.metrics.shuffle_records, 5000);
+    }
+
+    #[test]
+    fn sum_program_sums() {
+        let schema = Schema::new(vec![("k", DataType::Str), ("v", DataType::Float)]);
+        let mut m = Multiset::new(schema);
+        for i in 0..100 {
+            m.push(vec![Value::str(format!("k{}", i % 5)), Value::Float(0.5)]);
+        }
+        let t = Table::from_multiset(&m).unwrap();
+        let mr = MapReduceProgram {
+            map: MapFn::EmitKeyValue {
+                key_field: 0,
+                val_field: 1,
+            },
+            reduce: ReduceFn::SumValues,
+        };
+        let r = run(&HadoopConfig::instant(4, 2), &mr, &t).unwrap();
+        assert_eq!(r.pairs.len(), 5);
+        for (_, s) in &r.pairs {
+            assert!((s - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_map_single_reduce_edge() {
+        let t = access_table(10, 3);
+        let r = run(&HadoopConfig::instant(1, 1), &count_program(), &t).unwrap();
+        assert_eq!(r.pairs.iter().map(|(_, n)| *n).sum::<f64>(), 10.0);
+    }
+
+    #[test]
+    fn startup_overhead_is_charged() {
+        let t = access_table(10, 2);
+        let mut cfg = HadoopConfig::instant(1, 1);
+        cfg.job_startup = Duration::from_millis(80);
+        let r = run(&cfg, &count_program(), &t).unwrap();
+        assert!(r.metrics.elapsed >= Duration::from_millis(80));
+    }
+
+    #[test]
+    fn matches_coordinator_result() {
+        let t = access_table(2000, 23);
+        let hadoop = run(&HadoopConfig::instant(8, 4), &count_program(), &t).unwrap();
+        let table = std::sync::Arc::new(t);
+        let fore = crate::coordinator::run_job(
+            &crate::coordinator::ClusterConfig::new(4, crate::sched::Policy::Gss),
+            &crate::coordinator::AggJob::count(table, 0),
+        )
+        .unwrap();
+        let norm = |mut v: Vec<(Value, f64)>| {
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        assert_eq!(norm(hadoop.pairs), norm(fore.pairs));
+    }
+}

@@ -1,0 +1,13 @@
+//! MapReduce as a front-end and back-end of the single intermediate
+//! (§IV), plus the Hadoop-like baseline executor Figure 2 compares
+//! against.
+
+pub mod ast;
+pub mod derive;
+pub mod hadoop_sim;
+pub mod lower;
+
+pub use ast::{MapFn, MapReduceProgram, ReduceFn};
+pub use derive::{derive, DeriveInfo};
+pub use hadoop_sim::{run as run_hadoop, HadoopConfig, HadoopMetrics, HadoopResult};
+pub use lower::lower;

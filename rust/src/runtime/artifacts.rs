@@ -1,0 +1,152 @@
+//! AOT artifact discovery: parse `artifacts/manifest.tsv` produced by
+//! `python -m compile.aot` (see python/compile/aot.py for the format).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemType {
+    I32,
+    F32,
+}
+
+/// Shape spec of one input/output: dtype + dims.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: ElemType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (tag, dims) = s
+            .split_once(':')
+            .with_context(|| format!("bad tensor spec `{s}`"))?;
+        let dtype = match tag {
+            "i32" => ElemType::I32,
+            "f32" => ElemType::F32,
+            other => bail!("unknown dtype `{other}`"),
+        };
+        let dims = dims
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {} (run `make artifacts`)", mpath.display()))?;
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields", lineno + 1);
+            }
+            let inputs = parts[2]
+                .split(';')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let entry = ArtifactEntry {
+                name: parts[0].to_string(),
+                path: dir.join(parts[1]),
+                inputs,
+                output: TensorSpec::parse(parts[3])?,
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// All entries whose name starts with `prefix`, e.g. `count_scatter_`.
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(move |e| e.name.starts_with(prefix))
+    }
+
+    /// Pick the `prefix` entry with the smallest key-space width (output
+    /// dim 0) that still covers `num_keys`. Returns None when every
+    /// artifact is too narrow.
+    pub fn best_for_keyspace(&self, prefix: &str, num_keys: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.name.starts_with(prefix) && e.output.dims[0] >= num_keys)
+            .min_by_key(|e| e.output.dims[0])
+    }
+}
+
+/// The default artifacts directory: `$FORELEM_ARTIFACTS` or
+/// `<repo-root>/artifacts` (relative to the executable's cwd).
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FORELEM_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tensor_specs() {
+        let t = TensorSpec::parse("i32:65536").unwrap();
+        assert_eq!(t.dtype, ElemType::I32);
+        assert_eq!(t.dims, vec![65536]);
+        let t = TensorSpec::parse("f32:2x3").unwrap();
+        assert_eq!(t.elements(), 6);
+        assert!(TensorSpec::parse("bad").is_err());
+        assert!(TensorSpec::parse("u8:4").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        // Integration-style: only runs meaningfully after `make artifacts`.
+        let dir = default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.contains_key("count_scatter_65536x131072"));
+        let e = &m.entries["count_scatter_65536x131072"];
+        assert_eq!(e.inputs[0].dims, vec![65536]);
+        assert_eq!(e.output.dims, vec![131072]);
+        // Key-space routing.
+        let best = m.best_for_keyspace("count_scatter_", 1000).unwrap();
+        assert_eq!(best.output.dims[0], 1024);
+        let best = m.best_for_keyspace("count_scatter_", 100_000).unwrap();
+        assert_eq!(best.output.dims[0], 131072);
+        assert!(m.best_for_keyspace("count_scatter_", 10_000_000).is_none());
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, cache the
+//! executables. Mirrors /opt/xla-example/load_hlo (see aot_recipe.md):
+//! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{ArtifactEntry, Manifest};
+
+/// A PJRT CPU client + compiled-executable cache.
+///
+/// The xla crate's types are not Sync; everything lives behind one mutex.
+/// Artifact execution is leader-side (merge/emit path), so the lock is
+/// uncontended in practice.
+pub struct XlaRuntime {
+    inner: Mutex<Inner>,
+    pub manifest: Manifest,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaRuntime {
+            inner: Mutex::new(Inner {
+                client,
+                executables: HashMap::new(),
+            }),
+            manifest,
+        })
+    }
+
+    /// Load from the default directory (`$FORELEM_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<XlaRuntime> {
+        Self::load(&super::artifacts::default_dir())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest
+            .entries
+            .get(name)
+            .with_context(|| format!("no artifact `{name}`"))
+    }
+
+    /// Execute artifact `name` on 1-D input literals, returning the f32
+    /// output vector. Compiles and caches the executable on first use.
+    pub fn run_f32(&self, name: &str, inputs: &[InputBuf]) -> Result<Vec<f32>> {
+        let entry = self.entry(name)?.clone();
+        let mut inner = self.inner.lock().expect("runtime lock");
+        if !inner.executables.contains_key(name) {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry
+                    .path
+                    .to_str()
+                    .context("artifact path is not valid UTF-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact `{name}`"))?;
+            inner.executables.insert(name.to_string(), exe);
+        }
+        let exe = &inner.executables[name];
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|b| match b {
+                InputBuf::I32(v) => xla::Literal::vec1(v),
+                InputBuf::F32(v) => xla::Literal::vec1(v),
+            })
+            .collect();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute `{name}`"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → single-element tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// A 1-D input buffer.
+pub enum InputBuf {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn runtime() -> Option<XlaRuntime> {
+        if !default_dir().join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(XlaRuntime::load(&default_dir()).unwrap())
+    }
+
+    #[test]
+    fn count_scatter_artifact_counts() {
+        let Some(rt) = runtime() else { return };
+        let mut keys = vec![-1i32; 1024];
+        keys[0] = 3;
+        keys[1] = 3;
+        keys[2] = 0;
+        let out = rt
+            .run_f32("count_scatter_1024x256", &[InputBuf::I32(keys)])
+            .unwrap();
+        assert_eq!(out.len(), 256);
+        assert_eq!(out[3], 2.0);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out.iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn pallas_onehot_artifact_matches_scatter() {
+        let Some(rt) = runtime() else { return };
+        let keys: Vec<i32> = (0..1024).map(|i| (i * 7) % 256).collect();
+        let a = rt
+            .run_f32("count_scatter_1024x256", &[InputBuf::I32(keys.clone())])
+            .unwrap();
+        let b = rt
+            .run_f32("count_onehot_1024x256", &[InputBuf::I32(keys)])
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weighted_avg_artifact() {
+        let Some(rt) = runtime() else { return };
+        let vals = vec![2.0f32; 1024];
+        let wts = vec![0.5f32; 1024];
+        let out = rt
+            .run_f32("weighted_avg_1024", &[InputBuf::F32(vals), InputBuf::F32(wts)])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!((out[0] - 1024.0).abs() < 1e-3); // sum(v*w)
+        assert!((out[1] - 512.0).abs() < 1e-3); // sum(w)
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.run_f32("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Typed kernel wrappers: the `exec::plan::KernelExec` implementation
+//! backed by the AOT-compiled XLA artifacts.
+//!
+//! Chunking protocol (shared with python/compile/aot.py):
+//! * keys are i32; padding slots are `-1` and drop out of every bucket;
+//! * each call uses the smallest artifact whose key-space covers
+//!   `num_keys` and whose chunk size the key stream is padded to;
+//! * per-chunk f32 counts are exact (chunk ≤ 65536 < 2^24); cross-chunk
+//!   accumulation happens here in i64/f64.
+
+use anyhow::{bail, Result};
+
+use crate::exec::plan::KernelExec;
+
+use super::client::{InputBuf, XlaRuntime};
+
+/// Kernel dispatch over the XLA runtime, with the scatter family for wide
+/// key spaces and the Pallas one-hot family for narrow ones (the
+/// TPU-adapted path; see DESIGN.md §Hardware-Adaptation).
+pub struct Kernels {
+    rt: XlaRuntime,
+    /// Prefer the Pallas one-hot artifacts when the key space fits them.
+    pub prefer_onehot: bool,
+}
+
+impl Kernels {
+    pub fn new(rt: XlaRuntime) -> Self {
+        Kernels {
+            rt,
+            prefer_onehot: false,
+        }
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Ok(Kernels::new(XlaRuntime::load_default()?))
+    }
+
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.rt
+    }
+
+    fn pick(&self, op: &str, num_keys: usize, n: usize) -> Result<(String, usize, usize)> {
+        // Try one-hot (Pallas) first if preferred and narrow enough.
+        let families: &[&str] = if self.prefer_onehot {
+            &["onehot", "scatter"]
+        } else {
+            &["scatter", "onehot"]
+        };
+        for fam in families {
+            let prefix = format!("{op}_{fam}_");
+            // Smallest key space that covers num_keys...
+            let Some(keyspace) = self
+                .rt
+                .manifest
+                .with_prefix(&prefix)
+                .filter(|e| e.output.dims[0] >= num_keys)
+                .map(|e| e.output.dims[0])
+                .min()
+            else {
+                continue;
+            };
+            // ...then the chunk size that minimizes calls+padding: the
+            // largest chunk <= n, else the smallest available (all-padding
+            // single call). Amortizes the per-call PJRT overhead on big
+            // tables (EXPERIMENTS.md §Perf).
+            let candidates: Vec<_> = self
+                .rt
+                .manifest
+                .with_prefix(&prefix)
+                .filter(|e| e.output.dims[0] == keyspace)
+                .collect();
+            let best = candidates
+                .iter()
+                .filter(|e| e.inputs[0].dims[0] <= n.max(1))
+                .max_by_key(|e| e.inputs[0].dims[0])
+                .or_else(|| candidates.iter().min_by_key(|e| e.inputs[0].dims[0]));
+            if let Some(e) = best {
+                return Ok((e.name.clone(), e.inputs[0].dims[0], e.output.dims[0]));
+            }
+        }
+        bail!("no `{op}` artifact covers a key space of {num_keys}")
+    }
+
+    /// §III-B weighted-average fold on the device; returns (dot, wsum).
+    pub fn weighted_average(&self, values: &[f64], weights: &[f64]) -> Result<(f64, f64)> {
+        let Some(e) = self
+            .rt
+            .manifest
+            .with_prefix("weighted_avg_")
+            .filter(|e| e.inputs[0].dims[0] >= 1)
+            .min_by_key(|e| {
+                let n = e.inputs[0].dims[0];
+                if n >= values.len() {
+                    n
+                } else {
+                    usize::MAX
+                }
+            })
+        else {
+            bail!("no weighted_avg artifact");
+        };
+        let chunk = e.inputs[0].dims[0];
+        if values.len() > chunk {
+            // Fold chunk by chunk.
+            let mut dot = 0.0;
+            let mut wsum = 0.0;
+            for (vs, ws) in values.chunks(chunk).zip(weights.chunks(chunk)) {
+                let (d, w) = self.weighted_average_chunk(&e.name, chunk, vs, ws)?;
+                dot += d;
+                wsum += w;
+            }
+            return Ok((dot, wsum));
+        }
+        self.weighted_average_chunk(&e.name, chunk, values, weights)
+    }
+
+    fn weighted_average_chunk(
+        &self,
+        name: &str,
+        chunk: usize,
+        values: &[f64],
+        weights: &[f64],
+    ) -> Result<(f64, f64)> {
+        let mut v = vec![0f32; chunk];
+        let mut w = vec![0f32; chunk];
+        for (dst, src) in v.iter_mut().zip(values) {
+            *dst = *src as f32;
+        }
+        for (dst, src) in w.iter_mut().zip(weights) {
+            *dst = *src as f32;
+        }
+        let out = self
+            .rt
+            .run_f32(name, &[InputBuf::F32(v), InputBuf::F32(w)])?;
+        Ok((out[0] as f64, out[1] as f64))
+    }
+}
+
+impl KernelExec for Kernels {
+    fn group_count(&self, keys: &[i64], num_keys: usize) -> Result<Vec<i64>> {
+        let (name, chunk, keyspace) = self.pick("count", num_keys, keys.len())?;
+        let mut totals = vec![0i64; keyspace];
+        for part in keys.chunks(chunk) {
+            let mut buf = vec![-1i32; chunk];
+            for (dst, &src) in buf.iter_mut().zip(part) {
+                *dst = src as i32;
+            }
+            let counts = self.rt.run_f32(&name, &[InputBuf::I32(buf)])?;
+            for (t, c) in totals.iter_mut().zip(&counts) {
+                *t += *c as i64;
+            }
+        }
+        totals.truncate(num_keys);
+        Ok(totals)
+    }
+
+    fn group_sum(&self, keys: &[i64], vals: &[f64], num_keys: usize) -> Result<Vec<f64>> {
+        let (name, chunk, keyspace) = self.pick("segsum", num_keys, keys.len())?;
+        let mut totals = vec![0f64; keyspace];
+        for (kpart, vpart) in keys.chunks(chunk).zip(vals.chunks(chunk)) {
+            let mut kbuf = vec![-1i32; chunk];
+            let mut vbuf = vec![0f32; chunk];
+            for (dst, &src) in kbuf.iter_mut().zip(kpart) {
+                *dst = src as i32;
+            }
+            for (dst, &src) in vbuf.iter_mut().zip(vpart) {
+                *dst = src as f32;
+            }
+            let sums = self
+                .rt
+                .run_f32(&name, &[InputBuf::I32(kbuf), InputBuf::F32(vbuf)])?;
+            for (t, s) in totals.iter_mut().zip(&sums) {
+                *t += *s as f64;
+            }
+        }
+        totals.truncate(num_keys);
+        Ok(totals)
+    }
+}
+
+// Safe: all interior mutability is behind the runtime's mutex.
+unsafe impl Sync for Kernels {}
+unsafe impl Send for Kernels {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn kernels() -> Option<Kernels> {
+        if !default_dir().join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Kernels::load_default().unwrap())
+    }
+
+    #[test]
+    fn group_count_multi_chunk_with_padding() {
+        let Some(k) = kernels() else { return };
+        // 1500 keys → two 1024-chunks with padding.
+        let keys: Vec<i64> = (0..1500).map(|i| i % 100).collect();
+        let counts = k.group_count(&keys, 256).unwrap();
+        assert_eq!(counts.len(), 256);
+        assert_eq!(counts.iter().sum::<i64>(), 1500);
+        assert_eq!(counts[0], 15);
+        assert_eq!(counts[99], 15);
+        assert_eq!(counts[100], 0);
+    }
+
+    #[test]
+    fn group_count_routes_to_wide_artifact() {
+        let Some(k) = kernels() else { return };
+        let keys: Vec<i64> = (0..100).map(|i| 1000 + i).collect();
+        let counts = k.group_count(&keys, 2000).unwrap();
+        assert_eq!(counts.len(), 2000);
+        assert_eq!(counts[1000], 1);
+        assert_eq!(counts.iter().sum::<i64>(), 100);
+    }
+
+    #[test]
+    fn group_sum_matches_native() {
+        let Some(k) = kernels() else { return };
+        let keys: Vec<i64> = (0..500).map(|i| i % 7).collect();
+        let vals: Vec<f64> = (0..500).map(|i| (i % 13) as f64 * 0.5).collect();
+        let sums = k.group_sum(&keys, &vals, 256).unwrap();
+        let mut want = vec![0f64; 256];
+        for (&key, &v) in keys.iter().zip(&vals) {
+            want[key as usize] += v;
+        }
+        for (a, b) in sums.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn onehot_preference_changes_artifact_not_result() {
+        let Some(mut k) = kernels() else { return };
+        let keys: Vec<i64> = (0..2048).map(|i| i % 200).collect();
+        let a = k.group_count(&keys, 1024).unwrap();
+        k.prefer_onehot = true;
+        let b = k.group_count(&keys, 1024).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weighted_average_device_fold() {
+        let Some(k) = kernels() else { return };
+        let vals: Vec<f64> = (0..3000).map(|i| (i % 10) as f64).collect();
+        let wts: Vec<f64> = (0..3000).map(|_| 0.5).collect();
+        let (dot, wsum) = k.weighted_average(&vals, &wts).unwrap();
+        let want_dot: f64 = vals.iter().map(|v| v * 0.5).sum();
+        assert!((dot - want_dot).abs() / want_dot < 1e-3, "{dot} vs {want_dot}");
+        assert!((wsum - 1500.0).abs() < 1.0);
+    }
+}

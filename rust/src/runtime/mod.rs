@@ -1,0 +1,11 @@
+//! The XLA/PJRT runtime: loads the AOT-compiled artifacts produced by the
+//! Python build path (`make artifacts`) and exposes them as typed kernels
+//! on the Rust hot path. Python never runs at request time.
+
+pub mod artifacts;
+pub mod client;
+pub mod kernel;
+
+pub use artifacts::{default_dir, ArtifactEntry, ElemType, Manifest, TensorSpec};
+pub use client::{InputBuf, XlaRuntime};
+pub use kernel::Kernels;

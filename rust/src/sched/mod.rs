@@ -1,0 +1,368 @@
+//! Loop scheduling (§III-A2) and its fault-tolerance role (§III-A3).
+//!
+//! A scheduler hands out *chunks* of a parallel loop's iteration space to
+//! requesting workers. Static schedules are fixed at compile time; the
+//! dynamic family (GSS, trapezoid, factoring, feedback-guided) shrinks
+//! chunk sizes over time to balance skewed iteration costs; the hybrid
+//! scheme runs dynamic scheduling over super-chunks that are executed
+//! with a static schedule inside, so a node failure costs exactly one
+//! super-chunk of recompute.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// A contiguous chunk of iterations `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Chunk {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo >= self.hi
+    }
+}
+
+/// The scheduling discipline, selectable per job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Compile-time block schedule: worker w owns block w. Zero overhead,
+    /// no run-time changes possible (§III-A3's caveat).
+    StaticBlock,
+    /// Fixed-size chunks handed out dynamically (self-scheduling).
+    FixedChunk(usize),
+    /// Guided Self-Scheduling [Polychronopoulos & Kuck]: chunk = ceil(remaining / p).
+    Gss,
+    /// Trapezoid Self-Scheduling [Tzen & Ni]: chunk sizes decrease
+    /// linearly from n/(2p) to 1.
+    Trapezoid,
+    /// Factoring [Hummel et al.]: batches of p chunks, each batch half the
+    /// remaining work.
+    Factoring,
+    /// Feedback-guided: starts like GSS but rescales per-worker chunk
+    /// sizes by observed throughput.
+    FeedbackGuided,
+    /// Hybrid (§III-A3): dynamic over super-chunks (static inside), fault
+    /// recovery at super-chunk granularity.
+    Hybrid { super_chunks_per_worker: usize },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::StaticBlock => "static",
+            Policy::FixedChunk(_) => "fixed-chunk",
+            Policy::Gss => "gss",
+            Policy::Trapezoid => "trapezoid",
+            Policy::Factoring => "factoring",
+            Policy::FeedbackGuided => "feedback",
+            Policy::Hybrid { .. } => "hybrid",
+        }
+    }
+}
+
+/// Runtime scheduler state. Thread-safe use is the coordinator's job
+/// (it wraps this in a mutex).
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    n: usize,
+    workers: usize,
+    /// Next unassigned iteration (for progressive policies).
+    cursor: usize,
+    /// Requeued chunks (fault recovery) take priority.
+    requeued: VecDeque<Chunk>,
+    /// Static pre-assignment (StaticBlock): one block per worker.
+    static_blocks: Vec<Option<Chunk>>,
+    /// Trapezoid state.
+    trapezoid_next: f64,
+    trapezoid_delta: f64,
+    /// Factoring state.
+    factoring_batch: VecDeque<Chunk>,
+    /// Feedback: per-worker relative speed estimate (EWMA of iters/sec).
+    speeds: Vec<f64>,
+    /// Total chunks handed out (stats).
+    pub chunks_issued: usize,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy, n: usize, workers: usize) -> Self {
+        assert!(workers > 0);
+        let p = workers as f64;
+        let first = (n as f64 / (2.0 * p)).ceil().max(1.0);
+        // Trapezoid: chunk sizes decrease linearly from `first` to 1 over
+        // approximately 2n/(first+1) chunks.
+        let steps = (2.0 * n as f64 / (first + 1.0)).ceil().max(1.0);
+        let delta = if steps > 1.0 {
+            (first - 1.0) / (steps - 1.0)
+        } else {
+            0.0
+        };
+        let mut static_blocks = vec![None; workers];
+        if policy == Policy::StaticBlock {
+            for (w, slot) in static_blocks.iter_mut().enumerate() {
+                let (lo, hi) = crate::exec::block_bounds(n, workers, w);
+                if lo < hi {
+                    *slot = Some(Chunk { lo, hi });
+                }
+            }
+        }
+        Scheduler {
+            policy,
+            n,
+            workers,
+            cursor: 0,
+            requeued: VecDeque::new(),
+            static_blocks,
+            trapezoid_next: first,
+            trapezoid_delta: delta,
+            factoring_batch: VecDeque::new(),
+            speeds: vec![1.0; workers],
+            chunks_issued: 0,
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Can iterations be re-assigned after a failure?
+    pub fn supports_requeue(&self) -> bool {
+        self.policy != Policy::StaticBlock
+    }
+
+    /// Next chunk for `worker`, or None when the loop is exhausted.
+    pub fn next_chunk(&mut self, worker: usize) -> Option<Chunk> {
+        debug_assert!(worker < self.workers);
+        if let Some(c) = self.requeued.pop_front() {
+            self.chunks_issued += 1;
+            return Some(c);
+        }
+        // Factoring pre-carves batches past the cursor; drain them first.
+        if let Some(c) = self.factoring_batch.pop_front() {
+            self.chunks_issued += 1;
+            return Some(c);
+        }
+        let remaining = self.n - self.cursor;
+        if remaining == 0 {
+            return None;
+        }
+        let size = match self.policy {
+            Policy::StaticBlock => {
+                let c = self.static_blocks[worker].take();
+                if let Some(c) = &c {
+                    self.cursor += c.len();
+                    self.chunks_issued += 1;
+                }
+                return c;
+            }
+            Policy::FixedChunk(s) => s.max(1),
+            Policy::Gss => remaining.div_ceil(self.workers),
+            Policy::Trapezoid => {
+                let s = self.trapezoid_next.round().max(1.0) as usize;
+                self.trapezoid_next = (self.trapezoid_next - self.trapezoid_delta).max(1.0);
+                s
+            }
+            Policy::Factoring => {
+                // Allocate half the remaining work as p equal chunks.
+                let batch = (remaining / 2).max(self.workers.min(remaining));
+                let per = (batch / self.workers).max(1);
+                let mut lo = self.cursor;
+                for _ in 0..self.workers {
+                    let hi = (lo + per).min(self.n);
+                    if lo < hi {
+                        self.factoring_batch.push_back(Chunk { lo, hi });
+                    }
+                    lo = hi;
+                }
+                self.cursor = lo;
+                let c = self.factoring_batch.pop_front().expect("nonempty batch");
+                self.chunks_issued += 1;
+                return Some(c);
+            }
+            Policy::FeedbackGuided => {
+                // GSS baseline scaled by this worker's relative speed.
+                let base = remaining.div_ceil(self.workers);
+                let avg: f64 = self.speeds.iter().sum::<f64>() / self.workers as f64;
+                ((base as f64) * (self.speeds[worker] / avg).clamp(0.25, 4.0))
+                    .round()
+                    .max(1.0) as usize
+            }
+            Policy::Hybrid {
+                super_chunks_per_worker,
+            } => {
+                let total_chunks = self.workers * super_chunks_per_worker.max(1);
+                (self.n / total_chunks).max(1)
+            }
+        };
+        let lo = self.cursor;
+        let hi = (lo + size).min(self.n);
+        self.cursor = hi;
+        self.chunks_issued += 1;
+        Some(Chunk { lo, hi })
+    }
+
+    /// Report a completed chunk (feedback-guided uses the timing).
+    pub fn report(&mut self, worker: usize, chunk: Chunk, elapsed: Duration) {
+        if self.policy == Policy::FeedbackGuided {
+            let secs = elapsed.as_secs_f64().max(1e-9);
+            let speed = chunk.len() as f64 / secs;
+            let s = &mut self.speeds[worker];
+            *s = 0.7 * *s + 0.3 * speed;
+        }
+    }
+
+    /// Give back iterations from a failed worker (§III-A3). Panics if the
+    /// policy cannot reassign work — callers must check
+    /// [`supports_requeue`] and restart the computation instead.
+    pub fn requeue(&mut self, chunk: Chunk) {
+        assert!(
+            self.supports_requeue(),
+            "static schedules cannot reassign work at run time"
+        );
+        if !chunk.is_empty() {
+            self.requeued.push_back(chunk);
+        }
+    }
+
+    /// All iterations assigned so far (monotone; includes requeued ones
+    /// once re-issued).
+    pub fn exhausted(&self) -> bool {
+        self.cursor >= self.n
+            && self.requeued.is_empty()
+            && self.factoring_batch.is_empty()
+            && self.static_blocks.iter().all(|b| b.is_none())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain a scheduler round-robin and assert exact coverage of 0..n.
+    fn coverage(policy: Policy, n: usize, p: usize) -> Vec<Chunk> {
+        let mut s = Scheduler::new(policy, n, p);
+        let mut got = Vec::new();
+        let mut w = 0;
+        while let Some(c) = s.next_chunk(w % p) {
+            got.push(c);
+            w += 1;
+        }
+        let mut seen = vec![false; n];
+        for c in &got {
+            for i in c.lo..c.hi {
+                assert!(!seen[i], "{policy:?}: iteration {i} issued twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{policy:?}: some iteration never issued");
+        assert!(s.exhausted());
+        got
+    }
+
+    #[test]
+    fn all_policies_cover_exactly_once() {
+        for policy in [
+            Policy::StaticBlock,
+            Policy::FixedChunk(7),
+            Policy::Gss,
+            Policy::Trapezoid,
+            Policy::Factoring,
+            Policy::FeedbackGuided,
+            Policy::Hybrid {
+                super_chunks_per_worker: 4,
+            },
+        ] {
+            for (n, p) in [(100, 4), (1000, 8), (5, 8), (1, 1), (64, 3)] {
+                coverage(policy, n, p);
+            }
+        }
+    }
+
+    #[test]
+    fn gss_chunks_decrease() {
+        let chunks = coverage(Policy::Gss, 1000, 4);
+        assert!(chunks[0].len() >= chunks[chunks.len() - 1].len());
+        assert_eq!(chunks[0].len(), 250); // ceil(1000/4)
+    }
+
+    #[test]
+    fn trapezoid_decreases_linearly() {
+        let chunks = coverage(Policy::Trapezoid, 1000, 4);
+        assert_eq!(chunks[0].len(), 125); // n/(2p)
+        for w in chunks.windows(2) {
+            assert!(w[1].len() <= w[0].len() + 1);
+        }
+    }
+
+    #[test]
+    fn static_gives_one_block_per_worker() {
+        let mut s = Scheduler::new(Policy::StaticBlock, 100, 4);
+        for w in 0..4 {
+            let c = s.next_chunk(w).unwrap();
+            assert_eq!(c.len(), 25);
+            assert!(s.next_chunk(w).is_none() || w < 3);
+        }
+        assert!(!s.supports_requeue());
+    }
+
+    #[test]
+    fn requeue_reissues_failed_chunk() {
+        let mut s = Scheduler::new(Policy::Gss, 100, 4);
+        let c1 = s.next_chunk(0).unwrap();
+        s.requeue(c1);
+        let again = s.next_chunk(1).unwrap();
+        assert_eq!(c1, again);
+    }
+
+    #[test]
+    #[should_panic(expected = "static schedules")]
+    fn static_requeue_panics() {
+        let mut s = Scheduler::new(Policy::StaticBlock, 100, 4);
+        let c = s.next_chunk(0).unwrap();
+        s.requeue(c);
+    }
+
+    #[test]
+    fn feedback_gives_fast_workers_bigger_chunks() {
+        let mut s = Scheduler::new(Policy::FeedbackGuided, 100_000, 2);
+        // Teach it: worker 0 is 4x faster.
+        let c = s.next_chunk(0).unwrap();
+        s.report(0, c, Duration::from_millis(10));
+        let c = s.next_chunk(1).unwrap();
+        s.report(1, c, Duration::from_millis(40 * c.len() as u64 / 25_000.max(1)));
+        // Let the EWMA converge a little.
+        for _ in 0..3 {
+            let c0 = s.next_chunk(0).unwrap();
+            s.report(0, c0, Duration::from_micros((c0.len() as u64).max(1)));
+            let c1 = s.next_chunk(1).unwrap();
+            s.report(1, c1, Duration::from_micros((c1.len() as u64 * 8).max(1)));
+        }
+        let big = s.next_chunk(0).unwrap();
+        let small = s.next_chunk(1).unwrap();
+        assert!(
+            big.len() > small.len(),
+            "fast worker got {} vs slow {}",
+            big.len(),
+            small.len()
+        );
+    }
+
+    #[test]
+    fn hybrid_chunk_count_matches_super_chunks() {
+        let chunks = coverage(
+            Policy::Hybrid {
+                super_chunks_per_worker: 4,
+            },
+            1600,
+            4,
+        );
+        assert_eq!(chunks.len(), 16);
+        assert!(chunks.iter().all(|c| c.len() == 100));
+    }
+}

@@ -1,0 +1,117 @@
+//! SQL abstract syntax tree (the subset the paper's examples need, §IV):
+//! single-table and two-table-join SELECTs with WHERE, GROUP BY and
+//! aggregates.
+
+use crate::ir::value::Value;
+
+/// Aggregate functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregate {
+    Count,
+    Sum,
+    Min,
+    Max,
+    Avg,
+}
+
+/// A column reference, optionally table-qualified (`links.target`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnRef {
+    pub table: Option<String>,
+    pub column: String,
+}
+
+impl ColumnRef {
+    pub fn new(column: &str) -> Self {
+        ColumnRef {
+            table: None,
+            column: column.to_string(),
+        }
+    }
+
+    pub fn qualified(table: &str, column: &str) -> Self {
+        ColumnRef {
+            table: Some(table.to_string()),
+            column: column.to_string(),
+        }
+    }
+}
+
+/// A scalar SQL expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SqlExpr {
+    Column(ColumnRef),
+    Literal(Value),
+    Binary {
+        op: SqlBinOp,
+        lhs: Box<SqlExpr>,
+        rhs: Box<SqlExpr>,
+    },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SqlBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+/// One SELECT-list item.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectItem {
+    /// `*`
+    Wildcard,
+    /// Plain expression (usually a column), with optional alias.
+    Expr { expr: SqlExpr, alias: Option<String> },
+    /// `agg(expr)` or `COUNT(*)` (expr = None), with optional alias.
+    Agg {
+        agg: Aggregate,
+        expr: Option<SqlExpr>,
+        alias: Option<String>,
+    },
+}
+
+/// `JOIN table ON left = right`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JoinClause {
+    pub table: String,
+    pub alias: Option<String>,
+    pub left: ColumnRef,
+    pub right: ColumnRef,
+}
+
+/// A parsed SELECT statement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Select {
+    pub items: Vec<SelectItem>,
+    pub table: String,
+    pub alias: Option<String>,
+    pub join: Option<JoinClause>,
+    pub filter: Option<SqlExpr>,
+    pub group_by: Vec<ColumnRef>,
+    /// `ORDER BY col [ASC|DESC]` — (column-or-alias name, descending).
+    pub order_by: Option<(String, bool)>,
+    /// `LIMIT n` — the top-k form the URL-count workload naturally wants.
+    pub limit: Option<usize>,
+}
+
+impl Select {
+    /// True if the query aggregates (has agg items or a GROUP BY).
+    pub fn is_aggregate(&self) -> bool {
+        !self.group_by.is_empty()
+            || self
+                .items
+                .iter()
+                .any(|i| matches!(i, SelectItem::Agg { .. }))
+    }
+}

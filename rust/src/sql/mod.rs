@@ -1,0 +1,12 @@
+//! SQL front-end: lexer → parser → lowering into the single intermediate
+//! representation (§IV of the paper).
+
+pub mod ast;
+pub mod lexer;
+pub mod lower;
+pub mod parser;
+pub mod token;
+
+pub use ast::{Aggregate, ColumnRef, JoinClause, Select, SelectItem, SqlBinOp, SqlExpr};
+pub use lower::{compile_sql, lower, Catalog};
+pub use parser::parse;

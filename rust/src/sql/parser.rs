@@ -1,0 +1,392 @@
+//! Recursive-descent SQL parser for the supported subset.
+
+use anyhow::{bail, Result};
+
+use super::ast::*;
+use super::lexer::lex;
+use super::token::Token;
+use crate::ir::value::Value;
+
+/// Parse one SELECT statement.
+pub fn parse(input: &str) -> Result<Select> {
+    let tokens = lex(input)?;
+    let mut p = Parser { tokens, pos: 0 };
+    let sel = p.select()?;
+    p.eat_if(&Token::Semicolon);
+    p.expect(Token::Eof)?;
+    Ok(sel)
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Token {
+        &self.tokens[self.pos]
+    }
+
+    fn next(&mut self) -> Token {
+        let t = self.tokens[self.pos].clone();
+        if self.pos < self.tokens.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat_if(&mut self, t: &Token) -> bool {
+        if self.peek() == t {
+            self.next();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: Token) -> Result<()> {
+        if self.peek() == &t {
+            self.next();
+            Ok(())
+        } else {
+            bail!("expected {t}, found {}", self.peek())
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next() {
+            Token::Ident(s) => Ok(s),
+            other => bail!("expected identifier, found {other}"),
+        }
+    }
+
+    fn select(&mut self) -> Result<Select> {
+        self.expect(Token::Select)?;
+        let mut items = vec![self.select_item()?];
+        while self.eat_if(&Token::Comma) {
+            items.push(self.select_item()?);
+        }
+        self.expect(Token::From)?;
+        let table = self.ident()?;
+        let alias = self.maybe_alias()?;
+
+        let join = if self.eat_if(&Token::Inner) || matches!(self.peek(), Token::Join) {
+            self.eat_if(&Token::Join);
+            let jtable = self.ident()?;
+            let jalias = self.maybe_alias()?;
+            self.expect(Token::On)?;
+            let left = self.column_ref()?;
+            self.expect(Token::Eq)?;
+            let right = self.column_ref()?;
+            Some(JoinClause {
+                table: jtable,
+                alias: jalias,
+                left,
+                right,
+            })
+        } else {
+            None
+        };
+
+        let filter = if self.eat_if(&Token::Where) {
+            Some(self.expr()?)
+        } else {
+            None
+        };
+
+        let mut group_by = Vec::new();
+        if self.eat_if(&Token::Group) {
+            self.expect(Token::By)?;
+            group_by.push(self.column_ref()?);
+            while self.eat_if(&Token::Comma) {
+                group_by.push(self.column_ref()?);
+            }
+        }
+
+        let order_by = if self.eat_if(&Token::Order) {
+            self.expect(Token::By)?;
+            let col = self.ident()?;
+            let desc = if self.eat_if(&Token::Desc) {
+                true
+            } else {
+                self.eat_if(&Token::Asc);
+                false
+            };
+            Some((col, desc))
+        } else {
+            None
+        };
+        let limit = if self.eat_if(&Token::Limit) {
+            match self.next() {
+                Token::Int(n) if n >= 0 => Some(n as usize),
+                other => bail!("LIMIT wants a non-negative integer, found {other}"),
+            }
+        } else {
+            None
+        };
+
+        Ok(Select {
+            items,
+            table,
+            alias,
+            join,
+            filter,
+            group_by,
+            order_by,
+            limit,
+        })
+    }
+
+    fn maybe_alias(&mut self) -> Result<Option<String>> {
+        if self.eat_if(&Token::As) {
+            return Ok(Some(self.ident()?));
+        }
+        if let Token::Ident(_) = self.peek() {
+            // Bare alias: `FROM access a`.
+            return Ok(Some(self.ident()?));
+        }
+        Ok(None)
+    }
+
+    fn select_item(&mut self) -> Result<SelectItem> {
+        if self.eat_if(&Token::Star) {
+            return Ok(SelectItem::Wildcard);
+        }
+        let agg = match self.peek() {
+            Token::Count => Some(Aggregate::Count),
+            Token::Sum => Some(Aggregate::Sum),
+            Token::Min => Some(Aggregate::Min),
+            Token::Max => Some(Aggregate::Max),
+            Token::Avg => Some(Aggregate::Avg),
+            _ => None,
+        };
+        if let Some(agg) = agg {
+            self.next();
+            self.expect(Token::LParen)?;
+            let expr = if self.eat_if(&Token::Star) {
+                None
+            } else {
+                Some(self.expr()?)
+            };
+            self.expect(Token::RParen)?;
+            let alias = self.item_alias()?;
+            return Ok(SelectItem::Agg { agg, expr, alias });
+        }
+        let expr = self.expr()?;
+        let alias = self.item_alias()?;
+        Ok(SelectItem::Expr { expr, alias })
+    }
+
+    fn item_alias(&mut self) -> Result<Option<String>> {
+        if self.eat_if(&Token::As) {
+            Ok(Some(self.ident()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn column_ref(&mut self) -> Result<ColumnRef> {
+        let first = self.ident()?;
+        if self.eat_if(&Token::Dot) {
+            let col = self.ident()?;
+            Ok(ColumnRef::qualified(&first, &col))
+        } else {
+            Ok(ColumnRef::new(&first))
+        }
+    }
+
+    // Precedence climbing: or < and < cmp < add < mul.
+    fn expr(&mut self) -> Result<SqlExpr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<SqlExpr> {
+        let mut lhs = self.and_expr()?;
+        while self.eat_if(&Token::Or) {
+            let rhs = self.and_expr()?;
+            lhs = bin(SqlBinOp::Or, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<SqlExpr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.eat_if(&Token::And) {
+            let rhs = self.cmp_expr()?;
+            lhs = bin(SqlBinOp::And, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<SqlExpr> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Token::Eq => Some(SqlBinOp::Eq),
+            Token::Ne => Some(SqlBinOp::Ne),
+            Token::Lt => Some(SqlBinOp::Lt),
+            Token::Le => Some(SqlBinOp::Le),
+            Token::Gt => Some(SqlBinOp::Gt),
+            Token::Ge => Some(SqlBinOp::Ge),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.next();
+            let rhs = self.add_expr()?;
+            return Ok(bin(op, lhs, rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn add_expr(&mut self) -> Result<SqlExpr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Token::Plus => SqlBinOp::Add,
+                Token::Minus => SqlBinOp::Sub,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.mul_expr()?;
+            lhs = bin(op, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<SqlExpr> {
+        let mut lhs = self.atom()?;
+        loop {
+            let op = match self.peek() {
+                Token::Star => SqlBinOp::Mul,
+                Token::Slash => SqlBinOp::Div,
+                Token::Percent => SqlBinOp::Mod,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.atom()?;
+            lhs = bin(op, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn atom(&mut self) -> Result<SqlExpr> {
+        match self.next() {
+            Token::Int(i) => Ok(SqlExpr::Literal(Value::Int(i))),
+            Token::Float(x) => Ok(SqlExpr::Literal(Value::Float(x))),
+            Token::Str(s) => Ok(SqlExpr::Literal(Value::str(s)))
+,
+            Token::Ident(first) => {
+                if self.eat_if(&Token::Dot) {
+                    let col = self.ident()?;
+                    Ok(SqlExpr::Column(ColumnRef::qualified(&first, &col)))
+                } else {
+                    Ok(SqlExpr::Column(ColumnRef::new(&first)))
+                }
+            }
+            Token::LParen => {
+                let e = self.expr()?;
+                self.expect(Token::RParen)?;
+                Ok(e)
+            }
+            other => bail!("unexpected token {other} in expression"),
+        }
+    }
+}
+
+fn bin(op: SqlBinOp, lhs: SqlExpr, rhs: SqlExpr) -> SqlExpr {
+    SqlExpr::Binary {
+        op,
+        lhs: Box::new(lhs),
+        rhs: Box::new(rhs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_papers_url_count_query() {
+        // §IV: SELECT url, COUNT(url) FROM access GROUP BY url
+        let s = parse("SELECT url, COUNT(url) FROM access GROUP BY url").unwrap();
+        assert_eq!(s.table, "access");
+        assert_eq!(s.group_by, vec![ColumnRef::new("url")]);
+        assert_eq!(s.items.len(), 2);
+        assert!(matches!(
+            s.items[1],
+            SelectItem::Agg {
+                agg: Aggregate::Count,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn parses_the_papers_weblink_query() {
+        // §IV: SELECT target, COUNT(target) FROM links GROUP BY target
+        let s = parse("SELECT target, COUNT(target) FROM links GROUP BY target").unwrap();
+        assert_eq!(s.table, "links");
+        assert!(s.is_aggregate());
+    }
+
+    #[test]
+    fn parses_join_on() {
+        let s = parse("SELECT A.field, B.field FROM A JOIN B ON A.b_id = B.id").unwrap();
+        let j = s.join.unwrap();
+        assert_eq!(j.table, "B");
+        assert_eq!(j.left, ColumnRef::qualified("A", "b_id"));
+        assert_eq!(j.right, ColumnRef::qualified("B", "id"));
+    }
+
+    #[test]
+    fn parses_where_with_precedence() {
+        let s = parse("SELECT x FROM t WHERE a = 1 AND b > 2 OR c < 3").unwrap();
+        // ((a=1 AND b>2) OR c<3)
+        match s.filter.unwrap() {
+            SqlExpr::Binary { op: SqlBinOp::Or, lhs, .. } => match *lhs {
+                SqlExpr::Binary { op: SqlBinOp::And, .. } => {}
+                other => panic!("wrong precedence: {other:?}"),
+            },
+            other => panic!("expected OR at top: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_weighted_average_query() {
+        // §III-B: SELECT grade, weight FROM Grades WHERE studentID = 25
+        let s = parse("SELECT grade, weight FROM Grades WHERE studentID = 25").unwrap();
+        assert_eq!(s.items.len(), 2);
+        assert!(s.filter.is_some());
+        assert!(!s.is_aggregate());
+    }
+
+    #[test]
+    fn parses_arithmetic_in_select_list() {
+        let s = parse("SELECT grade * weight FROM Grades").unwrap();
+        assert!(matches!(
+            &s.items[0],
+            SelectItem::Expr {
+                expr: SqlExpr::Binary { op: SqlBinOp::Mul, .. },
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn parses_count_star_and_sum() {
+        let s = parse("SELECT COUNT(*), SUM(n) AS total FROM t GROUP BY g").unwrap();
+        assert!(matches!(
+            &s.items[0],
+            SelectItem::Agg { agg: Aggregate::Count, expr: None, .. }
+        ));
+        assert!(matches!(
+            &s.items[1],
+            SelectItem::Agg { agg: Aggregate::Sum, alias: Some(a), .. } if a == "total"
+        ));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse("SELECT x FROM t WHERE").is_err());
+        assert!(parse("SELECT FROM t").is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! SQL tokens.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Token {
+    // Keywords (uppercased during lexing; SQL is case-insensitive).
+    Select,
+    From,
+    Where,
+    Group,
+    Order,
+    By,
+    Join,
+    Inner,
+    On,
+    As,
+    And,
+    Or,
+    Not,
+    Count,
+    Sum,
+    Min,
+    Max,
+    Avg,
+    Distinct,
+    Asc,
+    Desc,
+    Limit,
+    // Literals and names.
+    Ident(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    // Punctuation.
+    Star,
+    Comma,
+    Dot,
+    LParen,
+    RParen,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Plus,
+    Minus,
+    Slash,
+    Percent,
+    Semicolon,
+    Eof,
+}
+
+impl fmt::Display for Token {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Token::Ident(s) => write!(f, "{s}"),
+            Token::Int(i) => write!(f, "{i}"),
+            Token::Float(x) => write!(f, "{x}"),
+            Token::Str(s) => write!(f, "'{s}'"),
+            other => write!(f, "{other:?}"),
+        }
+    }
+}
+
+impl Token {
+    pub fn keyword(upper: &str) -> Option<Token> {
+        Some(match upper {
+            "SELECT" => Token::Select,
+            "FROM" => Token::From,
+            "WHERE" => Token::Where,
+            "GROUP" => Token::Group,
+            "ORDER" => Token::Order,
+            "BY" => Token::By,
+            "JOIN" => Token::Join,
+            "INNER" => Token::Inner,
+            "ON" => Token::On,
+            "AS" => Token::As,
+            "AND" => Token::And,
+            "OR" => Token::Or,
+            "NOT" => Token::Not,
+            "COUNT" => Token::Count,
+            "SUM" => Token::Sum,
+            "MIN" => Token::Min,
+            "MAX" => Token::Max,
+            "AVG" => Token::Avg,
+            "DISTINCT" => Token::Distinct,
+            "ASC" => Token::Asc,
+            "DESC" => Token::Desc,
+            "LIMIT" => Token::Limit,
+            _ => return None,
+        })
+    }
+}

@@ -1,0 +1,147 @@
+//! The storage catalog: named tables + statistics.
+//!
+//! This is what the execution engine resolves `forelem (i; i ∈ pA)`
+//! against, and where the cost model gets its table statistics.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::analysis::TableStats;
+use crate::ir::{Multiset, Schema};
+
+use super::column::Table;
+
+/// A catalog of named tables.
+#[derive(Debug, Clone, Default)]
+pub struct StorageCatalog {
+    tables: BTreeMap<String, Arc<Table>>,
+}
+
+impl StorageCatalog {
+    pub fn new() -> Self {
+        StorageCatalog::default()
+    }
+
+    pub fn insert(&mut self, name: &str, table: Table) {
+        self.tables.insert(name.to_string(), Arc::new(table));
+    }
+
+    pub fn insert_multiset(&mut self, name: &str, m: &Multiset) -> Result<()> {
+        self.insert(name, Table::from_multiset(m)?);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Arc<Table>> {
+        self.tables
+            .get(name)
+            .with_context(|| format!("table `{name}` not in storage catalog"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tables.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tables.keys()
+    }
+
+    /// Replace a table (used by the reformat pass).
+    pub fn replace(&mut self, name: &str, table: Table) {
+        self.tables.insert(name.to_string(), Arc::new(table));
+    }
+
+    /// The schema catalog view the SQL front-end needs.
+    pub fn schemas(&self) -> BTreeMap<String, Schema> {
+        self.tables
+            .iter()
+            .map(|(n, t)| (n.clone(), t.schema.clone()))
+            .collect()
+    }
+
+    /// Statistics for the cost model: rows + distinct count of a field
+    /// (exact for dictionary-encoded fields — the dictionary *is* the
+    /// distinct set; sampled otherwise).
+    pub fn stats(&self, name: &str, field: Option<usize>) -> Result<TableStats> {
+        let t = self.get(name)?;
+        let rows = t.len() as u64;
+        let distinct = match field {
+            Some(f) => {
+                if let Some(dict) = t.column(f).dictionary() {
+                    dict.len() as u64
+                } else {
+                    // Sample up to 4096 rows for a cardinality estimate.
+                    let sample = t.len().min(4096);
+                    if sample == 0 {
+                        1
+                    } else {
+                        let mut seen = std::collections::HashSet::new();
+                        let stride = (t.len() / sample).max(1);
+                        for row in (0..t.len()).step_by(stride) {
+                            seen.insert(t.value(row, f));
+                        }
+                        // Scale up the sampled cardinality.
+                        ((seen.len() as f64) * (t.len() as f64 / (sample as f64))).max(1.0)
+                            as u64
+                    }
+                }
+            }
+            None => 1,
+        };
+        Ok(TableStats::new(rows, distinct.min(rows.max(1))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Value};
+
+    fn catalog_with_access(n: usize, distinct: usize) -> StorageCatalog {
+        let schema = Schema::new(vec![("url", DataType::Str)]);
+        let mut m = Multiset::new(schema);
+        for i in 0..n {
+            m.push(vec![Value::str(format!("/page{}", i % distinct))]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        c
+    }
+
+    #[test]
+    fn get_and_contains() {
+        let c = catalog_with_access(10, 3);
+        assert!(c.contains("access"));
+        assert!(!c.contains("nope"));
+        assert!(c.get("nope").is_err());
+        assert_eq!(c.get("access").unwrap().len(), 10);
+    }
+
+    #[test]
+    fn stats_exact_for_dict_encoded() {
+        let mut c = catalog_with_access(1000, 50);
+        let mut t = (**c.get("access").unwrap()).clone();
+        t.dict_encode_field(0).unwrap();
+        c.replace("access", t);
+        let s = c.stats("access", Some(0)).unwrap();
+        assert_eq!(s.rows, 1000);
+        assert_eq!(s.distinct_keys, 50);
+    }
+
+    #[test]
+    fn stats_sampled_for_plain_strings() {
+        let c = catalog_with_access(1000, 50);
+        let s = c.stats("access", Some(0)).unwrap();
+        assert_eq!(s.rows, 1000);
+        // Sampled estimate must be in a sane band.
+        assert!(s.distinct_keys >= 10 && s.distinct_keys <= 200, "{}", s.distinct_keys);
+    }
+
+    #[test]
+    fn schemas_view_matches() {
+        let c = catalog_with_access(5, 2);
+        let schemas = c.schemas();
+        assert_eq!(schemas["access"].field(0).name, "url");
+    }
+}

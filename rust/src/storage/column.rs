@@ -1,0 +1,327 @@
+//! Columnar storage: typed columns, dictionary-encoded columns, and the
+//! `Table` container the execution engine reads.
+//!
+//! The compiler "determines a physical storage scheme for the data"
+//! (§III-C1); a `Table` is one such scheme. Row-major data (straight from
+//! import) is a table of per-field columns too — the distinction the
+//! Figure-2 "relayout" variant measures is *which columns exist* (dead
+//! fields dropped) and *how they are encoded* (strings vs dictionary keys
+//! vs compressed), all expressible here.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::ir::{DataType, Multiset, Schema, Tuple, Value};
+
+use super::compressed::CompressedInts;
+use super::dict::Dictionary;
+
+/// One typed column.
+#[derive(Debug, Clone)]
+pub enum Column {
+    Ints(Vec<i64>),
+    Floats(Vec<f64>),
+    Strs(Vec<Arc<str>>),
+    Bools(Vec<bool>),
+    /// Dictionary-encoded strings: dense u32 keys + shared dictionary.
+    DictStrs {
+        keys: Vec<u32>,
+        dict: Arc<Dictionary>,
+    },
+    /// Run-length/delta compressed integers (§III-C1 "compressed column
+    /// schemes").
+    CompressedInts(CompressedInts),
+}
+
+impl Column {
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Ints(v) => v.len(),
+            Column::Floats(v) => v.len(),
+            Column::Strs(v) => v.len(),
+            Column::Bools(v) => v.len(),
+            Column::DictStrs { keys, .. } => keys.len(),
+            Column::CompressedInts(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DataType {
+        match self {
+            Column::Ints(_) | Column::CompressedInts(_) => DataType::Int,
+            Column::Floats(_) => DataType::Float,
+            Column::Strs(_) | Column::DictStrs { .. } => DataType::Str,
+            Column::Bools(_) => DataType::Bool,
+        }
+    }
+
+    /// Value at a row (allocates only for strings).
+    pub fn value(&self, row: usize) -> Value {
+        match self {
+            Column::Ints(v) => Value::Int(v[row]),
+            Column::Floats(v) => Value::Float(v[row]),
+            Column::Strs(v) => Value::Str(v[row].clone()),
+            Column::Bools(v) => Value::Bool(v[row]),
+            Column::DictStrs { keys, dict } => {
+                Value::Str(dict.decode(keys[row]).expect("dict key in range").clone())
+            }
+            Column::CompressedInts(c) => Value::Int(c.get(row)),
+        }
+    }
+
+    /// Dense i64 view if this column is (or encodes as) integers:
+    /// plain ints and dictionary keys both qualify — this is the fast
+    /// path the integer-keyed kernels consume.
+    pub fn as_int_keys(&self) -> Option<Vec<i64>> {
+        match self {
+            Column::Ints(v) => Some(v.clone()),
+            Column::DictStrs { keys, .. } => Some(keys.iter().map(|&k| k as i64).collect()),
+            Column::CompressedInts(c) => Some(c.decompress()),
+            _ => None,
+        }
+    }
+
+    /// Borrowed i64 slice without copying, when available.
+    pub fn int_slice(&self) -> Option<&[i64]> {
+        match self {
+            Column::Ints(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn float_slice(&self) -> Option<&[f64]> {
+        match self {
+            Column::Floats(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Dictionary backing this column, if dictionary-encoded.
+    pub fn dictionary(&self) -> Option<&Arc<Dictionary>> {
+        match self {
+            Column::DictStrs { dict, .. } => Some(dict),
+            _ => None,
+        }
+    }
+
+    /// Approximate heap bytes (reformat cost model + §Perf accounting).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            Column::Ints(v) => v.len() * 8,
+            Column::Floats(v) => v.len() * 8,
+            Column::Strs(v) => v.iter().map(|s| s.len() + 24).sum(),
+            Column::Bools(v) => v.len(),
+            Column::DictStrs { keys, dict } => keys.len() * 4 + dict.heap_bytes(),
+            Column::CompressedInts(c) => c.heap_bytes(),
+        }
+    }
+
+    /// Build a column from values of a uniform type.
+    pub fn from_values(dtype: DataType, values: impl Iterator<Item = Value>) -> Result<Column> {
+        Ok(match dtype {
+            DataType::Int => Column::Ints(
+                values
+                    .map(|v| v.as_int().ok_or_else(|| anyhow::anyhow!("non-int value")))
+                    .collect::<Result<_>>()?,
+            ),
+            DataType::Float => Column::Floats(
+                values
+                    .map(|v| {
+                        v.as_float()
+                            .ok_or_else(|| anyhow::anyhow!("non-float value"))
+                    })
+                    .collect::<Result<_>>()?,
+            ),
+            DataType::Str => Column::Strs(
+                values
+                    .map(|v| match v {
+                        Value::Str(s) => Ok(s),
+                        other => bail!("non-str value {other}"),
+                    })
+                    .collect::<Result<_>>()?,
+            ),
+            DataType::Bool => Column::Bools(
+                values
+                    .map(|v| {
+                        v.as_bool()
+                            .ok_or_else(|| anyhow::anyhow!("non-bool value"))
+                    })
+                    .collect::<Result<_>>()?,
+            ),
+        })
+    }
+}
+
+/// A table: a schema plus one column per field.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub schema: Schema,
+    pub columns: Vec<Column>,
+    len: usize,
+}
+
+impl Table {
+    pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Table> {
+        if schema.len() != columns.len() {
+            bail!(
+                "schema has {} fields but {} columns given",
+                schema.len(),
+                columns.len()
+            );
+        }
+        let len = columns.first().map(|c| c.len()).unwrap_or(0);
+        if columns.iter().any(|c| c.len() != len) {
+            bail!("ragged columns");
+        }
+        Ok(Table {
+            schema,
+            columns,
+            len,
+        })
+    }
+
+    /// Convert a logical multiset into a (plain, uncompressed) table.
+    pub fn from_multiset(m: &Multiset) -> Result<Table> {
+        let mut columns = Vec::with_capacity(m.schema.len());
+        for (i, f) in m.schema.fields().iter().enumerate() {
+            columns.push(Column::from_values(
+                f.dtype,
+                m.rows().iter().map(|r| r[i].clone()),
+            )?);
+        }
+        Ok(Table {
+            schema: m.schema.clone(),
+            columns,
+            len: m.len(),
+        })
+    }
+
+    /// Convert back to a logical multiset (tests, result comparison).
+    pub fn to_multiset(&self) -> Multiset {
+        let mut m = Multiset::new(self.schema.clone());
+        for row in 0..self.len {
+            m.push(self.tuple(row));
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn value(&self, row: usize, field: usize) -> Value {
+        self.columns[field].value(row)
+    }
+
+    pub fn tuple(&self, row: usize) -> Tuple {
+        self.columns.iter().map(|c| c.value(row)).collect()
+    }
+
+    pub fn column(&self, field: usize) -> &Column {
+        &self.columns[field]
+    }
+
+    /// Total approximate heap bytes.
+    pub fn heap_bytes(&self) -> usize {
+        self.columns.iter().map(|c| c.heap_bytes()).sum()
+    }
+
+    /// Dictionary-encode one string field in place, returning the shared
+    /// dictionary (the §III-C1 integer-keying reformat).
+    pub fn dict_encode_field(&mut self, field: usize) -> Result<Arc<Dictionary>> {
+        let col = &self.columns[field];
+        let Column::Strs(values) = col else {
+            bail!(
+                "field {} is {:?}, not a plain string column",
+                field,
+                col.dtype()
+            );
+        };
+        let mut dict = Dictionary::new();
+        let keys: Vec<u32> = values.iter().map(|s| dict.encode(s)).collect();
+        let dict = Arc::new(dict);
+        self.columns[field] = Column::DictStrs {
+            keys,
+            dict: dict.clone(),
+        };
+        Ok(dict)
+    }
+
+    /// Drop all fields except `keep` (dead-field elimination).
+    pub fn project(&self, keep: &[usize]) -> Table {
+        Table {
+            schema: self.schema.project(keep),
+            columns: keep.iter().map(|&i| self.columns[i].clone()).collect(),
+            len: self.len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DataType;
+
+    fn access() -> Table {
+        let schema = Schema::new(vec![("url", DataType::Str), ("ms", DataType::Int)]);
+        let m = Multiset::with_rows(
+            schema,
+            vec![
+                vec![Value::str("/a"), Value::Int(10)],
+                vec![Value::str("/b"), Value::Int(20)],
+                vec![Value::str("/a"), Value::Int(30)],
+            ],
+        );
+        Table::from_multiset(&m).unwrap()
+    }
+
+    #[test]
+    fn multiset_roundtrip() {
+        let t = access();
+        let m = t.to_multiset();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.get(2, 0), &Value::str("/a"));
+        assert_eq!(m.get(1, 1), &Value::Int(20));
+    }
+
+    #[test]
+    fn dict_encoding_preserves_values_and_shrinks() {
+        let mut t = access();
+        let before = t.heap_bytes();
+        let dict = t.dict_encode_field(0).unwrap();
+        assert_eq!(dict.len(), 2);
+        assert_eq!(t.value(0, 0), Value::str("/a"));
+        assert_eq!(t.value(2, 0), Value::str("/a"));
+        // Keys become the dense integer view the kernels consume.
+        assert_eq!(t.column(0).as_int_keys().unwrap(), vec![0, 1, 0]);
+        let _ = before; // size may grow on tiny tables; key point is the view
+    }
+
+    #[test]
+    fn dict_encoding_requires_string_column() {
+        let mut t = access();
+        assert!(t.dict_encode_field(1).is_err());
+    }
+
+    #[test]
+    fn projection_drops_columns() {
+        let t = access().project(&[0]);
+        assert_eq!(t.schema.len(), 1);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn ragged_columns_rejected() {
+        let schema = Schema::new(vec![("a", DataType::Int), ("b", DataType::Int)]);
+        let r = Table::new(schema, vec![Column::Ints(vec![1]), Column::Ints(vec![1, 2])]);
+        assert!(r.is_err());
+    }
+}

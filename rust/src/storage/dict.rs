@@ -1,0 +1,98 @@
+//! String dictionaries: the §III-C1 / Figure-2 "integer keyed" reformat.
+//!
+//! "the strings (URLs and hosts) in the arrays have been replaced with
+//! integer keys. These integer keys are used to subscript another array,
+//! which contains the string value for each key. In fact, the data model
+//! has been made relational."
+//!
+//! A `Dictionary` is exactly that subscript array plus the reverse map
+//! used while encoding. Once encoded, the hot loops operate on dense
+//! `i64` keys — which is also what lets them route into the XLA/Pallas
+//! artifacts (integer tensors).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// An append-only string dictionary. Key k maps to the k-th inserted
+/// distinct string.
+#[derive(Debug, Default, Clone)]
+pub struct Dictionary {
+    by_key: Vec<Arc<str>>,
+    by_str: HashMap<Arc<str>, u32>,
+}
+
+impl Dictionary {
+    pub fn new() -> Self {
+        Dictionary::default()
+    }
+
+    /// Encode one string, inserting it if new.
+    pub fn encode(&mut self, s: &str) -> u32 {
+        if let Some(&k) = self.by_str.get(s) {
+            return k;
+        }
+        let arc: Arc<str> = Arc::from(s);
+        let k = self.by_key.len() as u32;
+        self.by_key.push(arc.clone());
+        self.by_str.insert(arc, k);
+        k
+    }
+
+    /// Look up an existing string without inserting.
+    pub fn lookup(&self, s: &str) -> Option<u32> {
+        self.by_str.get(s).copied()
+    }
+
+    /// Decode a key back to its string.
+    pub fn decode(&self, k: u32) -> Option<&Arc<str>> {
+        self.by_key.get(k as usize)
+    }
+
+    /// Number of distinct strings.
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// Approximate heap footprint in bytes (for the reformat cost model).
+    pub fn heap_bytes(&self) -> usize {
+        self.by_key.iter().map(|s| s.len() + 16).sum::<usize>() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_is_idempotent() {
+        let mut d = Dictionary::new();
+        let a = d.encode("x");
+        let b = d.encode("y");
+        assert_eq!(d.encode("x"), a);
+        assert_ne!(a, b);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let mut d = Dictionary::new();
+        for s in ["alpha", "beta", "gamma"] {
+            let k = d.encode(s);
+            assert_eq!(d.decode(k).unwrap().as_ref(), s);
+        }
+        assert!(d.decode(99).is_none());
+    }
+
+    #[test]
+    fn lookup_does_not_insert() {
+        let mut d = Dictionary::new();
+        d.encode("present");
+        assert_eq!(d.lookup("present"), Some(0));
+        assert_eq!(d.lookup("absent"), None);
+        assert_eq!(d.len(), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Physical storage under compiler control (§III-C1): row files, typed
+//! and dictionary-encoded columns, compressed column schemes, the table
+//! catalog, and data import (including generated "data load" codes).
+
+pub mod catalog;
+pub mod column;
+pub mod compressed;
+pub mod dict;
+pub mod import;
+pub mod row;
+
+pub use catalog::StorageCatalog;
+pub use column::{Column, Table};
+pub use compressed::CompressedInts;
+pub use dict::Dictionary;
+pub use import::{import_csv_with_plan, read_csv, ImportPlan};
+pub use row::{read_rows, temp_path, write_rows};

@@ -1,0 +1,223 @@
+//! Binary row files: "Data may be stored by simply storing the tuples as
+//! records in a binary file" (§III-C1).
+//!
+//! This is the on-disk interchange format used by the data importer, the
+//! Hadoop-simulator's spill files, and the reformat pass's generated
+//! "data load" codes. Format: a small header (magic, field count, field
+//! types), then length-prefixed records.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{DataType, Multiset, Schema, Tuple, Value};
+
+const MAGIC: &[u8; 4] = b"FRL1";
+
+fn dtype_tag(d: DataType) -> u8 {
+    match d {
+        DataType::Int => 0,
+        DataType::Float => 1,
+        DataType::Str => 2,
+        DataType::Bool => 3,
+    }
+}
+
+fn tag_dtype(t: u8) -> Result<DataType> {
+    Ok(match t {
+        0 => DataType::Int,
+        1 => DataType::Float,
+        2 => DataType::Str,
+        3 => DataType::Bool,
+        other => bail!("bad dtype tag {other}"),
+    })
+}
+
+/// Write a multiset to a binary row file.
+pub fn write_rows(path: &Path, m: &Multiset) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.schema.len() as u32).to_le_bytes())?;
+    for f in m.schema.fields() {
+        w.write_all(&[dtype_tag(f.dtype)])?;
+        let name = f.name.as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+    }
+    w.write_all(&(m.len() as u64).to_le_bytes())?;
+    for row in m.rows() {
+        write_tuple(&mut w, row)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a multiset back from a binary row file.
+pub fn read_rows(path: &Path) -> Result<Multiset> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a forelem row file", path.display());
+    }
+    let nfields = read_u32(&mut r)? as usize;
+    let mut fields = Vec::with_capacity(nfields);
+    for _ in 0..nfields {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        let dtype = tag_dtype(tag[0])?;
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        fields.push(crate::ir::Field {
+            name: String::from_utf8(name)?,
+            dtype,
+        });
+    }
+    let schema = Schema::from_fields(fields);
+    let nrows = read_u64(&mut r)? as usize;
+    let mut m = Multiset::new(schema.clone());
+    for _ in 0..nrows {
+        m.push(read_tuple(&mut r, &schema)?);
+    }
+    Ok(m)
+}
+
+/// Serialize one tuple (used standalone by the shuffle/comm layer too).
+pub fn write_tuple(w: &mut impl Write, t: &Tuple) -> Result<()> {
+    for v in t {
+        match v {
+            Value::Int(i) => {
+                w.write_all(&[0])?;
+                w.write_all(&i.to_le_bytes())?;
+            }
+            Value::Float(f) => {
+                w.write_all(&[1])?;
+                w.write_all(&f.to_le_bytes())?;
+            }
+            Value::Str(s) => {
+                w.write_all(&[2])?;
+                w.write_all(&(s.len() as u32).to_le_bytes())?;
+                w.write_all(s.as_bytes())?;
+            }
+            Value::Bool(b) => {
+                w.write_all(&[3, *b as u8])?;
+            }
+            Value::Null => {
+                w.write_all(&[4])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize one tuple with the schema's field count.
+pub fn read_tuple(r: &mut impl Read, schema: &Schema) -> Result<Tuple> {
+    let mut t = Tuple::with_capacity(schema.len());
+    for _ in 0..schema.len() {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        t.push(match tag[0] {
+            0 => {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                Value::Int(i64::from_le_bytes(b))
+            }
+            1 => {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                Value::Float(f64::from_le_bytes(b))
+            }
+            2 => {
+                let len = read_u32(r)? as usize;
+                let mut s = vec![0u8; len];
+                r.read_exact(&mut s)?;
+                Value::str(String::from_utf8(s)?)
+            }
+            3 => {
+                let mut b = [0u8; 1];
+                r.read_exact(&mut b)?;
+                Value::Bool(b[0] != 0)
+            }
+            4 => Value::Null,
+            other => bail!("bad value tag {other}"),
+        });
+    }
+    Ok(t)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// A unique temporary file path (tempfile crate unavailable offline).
+pub fn temp_path(prefix: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "forelem-{}-{}-{}",
+        prefix,
+        std::process::id(),
+        n
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Multiset {
+        let schema = Schema::new(vec![
+            ("url", DataType::Str),
+            ("n", DataType::Int),
+            ("w", DataType::Float),
+            ("ok", DataType::Bool),
+        ]);
+        let mut m = Multiset::new(schema);
+        m.push(vec![
+            Value::str("/index.html"),
+            Value::Int(-7),
+            Value::Float(2.5),
+            Value::Bool(true),
+        ]);
+        m.push(vec![Value::str(""), Value::Int(i64::MAX), Value::Null, Value::Bool(false)]);
+        m
+    }
+
+    #[test]
+    fn roundtrip_all_types() {
+        let path = temp_path("rows");
+        let m = sample();
+        write_rows(&path, &m).unwrap();
+        let back = read_rows(&path).unwrap();
+        assert!(m.bag_eq(&back));
+        assert_eq!(back.schema.field(0).name, "url");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_non_row_file() {
+        let path = temp_path("bogus");
+        std::fs::write(&path, b"not a row file").unwrap();
+        assert!(read_rows(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn temp_paths_are_unique() {
+        assert_ne!(temp_path("x"), temp_path("x"));
+    }
+}

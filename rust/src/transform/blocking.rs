@@ -1,0 +1,410 @@
+//! Loop blocking → direct data partitioning (§III-A1).
+//!
+//! `forelem (i; i ∈ pA) SEQ` becomes
+//!
+//! ```text
+//! forall (k = 1; k <= N; k++)
+//!   forelem (i; i ∈ p_k A) SEQ'
+//! ```
+//!
+//! where `pA = p_1A ∪ ... ∪ p_NA` and `SEQ'` is `SEQ` with its reduction
+//! state *privatized*: every accumulator array the body writes gains a
+//! leading partition dimension (`count` → `count_k`, §IV), and every
+//! later read of such an array is rewritten to the cross-partition
+//! reduction `Σ_{k=1}^{N} count_k[...]` — the Iteration Space Expansion +
+//! Code Motion the paper applies before parallelizing the URL-count
+//! query. Scalar reduction accumulators (`avg += ...`) are expanded the
+//! same way (scalar → 1-dim array indexed by k, final `Assign` of the
+//! sum).
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::analysis::{is_parallelizable, stmt_defuse};
+use crate::ir::{
+    ArrayDecl, BinOp, DataType, Expr, Loop, LoopKind, Program, Stmt, Value,
+};
+
+use super::pass::{Pass, PassCtx};
+
+/// Parallelize every parallelizable top-level forelem by direct
+/// partitioning into `ctx.processors` parts.
+pub struct DirectPartition;
+
+impl Pass for DirectPartition {
+    fn name(&self) -> &'static str {
+        "direct-partition"
+    }
+
+    fn run(&self, p: &mut Program, ctx: &PassCtx) -> Result<bool> {
+        if ctx.processors <= 1 {
+            return Ok(false);
+        }
+        let mut changed = false;
+        for idx in 0..p.body.len() {
+            if candidate(&p.body[idx]) {
+                parallelize_direct(p, idx, ctx.processors)?;
+                changed = true;
+            }
+        }
+        Ok(changed)
+    }
+}
+
+/// Is this statement a plain full-table forelem we can block?
+fn candidate(s: &Stmt) -> bool {
+    let Stmt::Loop(l) = s else { return false };
+    if l.kind != LoopKind::Forelem {
+        return false;
+    }
+    let Some(ix) = l.index_set() else {
+        return false;
+    };
+    // Only full scans get blocked; distinct/filtered loops iterate reduced
+    // domains and stay sequential (they are the cheap reduction side).
+    if ix.field_filter.is_some() || ix.distinct.is_some() || ix.partition.is_some() {
+        return false;
+    }
+    is_parallelizable_with_scalars(l)
+}
+
+/// Like `analysis::is_parallelizable` but additionally accepts scalar
+/// `x = x + e` self-accumulations (we expand them).
+fn is_parallelizable_with_scalars(l: &Loop) -> bool {
+    if is_parallelizable(l) {
+        return true;
+    }
+    // Re-check: allow Assign(var, var + e) forms only.
+    let mut ok = true;
+    for s in &l.body {
+        s.walk(&mut |sub| match sub {
+            Stmt::Assign { var, value } => {
+                if !is_self_add(var, value) {
+                    ok = false;
+                }
+            }
+            Stmt::Accum { op, .. } if *op == crate::ir::AccumOp::Set => ok = false,
+            _ => {}
+        });
+    }
+    ok
+}
+
+fn is_self_add(var: &str, value: &Expr) -> bool {
+    // var + e  or  e + var at the top level.
+    if let Expr::Binary {
+        op: BinOp::Add,
+        lhs,
+        rhs,
+    } = value
+    {
+        let is_var = |e: &Expr| matches!(e, Expr::Var(v) if v == var);
+        return is_var(lhs) || is_var(rhs);
+    }
+    false
+}
+
+/// Apply direct partitioning to `p.body[idx]` with `n` processors.
+///
+/// Declares/uses the parameter `N` (created if absent), privatizes the
+/// written arrays, and rewrites downstream reads into `SumOverParts`.
+pub fn parallelize_direct(p: &mut Program, idx: usize, n: usize) -> Result<()> {
+    let Stmt::Loop(l) = p.body[idx].clone() else {
+        bail!("statement {idx} is not a loop");
+    };
+    if !candidate(&p.body[idx]) {
+        bail!("loop {idx} is not a direct-partitioning candidate");
+    }
+
+    p.params.insert("N".into(), Value::Int(n as i64));
+    let kvar = p.fresh_var("k");
+
+    // 1. Collect reduction state written by the body.
+    let du = stmt_defuse(&p.body[idx], &[]);
+    let privatized: BTreeSet<String> = du.arrays_def.clone();
+    let scalars: BTreeSet<String> = du.scalars_def.clone();
+
+    // 2. Rewrite the body: arrays gain leading [k], scalar accumulators
+    //    become arrays indexed by [k].
+    let mut inner = l.clone();
+    if let Some(ix) = inner.index_set_mut() {
+        *ix = ix
+            .clone()
+            .with_partition(Expr::var(&kvar), Expr::var("N"));
+    }
+    for s in &mut inner.body {
+        privatize_stmt(s, &privatized, &scalars, &kvar);
+    }
+
+    // 3. Bump array declarations and convert expanded scalars to arrays.
+    for a in &privatized {
+        if let Some(decl) = p.arrays.get_mut(a) {
+            decl.dims += 1;
+        }
+    }
+    for v in &scalars {
+        let init = p
+            .scalars
+            .remove(v)
+            .unwrap_or(Value::Int(0));
+        let dtype = match init {
+            Value::Float(_) => DataType::Float,
+            _ => DataType::Int,
+        };
+        p.arrays.insert(
+            v.clone(),
+            ArrayDecl {
+                dims: 1,
+                dtype,
+                init,
+            },
+        );
+    }
+
+    // 4. Wrap in forall k = 1..N.
+    let forall = Loop {
+        kind: LoopKind::Forall,
+        var: kvar.clone(),
+        domain: crate::ir::Domain::Range {
+            lo: Expr::int(1),
+            hi: Expr::var("N"),
+        },
+        body: vec![Stmt::Loop(inner)],
+    };
+    p.body[idx] = Stmt::Loop(forall);
+
+    // 5. Rewrite later reads of privatized arrays / expanded scalars into
+    //    cross-partition sums.
+    for s in p.body.iter_mut().skip(idx + 1) {
+        rewrite_reads(s, &privatized, &scalars, &kvar);
+    }
+    // Scalar reads may also occur in earlier prints — handle whole body
+    // for scalars (they were scalars before; any read means "current
+    // total", which before the loop is the init — keeping rewrite to
+    // later statements is the conservative, correct choice).
+    Ok(())
+}
+
+pub(crate) fn privatize_stmt(s: &mut Stmt, arrays: &BTreeSet<String>, scalars: &BTreeSet<String>, k: &str) {
+    match s {
+        Stmt::Accum { array, indices, .. } => {
+            if arrays.contains(array) {
+                indices.insert(0, Expr::var(k));
+            }
+        }
+        Stmt::Assign { var, value } => {
+            if scalars.contains(var) {
+                // x = x + e  →  x[k] += e
+                let e = strip_self_add(var, value);
+                *s = Stmt::Accum {
+                    array: var.clone(),
+                    indices: vec![Expr::var(k)],
+                    op: crate::ir::AccumOp::Add,
+                    value: e,
+                };
+                // Re-run on the new accum for nested array reads below.
+                privatize_reads_in_stmt(s, arrays, scalars, k);
+                return;
+            }
+        }
+        Stmt::Loop(l) => {
+            for b in &mut l.body {
+                privatize_stmt(b, arrays, scalars, k);
+            }
+        }
+        Stmt::If { then, els, .. } => {
+            for b in then.iter_mut().chain(els.iter_mut()) {
+                privatize_stmt(b, arrays, scalars, k);
+            }
+        }
+        _ => {}
+    }
+    privatize_reads_in_stmt(s, arrays, scalars, k);
+}
+
+/// Reads of a privatized array inside the parallel body refer to this
+/// partition's slice.
+fn privatize_reads_in_stmt(
+    s: &mut Stmt,
+    arrays: &BTreeSet<String>,
+    scalars: &BTreeSet<String>,
+    k: &str,
+) {
+    s.walk_exprs_mut(&mut |e| match e {
+        Expr::ArrayRef { array, indices } if arrays.contains(array) => {
+            // Avoid double-prefixing (walk_exprs_mut is post-order; the
+            // Accum path above may already have inserted k).
+            if indices.first() != Some(&Expr::var(k)) {
+                indices.insert(0, Expr::var(k));
+            }
+        }
+        Expr::Var(v) if scalars.contains(v) => {
+            *e = Expr::array(v, vec![Expr::var(k)]);
+        }
+        _ => {}
+    });
+}
+
+fn strip_self_add(var: &str, value: &Expr) -> Expr {
+    if let Expr::Binary {
+        op: BinOp::Add,
+        lhs,
+        rhs,
+    } = value
+    {
+        if matches!(lhs.as_ref(), Expr::Var(v) if v == var) {
+            return (**rhs).clone();
+        }
+        if matches!(rhs.as_ref(), Expr::Var(v) if v == var) {
+            return (**lhs).clone();
+        }
+    }
+    value.clone()
+}
+
+/// Rewrite reads in post-loop statements: `count[x]` → `Σ_k count[k][x]`,
+/// scalar `avg` → `Σ_k avg[k]`.
+pub(crate) fn rewrite_reads(s: &mut Stmt, arrays: &BTreeSet<String>, scalars: &BTreeSet<String>, kvar: &str) {
+    let sum_var = format!("{kvar}s"); // fresh-ish; distinct from loop vars
+    s.walk_exprs_mut(&mut |e| match e {
+        Expr::ArrayRef { array, indices } if arrays.contains(array) => {
+            let mut inner_idx = vec![Expr::var(&sum_var)];
+            inner_idx.extend(indices.clone());
+            *e = Expr::SumOverParts {
+                var: sum_var.clone(),
+                parts: Box::new(Expr::var("N")),
+                body: Box::new(Expr::ArrayRef {
+                    array: array.clone(),
+                    indices: inner_idx,
+                }),
+            };
+        }
+        Expr::Var(v) if scalars.contains(v) => {
+            *e = Expr::SumOverParts {
+                var: sum_var.clone(),
+                parts: Box::new(Expr::var("N")),
+                body: Box::new(Expr::array(v, vec![Expr::var(&sum_var)])),
+            };
+        }
+        _ => {}
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec;
+    use crate::ir::{pretty, IndexSet, Multiset, Schema};
+    use crate::sql::compile_sql;
+    use crate::storage::StorageCatalog;
+
+    fn access_catalog() -> StorageCatalog {
+        let schema = Schema::new(vec![("url", DataType::Str)]);
+        let mut m = Multiset::new(schema);
+        for u in ["/a", "/b", "/a", "/c", "/a", "/b", "/d"] {
+            m.push(vec![Value::str(u)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        c
+    }
+
+    #[test]
+    fn produces_the_papers_parallel_shape() {
+        let c = access_catalog();
+        let mut p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        let changed = DirectPartition
+            .run(&mut p, &PassCtx::new().with_processors(4))
+            .unwrap();
+        assert!(changed);
+        let text = pretty::program(&p);
+        // §IV's parallelized URL count: forall + partitioned index set +
+        // privatized count + Σ_k read-back.
+        assert!(text.contains("forall (k = 1; k <= N; k++)"), "{text}");
+        assert!(text.contains("p_kaccess"), "{text}");
+        assert!(text.contains("agg1[k][i.url]++;"), "{text}");
+        assert!(text.contains("sum(ks=1..N; agg1[ks][i.url])"), "{text}");
+    }
+
+    #[test]
+    fn parallelized_program_is_semantically_equal() {
+        let c = access_catalog();
+        let base = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        let reference = exec::run(&base, &c).unwrap();
+        for n in [2, 3, 4, 7, 16] {
+            let mut p = base.clone();
+            DirectPartition
+                .run(&mut p, &PassCtx::new().with_processors(n))
+                .unwrap();
+            let out = exec::run(&p, &c).unwrap();
+            assert!(
+                out.result().unwrap().bag_eq(reference.result().unwrap()),
+                "N={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_accumulator_is_expanded() {
+        let c = {
+            let mut c = StorageCatalog::new();
+            let m = Multiset::with_rows(
+                Schema::new(vec![("g", DataType::Float), ("w", DataType::Float)]),
+                vec![
+                    vec![Value::Float(8.0), Value::Float(0.5)],
+                    vec![Value::Float(6.0), Value::Float(0.5)],
+                ],
+            );
+            c.insert_multiset("Grades", &m).unwrap();
+            c
+        };
+        let mut p = Program::new("avg")
+            .with_relation("Grades", c.schemas()["Grades"].clone())
+            .with_scalar("avg", Value::Float(0.0));
+        p.body = vec![
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("Grades"),
+                vec![Stmt::assign(
+                    "avg",
+                    Expr::add(
+                        Expr::var("avg"),
+                        Expr::mul(Expr::field("i", "g"), Expr::field("i", "w")),
+                    ),
+                )],
+            )),
+            Stmt::Print {
+                format: "{}".into(),
+                args: vec![Expr::var("avg")],
+            },
+        ];
+        DirectPartition
+            .run(&mut p, &PassCtx::new().with_processors(2))
+            .unwrap();
+        let out = exec::run(&p, &c).unwrap();
+        assert_eq!(out.prints, vec!["7".to_string()]);
+    }
+
+    #[test]
+    fn filtered_loops_are_not_blocked() {
+        let c = access_catalog();
+        let mut p = compile_sql(
+            "SELECT url FROM access WHERE url = '/a'",
+            &c.schemas(),
+        )
+        .unwrap();
+        // Body is one filtered loop — no candidates.
+        assert!(!DirectPartition
+            .run(&mut p, &PassCtx::new().with_processors(4))
+            .unwrap());
+    }
+}

@@ -1,0 +1,292 @@
+//! Loop-invariant code motion + common-subexpression elimination
+//! (§III-C2's "classic code optimizations", and one of the two enabling
+//! transformations — with Iteration Space Expansion — the paper applies
+//! before parallelizing §IV's group-by).
+//!
+//! * `CodeMotion` hoists `Assign` statements whose right-hand side does
+//!   not depend on the loop variable (or anything bound inside the loop)
+//!   out of the loop.
+//! * `Cse` introduces a temporary for a repeated pure subexpression
+//!   within one loop body (conservative: only bodies without nested
+//!   loops, only expressions without array reads).
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::ir::{Expr, Program, Stmt, Value};
+
+use super::pass::{Pass, PassCtx};
+
+pub struct CodeMotion;
+
+impl Pass for CodeMotion {
+    fn name(&self) -> &'static str {
+        "code-motion"
+    }
+
+    fn run(&self, p: &mut Program, _ctx: &PassCtx) -> Result<bool> {
+        let mut changed = false;
+        let mut i = 0;
+        while i < p.body.len() {
+            if let Stmt::Loop(l) = &mut p.body[i] {
+                let mut bound = HashSet::new();
+                bound.insert(l.var.clone());
+                let hoisted = hoist_invariants(&mut l.body, &mut bound);
+                if !hoisted.is_empty() {
+                    changed = true;
+                    // Hoisted scalars must be declared program-level.
+                    for s in &hoisted {
+                        if let Stmt::Assign { var, .. } = s {
+                            p.scalars.entry(var.clone()).or_insert(Value::Int(0));
+                        }
+                    }
+                    for (off, s) in hoisted.into_iter().enumerate() {
+                        p.body.insert(i + off, s);
+                        i += 1;
+                    }
+                }
+            }
+            i += 1;
+        }
+        Ok(changed)
+    }
+}
+
+/// Remove and return loop-invariant Assigns (in order). `bound` is the set
+/// of variables bound by enclosing loops.
+fn hoist_invariants(body: &mut Vec<Stmt>, bound: &mut HashSet<String>) -> Vec<Stmt> {
+    let mut hoisted = Vec::new();
+    let mut assigned_in_loop: HashSet<String> = HashSet::new();
+    for s in body.iter() {
+        s.walk(&mut |sub| {
+            if let Stmt::Assign { var, .. } = sub {
+                assigned_in_loop.insert(var.clone());
+            }
+            if let Stmt::Loop(l) = sub {
+                bound.insert(l.var.clone());
+            }
+        });
+    }
+    body.retain(|s| {
+        if let Stmt::Assign { var, value } = s {
+            // Hoistable iff the RHS depends on nothing bound by the loop:
+            // no loop variables, no variables assigned inside the loop
+            // (which covers self-accumulation `var = var + e`), and no
+            // accumulator arrays (those change across iterations).
+            let deps = value.used_vars();
+            let invariant = deps
+                .iter()
+                .all(|d| !bound.contains(d) && !assigned_in_loop.contains(d))
+                && value.used_arrays().is_empty()
+                && !deps.contains(var);
+            if invariant {
+                hoisted.push(s.clone());
+                return false;
+            }
+        }
+        true
+    });
+    hoisted
+}
+
+pub struct Cse;
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, p: &mut Program, _ctx: &PassCtx) -> Result<bool> {
+        let mut changed = false;
+        let mut fresh = 0usize;
+        for s in &mut p.body {
+            changed |= cse_stmt(s, &mut fresh, ());
+        }
+        // Declare the temporaries (collect names used).
+        let mut tmps = Vec::new();
+        for s in &p.body {
+            s.walk(&mut |sub| {
+                if let Stmt::Assign { var, .. } = sub {
+                    if var.starts_with("_cse") {
+                        tmps.push(var.clone());
+                    }
+                }
+            });
+        }
+        for t in tmps {
+            p.scalars.entry(t).or_insert(Value::Int(0));
+        }
+        Ok(changed)
+    }
+}
+
+fn cse_stmt(s: &mut Stmt, fresh: &mut usize, _sc: ()) -> bool {
+    let Stmt::Loop(l) = s else { return false };
+    // Recurse into nested loops first.
+    let mut changed = false;
+    for b in &mut l.body {
+        changed |= cse_stmt(b, fresh, ());
+    }
+    // Only flat bodies (no nested loops) are candidates at this level.
+    if l.body.iter().any(|b| matches!(b, Stmt::Loop(_))) {
+        return changed;
+    }
+    // Count pure, non-trivial subexpressions.
+    let mut counts: Vec<(Expr, usize)> = Vec::new();
+    for b in &l.body {
+        b.walk_exprs(&mut |e| {
+            if is_cse_candidate(e) {
+                if let Some(slot) = counts.iter_mut().find(|(c, _)| c == e) {
+                    slot.1 += 1;
+                } else {
+                    counts.push((e.clone(), 1));
+                }
+            }
+        });
+    }
+    let Some((expr, _)) = counts.iter().find(|(_, n)| *n >= 2) else {
+        return changed;
+    };
+    let expr = expr.clone();
+    let tmp = format!("_cse{}", *fresh);
+    *fresh += 1;
+    for b in &mut l.body {
+        b.walk_exprs_mut(&mut |e| {
+            if *e == expr {
+                *e = Expr::var(&tmp);
+            }
+        });
+    }
+    l.body.insert(0, Stmt::assign(&tmp, expr));
+    true
+}
+
+/// Pure non-trivial expressions: binaries over fields/vars/consts, no
+/// array reads (arrays may be written inside the body).
+fn is_cse_candidate(e: &Expr) -> bool {
+    match e {
+        Expr::Binary { .. } => {
+            let mut pure = true;
+            e.walk(&mut |sub| {
+                if matches!(sub, Expr::ArrayRef { .. } | Expr::SumOverParts { .. }) {
+                    pure = false;
+                }
+            });
+            pure
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec;
+    use crate::ir::{DataType, IndexSet, Loop, Multiset, Schema};
+    use crate::storage::StorageCatalog;
+
+    fn setup() -> StorageCatalog {
+        let schema = Schema::new(vec![("g", DataType::Float), ("w", DataType::Float)]);
+        let mut m = Multiset::new(schema);
+        for (g, w) in [(8.0, 0.5), (6.0, 0.25)] {
+            m.push(vec![Value::Float(g), Value::Float(w)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("T", &m).unwrap();
+        c
+    }
+
+    #[test]
+    fn hoists_invariant_assign() {
+        let c = setup();
+        let mut p = Program::new("t")
+            .with_relation("T", c.schemas()["T"].clone())
+            .with_scalar("base", Value::Float(0.0))
+            .with_scalar("acc", Value::Float(0.0));
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![
+                Stmt::assign("base", Expr::mul(Expr::float(2.0), Expr::float(3.0))),
+                Stmt::assign(
+                    "acc",
+                    Expr::add(Expr::var("acc"), Expr::mul(Expr::var("base"), Expr::field("i", "g"))),
+                ),
+            ],
+        ))];
+        let reference = exec::run(&p, &c).unwrap();
+        assert!(CodeMotion.run(&mut p, &PassCtx::new()).unwrap());
+        // The invariant assign is now top-level, before the loop.
+        assert!(matches!(&p.body[0], Stmt::Assign { var, .. } if var == "base"));
+        let out = exec::run(&p, &c).unwrap();
+        assert_eq!(out.scalars["acc"], reference.scalars["acc"]);
+    }
+
+    #[test]
+    fn does_not_hoist_self_accumulation() {
+        let c = setup();
+        let mut p = Program::new("t")
+            .with_relation("T", c.schemas()["T"].clone())
+            .with_scalar("acc", Value::Float(0.0));
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![Stmt::assign(
+                "acc",
+                Expr::add(Expr::var("acc"), Expr::float(1.0)),
+            )],
+        ))];
+        assert!(!CodeMotion.run(&mut p, &PassCtx::new()).unwrap());
+    }
+
+    #[test]
+    fn cse_introduces_single_temp() {
+        let c = setup();
+        let gw = || Expr::mul(Expr::field("i", "g"), Expr::field("i", "w"));
+        let mut p = Program::new("t")
+            .with_relation("T", c.schemas()["T"].clone())
+            .with_scalar("a", Value::Float(0.0))
+            .with_scalar("b", Value::Float(0.0));
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![
+                Stmt::assign("a", Expr::add(Expr::var("a"), gw())),
+                Stmt::assign("b", Expr::add(Expr::var("b"), gw())),
+            ],
+        ))];
+        let reference = exec::run(&p, &c).unwrap();
+        assert!(Cse.run(&mut p, &PassCtx::new()).unwrap());
+        crate::ir::validate(&p).unwrap();
+        let out = exec::run(&p, &c).unwrap();
+        assert_eq!(out.scalars["a"], reference.scalars["a"]);
+        assert_eq!(out.scalars["b"], reference.scalars["b"]);
+        // The product appears exactly once now (in the temp assign).
+        let text = crate::ir::pretty::program(&p);
+        assert_eq!(text.matches("(i.g * i.w)").count(), 1, "{text}");
+    }
+
+    #[test]
+    fn cse_skips_array_reads() {
+        let mut p = Program::new("t")
+            .with_relation("T", Schema::new(vec![("g", DataType::Int)]))
+            .with_array("c", crate::ir::ArrayDecl::counter())
+            .with_result("R", Schema::new(vec![("x", DataType::Int)]));
+        let read = || {
+            Expr::add(
+                Expr::array("c", vec![Expr::field("i", "g")]),
+                Expr::int(1),
+            )
+        };
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![
+                Stmt::increment("c", vec![Expr::field("i", "g")]),
+                Stmt::result_union("R", vec![read()]),
+            ],
+        ))];
+        assert!(!Cse.run(&mut p, &PassCtx::new()).unwrap());
+    }
+}

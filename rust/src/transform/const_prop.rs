@@ -1,0 +1,172 @@
+//! Constant propagation + folding (§III-C2's "classic code optimizations").
+//!
+//! Folds constant subexpressions (`1 + 2` → `3`, `"a" == "a"` → `true`)
+//! and simplifies trivially-decidable `If` statements, shrinking the code
+//! the later passes and the code generator must consider.
+
+use anyhow::Result;
+
+use crate::exec::eval::value_binop;
+use crate::ir::{Expr, Program, Stmt, UnOp, Value};
+
+use super::pass::{Pass, PassCtx};
+
+pub struct ConstProp;
+
+impl Pass for ConstProp {
+    fn name(&self) -> &'static str {
+        "const-prop"
+    }
+
+    fn run(&self, p: &mut Program, _ctx: &PassCtx) -> Result<bool> {
+        let mut changed = false;
+        for s in &mut p.body {
+            changed |= fold_stmt(s);
+        }
+        Ok(changed)
+    }
+}
+
+fn fold_stmt(s: &mut Stmt) -> bool {
+    let mut changed = false;
+    s.walk_exprs_mut(&mut |e| {
+        if let Some(folded) = fold_expr(e) {
+            *e = folded;
+            changed = true;
+        }
+    });
+    // Simplify decidable Ifs (then/else selection).
+    changed |= simplify_ifs(s);
+    changed
+}
+
+fn simplify_ifs(s: &mut Stmt) -> bool {
+    match s {
+        Stmt::Loop(l) => simplify_body(&mut l.body),
+        Stmt::If { then, els, .. } => {
+            let mut c = simplify_body(then);
+            c |= simplify_body(els);
+            c
+        }
+        _ => false,
+    }
+}
+
+fn simplify_body(body: &mut Vec<Stmt>) -> bool {
+    let mut changed = false;
+    let mut i = 0;
+    while i < body.len() {
+        let replace = match &body[i] {
+            Stmt::If {
+                cond: Expr::Const(v),
+                then,
+                els,
+            } => Some(if v.truthy() { then.clone() } else { els.clone() }),
+            _ => None,
+        };
+        if let Some(stmts) = replace {
+            body.splice(i..=i, stmts);
+            changed = true;
+            continue; // re-examine at the same index
+        }
+        changed |= simplify_ifs(&mut body[i]);
+        i += 1;
+    }
+    changed
+}
+
+fn fold_expr(e: &Expr) -> Option<Expr> {
+    match e {
+        Expr::Binary { op, lhs, rhs } => {
+            if let (Expr::Const(l), Expr::Const(r)) = (lhs.as_ref(), rhs.as_ref()) {
+                value_binop(*op, l, r).ok().map(Expr::Const)
+            } else {
+                None
+            }
+        }
+        Expr::Unary { op, expr } => {
+            if let Expr::Const(v) = expr.as_ref() {
+                match (op, v) {
+                    (UnOp::Neg, Value::Int(i)) => Some(Expr::Const(Value::Int(-i))),
+                    (UnOp::Neg, Value::Float(f)) => Some(Expr::Const(Value::Float(-f))),
+                    (UnOp::Not, v) => Some(Expr::Const(Value::Bool(!v.truthy()))),
+                    _ => None,
+                }
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{BinOp, IndexSet, Loop, Schema};
+
+    #[test]
+    fn folds_arithmetic() {
+        let mut p = Program::new("t").with_scalar("x", Value::Int(0));
+        p.body = vec![Stmt::assign(
+            "x",
+            Expr::bin(BinOp::Mul, Expr::int(6), Expr::add(Expr::int(3), Expr::int(4))),
+        )];
+        assert!(ConstProp.run(&mut p, &PassCtx::new()).unwrap());
+        assert_eq!(
+            p.body[0],
+            Stmt::assign("x", Expr::Const(Value::Int(42)))
+        );
+    }
+
+    #[test]
+    fn removes_decidable_if_inside_loop() {
+        let mut p = Program::new("t")
+            .with_relation("T", Schema::new(vec![("f", crate::ir::DataType::Int)]))
+            .with_array("c", crate::ir::ArrayDecl::counter());
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![Stmt::If {
+                cond: Expr::bin(BinOp::Lt, Expr::int(1), Expr::int(2)),
+                then: vec![Stmt::increment("c", vec![Expr::field("i", "f")])],
+                els: vec![],
+            }],
+        ))];
+        assert!(ConstProp.run(&mut p, &PassCtx::new()).unwrap());
+        if let Stmt::Loop(l) = &p.body[0] {
+            assert!(matches!(l.body[0], Stmt::Accum { .. }), "{:?}", l.body);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn false_branch_selected() {
+        let mut p = Program::new("t")
+            .with_relation("T", Schema::new(vec![("f", crate::ir::DataType::Int)]))
+            .with_array("c", crate::ir::ArrayDecl::counter());
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![Stmt::If {
+                cond: Expr::Const(Value::Bool(false)),
+                then: vec![Stmt::increment("c", vec![Expr::field("i", "f")])],
+                els: vec![],
+            }],
+        ))];
+        assert!(ConstProp.run(&mut p, &PassCtx::new()).unwrap());
+        if let Stmt::Loop(l) = &p.body[0] {
+            assert!(l.body.is_empty());
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn no_change_reports_false() {
+        let mut p = Program::new("t").with_scalar("x", Value::Int(0));
+        p.body = vec![Stmt::assign("x", Expr::var("x"))];
+        assert!(!ConstProp.run(&mut p, &PassCtx::new()).unwrap());
+    }
+}

@@ -1,0 +1,253 @@
+//! Dead-code elimination driven by Def-Use (§II): "detect and eliminate
+//! data access of which the results are unused".
+//!
+//! Liveness roots: result-multiset appends and `print` statements. A
+//! statement is dead if nothing it defines (arrays, scalars) is ever used
+//! on a path to a root. Whole loops whose bodies become empty are removed
+//! — which is how an unused query (data access code) disappears entirely.
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::analysis::stmt_defuse;
+use crate::ir::{Program, Stmt};
+
+use super::pass::{Pass, PassCtx};
+
+pub struct DeadCode;
+
+impl Pass for DeadCode {
+    fn name(&self) -> &'static str {
+        "dead-code"
+    }
+
+    fn run(&self, p: &mut Program, _ctx: &PassCtx) -> Result<bool> {
+        let mut changed = false;
+        // Iterate: removing a consumer can kill its producers.
+        loop {
+            let live = live_sets(p);
+            let before = count_stmts(&p.body);
+            let body = std::mem::take(&mut p.body);
+            p.body = sweep(body, &live);
+            let after = count_stmts(&p.body);
+            if after == before {
+                break;
+            }
+            changed = true;
+        }
+        if changed {
+            // Drop declarations of arrays no longer referenced.
+            let du = crate::analysis::program_defuse(p);
+            p.arrays
+                .retain(|name, _| du.arrays_def.contains(name) || du.arrays_use.contains(name));
+        }
+        Ok(changed)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Live {
+    arrays: BTreeSet<String>,
+    scalars: BTreeSet<String>,
+}
+
+/// Compute the set of arrays/scalars that (transitively) feed a root.
+fn live_sets(p: &Program) -> Live {
+    let mut live = Live::default();
+    // Seed: uses by result appends and prints anywhere in the program.
+    let mut grow = true;
+    while grow {
+        grow = false;
+        for s in &p.body {
+            seed(s, &mut live, &mut grow);
+        }
+    }
+    live
+}
+
+fn seed(s: &Stmt, live: &mut Live, grow: &mut bool) {
+    let du = stmt_defuse(s, &[]);
+    let is_root = !du.results_def.is_empty() || contains_print(s);
+    let defines_live = du.arrays_def.iter().any(|a| live.arrays.contains(a))
+        || du.scalars_def.iter().any(|v| live.scalars.contains(v));
+    if is_root || defines_live {
+        for a in &du.arrays_use {
+            if live.arrays.insert(a.clone()) {
+                *grow = true;
+            }
+        }
+        for v in &du.scalars_use {
+            if live.scalars.insert(v.clone()) {
+                *grow = true;
+            }
+        }
+    }
+    // Recurse so nested roots (a print inside a loop) seed too.
+    if let Stmt::Loop(l) = s {
+        for b in &l.body {
+            seed(b, live, grow);
+        }
+    }
+    if let Stmt::If { then, els, .. } = s {
+        for b in then.iter().chain(els) {
+            seed(b, live, grow);
+        }
+    }
+}
+
+fn contains_print(s: &Stmt) -> bool {
+    let mut found = false;
+    s.walk(&mut |sub| {
+        if matches!(sub, Stmt::Print { .. }) {
+            found = true;
+        }
+    });
+    found
+}
+
+fn sweep(body: Vec<Stmt>, live: &Live) -> Vec<Stmt> {
+    let mut out = Vec::with_capacity(body.len());
+    for s in body {
+        match s {
+            Stmt::Loop(mut l) => {
+                l.body = sweep(l.body, live);
+                if !l.body.is_empty() {
+                    out.push(Stmt::Loop(l));
+                }
+            }
+            Stmt::If { cond, then, els } => {
+                let then = sweep(then, live);
+                let els = sweep(els, live);
+                if !then.is_empty() || !els.is_empty() {
+                    out.push(Stmt::If { cond, then, els });
+                }
+            }
+            Stmt::Accum { ref array, .. } => {
+                if live.arrays.contains(array) {
+                    out.push(s);
+                }
+            }
+            Stmt::Assign { ref var, .. } => {
+                if live.scalars.contains(var) {
+                    out.push(s);
+                }
+            }
+            // Roots stay.
+            Stmt::ResultUnion { .. } | Stmt::Print { .. } => out.push(s),
+        }
+    }
+    out
+}
+
+fn count_stmts(body: &[Stmt]) -> usize {
+    let mut n = 0;
+    for s in body {
+        s.walk(&mut |_| n += 1);
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDecl, DataType, Expr, IndexSet, Loop, Schema, Value};
+
+    fn base() -> Program {
+        Program::new("t")
+            .with_relation("T", Schema::new(vec![("f", DataType::Int)]))
+            .with_array("used", ArrayDecl::counter())
+            .with_array("unused", ArrayDecl::counter())
+            .with_result("R", Schema::new(vec![("n", DataType::Int)]))
+    }
+
+    #[test]
+    fn removes_unused_counting_loop() {
+        let mut p = base();
+        p.body = vec![
+            // Dead: accumulates into `unused`, never read.
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("T"),
+                vec![Stmt::increment("unused", vec![Expr::field("i", "f")])],
+            )),
+            // Live chain: used → R.
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("T"),
+                vec![Stmt::increment("used", vec![Expr::field("i", "f")])],
+            )),
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::distinct_of("T", "f"),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![Expr::array("used", vec![Expr::field("i", "f")])],
+                )],
+            )),
+        ];
+        assert!(DeadCode.run(&mut p, &PassCtx::new()).unwrap());
+        assert_eq!(p.body.len(), 2);
+        assert!(!p.arrays.contains_key("unused"));
+        assert!(p.arrays.contains_key("used"));
+    }
+
+    #[test]
+    fn transitive_death() {
+        // a feeds b, b feeds nothing → both die.
+        let mut p = base().with_array("a", ArrayDecl::counter()).with_array("b", ArrayDecl::counter());
+        p.body = vec![
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("T"),
+                vec![Stmt::increment("a", vec![Expr::field("i", "f")])],
+            )),
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("T"),
+                vec![Stmt::accum(
+                    "b",
+                    vec![Expr::field("i", "f")],
+                    crate::ir::AccumOp::Add,
+                    Expr::array("a", vec![Expr::field("i", "f")]),
+                )],
+            )),
+        ];
+        assert!(DeadCode.run(&mut p, &PassCtx::new()).unwrap());
+        assert!(p.body.is_empty(), "{:?}", p.body);
+        assert!(p.arrays.is_empty());
+    }
+
+    #[test]
+    fn print_keeps_scalar_chain_alive() {
+        let mut p = base().with_scalar("avg", Value::Float(0.0));
+        p.body = vec![
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::all("T"),
+                vec![Stmt::assign(
+                    "avg",
+                    Expr::add(Expr::var("avg"), Expr::field("i", "f")),
+                )],
+            )),
+            Stmt::Print {
+                format: "{}".into(),
+                args: vec![Expr::var("avg")],
+            },
+        ];
+        assert!(!DeadCode.run(&mut p, &PassCtx::new()).unwrap());
+        assert_eq!(p.body.len(), 2);
+    }
+
+    #[test]
+    fn result_loops_always_survive() {
+        let mut p = base();
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("T"),
+            vec![Stmt::result_union("R", vec![Expr::field("i", "f")])],
+        ))];
+        assert!(!DeadCode.run(&mut p, &PassCtx::new()).unwrap());
+        assert_eq!(p.body.len(), 1);
+    }
+}

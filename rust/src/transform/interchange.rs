@@ -1,0 +1,197 @@
+//! Loop interchange (§III-B): "the loop interchange transformation is used
+//! to push any conditions on data to outer loops to decrease the amount of
+//! data that needs to be read as much as possible."
+//!
+//! For a perfect nest `forelem i ∈ pA { forelem j ∈ pB.f[c] { ... } }`
+//! where the inner filter value `c` does NOT depend on the outer cursor,
+//! the filtered loop can move outward, so the filter is evaluated once
+//! instead of |A| times. Legal when the body is reduction-style
+//! (order-free appends/accumulations).
+
+use anyhow::Result;
+
+use crate::ir::{Domain, Loop, LoopKind, Program, Stmt};
+
+use super::pass::{Pass, PassCtx};
+
+pub struct LoopInterchange;
+
+impl Pass for LoopInterchange {
+    fn name(&self) -> &'static str {
+        "loop-interchange"
+    }
+
+    fn run(&self, p: &mut Program, _ctx: &PassCtx) -> Result<bool> {
+        let mut changed = false;
+        for s in &mut p.body {
+            changed |= interchange_stmt(s);
+        }
+        Ok(changed)
+    }
+}
+
+fn interchange_stmt(s: &mut Stmt) -> bool {
+    let Stmt::Loop(outer) = s else { return false };
+    let mut changed = false;
+    // Recurse first (innermost-out canonicalization).
+    for b in &mut outer.body {
+        changed |= interchange_stmt(b);
+    }
+    if should_swap(outer) {
+        swap_nest(outer);
+        changed = true;
+    }
+    changed
+}
+
+/// Swap when: perfect 2-nest, outer is an UNfiltered forelem, inner is a
+/// FILTERED forelem whose filter value doesn't reference the outer var,
+/// and the body is order-free.
+fn should_swap(outer: &Loop) -> bool {
+    if outer.kind != LoopKind::Forelem {
+        return false;
+    }
+    let Domain::IndexSet(oix) = &outer.domain else {
+        return false;
+    };
+    if oix.field_filter.is_some() || oix.distinct.is_some() || oix.partition.is_some() {
+        return false;
+    }
+    let [Stmt::Loop(inner)] = outer.body.as_slice() else {
+        return false;
+    };
+    if inner.kind != LoopKind::Forelem {
+        return false;
+    }
+    let Domain::IndexSet(iix) = &inner.domain else {
+        return false;
+    };
+    let Some((_, filter_value)) = &iix.field_filter else {
+        return false;
+    };
+    // Filter must be outer-invariant.
+    if filter_value.used_vars().contains(&outer.var) {
+        return false;
+    }
+    // Body must be order-free (reductions/appends only).
+    let body_ok = inner.body.iter().all(|s| {
+        let mut ok = true;
+        s.walk(&mut |sub| match sub {
+            Stmt::Assign { .. } => ok = false,
+            Stmt::Accum { op, .. } if *op == crate::ir::AccumOp::Set => ok = false,
+            _ => {}
+        });
+        ok
+    });
+    body_ok
+}
+
+fn swap_nest(outer: &mut Loop) {
+    let Stmt::Loop(inner) = outer.body.pop().unwrap() else {
+        unreachable!()
+    };
+    // outer { inner { B } }  →  inner { outer { B } }
+    let new_inner = Loop {
+        kind: outer.kind,
+        var: outer.var.clone(),
+        domain: outer.domain.clone(),
+        body: inner.body, // B moves under the (old) outer header
+    };
+    outer.kind = inner.kind;
+    outer.var = inner.var;
+    outer.domain = inner.domain;
+    outer.body = vec![Stmt::Loop(new_inner)];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec;
+    use crate::ir::{
+        pretty, DataType, Expr, IndexSet, Multiset, Schema, Value,
+    };
+    use crate::storage::StorageCatalog;
+
+    fn setup() -> (Program, StorageCatalog) {
+        let a = Schema::new(vec![("x", DataType::Int)]);
+        let b = Schema::new(vec![("id", DataType::Int), ("y", DataType::Int)]);
+        let mut c = StorageCatalog::new();
+        let mut ma = Multiset::new(a.clone());
+        for i in 0..10 {
+            ma.push(vec![Value::Int(i)]);
+        }
+        let mut mb = Multiset::new(b.clone());
+        for i in 0..10 {
+            mb.push(vec![Value::Int(i % 3), Value::Int(100 + i)]);
+        }
+        c.insert_multiset("A", &ma).unwrap();
+        c.insert_multiset("B", &mb).unwrap();
+
+        // forelem i∈pA { forelem j∈pB.id[1] { R ∪= (i.x, j.y) } }
+        // The inner filter is constant → interchange should hoist it.
+        let mut p = Program::new("nest")
+            .with_relation("A", a)
+            .with_relation("B", b)
+            .with_result(
+                "R",
+                Schema::new(vec![("x", DataType::Int), ("y", DataType::Int)]),
+            );
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::Loop(Loop::forelem(
+                "j",
+                IndexSet::filtered("B", "id", Expr::int(1)),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![Expr::field("i", "x"), Expr::field("j", "y")],
+                )],
+            ))],
+        ))];
+        (p, c)
+    }
+
+    #[test]
+    fn hoists_constant_filter_outward() {
+        let (mut p, _c) = setup();
+        assert!(LoopInterchange.run(&mut p, &PassCtx::new()).unwrap());
+        let text = pretty::program(&p);
+        // The filtered loop over B is now outermost.
+        let first_loop_line = text.lines().find(|l| l.contains("forelem")).unwrap();
+        assert!(first_loop_line.contains("pB.id[1]"), "{text}");
+    }
+
+    #[test]
+    fn interchange_preserves_semantics() {
+        let (base, c) = setup();
+        let reference = exec::run(&base, &c).unwrap();
+        let mut p = base.clone();
+        LoopInterchange.run(&mut p, &PassCtx::new()).unwrap();
+        crate::ir::validate(&p).unwrap();
+        let out = exec::run(&p, &c).unwrap();
+        assert!(out.result().unwrap().bag_eq(reference.result().unwrap()));
+    }
+
+    #[test]
+    fn interchange_reduces_rows_visited() {
+        let (base, c) = setup();
+        let before = exec::run(&base, &c).unwrap().stats.rows_visited;
+        let mut p = base.clone();
+        LoopInterchange.run(&mut p, &PassCtx::new()).unwrap();
+        let after = exec::run(&p, &c).unwrap().stats.rows_visited;
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn correlated_filter_is_not_interchanged() {
+        let (mut p, _c) = setup();
+        // Make the filter depend on the outer cursor (a real join).
+        if let Stmt::Loop(outer) = &mut p.body[0] {
+            if let Stmt::Loop(inner) = &mut outer.body[0] {
+                inner.index_set_mut().unwrap().field_filter =
+                    Some(("id".into(), Expr::field("i", "x")));
+            }
+        }
+        assert!(!LoopInterchange.run(&mut p, &PassCtx::new()).unwrap());
+    }
+}

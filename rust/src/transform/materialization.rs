@@ -1,0 +1,197 @@
+//! Index-set materialization: decide *how* each forelem loop iterates
+//! (§II, Figure 1).
+//!
+//! "At a later compilation stage, the compiler determines how to actually
+//! execute the iteration specified by a forelem loop and accompanied
+//! index set. This may be done by nested loops iteration, but also through
+//! the use of hash functions or tree-based indexes."
+//!
+//! For every filtered index set still `Unspecified`, the pass estimates
+//! how many times the loop will be *entered* (probes) from its enclosing
+//! loops, pulls table statistics from the storage catalog, and asks the
+//! cost model (analysis::cost) to pick Scan / Hash / Tree.
+
+use anyhow::Result;
+
+use crate::analysis::{choose_strategy, TableStats};
+use crate::ir::{Domain, Program, Stmt, Strategy};
+
+use super::pass::{Pass, PassCtx};
+
+pub struct Materialize;
+
+impl Pass for Materialize {
+    fn name(&self) -> &'static str {
+        "materialize"
+    }
+
+    fn run(&self, p: &mut Program, ctx: &PassCtx) -> Result<bool> {
+        let Some(catalog) = ctx.catalog else {
+            return Ok(false); // no statistics, leave strategies abstract
+        };
+        let mut changed = false;
+        let relations = p.relations.clone();
+        for s in &mut p.body {
+            changed |= decide(s, 1, &|rel, field| {
+                let fid = relations
+                    .get(rel)
+                    .and_then(|sch| sch.field_id(field));
+                catalog
+                    .stats(rel, fid)
+                    .unwrap_or(TableStats::new(1024, 32))
+            }, &|rel| {
+                catalog
+                    .stats(rel, None)
+                    .map(|s| s.rows)
+                    .unwrap_or(1024)
+            });
+        }
+        Ok(changed)
+    }
+}
+
+/// Recursively assign strategies. `probes` is the estimated number of
+/// times this statement executes (product of enclosing loop trip counts).
+fn decide(
+    s: &mut Stmt,
+    probes: u64,
+    stats_of: &dyn Fn(&str, &str) -> TableStats,
+    rows_of: &dyn Fn(&str) -> u64,
+) -> bool {
+    let Stmt::Loop(l) = s else { return false };
+    let mut changed = false;
+    #[allow(unused_assignments)]
+    let mut inner_probes = probes;
+    match &mut l.domain {
+        Domain::IndexSet(ix) => {
+            if let Some((field, _)) = &ix.field_filter {
+                if ix.strategy == Strategy::Unspecified {
+                    let stats = stats_of(&ix.relation, field);
+                    let chosen = choose_strategy(stats, probes, false);
+                    ix.strategy = chosen;
+                    changed = true;
+                }
+                // Expected matches per probe.
+                let stats = stats_of(&ix.relation, ix.field_filter.as_ref().map(|(f, _)| f.as_str()).unwrap());
+                inner_probes = probes * (stats.rows / stats.distinct_keys).max(1);
+            } else if ix.distinct.is_some() {
+                let stats = stats_of(&ix.relation, ix.distinct.as_deref().unwrap());
+                if ix.strategy == Strategy::Unspecified {
+                    ix.strategy = Strategy::Scan; // distinct directory is its own structure
+                    changed = true;
+                }
+                inner_probes = probes * stats.distinct_keys.max(1);
+            } else {
+                if ix.strategy == Strategy::Unspecified {
+                    ix.strategy = Strategy::Scan;
+                    changed = true;
+                }
+                inner_probes = probes * rows_of(&ix.relation).max(1);
+            }
+        }
+        Domain::Range { .. } => {
+            // Unknown trip count (params); assume modest fan-out.
+            inner_probes = probes * 8;
+        }
+        Domain::ValuePartition { relation, field, .. } => {
+            let stats = stats_of(relation, field);
+            inner_probes = probes * (stats.distinct_keys / 8).max(1);
+        }
+        Domain::DistinctValues { relation, field } => {
+            let stats = stats_of(relation, field);
+            inner_probes = probes * stats.distinct_keys.max(1);
+        }
+    }
+    for b in &mut l.body {
+        changed |= decide(b, inner_probes, stats_of, rows_of);
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema, Value};
+    use crate::sql::compile_sql;
+    use crate::storage::StorageCatalog;
+
+    fn catalog(rows: usize) -> StorageCatalog {
+        let a = Schema::new(vec![("b_id", DataType::Int), ("f", DataType::Int)]);
+        let b = Schema::new(vec![("id", DataType::Int), ("g", DataType::Int)]);
+        let mut ma = Multiset::new(a);
+        let mut mb = Multiset::new(b);
+        for i in 0..rows {
+            ma.push(vec![Value::Int((i % 100) as i64), Value::Int(i as i64)]);
+            mb.push(vec![Value::Int((i % 100) as i64), Value::Int(i as i64)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("A", &ma).unwrap();
+        c.insert_multiset("B", &mb).unwrap();
+        c
+    }
+
+    fn inner_strategy(p: &Program) -> Strategy {
+        let Stmt::Loop(outer) = &p.body[0] else { panic!() };
+        let Stmt::Loop(inner) = &outer.body[0] else { panic!() };
+        inner.index_set().unwrap().strategy
+    }
+
+    #[test]
+    fn join_inner_loop_gets_hash_index_on_large_tables() {
+        let c = catalog(5000);
+        let mut p = compile_sql(
+            "SELECT A.f, B.g FROM A JOIN B ON A.b_id = B.id",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert_eq!(inner_strategy(&p), Strategy::Unspecified);
+        let changed = Materialize
+            .run(&mut p, &PassCtx::new().with_catalog(&c))
+            .unwrap();
+        assert!(changed);
+        assert_eq!(inner_strategy(&p), Strategy::Hash);
+    }
+
+    #[test]
+    fn single_probe_lookup_stays_scan() {
+        let c = catalog(200);
+        // Top-level filtered loop: probed once.
+        let mut p = compile_sql("SELECT f FROM A WHERE b_id = 7", &c.schemas()).unwrap();
+        Materialize
+            .run(&mut p, &PassCtx::new().with_catalog(&c))
+            .unwrap();
+        let Stmt::Loop(l) = &p.body[0] else { panic!() };
+        assert_eq!(l.index_set().unwrap().strategy, Strategy::Scan);
+    }
+
+    #[test]
+    fn no_catalog_means_no_decision() {
+        let c = catalog(100);
+        let mut p = compile_sql(
+            "SELECT A.f, B.g FROM A JOIN B ON A.b_id = B.id",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert!(!Materialize.run(&mut p, &PassCtx::new()).unwrap());
+        assert_eq!(inner_strategy(&p), Strategy::Unspecified);
+    }
+
+    #[test]
+    fn already_specified_strategies_are_untouched() {
+        let c = catalog(5000);
+        let mut p = compile_sql(
+            "SELECT A.f, B.g FROM A JOIN B ON A.b_id = B.id",
+            &c.schemas(),
+        )
+        .unwrap();
+        if let Stmt::Loop(outer) = &mut p.body[0] {
+            if let Stmt::Loop(inner) = &mut outer.body[0] {
+                inner.index_set_mut().unwrap().strategy = Strategy::Tree;
+            }
+        }
+        Materialize
+            .run(&mut p, &PassCtx::new().with_catalog(&c))
+            .unwrap();
+        assert_eq!(inner_strategy(&p), Strategy::Tree);
+    }
+}

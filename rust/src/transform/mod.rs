@@ -1,0 +1,50 @@
+//! Re-targeted compiler transformations over the single IR (§III).
+//!
+//! * parallelization: [`blocking`] (direct partitioning),
+//!   [`orthogonalization`] (indirect/value-range partitioning);
+//! * locality & distribution: [`fusion`] (statement reordering + Loop
+//!   Fusion, §III-A4), [`interchange`] (filter hoisting, §III-B);
+//! * classic optimizations: [`const_prop`], [`dead_code`], [`code_motion`]
+//!   (LICM + CSE);
+//! * late decisions: [`materialization`] (index-set strategies, Figure 1),
+//!   [`reformat`] (dictionary encoding / dead-field elimination /
+//!   relayout, §III-C1).
+
+pub mod blocking;
+pub mod code_motion;
+pub mod const_prop;
+pub mod dead_code;
+pub mod fusion;
+pub mod interchange;
+pub mod materialization;
+pub mod orthogonalization;
+pub mod pass;
+pub mod reformat;
+
+pub use blocking::{parallelize_direct, DirectPartition};
+pub use code_motion::{CodeMotion, Cse};
+pub use const_prop::ConstProp;
+pub use dead_code::DeadCode;
+pub use fusion::LoopFusion;
+pub use interchange::LoopInterchange;
+pub use materialization::Materialize;
+pub use orthogonalization::{parallelize_indirect, IndirectPartition};
+pub use pass::{run_pipeline, run_to_fixpoint, Pass, PassCtx, Trace};
+pub use reformat::{apply_if_profitable, apply_reformat, plan_reformat, ReformatPlan};
+
+/// The standard optimization pipeline the compiler driver runs before
+/// code generation: classic cleanups → fusion/interchange → strategy
+/// decisions. Parallelization (blocking/orthogonalization) is applied
+/// separately by the driver because the partitioning choice couples to
+/// the distribution optimizer (distrib::distribution).
+pub fn standard_pipeline() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(ConstProp),
+        Box::new(DeadCode),
+        Box::new(CodeMotion),
+        Box::new(Cse),
+        Box::new(LoopInterchange),
+        Box::new(LoopFusion),
+        Box::new(Materialize),
+    ]
+}

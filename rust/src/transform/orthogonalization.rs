@@ -1,0 +1,225 @@
+//! Orthogonalization → indirect data partitioning (§III-A1).
+//!
+//! Instead of blocking the iterated index set, the loop is blocked on the
+//! *value range* of one of the accessed fields. `forelem (i; i ∈ pA) SEQ`
+//! becomes
+//!
+//! ```text
+//! forall (k = 1; k <= N; k++)
+//!   for (l ∈ X_k)                  // X = A.field1, X = X_1 ∪ ... ∪ X_N
+//!     forelem (i; i ∈ pA.field1[l]) SEQ'
+//! ```
+//!
+//! Processor `P_k` handles exactly the tuples whose `field1` falls in its
+//! value segment — which is what makes two loops partitioned on the *same*
+//! field use the same data distribution (§III-A4), and what the
+//! distribution optimizer exploits.
+//!
+//! Privatization of reduction state is shared with blocking.rs; here the
+//! leading dimension is still `k`, but because partitioning is by value,
+//! per-key accumulator slots are written by exactly ONE partition — the
+//! property that removes cross-partition reduction from the merge path
+//! (each key's total lives in a single partition's slice).
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Domain, Expr, IndexSet, Loop, LoopKind, Program, Stmt, Strategy, Value};
+
+use super::blocking;
+use super::pass::{Pass, PassCtx};
+
+/// Indirectly partition the first eligible top-level forelem on the given
+/// field (pass form used by pipelines; the driver usually calls
+/// [`parallelize_indirect`] with an explicit loop index + field).
+pub struct IndirectPartition {
+    pub field: String,
+}
+
+impl Pass for IndirectPartition {
+    fn name(&self) -> &'static str {
+        "indirect-partition"
+    }
+
+    fn run(&self, p: &mut Program, ctx: &PassCtx) -> Result<bool> {
+        if ctx.processors <= 1 {
+            return Ok(false);
+        }
+        for idx in 0..p.body.len() {
+            if eligible(&p.body[idx], &self.field) {
+                parallelize_indirect(p, idx, &self.field, ctx.processors)?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+}
+
+fn eligible(s: &Stmt, field: &str) -> bool {
+    let Stmt::Loop(l) = s else { return false };
+    if l.kind != LoopKind::Forelem {
+        return false;
+    }
+    let Some(ix) = l.index_set() else {
+        return false;
+    };
+    if ix.field_filter.is_some() || ix.distinct.is_some() || ix.partition.is_some() {
+        return false;
+    }
+    // The partitioning field must exist — validated against the relation
+    // schema by the caller via Program::relations.
+    let _ = field;
+    crate::analysis::is_parallelizable(l)
+}
+
+/// Apply indirect partitioning on `field` to `p.body[idx]`.
+pub fn parallelize_indirect(p: &mut Program, idx: usize, field: &str, n: usize) -> Result<()> {
+    let Stmt::Loop(l) = p.body[idx].clone() else {
+        bail!("statement {idx} is not a loop");
+    };
+    if !eligible(&p.body[idx], field) {
+        bail!("loop {idx} is not an indirect-partitioning candidate");
+    }
+    let Some(ix) = l.index_set() else { unreachable!() };
+    let relation = ix.relation.clone();
+    let Some(schema) = p.relations.get(&relation) else {
+        bail!("unknown relation `{relation}`");
+    };
+    if schema.field_id(field).is_none() {
+        bail!("relation `{relation}` has no field `{field}`");
+    }
+
+    p.params.insert("N".into(), Value::Int(n as i64));
+    let kvar = p.fresh_var("k");
+    let lvar = p.fresh_var("l");
+
+    // Privatize reduction state exactly as direct partitioning does.
+    let du = crate::analysis::stmt_defuse(&p.body[idx], &[]);
+    let privatized = du.arrays_def.clone();
+
+    let mut inner = l.clone();
+    inner.domain = Domain::IndexSet(
+        IndexSet::filtered(&relation, field, Expr::var(&lvar)).with_strategy(Strategy::Hash),
+    );
+    for s in &mut inner.body {
+        blocking_privatize(s, &privatized, &kvar);
+    }
+    for a in &privatized {
+        if let Some(decl) = p.arrays.get_mut(a) {
+            decl.dims += 1;
+        }
+    }
+
+    let value_loop = Loop {
+        kind: LoopKind::For,
+        var: lvar.clone(),
+        domain: Domain::ValuePartition {
+            relation: relation.clone(),
+            field: field.to_string(),
+            part: Expr::var(&kvar),
+            parts: Expr::var("N"),
+        },
+        body: vec![Stmt::Loop(inner)],
+    };
+    let forall = Loop {
+        kind: LoopKind::Forall,
+        var: kvar.clone(),
+        domain: Domain::Range {
+            lo: Expr::int(1),
+            hi: Expr::var("N"),
+        },
+        body: vec![Stmt::Loop(value_loop)],
+    };
+    p.body[idx] = Stmt::Loop(forall);
+
+    for s in p.body.iter_mut().skip(idx + 1) {
+        blocking_rewrite_reads(s, &privatized, &kvar);
+    }
+    Ok(())
+}
+
+// Share the privatization helpers with blocking.rs (they are identical
+// mechanics; only the iteration domain differs).
+fn blocking_privatize(
+    s: &mut Stmt,
+    arrays: &std::collections::BTreeSet<String>,
+    k: &str,
+) {
+    blocking::privatize_stmt(s, arrays, &Default::default(), k);
+}
+
+fn blocking_rewrite_reads(
+    s: &mut Stmt,
+    arrays: &std::collections::BTreeSet<String>,
+    k: &str,
+) {
+    blocking::rewrite_reads(s, arrays, &Default::default(), k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec;
+    use crate::ir::{pretty, Multiset, Schema};
+    use crate::sql::compile_sql;
+    use crate::storage::StorageCatalog;
+
+    fn catalog() -> StorageCatalog {
+        let schema = Schema::new(vec![("url", crate::ir::DataType::Str)]);
+        let mut m = Multiset::new(schema);
+        for u in ["/a", "/b", "/a", "/c", "/a", "/b", "/d", "/e", "/c"] {
+            m.push(vec![Value::str(u)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        c
+    }
+
+    #[test]
+    fn produces_the_papers_indirect_shape() {
+        let c = catalog();
+        let mut p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        parallelize_indirect(&mut p, 0, "url", 4).unwrap();
+        let text = pretty::program(&p);
+        assert!(text.contains("forall (k = 1; k <= N; k++)"), "{text}");
+        assert!(text.contains("for (l ∈ X_k)  // X = access.url"), "{text}");
+        assert!(text.contains("i ∈ paccess.url[l]"), "{text}");
+        assert!(text.contains("agg1[k][i.url]++;"), "{text}");
+    }
+
+    #[test]
+    fn indirect_partitioning_preserves_semantics() {
+        let c = catalog();
+        let base = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        let reference = exec::run(&base, &c).unwrap();
+        for n in [2, 3, 5, 8] {
+            let mut p = base.clone();
+            parallelize_indirect(&mut p, 0, "url", n).unwrap();
+            crate::ir::validate(&p).unwrap();
+            let out = exec::run(&p, &c).unwrap();
+            assert!(
+                out.result().unwrap().bag_eq(reference.result().unwrap()),
+                "N={n}: {:?}",
+                out.result().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_field() {
+        let c = catalog();
+        let mut p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert!(parallelize_indirect(&mut p, 0, "nope", 4).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! The pass framework: a uniform interface for the re-targeted compiler
+//! transformations, plus the pipeline that sequences them (§II–III).
+
+use anyhow::Result;
+
+use crate::ir::Program;
+use crate::storage::StorageCatalog;
+
+/// Context a pass may consult: table statistics drive materialization and
+/// reformat decisions (passes must not *mutate* storage — reformat emits a
+/// plan that the driver applies).
+#[derive(Default)]
+pub struct PassCtx<'a> {
+    pub catalog: Option<&'a StorageCatalog>,
+    /// Target processor count for parallelization passes.
+    pub processors: usize,
+}
+
+impl<'a> PassCtx<'a> {
+    pub fn new() -> Self {
+        PassCtx {
+            catalog: None,
+            processors: 1,
+        }
+    }
+
+    pub fn with_catalog(mut self, c: &'a StorageCatalog) -> Self {
+        self.catalog = Some(c);
+        self
+    }
+
+    pub fn with_processors(mut self, n: usize) -> Self {
+        self.processors = n;
+        self
+    }
+}
+
+/// One rewriting pass over a program.
+pub trait Pass {
+    /// Name used in pipeline traces.
+    fn name(&self) -> &'static str;
+    /// Rewrite the program in place; return true if anything changed.
+    fn run(&self, p: &mut Program, ctx: &PassCtx) -> Result<bool>;
+}
+
+/// A record of what the pipeline did (CLI `--emit trace`).
+#[derive(Debug, Default, Clone)]
+pub struct Trace {
+    pub steps: Vec<(String, bool)>,
+}
+
+impl Trace {
+    pub fn changed_passes(&self) -> Vec<&str> {
+        self.steps
+            .iter()
+            .filter(|(_, c)| *c)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+}
+
+/// Run a sequence of passes, validating after each one.
+pub fn run_pipeline(
+    p: &mut Program,
+    passes: &[&dyn Pass],
+    ctx: &PassCtx,
+) -> Result<Trace> {
+    let mut trace = Trace::default();
+    for pass in passes {
+        let changed = pass.run(p, ctx)?;
+        crate::ir::validate(p).map_err(|e| {
+            anyhow::anyhow!("pass `{}` produced an invalid program: {e}", pass.name())
+        })?;
+        trace.steps.push((pass.name().to_string(), changed));
+    }
+    Ok(trace)
+}
+
+/// Iterate a pipeline until fixpoint (bounded).
+pub fn run_to_fixpoint(
+    p: &mut Program,
+    passes: &[&dyn Pass],
+    ctx: &PassCtx,
+    max_rounds: usize,
+) -> Result<Trace> {
+    let mut trace = Trace::default();
+    for _ in 0..max_rounds {
+        let round = run_pipeline(p, passes, ctx)?;
+        let any = round.steps.iter().any(|(_, c)| *c);
+        trace.steps.extend(round.steps);
+        if !any {
+            break;
+        }
+    }
+    Ok(trace)
+}

@@ -1,0 +1,148 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + repeated timing with median/mean/min reporting, and
+//! a `BenchTable` that prints paper-style rows. Every `benches/*.rs`
+//! binary uses this; output goes to stdout so `cargo bench | tee` captures
+//! it for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Time one closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn time_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Timing statistics over a set of samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        samples.sort();
+        Stats { samples }
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples[0]
+    }
+
+    pub fn median(&self) -> Duration {
+        self.samples[self.samples.len() / 2]
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// A named-row results table, printed like the paper's figures report.
+pub struct BenchTable {
+    title: String,
+    rows: Vec<(String, Stats, Option<f64>)>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str) -> Self {
+        println!("\n== {title} ==");
+        BenchTable {
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Run and record one row.
+    pub fn row<T>(&mut self, name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) {
+        let stats = time_fn(warmup, iters, f);
+        println!(
+            "  {name:<40} median {:>12}  min {:>12}",
+            fmt_duration(stats.median()),
+            fmt_duration(stats.min())
+        );
+        self.rows.push((name.to_string(), stats, None));
+    }
+
+    /// Record an externally-measured duration (one-shot runs).
+    pub fn record(&mut self, name: &str, d: Duration) {
+        println!("  {name:<40} one-shot {:>11}", fmt_duration(d));
+        self.rows
+            .push((name.to_string(), Stats::from_samples(vec![d]), None));
+    }
+
+    /// Print speedups relative to the named baseline row.
+    pub fn summarize_vs(&self, baseline: &str) {
+        let Some(base) = self
+            .rows
+            .iter()
+            .find(|(n, _, _)| n == baseline)
+            .map(|(_, s, _)| s.median().as_secs_f64())
+        else {
+            return;
+        };
+        println!("  -- speedups vs `{baseline}` ({}):", self.title);
+        for (name, stats, _) in &self.rows {
+            if name != baseline {
+                let f = base / stats.median().as_secs_f64();
+                println!("     {name:<37} {f:>8.2}x");
+            }
+        }
+    }
+
+    pub fn rows(&self) -> impl Iterator<Item = (&str, &Stats)> {
+        self.rows.iter().map(|(n, s, _)| (n.as_str(), s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(3),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        ]);
+        assert_eq!(s.min(), Duration::from_millis(1));
+        assert_eq!(s.median(), Duration::from_millis(2));
+        assert_eq!(s.mean(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn fmt_picks_unit() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with(" µs"));
+    }
+
+    #[test]
+    fn time_fn_runs_the_closure() {
+        let mut n = 0;
+        let _ = time_fn(2, 3, || n += 1);
+        assert_eq!(n, 5);
+    }
+}

@@ -1,0 +1,54 @@
+//! Tiny property-testing helpers (proptest is not available offline).
+//!
+//! `forall_seeds` drives a property over many deterministic RNG seeds and
+//! reports the first failing seed — enough to express the coordinator /
+//! scheduler invariants DESIGN.md calls for, with reproducible shrinking
+//! by seed.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeds; panic with the failing seed on error.
+pub fn forall_seeds(cases: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert-style helper returning Err instead of panicking, for use inside
+/// `forall_seeds` properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall_seeds(50, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn reports_failing_seed() {
+        forall_seeds(50, |rng| {
+            // Deterministic failure partway through the seed range.
+            let x = rng.below(25);
+            prop_assert!(x != 7, "hit the answer x={x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree replacements for crates unavailable in the offline environment:
+//! PRNG + distributions (`rng`), a bench harness (`bench`), and
+//! seed-driven property testing (`check`).
+
+pub mod bench;
+pub mod fxhash;
+pub mod check;
+pub mod rng;
+
+pub use bench::{fmt_duration, time_fn, BenchTable, Stats};
+pub use check::forall_seeds;
+pub use fxhash::{FxHashMap, FxHasher};
+pub use rng::{Rng, Zipf};

@@ -1,0 +1,220 @@
+//! Synthetic generators for the paper's evaluation workloads.
+//!
+//! The paper's inputs (DAS-4 web logs / crawled link graphs) are not
+//! published; these generators produce the standard synthetic equivalents
+//! (documented in DESIGN.md §Substitutions): zipf-distributed URL
+//! popularity for the access log, preferential-attachment-style in-degree
+//! for the link graph, and a uniform grades table for §III-B.
+
+use crate::ir::{DataType, Multiset, Schema, Value};
+use crate::util::{Rng, Zipf};
+
+/// Parameters for the URL access-count workload (§IV example 1).
+#[derive(Debug, Clone)]
+pub struct AccessLogSpec {
+    /// Total log records.
+    pub rows: usize,
+    /// Distinct URLs.
+    pub urls: usize,
+    /// Zipf exponent for URL popularity (1.0–1.3 is typical of web logs).
+    pub skew: f64,
+    /// RNG seed (experiments are reproducible per seed).
+    pub seed: u64,
+}
+
+impl Default for AccessLogSpec {
+    fn default() -> Self {
+        AccessLogSpec {
+            rows: 2_000_000,
+            urls: 100_000,
+            skew: 1.1,
+            seed: 42,
+        }
+    }
+}
+
+/// Generate the `access(url: str)` table of the paper's first example.
+pub fn access_log(spec: &AccessLogSpec) -> Multiset {
+    let mut rng = Rng::new(spec.seed);
+    let zipf = Zipf::new(spec.urls, spec.skew);
+    let schema = Schema::new(vec![("url", DataType::Str)]);
+    let mut m = Multiset::new(schema);
+    // Pre-render URL strings so popular URLs share one allocation.
+    let urls: Vec<Value> = (0..spec.urls).map(|i| Value::str(url_for(i))).collect();
+    for _ in 0..spec.rows {
+        let rank = zipf.sample(&mut rng);
+        m.push(vec![urls[rank].clone()]);
+    }
+    m
+}
+
+/// Wide-schema variant: `access(url, agent, bytes)` with a payload user
+/// agent string and a bytes column — exercises dead-field elimination
+/// (the paper's "removing unused structure fields" experiment).
+pub fn access_log_wide(spec: &AccessLogSpec) -> Multiset {
+    let mut rng = Rng::new(spec.seed);
+    let zipf = Zipf::new(spec.urls, spec.skew);
+    let schema = Schema::new(vec![
+        ("url", DataType::Str),
+        ("agent", DataType::Str),
+        ("bytes", DataType::Int),
+    ]);
+    let agents: Vec<Value> = [
+        "Mozilla/5.0 (X11; Linux x86_64) AppleWebKit/537.36",
+        "Mozilla/5.0 (Windows NT 10.0; Win64; x64) Gecko/20100101",
+        "Googlebot/2.1 (+http://www.google.com/bot.html)",
+        "curl/7.68.0",
+    ]
+    .iter()
+    .map(|s| Value::str(*s))
+    .collect();
+    let urls: Vec<Value> = (0..spec.urls).map(|i| Value::str(url_for(i))).collect();
+    let mut m = Multiset::new(schema);
+    for _ in 0..spec.rows {
+        let rank = zipf.sample(&mut rng);
+        m.push(vec![
+            urls[rank].clone(),
+            agents[rng.below(agents.len() as u64) as usize].clone(),
+            Value::Int(rng.range(200, 100_000)),
+        ]);
+    }
+    m
+}
+
+/// Parameters for the reverse web-link graph workload (§IV example 2).
+#[derive(Debug, Clone)]
+pub struct LinkGraphSpec {
+    /// Total (source, target) edges.
+    pub edges: usize,
+    /// Distinct pages.
+    pub pages: usize,
+    /// Zipf exponent for target in-degree.
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl Default for LinkGraphSpec {
+    fn default() -> Self {
+        LinkGraphSpec {
+            edges: 2_000_000,
+            pages: 100_000,
+            skew: 1.05,
+            seed: 43,
+        }
+    }
+}
+
+/// Generate the `links(source: str, target: str)` table.
+pub fn link_graph(spec: &LinkGraphSpec) -> Multiset {
+    let mut rng = Rng::new(spec.seed);
+    let zipf = Zipf::new(spec.pages, spec.skew);
+    let schema = Schema::new(vec![("source", DataType::Str), ("target", DataType::Str)]);
+    let pages: Vec<Value> = (0..spec.pages).map(|i| Value::str(page_for(i))).collect();
+    let mut m = Multiset::new(schema);
+    for _ in 0..spec.edges {
+        // Sources roughly uniform (every page links out), targets zipfian
+        // (popular pages attract links).
+        let src = rng.below(spec.pages as u64) as usize;
+        let dst = zipf.sample(&mut rng);
+        m.push(vec![pages[src].clone(), pages[dst].clone()]);
+    }
+    m
+}
+
+/// `Grades(studentID, grade, weight)` for the §III-B example.
+pub fn grades(students: usize, per_student: usize, seed: u64) -> Multiset {
+    let mut rng = Rng::new(seed);
+    let schema = Schema::new(vec![
+        ("studentID", DataType::Int),
+        ("grade", DataType::Float),
+        ("weight", DataType::Float),
+    ]);
+    let mut m = Multiset::new(schema);
+    for s in 0..students {
+        for _ in 0..per_student {
+            m.push(vec![
+                Value::Int(s as i64),
+                Value::Float(1.0 + rng.f64() * 9.0),
+                Value::Float(0.1 + rng.f64() * 0.9),
+            ]);
+        }
+    }
+    m
+}
+
+fn url_for(rank: usize) -> String {
+    format!("http://example.org/site{}/page{}.html", rank % 997, rank)
+}
+
+fn page_for(rank: usize) -> String {
+    format!("http://crawl.example.net/doc/{rank}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn access_log_is_reproducible_and_skewed() {
+        let spec = AccessLogSpec {
+            rows: 20_000,
+            urls: 1000,
+            skew: 1.1,
+            seed: 7,
+        };
+        let a = access_log(&spec);
+        let b = access_log(&spec);
+        assert!(a.bag_eq(&b));
+        assert_eq!(a.len(), 20_000);
+        // Top URL should dwarf the median URL.
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        for r in a.rows() {
+            *counts.entry(r[0].as_str().unwrap()).or_default() += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|x, y| y.cmp(x));
+        assert!(freqs[0] > freqs[freqs.len() / 2] * 10);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = access_log(&AccessLogSpec { rows: 1000, urls: 100, skew: 1.1, seed: 1 });
+        let b = access_log(&AccessLogSpec { rows: 1000, urls: 100, skew: 1.1, seed: 2 });
+        assert!(!a.bag_eq(&b));
+    }
+
+    #[test]
+    fn link_graph_shape() {
+        let g = link_graph(&LinkGraphSpec {
+            edges: 10_000,
+            pages: 500,
+            skew: 1.05,
+            seed: 3,
+        });
+        assert_eq!(g.len(), 10_000);
+        assert_eq!(g.schema.field(1).name, "target");
+    }
+
+    #[test]
+    fn wide_log_has_payload_fields() {
+        let m = access_log_wide(&AccessLogSpec {
+            rows: 100,
+            urls: 10,
+            skew: 1.0,
+            seed: 5,
+        });
+        assert_eq!(m.schema.len(), 3);
+        assert!(m.get(0, 2).as_int().unwrap() >= 200);
+    }
+
+    #[test]
+    fn grades_rows() {
+        let g = grades(10, 5, 1);
+        assert_eq!(g.len(), 50);
+        for r in g.rows() {
+            let grade = r[1].as_float().unwrap();
+            assert!((1.0..=10.0).contains(&grade));
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Cross-module integration tests: the full stack composed end-to-end.
+
+use std::sync::Arc;
+
+use forelem::compiler::{CompileOptions, Engine, ReformatMode};
+use forelem::coordinator::{run_job, AggJob, ClusterConfig, Failure};
+use forelem::ir::{pretty, Multiset, Value};
+use forelem::mapreduce::{self, HadoopConfig};
+use forelem::sched::Policy;
+use forelem::storage::{StorageCatalog, Table};
+use forelem::workload::{access_log, grades, link_graph, AccessLogSpec, LinkGraphSpec};
+
+const URL_Q: &str = "SELECT url, COUNT(url) FROM access GROUP BY url";
+
+fn access_catalog(rows: usize) -> StorageCatalog {
+    let m = access_log(&AccessLogSpec {
+        rows,
+        urls: (rows / 10).max(10),
+        skew: 1.1,
+        seed: 123,
+    });
+    let mut c = StorageCatalog::new();
+    c.insert_multiset("access", &m).unwrap();
+    c
+}
+
+/// Normalize a (key, value) result for comparison across engines.
+fn pairs_of(m: &Multiset) -> Vec<(String, i64)> {
+    let mut v: Vec<(String, i64)> = m
+        .rows()
+        .iter()
+        .map(|r| (r[0].to_string(), r[1].as_int().unwrap()))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn five_engines_agree_on_url_count() {
+    // 1. reference interpreter, 2. compiled plan, 3. parallelized IR,
+    // 4. distributed coordinator, 5. hadoop-sim — all the same counts.
+    let catalog = access_catalog(20_000);
+    let mut engine = Engine::new(catalog.clone());
+    let compiled = engine.compile(URL_Q).unwrap();
+
+    let interp = forelem::exec::run(&compiled.program, &catalog).unwrap();
+    let reference = pairs_of(interp.result().unwrap());
+
+    let plan = engine.sql(URL_Q).unwrap();
+    assert_eq!(pairs_of(plan.result().unwrap()), reference);
+
+    let mut par = Engine::new(catalog.clone()).with_options(CompileOptions {
+        processors: 6,
+        partition_field: None,
+        reformat: ReformatMode::Off,
+    });
+    let c2 = par.compile(URL_Q).unwrap();
+    let par_out = forelem::exec::run(&c2.program, &catalog).unwrap();
+    assert_eq!(pairs_of(par_out.result().unwrap()), reference);
+
+    let (_, dist) = Engine::new(catalog.clone())
+        .sql_distributed(URL_Q, &ClusterConfig::new(5, Policy::Trapezoid))
+        .unwrap();
+    assert_eq!(pairs_of(&dist), reference);
+
+    let (mr, info) = mapreduce::derive(&compiled.program).unwrap();
+    let h = mapreduce::run_hadoop(
+        &HadoopConfig::instant(6, 3),
+        &mr,
+        catalog.get(&info.table).unwrap(),
+    )
+    .unwrap();
+    let mut hpairs: Vec<(String, i64)> = h
+        .pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), *v as i64))
+        .collect();
+    hpairs.sort();
+    assert_eq!(hpairs, reference);
+}
+
+#[test]
+fn reformat_plus_parallel_plus_failure_still_exact() {
+    let mut engine = Engine::new(access_catalog(30_000)).with_options(CompileOptions {
+        processors: 4,
+        partition_field: None,
+        reformat: ReformatMode::Force,
+    });
+    let reference = {
+        let mut plain = Engine::new(access_catalog(30_000));
+        pairs_of(plain.sql(URL_Q).unwrap().result().unwrap())
+    };
+    let cluster = ClusterConfig::new(6, Policy::Gss).with_failure(Failure {
+        worker: 1,
+        after_chunks: 1,
+    });
+    let (r, m) = engine.sql_distributed(URL_Q, &cluster).unwrap();
+    assert_eq!(pairs_of(&m), reference);
+    assert!(r.metrics.failures_recovered >= 1 || r.metrics.restarts >= 1);
+}
+
+#[test]
+fn weblink_graph_through_indirect_partitioning() {
+    let m = link_graph(&LinkGraphSpec {
+        edges: 20_000,
+        pages: 1_000,
+        skew: 1.05,
+        seed: 9,
+    });
+    let mut catalog = StorageCatalog::new();
+    catalog.insert_multiset("links", &m).unwrap();
+    let q = "SELECT target, COUNT(target) FROM links GROUP BY target";
+
+    let mut seq = Engine::new(catalog.clone());
+    let reference = pairs_of(seq.sql(q).unwrap().result().unwrap());
+
+    let mut par = Engine::new(catalog.clone()).with_options(CompileOptions {
+        processors: 4,
+        partition_field: Some("target".into()),
+        reformat: ReformatMode::Off,
+    });
+    let compiled = par.compile(q).unwrap();
+    let text = pretty::program(&compiled.program);
+    assert!(text.contains("X = links.target"), "{text}");
+    let out = forelem::exec::run(&compiled.program, &catalog).unwrap();
+    assert_eq!(pairs_of(out.result().unwrap()), reference);
+}
+
+#[test]
+fn grades_sum_aggregate_distributed() {
+    let m = grades(500, 6, 77);
+    let mut catalog = StorageCatalog::new();
+    catalog.insert_multiset("Grades", &m).unwrap();
+    let q = "SELECT studentID, SUM(grade) FROM Grades GROUP BY studentID";
+
+    let mut engine = Engine::new(catalog.clone());
+    let reference = engine.sql(q).unwrap();
+    let want: std::collections::HashMap<Value, f64> = reference
+        .result()
+        .unwrap()
+        .rows()
+        .iter()
+        .map(|r| (r[0].clone(), r[1].as_float().unwrap()))
+        .collect();
+
+    let (r, _) = engine
+        .sql_distributed(q, &ClusterConfig::new(4, Policy::Factoring))
+        .unwrap();
+    assert_eq!(r.pairs.len(), want.len());
+    for (k, v) in &r.pairs {
+        assert!((want[k] - v).abs() < 1e-6, "key {k}");
+    }
+}
+
+#[test]
+fn csv_import_pipeline_with_generated_load_code() {
+    // gen-data style CSV → import with a reformat plan → query.
+    use forelem::storage::{import_csv_with_plan, ImportPlan};
+    let m = access_log(&AccessLogSpec {
+        rows: 5_000,
+        urls: 100,
+        skew: 1.1,
+        seed: 55,
+    });
+    let mut csv = String::new();
+    for r in m.rows() {
+        csv.push_str(r[0].as_str().unwrap());
+        csv.push('\n');
+    }
+    let schema = m.schema.clone();
+    let plan = ImportPlan {
+        dict_encode: vec![0],
+        keep: None,
+    };
+    let table = import_csv_with_plan(std::io::Cursor::new(csv), &schema, &plan).unwrap();
+    assert!(table.column(0).dictionary().is_some());
+
+    let job = AggJob::count(Arc::new(table), 0);
+    let r = run_job(&ClusterConfig::new(4, Policy::Gss), &job).unwrap();
+    assert_eq!(r.pairs.iter().map(|(_, n)| *n).sum::<f64>() as usize, 5_000);
+}
+
+#[test]
+fn xla_kernels_integrate_when_artifacts_exist() {
+    if forelem::runtime::Kernels::load_default().is_err() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let kernels = forelem::runtime::Kernels::load_default().unwrap();
+    let mut engine = Engine::new(access_catalog(10_000))
+        .with_options(CompileOptions {
+            processors: 1,
+            partition_field: None,
+            reformat: ReformatMode::Force,
+        })
+        .with_kernels(kernels);
+    let reference = {
+        let mut plain = Engine::new(access_catalog(10_000));
+        pairs_of(plain.sql(URL_Q).unwrap().result().unwrap())
+    };
+    let out = engine.sql(URL_Q).unwrap();
+    assert!(out.stats.kernel_calls > 0, "kernel path not taken");
+    assert_eq!(pairs_of(out.result().unwrap()), reference);
+}
+
+#[test]
+fn hadoop_and_coordinator_agree_on_sum_jobs() {
+    let m = grades(200, 5, 3);
+    let t = Table::from_multiset(&m).unwrap();
+    let mr = mapreduce::MapReduceProgram {
+        map: mapreduce::MapFn::EmitKeyValue {
+            key_field: 0,
+            val_field: 1,
+        },
+        reduce: mapreduce::ReduceFn::SumValues,
+    };
+    let h = mapreduce::run_hadoop(&HadoopConfig::instant(4, 2), &mr, &t).unwrap();
+    let r = run_job(
+        &ClusterConfig::new(3, Policy::Gss),
+        &AggJob::sum(Arc::new(t), 0, 1),
+    )
+    .unwrap();
+    let hs: std::collections::HashMap<String, f64> = h
+        .pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), *v))
+        .collect();
+    assert_eq!(hs.len(), r.pairs.len());
+    for (k, v) in &r.pairs {
+        let hv = hs[&k.to_string()];
+        assert!((hv - v).abs() < 1e-6, "key {k}: {hv} vs {v}");
+    }
+}

@@ -1,0 +1,264 @@
+//! Seed-driven property tests across the stack (proptest is unavailable
+//! offline; `forelem::util::forall_seeds` reports the failing seed).
+
+use forelem::compiler::{CompileOptions, Engine, ReformatMode};
+use forelem::ir::{DataType, Multiset, Schema, Value};
+use forelem::prelude::*;
+use forelem::prop_assert;
+use forelem::sched::{Chunk, Policy, Scheduler};
+use forelem::storage::{read_rows, temp_path, write_rows, StorageCatalog};
+use forelem::util::{forall_seeds, Rng};
+
+/// Random multiset with mixed types.
+fn random_multiset(rng: &mut Rng, max_rows: usize) -> Multiset {
+    let schema = Schema::new(vec![
+        ("k", DataType::Str),
+        ("n", DataType::Int),
+        ("x", DataType::Float),
+        ("b", DataType::Bool),
+    ]);
+    let rows = 1 + rng.below(max_rows as u64) as usize;
+    let keys = 1 + rng.below(32) as usize;
+    let mut m = Multiset::new(schema);
+    for _ in 0..rows {
+        m.push(vec![
+            Value::str(format!("key{}", rng.below(keys as u64))),
+            Value::Int(rng.range(-1000, 1000)),
+            Value::Float((rng.f64() - 0.5) * 100.0),
+            Value::Bool(rng.below(2) == 1),
+        ]);
+    }
+    m
+}
+
+#[test]
+fn row_file_roundtrip_any_multiset() {
+    forall_seeds(25, |rng| {
+        let m = random_multiset(rng, 200);
+        let path = temp_path("prop");
+        write_rows(&path, &m).map_err(|e| e.to_string())?;
+        let back = read_rows(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        prop_assert!(m.bag_eq(&back), "roundtrip diverged ({} rows)", m.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn group_by_pipeline_agrees_across_all_configurations() {
+    // For random data + random compile options, the optimized pipeline
+    // must equal the plain reference interpreter.
+    forall_seeds(20, |rng| {
+        let m = random_multiset(rng, 400);
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("t", &m).unwrap();
+        let q = "SELECT k, COUNT(k) FROM t GROUP BY k";
+
+        let reference = {
+            let mut e = Engine::new(catalog.clone());
+            let out = e.sql(q).map_err(|e| e.to_string())?;
+            out.result().unwrap().clone()
+        };
+
+        let processors = 1 + rng.below(8) as usize;
+        let reformat = match rng.below(3) {
+            0 => ReformatMode::Off,
+            1 => ReformatMode::Force,
+            _ => ReformatMode::Auto { expected_runs: rng.below(100) },
+        };
+        let mut e = Engine::new(catalog).with_options(CompileOptions {
+            processors,
+            partition_field: if rng.below(2) == 1 { Some("k".into()) } else { None },
+            reformat,
+        });
+        let compiled = e.compile(q).map_err(|e| e.to_string())?;
+        let out = forelem::exec::run(&compiled.program, &e.catalog).map_err(|e| e.to_string())?;
+        prop_assert!(
+            out.result().unwrap().bag_eq(&reference),
+            "processors={processors} reformat={reformat:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn sum_aggregate_matches_scalar_fold() {
+    forall_seeds(15, |rng| {
+        let m = random_multiset(rng, 300);
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("t", &m).unwrap();
+        let mut e = Engine::new(catalog);
+        let out = e
+            .sql("SELECT k, SUM(x) FROM t GROUP BY k")
+            .map_err(|e| e.to_string())?;
+        // Oracle: plain fold over the multiset.
+        let mut want: std::collections::HashMap<String, f64> = Default::default();
+        for r in m.rows() {
+            *want.entry(r[0].to_string()).or_default() += r[2].as_float().unwrap();
+        }
+        let result = out.result().unwrap();
+        prop_assert!(result.len() == want.len(), "group count mismatch");
+        for r in result.rows() {
+            let k = r[0].to_string();
+            let got = r[1].as_float().unwrap();
+            prop_assert!(
+                (want[&k] - got).abs() < 1e-6,
+                "key {k}: {got} vs {}",
+                want[&k]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn schedulers_cover_exactly_once_under_random_failure_patterns() {
+    forall_seeds(40, |rng| {
+        let n = 1 + rng.below(5000) as usize;
+        let workers = 1 + rng.below(12) as usize;
+        let policies = [
+            Policy::FixedChunk(1 + rng.below(512) as usize),
+            Policy::Gss,
+            Policy::Trapezoid,
+            Policy::Factoring,
+            Policy::FeedbackGuided,
+            Policy::Hybrid {
+                super_chunks_per_worker: 1 + rng.below(6) as usize,
+            },
+        ];
+        let policy = policies[rng.below(policies.len() as u64) as usize];
+        let mut s = Scheduler::new(policy, n, workers);
+        let mut seen = vec![false; n];
+        let mut held: Vec<Chunk> = Vec::new();
+        let mut w = 0usize;
+        loop {
+            // Occasionally "fail": requeue a held chunk instead of
+            // completing it.
+            if !held.is_empty() && rng.below(4) == 0 {
+                let c = held.swap_remove(rng.below(held.len() as u64) as usize);
+                s.requeue(c);
+                continue;
+            }
+            match s.next_chunk(w % workers) {
+                Some(c) => {
+                    if rng.below(5) == 0 {
+                        held.push(c); // in flight, may be failed later
+                    } else {
+                        for i in c.lo..c.hi {
+                            prop_assert!(!seen[i], "{policy:?}: iteration {i} twice");
+                            seen[i] = true;
+                        }
+                    }
+                    w += 1;
+                }
+                None => {
+                    if held.is_empty() {
+                        break;
+                    }
+                    // Complete remaining held chunks.
+                    for c in held.drain(..) {
+                        for i in c.lo..c.hi {
+                            prop_assert!(!seen[i], "{policy:?}: iteration {i} twice");
+                            seen[i] = true;
+                        }
+                    }
+                }
+            }
+        }
+        prop_assert!(
+            seen.iter().all(|&b| b),
+            "{policy:?}: not all iterations issued (n={n}, workers={workers})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn dict_encoding_is_lossless_for_any_string_column() {
+    forall_seeds(20, |rng| {
+        let m = random_multiset(rng, 300);
+        let mut t = forelem::storage::Table::from_multiset(&m).unwrap();
+        t.dict_encode_field(0).map_err(|e| e.to_string())?;
+        for row in 0..t.len() {
+            prop_assert!(
+                t.value(row, 0) == *m.get(row, 0),
+                "row {row} changed after encoding"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transform_pipeline_never_invalidates_programs() {
+    use forelem::transform::{run_to_fixpoint, Pass, PassCtx};
+    forall_seeds(15, |rng| {
+        let m = random_multiset(rng, 100);
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("t", &m).unwrap();
+        let queries = [
+            "SELECT k, COUNT(k) FROM t GROUP BY k",
+            "SELECT k FROM t WHERE n > 0",
+            "SELECT k, n FROM t WHERE k = 'key0' AND n < 100",
+            "SELECT k, SUM(x) AS s, AVG(n) FROM t GROUP BY k",
+        ];
+        let q = queries[rng.below(queries.len() as u64) as usize];
+        let mut p =
+            forelem::sql::compile_sql(q, &catalog.schemas()).map_err(|e| e.to_string())?;
+        let reference = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+
+        let passes = forelem::transform::standard_pipeline();
+        let refs: Vec<&dyn Pass> = passes.iter().map(|b| b.as_ref()).collect();
+        let ctx = PassCtx::new()
+            .with_catalog(&catalog)
+            .with_processors(1 + rng.below(4) as usize);
+        run_to_fixpoint(&mut p, &refs, &ctx, 4).map_err(|e| e.to_string())?;
+        validate(&p).map_err(|e| format!("invalid after pipeline: {e}"))?;
+        let out = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+        prop_assert!(
+            out.result().unwrap().bag_eq(reference.result().unwrap()),
+            "pipeline changed semantics for `{q}`"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn hadoop_sim_equals_interpreter_for_random_tables() {
+    forall_seeds(10, |rng| {
+        let m = random_multiset(rng, 300);
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("t", &m).unwrap();
+        let p = forelem::sql::compile_sql(
+            "SELECT k, COUNT(k) FROM t GROUP BY k",
+            &catalog.schemas(),
+        )
+        .unwrap();
+        let reference = forelem::exec::run(&p, &catalog).unwrap();
+        let (mr, _) = forelem::mapreduce::derive(&p).map_err(|e| e.to_string())?;
+        let maps = 1 + rng.below(8) as usize;
+        let reducers = 1 + rng.below(4) as usize;
+        let h = forelem::mapreduce::run_hadoop(
+            &forelem::mapreduce::HadoopConfig::instant(maps, reducers),
+            &mr,
+            catalog.get("t").unwrap(),
+        )
+        .map_err(|e| e.to_string())?;
+        let mut want: Vec<(String, f64)> = reference
+            .result()
+            .unwrap()
+            .rows()
+            .iter()
+            .map(|r| (r[0].to_string(), r[1].as_int().unwrap() as f64))
+            .collect();
+        let mut got: Vec<(String, f64)> = h
+            .pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+        want.sort_by(|a, b| a.0.cmp(&b.0));
+        got.sort_by(|a, b| a.0.cmp(&b.0));
+        prop_assert!(want == got, "maps={maps} reducers={reducers}");
+        Ok(())
+    });
+}
