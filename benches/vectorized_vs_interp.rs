@@ -1,0 +1,91 @@
+//! Perf baseline: interpreter vs vectorized tier vs idiom kernels on the
+//! Figure-2 group-count workload (URL access count).
+//!
+//! Records the throughput ratio future perf PRs (SIMD, morsel-driven
+//! scheduling, NUMA partitioning) measure against. The acceptance bar for
+//! the vectorized tier is ≥ 3× interpreter throughput at 1M rows; the
+//! run prints a PASS/FAIL line for it. Row count scales via BENCH_ROWS.
+
+use forelem::exec;
+use forelem::exec::compile::compile_program;
+use forelem::sql::compile_sql;
+use forelem::storage::StorageCatalog;
+use forelem::util::{fmt_duration, time_fn};
+use forelem::workload::{access_log, AccessLogSpec};
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let urls = (rows / 20).max(100);
+    println!("# Vectorized vs interpreter (Figure-2 group count): {rows} rows, {urls} URLs");
+
+    let m = access_log(&AccessLogSpec {
+        rows,
+        urls,
+        skew: 1.1,
+        seed: 42,
+    });
+    let mut catalog = StorageCatalog::new();
+    catalog.insert_multiset("access", &m).unwrap();
+    let p = compile_sql(
+        "SELECT url, COUNT(url) FROM access GROUP BY url",
+        &catalog.schemas(),
+    )
+    .unwrap();
+
+    // Sanity: all tiers agree before we time anything.
+    let reference = exec::run(&p, &catalog).unwrap();
+    let vectorized = exec::run_vectorized(&p, &catalog)
+        .unwrap()
+        .expect("vectorized tier must support the Figure-2 workload");
+    assert!(
+        vectorized
+            .result()
+            .unwrap()
+            .bag_eq(reference.result().unwrap()),
+        "vectorized output diverged from the interpreter"
+    );
+
+    let interp = time_fn(1, 3, || exec::run(&p, &catalog).unwrap());
+    let vector = time_fn(1, 5, || {
+        exec::run_vectorized(&p, &catalog).unwrap().unwrap()
+    });
+    let cp = compile_program(&p, &catalog).expect("supported shape");
+    let vector_precompiled = time_fn(1, 5, || exec::run_compiled_program(&cp).unwrap());
+    let idiom = time_fn(1, 5, || exec::run_compiled(&p, &catalog, None).unwrap());
+
+    let mrows = rows as f64 / 1e6;
+    let throughput = |d: std::time::Duration| mrows / d.as_secs_f64();
+    println!(
+        "interpreter            {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(interp.median()),
+        throughput(interp.median())
+    );
+    println!(
+        "vectorized             {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(vector.median()),
+        throughput(vector.median())
+    );
+    println!(
+        "vectorized (precomp)   {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(vector_precompiled.median()),
+        throughput(vector_precompiled.median())
+    );
+    println!(
+        "idiom kernel           {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(idiom.median()),
+        throughput(idiom.median())
+    );
+
+    let speedup = interp.median().as_secs_f64() / vector.median().as_secs_f64();
+    println!(
+        "vectorized speedup over interpreter: {speedup:.1}x — {}",
+        if speedup >= 3.0 {
+            "PASS (>= 3x)"
+        } else {
+            "FAIL (< 3x acceptance bar)"
+        }
+    );
+}

@@ -1,0 +1,115 @@
+"""Pytest bootstrap for the python/ tree.
+
+Two offline-environment repairs, both no-ops when the real thing is
+available:
+
+* puts this directory on ``sys.path`` so ``from compile import ...``
+  resolves regardless of pytest's rootdir;
+* installs a minimal fallback implementation of the ``hypothesis`` API
+  surface the tests use (``given``/``settings``/``strategies``) when the
+  real package is not installed. The fallback runs each property over a
+  deterministic seed sweep — weaker shrinking than hypothesis, but the
+  same oracle coverage, mirroring ``forelem::util::forall_seeds`` on the
+  Rust side.
+"""
+
+import os
+import random
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import functools
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value=0, max_value=1 << 31):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, width=64, **_kw):
+        del width  # the fallback always draws doubles; tests cast anyway
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+    def _lists(elements, min_size=0, max_size=16):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def _sampled_from(options):
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def _settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        del deadline  # the fallback enforces no deadlines
+
+        def decorate(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    def _given(**strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # @settings is applied OUTSIDE @given, so the attribute
+                # lands on this wrapper, not on fn.
+                max_examples = getattr(
+                    runner, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES
+                )
+                for seed in range(max_examples):
+                    rng = random.Random(seed)
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property failed at fallback seed {seed}: "
+                            f"{drawn!r}"
+                        ) from e
+
+            # Hide the drawn parameters from pytest's fixture resolution:
+            # without this, inspect.signature follows __wrapped__ and
+            # pytest tries to supply e.g. `vw` as a fixture.
+            del runner.__wrapped__
+            return runner
+
+        return decorate
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.tuples = _tuples
+    _st.lists = _lists
+    _st.sampled_from = _sampled_from
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    _hyp.__fallback__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -169,57 +169,52 @@ impl Acc {
 }
 
 /// Compute the partial aggregate for chunk `[lo, hi)` of the job's table.
-/// This is the worker inner loop — the generated-code analogue, shared
-/// with exec::plan's sequential idioms.
+/// This is the worker inner loop — the generated-code analogue. The dense
+/// integer-keyed loops are the shared batch kernels in `exec::vector`, the
+/// same primitives the vectorized executor's fused aggregations and
+/// `exec::plan`'s native idiom fallbacks drive — one code path for all
+/// three tiers.
 pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
+    use crate::exec::vector::{
+        count_batch_i64_f64, count_batch_strs, count_batch_u32_f64, sum_batch_i64, sum_batch_u32,
+    };
     let t = &job.table;
     match job.num_keys {
         Some(num_keys) => {
             let mut acc = vec![0.0f64; num_keys];
             match (job.op, t.column(job.key_field)) {
                 (AggOp::Count, Column::DictStrs { keys, .. }) => {
-                    for &k in &keys[lo..hi] {
-                        acc[k as usize] += 1.0;
-                    }
+                    count_batch_u32_f64(&keys[lo..hi], &mut acc);
                 }
                 (AggOp::Count, Column::Ints(keys)) => {
-                    for &k in &keys[lo..hi] {
-                        acc[k as usize] += 1.0;
-                    }
+                    count_batch_i64_f64(&keys[lo..hi], &mut acc);
                 }
                 (AggOp::Sum, kcol) => {
-                    let vals = t
-                        .column(job.val_field.expect("sum job needs val_field"))
-                        .float_slice()
-                        .map(|s| s.to_vec())
-                        .unwrap_or_else(|| {
-                            (lo..hi).map(|r| {
-                                t.value(r, job.val_field.unwrap()).as_float().unwrap_or(0.0)
-                            })
-                            .collect()
-                        });
-                    let val_at = |i: usize| {
-                        if vals.len() == t.len() {
-                            vals[i]
-                        } else {
-                            vals[i - lo]
+                    let vf = job.val_field.expect("sum job needs val_field");
+                    // Aligned [lo, hi) window of values: borrowed when the
+                    // column is already a float slice, materialized
+                    // otherwise.
+                    let owned: Vec<f64>;
+                    let window: &[f64] = match t.column(vf).float_slice() {
+                        Some(s) => &s[lo..hi],
+                        None => {
+                            owned = (lo..hi)
+                                .map(|r| t.value(r, vf).as_float().unwrap_or(0.0))
+                                .collect();
+                            &owned
                         }
                     };
                     match kcol {
                         Column::DictStrs { keys, .. } => {
-                            for (i, &k) in keys[lo..hi].iter().enumerate() {
-                                acc[k as usize] += val_at(lo + i);
-                            }
+                            sum_batch_u32(&keys[lo..hi], window, &mut acc);
                         }
                         Column::Ints(keys) => {
-                            for (i, &k) in keys[lo..hi].iter().enumerate() {
-                                acc[k as usize] += val_at(lo + i);
-                            }
+                            sum_batch_i64(&keys[lo..hi], window, &mut acc);
                         }
                         _ => {
-                            for r in lo..hi {
+                            for (i, r) in (lo..hi).enumerate() {
                                 let k = t.value(r, job.key_field).as_int().unwrap() as usize;
-                                acc[k] += val_at(r);
+                                acc[k] += window[i];
                             }
                         }
                     }
@@ -240,14 +235,10 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
             // dominant cost otherwise — see EXPERIMENTS.md §Perf).
             if job.op == AggOp::Count {
                 if let Column::Strs(vals) = t.column(job.key_field) {
-                    let mut map: FxHashMap<&std::sync::Arc<str>, f64> = FxHashMap::default();
-                    for s in &vals[lo..hi] {
-                        *map.entry(s).or_insert(0.0) += 1.0;
-                    }
+                    let mut map: FxHashMap<std::sync::Arc<str>, f64> = FxHashMap::default();
+                    count_batch_strs(&vals[lo..hi], &mut map);
                     return Partial::Assoc(
-                        map.into_iter()
-                            .map(|(s, n)| (Value::Str(s.clone()), n))
-                            .collect(),
+                        map.into_iter().map(|(s, n)| (Value::Str(s), n)).collect(),
                     );
                 }
             }

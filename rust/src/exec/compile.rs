@@ -1,0 +1,820 @@
+//! One-pass compiler from IR to slot-resolved register programs.
+//!
+//! The reference interpreter (`local.rs`) re-walks the `Expr` tree for
+//! every row and resolves every variable, cursor field and accumulator
+//! array by string comparison. This module performs all of that name
+//! resolution **once**: expressions become flat register programs
+//! ([`ExprProg`]) whose operands are integer slots, and statements become
+//! [`CStmt`] trees whose loops carry pre-resolved tables, field ids and
+//! (when the body is a recognized single-statement aggregation) a fused
+//! batch kernel tag ([`FastAgg`]). The vectorized executor (`vector.rs`)
+//! then drives the compiled form in column batches.
+//!
+//! Compilation is *total or nothing*: [`compile_program`] returns `None`
+//! for any program shape outside the supported tier (nested data loops,
+//! value partitions, distinct-value domains, assignments that the
+//! interpreter's scope stack would treat subtly differently), so the
+//! dispatch in `plan.rs` can fall back to the interpreter and observable
+//! behaviour — including error behaviour — is preserved exactly.
+
+use std::sync::Arc;
+
+use crate::ir::{
+    AccumOp, BinOp, Domain, Expr, Loop, LoopKind, Program, Schema, SlotMap, Stmt, Strategy, UnOp,
+    Value,
+};
+use crate::storage::{StorageCatalog, Table};
+
+/// A flat register program for one expression. Ops write to registers;
+/// the value of the expression ends up in `out`.
+#[derive(Debug, Clone)]
+pub struct ExprProg {
+    pub ops: Vec<Op>,
+    /// Registers used by this program (including any nested `Sum` body).
+    pub n_regs: usize,
+    /// Register holding the final value.
+    pub out: usize,
+}
+
+/// One register operation. All names are resolved: `slot` indexes the
+/// scalar slot table, `cursor`/`field` index cursor slots and table
+/// columns, `array` indexes the accumulator-array table.
+#[derive(Debug, Clone)]
+pub enum Op {
+    Const { dst: usize, v: Value },
+    LoadScalar { dst: usize, slot: usize },
+    LoadField { dst: usize, cursor: usize, field: usize },
+    ReadArray { dst: usize, array: usize, idx: Vec<usize> },
+    Binary { dst: usize, op: BinOp, lhs: usize, rhs: usize },
+    Unary { dst: usize, op: UnOp, src: usize },
+    /// `regs[dst] = Bool(regs[src].truthy())` — the && / || result form.
+    Truthy { dst: usize, src: usize },
+    /// Skip the next `n` ops when `regs[src]` is truthy (|| short-circuit).
+    SkipIfTrue { src: usize, n: usize },
+    /// Skip the next `n` ops when `regs[src]` is falsy (&& short-circuit).
+    SkipIfFalse { src: usize, n: usize },
+    /// `Σ_{k=1}^{parts} body` with `k` bound to scalar `slot` — the
+    /// cross-partition reduction of §IV.
+    Sum {
+        dst: usize,
+        slot: usize,
+        parts: usize,
+        body: Box<ExprProg>,
+    },
+}
+
+/// A compiled statement.
+#[derive(Debug, Clone)]
+pub enum CStmt {
+    Assign { slot: usize, value: ExprProg },
+    Accum {
+        array: usize,
+        idx: Vec<ExprProg>,
+        op: AccumOp,
+        value: ExprProg,
+    },
+    Result { result: usize, tuple: Vec<ExprProg> },
+    If {
+        cond: ExprProg,
+        then: Vec<CStmt>,
+        els: Vec<CStmt>,
+    },
+    Print { format: String, args: Vec<ExprProg> },
+    /// Integer range loop (`for` / `forall` over a range). `forall` runs
+    /// sequentially here; `exec::parallel` fans top-level ones out.
+    Range {
+        kind: LoopKind,
+        slot: usize,
+        lo: ExprProg,
+        hi: ExprProg,
+        body: Vec<CStmt>,
+    },
+    Scan(ScanLoop),
+}
+
+/// A compiled `forelem` loop over an index set: the unit the vectorized
+/// executor drives in column batches.
+#[derive(Debug, Clone)]
+pub struct ScanLoop {
+    pub table: Arc<Table>,
+    /// Cursor slot the loop variable binds.
+    pub cursor: usize,
+    /// `pA.field[v]` equality filter: (field id, key expression). The key
+    /// is evaluated once per loop entry, in the enclosing scope.
+    pub filter: Option<(usize, ExprProg)>,
+    /// `pA.distinct(field)`: iterate one representative row per distinct
+    /// value of this field. When set, `filter` is ignored (interpreter
+    /// parity: the distinct branch takes precedence).
+    pub distinct: Option<usize>,
+    /// Direct partition restriction: (part, parts) expressions.
+    pub partition: Option<(ExprProg, ExprProg)>,
+    pub body: Vec<CStmt>,
+    /// Whole-loop fused aggregation, when the body is a recognized
+    /// single-statement accumulation. The generic `body` is kept too: the
+    /// fast path only fires when its target array is empty at loop entry
+    /// (so float fold order matches the interpreter exactly).
+    pub fast: Option<FastAgg>,
+}
+
+/// Recognized single-statement batch aggregations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FastAgg {
+    /// `count[i.key]++` with integer-zero init.
+    Count { array: usize, key_field: usize },
+    /// `sum[i.key] += i.val` with zero init and a numeric value column.
+    Sum {
+        array: usize,
+        key_field: usize,
+        val_field: usize,
+    },
+}
+
+/// A whole program compiled to slot-resolved form. Shareable across
+/// threads (`Arc<CompiledProgram>` in `exec::parallel`).
+#[derive(Debug, Clone)]
+pub struct CompiledProgram {
+    /// Names backing the slots (for `Output` export).
+    pub slots: SlotMap,
+    /// Initial values per scalar slot. The first
+    /// `slots.scalars.len()` entries are the declared scalars (exported
+    /// on finish); later entries are loop variables and synthesized
+    /// assignment targets.
+    pub scalar_inits: Vec<Value>,
+    /// Initial element value per accumulator array slot.
+    pub array_inits: Vec<Value>,
+    /// Result schema per result slot.
+    pub result_schemas: Vec<Schema>,
+    pub n_cursors: usize,
+    /// Maximum register count over all expression programs.
+    pub n_regs: usize,
+    pub body: Vec<CStmt>,
+}
+
+/// Compile a program against a catalog. Returns `None` when the program
+/// uses any construct outside the vectorized tier — callers fall back to
+/// the reference interpreter, which preserves observable behaviour
+/// (including error messages for invalid programs).
+pub fn compile_program(p: &Program, catalog: &StorageCatalog) -> Option<CompiledProgram> {
+    let slots = p.slot_map();
+    let array_inits = slots
+        .arrays
+        .iter()
+        .map(|name| p.arrays[name].init.clone())
+        .collect();
+    let result_schemas = slots
+        .results
+        .iter()
+        .map(|name| p.results[name].clone())
+        .collect();
+    let mut c = Compiler {
+        program: p,
+        catalog,
+        scopes: Vec::new(),
+        scalar_inits: Vec::new(),
+        slots,
+        cursors: Vec::new(),
+        n_cursors: 0,
+        n_regs: 0,
+        no_fresh_binds: 0,
+        range_depth: 0,
+    };
+    for (slot, name) in c.slots.scalars.clone().into_iter().enumerate() {
+        c.scalar_inits.push(p.scalars[&name].clone());
+        c.scopes.push((name, slot));
+    }
+    let body = c.stmts(&p.body)?;
+    Some(CompiledProgram {
+        scalar_inits: c.scalar_inits,
+        array_inits,
+        result_schemas,
+        n_cursors: c.n_cursors,
+        n_regs: c.n_regs,
+        body,
+        slots: c.slots,
+    })
+}
+
+struct Compiler<'a> {
+    program: &'a Program,
+    catalog: &'a StorageCatalog,
+    /// Compile-time mirror of the interpreter's env stack: innermost last.
+    scopes: Vec<(String, usize)>,
+    scalar_inits: Vec<Value>,
+    slots: SlotMap,
+    /// Active forelem cursors: (loop var, table, cursor slot).
+    cursors: Vec<(String, Arc<Table>, usize)>,
+    n_cursors: usize,
+    n_regs: usize,
+    /// Depth of contexts (loops, `If` branches) where a fresh assignment
+    /// target cannot soundly be pre-allocated a slot.
+    no_fresh_binds: usize,
+    /// Depth of enclosing range loops (repeat contexts for scans).
+    range_depth: usize,
+}
+
+impl<'a> Compiler<'a> {
+    fn stmts(&mut self, body: &[Stmt]) -> Option<Vec<CStmt>> {
+        body.iter().map(|s| self.stmt(s)).collect()
+    }
+
+    fn stmt(&mut self, s: &Stmt) -> Option<CStmt> {
+        match s {
+            Stmt::Assign { var, value } => {
+                let value = self.expr_prog(value)?;
+                let slot = match self.scopes.iter().rev().find(|(n, _)| n == var) {
+                    Some((_, slot)) => *slot,
+                    None => {
+                        // The interpreter's `set_var` pushes a fresh env
+                        // entry at runtime; a compile-time slot would make
+                        // the binding unconditionally visible. Only
+                        // compile fresh targets in straight-line top-level
+                        // code, where the interpreter binds them
+                        // unconditionally too (inside loops the push/pop
+                        // discipline differs; inside `If` branches the
+                        // binding may never happen at runtime).
+                        if self.no_fresh_binds > 0 {
+                            return None;
+                        }
+                        let slot = self.scalar_inits.len();
+                        self.scalar_inits.push(Value::Null);
+                        self.scopes.push((var.clone(), slot));
+                        slot
+                    }
+                };
+                Some(CStmt::Assign { slot, value })
+            }
+            Stmt::Accum {
+                array,
+                indices,
+                op,
+                value,
+            } => {
+                let array = self.slots.array_slot(array)?;
+                let idx = indices
+                    .iter()
+                    .map(|e| self.expr_prog(e))
+                    .collect::<Option<Vec<_>>>()?;
+                let value = self.expr_prog(value)?;
+                Some(CStmt::Accum {
+                    array,
+                    idx,
+                    op: *op,
+                    value,
+                })
+            }
+            Stmt::ResultUnion { result, tuple } => {
+                let result = self.slots.result_slot(result)?;
+                let tuple = tuple
+                    .iter()
+                    .map(|e| self.expr_prog(e))
+                    .collect::<Option<Vec<_>>>()?;
+                Some(CStmt::Result { result, tuple })
+            }
+            Stmt::If { cond, then, els } => {
+                let cond = self.expr_prog(cond)?;
+                // Branch bodies run conditionally: fresh bindings inside
+                // them are unsound to pre-allocate (see Assign above).
+                self.no_fresh_binds += 1;
+                let then = self.stmts(then);
+                let els = self.stmts(els);
+                self.no_fresh_binds -= 1;
+                Some(CStmt::If {
+                    cond,
+                    then: then?,
+                    els: els?,
+                })
+            }
+            Stmt::Print { format, args } => {
+                let args = args
+                    .iter()
+                    .map(|e| self.expr_prog(e))
+                    .collect::<Option<Vec<_>>>()?;
+                Some(CStmt::Print {
+                    format: format.clone(),
+                    args,
+                })
+            }
+            Stmt::Loop(l) => self.compile_loop(l),
+        }
+    }
+
+    fn compile_loop(&mut self, l: &Loop) -> Option<CStmt> {
+        match &l.domain {
+            Domain::Range { lo, hi } => {
+                let lo = self.expr_prog(lo)?;
+                let hi = self.expr_prog(hi)?;
+                let slot = self.scalar_inits.len();
+                self.scalar_inits.push(Value::Null);
+                self.scopes.push((l.var.clone(), slot));
+                self.no_fresh_binds += 1;
+                self.range_depth += 1;
+                let body = self.stmts(&l.body);
+                self.range_depth -= 1;
+                self.no_fresh_binds -= 1;
+                self.scopes.pop();
+                Some(CStmt::Range {
+                    kind: l.kind,
+                    slot,
+                    lo,
+                    hi,
+                    body: body?,
+                })
+            }
+            Domain::IndexSet(ix) => {
+                // One data loop at a time: nested forelem loops (joins)
+                // keep the interpreter's index strategies.
+                if !self.cursors.is_empty() {
+                    return None;
+                }
+                // A filtered scan the materialization pass gave an index
+                // strategy, sitting inside a range loop, would probe a
+                // cached hash/tree index once per iteration on the
+                // interpreter; vectorizing it as repeated full scans
+                // would negate that choice. Leave those on the
+                // interpreter tier.
+                if ix.field_filter.is_some()
+                    && matches!(ix.strategy, Strategy::Hash | Strategy::Tree)
+                    && self.range_depth > 0
+                {
+                    return None;
+                }
+                let table = self.catalog.get(&ix.relation).ok()?.clone();
+                let filter = match &ix.field_filter {
+                    Some((field, value)) => {
+                        let fid = table.schema.field_id(field)?;
+                        Some((fid, self.expr_prog(value)?))
+                    }
+                    None => None,
+                };
+                let distinct = match &ix.distinct {
+                    Some(field) => Some(table.schema.field_id(field)?),
+                    None => None,
+                };
+                let partition = match &ix.partition {
+                    Some(p) => Some((self.expr_prog(&p.part)?, self.expr_prog(&p.parts)?)),
+                    None => None,
+                };
+                let cursor = self.n_cursors;
+                self.n_cursors += 1;
+                self.cursors.push((l.var.clone(), table.clone(), cursor));
+                self.no_fresh_binds += 1;
+                let body = self.stmts(&l.body);
+                self.no_fresh_binds -= 1;
+                self.cursors.pop();
+                let body = body?;
+                let fast = if filter.is_none() && distinct.is_none() {
+                    self.detect_fast(l, &table)
+                } else {
+                    None
+                };
+                Some(CStmt::Scan(ScanLoop {
+                    table,
+                    cursor,
+                    filter,
+                    distinct,
+                    partition,
+                    body,
+                    fast,
+                }))
+            }
+            // Indirect (value) partitioning and distinct-value domains
+            // stay on the interpreter tier.
+            Domain::ValuePartition { .. } | Domain::DistinctValues { .. } => None,
+        }
+    }
+
+    /// Recognize `forelem i { a[i.key] (+)= v }` bodies that the batch
+    /// kernels can execute. Zero-init guards keep the accumulation value
+    /// types (and float fold results) bit-identical to the interpreter.
+    fn detect_fast(&self, l: &Loop, table: &Arc<Table>) -> Option<FastAgg> {
+        use crate::storage::Column;
+        let [Stmt::Accum {
+            array,
+            indices,
+            op: AccumOp::Add,
+            value,
+        }] = l.body.as_slice()
+        else {
+            return None;
+        };
+        let [Expr::Field { var, field }] = indices.as_slice() else {
+            return None;
+        };
+        if var != &l.var {
+            return None;
+        }
+        let key_field = table.schema.field_id(field)?;
+        if !matches!(
+            table.column(key_field),
+            Column::Ints(_) | Column::DictStrs { .. } | Column::Strs(_)
+        ) {
+            return None;
+        }
+        let slot = self.slots.array_slot(array)?;
+        let init = &self.program.arrays[array].init;
+        match value {
+            Expr::Const(Value::Int(1)) if matches!(init, Value::Int(0)) => Some(FastAgg::Count {
+                array: slot,
+                key_field,
+            }),
+            Expr::Field {
+                var: vvar,
+                field: vfield,
+            } if vvar == &l.var => {
+                let val_field = table.schema.field_id(vfield)?;
+                let zero_init = match (table.column(val_field), init) {
+                    // i64 accumulation requires a strict Int(0) start.
+                    (Column::Ints(_), Value::Int(0)) => true,
+                    // f64 accumulation: Int(0) and +0.0 fold identically.
+                    (Column::Floats(_), Value::Int(0)) => true,
+                    (Column::Floats(_), Value::Float(f)) => f.to_bits() == 0f64.to_bits(),
+                    _ => false,
+                };
+                if zero_init {
+                    Some(FastAgg::Sum {
+                        array: slot,
+                        key_field,
+                        val_field,
+                    })
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Compile one expression into a fresh register program.
+    fn expr_prog(&mut self, e: &Expr) -> Option<ExprProg> {
+        let mut ops = Vec::new();
+        let mut regs = 0usize;
+        let out = self.expr(e, &mut ops, &mut regs)?;
+        self.n_regs = self.n_regs.max(regs);
+        Some(ExprProg {
+            ops,
+            n_regs: regs,
+            out,
+        })
+    }
+
+    fn expr(&mut self, e: &Expr, ops: &mut Vec<Op>, regs: &mut usize) -> Option<usize> {
+        let mut alloc = |regs: &mut usize| {
+            let r = *regs;
+            *regs += 1;
+            r
+        };
+        match e {
+            Expr::Const(v) => {
+                let dst = alloc(regs);
+                ops.push(Op::Const {
+                    dst,
+                    v: v.clone(),
+                });
+                Some(dst)
+            }
+            Expr::Var(name) => {
+                // Interpreter resolution order: env (innermost first),
+                // then params. Params are immutable → folded to consts.
+                if let Some((_, slot)) = self.scopes.iter().rev().find(|(n, _)| n == name) {
+                    let dst = alloc(regs);
+                    ops.push(Op::LoadScalar { dst, slot: *slot });
+                    return Some(dst);
+                }
+                if let Some(v) = self.program.params.get(name) {
+                    let dst = alloc(regs);
+                    ops.push(Op::Const {
+                        dst,
+                        v: v.clone(),
+                    });
+                    return Some(dst);
+                }
+                None
+            }
+            Expr::Field { var, field } => {
+                let (_, table, cursor) =
+                    self.cursors.iter().rev().find(|(n, _, _)| n == var)?;
+                let fid = table.schema.field_id(field)?;
+                let cursor = *cursor;
+                let dst = alloc(regs);
+                ops.push(Op::LoadField {
+                    dst,
+                    cursor,
+                    field: fid,
+                });
+                Some(dst)
+            }
+            Expr::ArrayRef { array, indices } => {
+                let slot = self.slots.array_slot(array)?;
+                let idx = indices
+                    .iter()
+                    .map(|i| self.expr(i, ops, regs))
+                    .collect::<Option<Vec<_>>>()?;
+                let dst = alloc(regs);
+                ops.push(Op::ReadArray {
+                    dst,
+                    array: slot,
+                    idx,
+                });
+                Some(dst)
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                if *op == BinOp::And || *op == BinOp::Or {
+                    let l = self.expr(lhs, ops, regs)?;
+                    let dst = alloc(regs);
+                    ops.push(Op::Truthy { dst, src: l });
+                    let jump_at = ops.len();
+                    // Placeholder; patched after the rhs block is emitted.
+                    ops.push(if *op == BinOp::And {
+                        Op::SkipIfFalse { src: dst, n: 0 }
+                    } else {
+                        Op::SkipIfTrue { src: dst, n: 0 }
+                    });
+                    let r = self.expr(rhs, ops, regs)?;
+                    ops.push(Op::Truthy { dst, src: r });
+                    let n = ops.len() - jump_at - 1;
+                    match &mut ops[jump_at] {
+                        Op::SkipIfFalse { n: slot, .. } | Op::SkipIfTrue { n: slot, .. } => {
+                            *slot = n
+                        }
+                        _ => unreachable!(),
+                    }
+                    return Some(dst);
+                }
+                let l = self.expr(lhs, ops, regs)?;
+                let r = self.expr(rhs, ops, regs)?;
+                let dst = alloc(regs);
+                ops.push(Op::Binary {
+                    dst,
+                    op: *op,
+                    lhs: l,
+                    rhs: r,
+                });
+                Some(dst)
+            }
+            Expr::Unary { op, expr } => {
+                let src = self.expr(expr, ops, regs)?;
+                let dst = alloc(regs);
+                ops.push(Op::Unary {
+                    dst,
+                    op: *op,
+                    src,
+                });
+                Some(dst)
+            }
+            Expr::SumOverParts { var, parts, body } => {
+                let parts = self.expr(parts, ops, regs)?;
+                let slot = self.scalar_inits.len();
+                self.scalar_inits.push(Value::Null);
+                self.scopes.push((var.clone(), slot));
+                // The body shares this program's register numbering so one
+                // scratch buffer serves the whole evaluation.
+                let mut body_ops = Vec::new();
+                let body_out = self.expr(body, &mut body_ops, regs);
+                self.scopes.pop();
+                let body_out = body_out?;
+                let dst = alloc(regs);
+                ops.push(Op::Sum {
+                    dst,
+                    slot,
+                    parts,
+                    body: Box::new(ExprProg {
+                        ops: body_ops,
+                        n_regs: *regs,
+                        out: body_out,
+                    }),
+                });
+                Some(dst)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDecl, DataType, IndexSet, Multiset};
+    use crate::sql::compile_sql;
+    use crate::storage::StorageCatalog;
+
+    fn catalog() -> StorageCatalog {
+        let schema = Schema::new(vec![("url", DataType::Str), ("ms", DataType::Float)]);
+        let mut m = Multiset::new(schema);
+        for (u, ms) in [("/a", 1.0), ("/b", 2.0), ("/a", 3.0)] {
+            m.push(vec![Value::str(u), Value::Float(ms)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        c
+    }
+
+    #[test]
+    fn group_count_compiles_with_fast_agg() {
+        let c = catalog();
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).expect("supported shape");
+        assert_eq!(cp.body.len(), 2);
+        let CStmt::Scan(acc) = &cp.body[0] else {
+            panic!("expected scan loop");
+        };
+        assert!(matches!(acc.fast, Some(FastAgg::Count { .. })));
+        let CStmt::Scan(emit) = &cp.body[1] else {
+            panic!("expected scan loop");
+        };
+        assert!(emit.distinct.is_some());
+        assert!(emit.fast.is_none());
+    }
+
+    #[test]
+    fn group_sum_detects_fast_sum() {
+        let c = catalog();
+        let p = compile_sql(
+            "SELECT url, SUM(ms) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).expect("supported shape");
+        let CStmt::Scan(acc) = &cp.body[0] else {
+            panic!("expected scan loop");
+        };
+        assert!(matches!(acc.fast, Some(FastAgg::Sum { .. })));
+    }
+
+    #[test]
+    fn joins_fall_back_to_interpreter() {
+        let mut c = StorageCatalog::new();
+        let a = Multiset::with_rows(
+            Schema::new(vec![("b_id", DataType::Int)]),
+            vec![vec![Value::Int(1)]],
+        );
+        let b = Multiset::with_rows(
+            Schema::new(vec![("id", DataType::Int)]),
+            vec![vec![Value::Int(1)]],
+        );
+        c.insert_multiset("A", &a).unwrap();
+        c.insert_multiset("B", &b).unwrap();
+        let p = compile_sql(
+            "SELECT A.b_id FROM A JOIN B ON A.b_id = B.id",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert!(compile_program(&p, &c).is_none());
+    }
+
+    #[test]
+    fn unbound_names_fall_back() {
+        let c = catalog();
+        let mut p = Program::new("bad")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_result("R", Schema::new(vec![("x", DataType::Int)]));
+        p.body = vec![Stmt::result_union("R", vec![Expr::var("nope")])];
+        assert!(compile_program(&p, &c).is_none());
+    }
+
+    #[test]
+    fn fresh_assign_inside_if_falls_back() {
+        // A first-time assignment inside a conditionally-executed branch
+        // must not be pre-bound to a slot: the interpreter only creates
+        // the binding when the branch runs.
+        let c = catalog();
+        let mut p = Program::new("cond")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_scalar("flag", Value::Bool(false));
+        p.body = vec![Stmt::If {
+            cond: Expr::var("flag"),
+            then: vec![Stmt::assign("x", Expr::int(1))],
+            els: vec![],
+        }];
+        assert!(compile_program(&p, &c).is_none());
+        // Assigning to a *declared* scalar inside a branch stays fine.
+        let mut p2 = Program::new("cond2")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_scalar("flag", Value::Bool(false))
+            .with_scalar("x", Value::Int(0));
+        p2.body = vec![Stmt::If {
+            cond: Expr::var("flag"),
+            then: vec![Stmt::assign("x", Expr::int(1))],
+            els: vec![],
+        }];
+        assert!(compile_program(&p2, &c).is_some());
+    }
+
+    #[test]
+    fn indexed_strategy_probe_inside_range_loop_falls_back() {
+        // A hash-strategy filtered scan repeated by a range loop keeps the
+        // interpreter's cached index probes instead of K full scans.
+        use crate::ir::Strategy;
+        let c = catalog();
+        let mut p = Program::new("probe")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_result("R", Schema::new(vec![("url", DataType::Str)]));
+        p.body = vec![Stmt::Loop(Loop::for_range(
+            "k",
+            Expr::int(1),
+            Expr::int(3),
+            vec![Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::filtered("access", "url", Expr::str("/a"))
+                    .with_strategy(Strategy::Hash),
+                vec![Stmt::result_union("R", vec![Expr::field("i", "url")])],
+            ))],
+        ))];
+        assert!(compile_program(&p, &c).is_none());
+        // The same scan at top level (runs once) stays vectorized.
+        let mut p2 = Program::new("probe2")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_result("R", Schema::new(vec![("url", DataType::Str)]));
+        p2.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::filtered("access", "url", Expr::str("/a")).with_strategy(Strategy::Hash),
+            vec![Stmt::result_union("R", vec![Expr::field("i", "url")])],
+        ))];
+        assert!(compile_program(&p2, &c).is_some());
+    }
+
+    #[test]
+    fn params_fold_to_constants() {
+        let c = catalog();
+        let mut p = Program::new("p")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_param("N", Value::Int(4))
+            .with_scalar("x", Value::Int(0));
+        p.body = vec![Stmt::assign("x", Expr::var("N"))];
+        let cp = compile_program(&p, &c).unwrap();
+        let CStmt::Assign { value, .. } = &cp.body[0] else {
+            panic!("expected assign");
+        };
+        assert!(matches!(
+            value.ops.as_slice(),
+            [Op::Const { v: Value::Int(4), .. }]
+        ));
+    }
+
+    #[test]
+    fn partitioned_forall_compiles() {
+        let c = catalog();
+        let mut p = Program::new("part")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_array("count", ArrayDecl::counter())
+            .with_param("N", Value::Int(2))
+            .with_result(
+                "R",
+                Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]),
+            );
+        p.body = vec![
+            Stmt::Loop(Loop::forall_range(
+                "k",
+                Expr::int(1),
+                Expr::var("N"),
+                vec![Stmt::Loop(Loop::forelem(
+                    "i",
+                    IndexSet::all("access").with_partition(Expr::var("k"), Expr::var("N")),
+                    vec![Stmt::increment("count", vec![Expr::field("i", "url")])],
+                ))],
+            )),
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::distinct_of("access", "url"),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![
+                        Expr::field("i", "url"),
+                        Expr::array("count", vec![Expr::field("i", "url")]),
+                    ],
+                )],
+            )),
+        ];
+        let cp = compile_program(&p, &c).expect("supported shape");
+        let CStmt::Range { kind, body, .. } = &cp.body[0] else {
+            panic!("expected range loop");
+        };
+        assert_eq!(*kind, LoopKind::Forall);
+        assert!(matches!(body.as_slice(), [CStmt::Scan(_)]));
+    }
+
+    #[test]
+    fn sum_over_parts_compiles() {
+        let c = catalog();
+        let mut p = Program::new("sum")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_array("count", ArrayDecl::counter())
+            .with_param("N", Value::Int(3))
+            .with_scalar("total", Value::Int(0));
+        p.body = vec![Stmt::assign(
+            "total",
+            Expr::SumOverParts {
+                var: "k".into(),
+                parts: Box::new(Expr::var("N")),
+                body: Box::new(Expr::array("count", vec![Expr::var("k")])),
+            },
+        )];
+        let cp = compile_program(&p, &c).expect("supported shape");
+        let CStmt::Assign { value, .. } = &cp.body[0] else {
+            panic!("expected assign");
+        };
+        assert!(value.ops.iter().any(|o| matches!(o, Op::Sum { .. })));
+    }
+}

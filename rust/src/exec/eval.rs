@@ -1,13 +1,13 @@
 //! Expression evaluation: environments, value arithmetic, accumulator
 //! array store.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::ir::{AccumOp, BinOp, Expr, Program, Tuple, UnOp, Value};
 use crate::storage::Table;
+use crate::util::FxHashMap;
 
 /// A tuple cursor: the binding a `forelem` variable gets.
 #[derive(Debug, Clone)]
@@ -73,7 +73,7 @@ impl Env {
 /// to values. The recognized-idiom fast paths bypass this entirely.
 #[derive(Debug, Default, Clone)]
 pub struct ArrayStore {
-    arrays: HashMap<String, HashMap<Tuple, Value>>,
+    arrays: FxHashMap<String, FxHashMap<Tuple, Value>>,
 }
 
 impl ArrayStore {
@@ -120,7 +120,9 @@ impl ArrayStore {
     }
 }
 
-fn apply_accum(op: AccumOp, old: &Value, new: &Value) -> Value {
+/// Combine an accumulator slot with an incoming value. Shared with the
+/// vectorized tier (`vector.rs`) so merge semantics cannot drift.
+pub(crate) fn apply_accum(op: AccumOp, old: &Value, new: &Value) -> Value {
     match op {
         AccumOp::Set => new.clone(),
         AccumOp::Add => value_binop(BinOp::Add, old, new).unwrap_or_else(|_| new.clone()),
@@ -139,6 +141,21 @@ fn apply_accum(op: AccumOp, old: &Value, new: &Value) -> Value {
             }
         }
     }
+}
+
+/// Render a `Print` statement: substitute `{}` placeholders left to
+/// right, appending overflow values. Shared by the interpreter and the
+/// vectorized tier so print-stream parity cannot drift.
+pub(crate) fn format_print(format: &str, args: &[Value]) -> String {
+    let mut text = format.to_string();
+    for v in args {
+        if let Some(pos) = text.find("{}") {
+            text.replace_range(pos..pos + 2, &v.to_string());
+        } else {
+            text.push_str(&format!(" {v}"));
+        }
+    }
+    text
 }
 
 /// Evaluate a binary operation on two values (Int/Float promotion).

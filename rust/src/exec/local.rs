@@ -158,17 +158,11 @@ impl<'a> Interp<'a> {
                 }
             }
             Stmt::Print { format, args } => {
-                let mut text = format.clone();
-                for a in args {
-                    let v = eval(a, &self.env, &self.arrays, self.program)?;
-                    // Replace the first `{}`-style placeholder.
-                    if let Some(pos) = text.find("{}") {
-                        text.replace_range(pos..pos + 2, &v.to_string());
-                    } else {
-                        text.push_str(&format!(" {v}"));
-                    }
-                }
-                self.prints.push(text);
+                let values: Vec<Value> = args
+                    .iter()
+                    .map(|a| eval(a, &self.env, &self.arrays, self.program))
+                    .collect::<Result<_>>()?;
+                self.prints.push(super::eval::format_print(format, &values));
                 Ok(())
             }
         }

@@ -1,20 +1,36 @@
 //! The execution engine: evaluates transformed IR against storage.
 //!
-//! * [`eval`]  — expression evaluation, environments, accumulator store;
-//! * [`index`] — temporary runtime index structures (hash/tree/distinct);
-//! * [`local`] — the sequential reference interpreter (semantic oracle);
-//! * [`plan`]  — compiled plans: recognized idioms executed by native
-//!   loops or the XLA kernel runtime (the analogue of the paper's
-//!   generated C code).
+//! Three executor tiers, dispatched in order by [`plan::run_compiled`]:
+//!
+//! 1. [`plan`]    — recognized whole-program idioms executed by native
+//!    loops or the XLA kernel runtime (the analogue of the paper's
+//!    generated C code);
+//! 2. [`vector`]  — the vectorized batch executor: programs lowered by
+//!    [`compile`] to slot-resolved register form and driven over column
+//!    batches (no per-row name resolution);
+//! 3. [`local`]   — the sequential reference interpreter (semantic
+//!    oracle); every other tier must produce `bag_eq` results with it.
+//!
+//! Support modules:
+//!
+//! * [`eval`]    — expression evaluation, environments, accumulator store;
+//! * [`compile`] — the one-pass IR → register-program compiler;
+//! * [`index`]   — temporary runtime index structures (hash/tree/distinct);
+//! * [`parallel`] — shared-memory `forall` execution over a chunked
+//!   worker pool, reusing the compiled programs across workers.
 
+pub mod compile;
 pub mod eval;
 pub mod index;
 pub mod local;
 pub mod parallel;
 pub mod plan;
+pub mod vector;
 
+pub use compile::{compile_program, CompiledProgram};
 pub use eval::{ArrayStore, Cursor, Env};
 pub use index::{DistinctIndex, HashIndex, IndexCache, TreeIndex};
 pub use local::{block_bounds, partition_values, run, ExecStats, Output};
 pub use parallel::run_parallel;
 pub use plan::{recognize, run_compiled, Idiom};
+pub use vector::{run_compiled_program, try_run as run_vectorized, BATCH};

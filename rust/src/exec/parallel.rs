@@ -2,26 +2,121 @@
 //!
 //! The coordinator (crate::coordinator) is the *distributed* runtime; this
 //! module is its shared-memory little sibling — the OpenMP half of the
-//! paper's "MPI and OpenMP" generated code. Each top-level `forall`
-//! iteration runs on its own thread with a private accumulator store
-//! (the privatized `count_k` arrays of §IV write disjoint slices, so the
-//! end-of-loop merge is a plain union; `merge_add` also stays correct for
-//! overlapping commutative adds). Result-multiset appends concatenate —
-//! bag semantics make the interleaving irrelevant.
+//! paper's "MPI and OpenMP" generated code.
+//!
+//! Programs supported by the vectorized tier are compiled **once**
+//! (`exec::compile`) and the slot-resolved program is shared read-only by
+//! every worker: a chunked worker pool pulls batches of `forall`
+//! iterations from a shared cursor (dynamic self-scheduling, the
+//! in-process analogue of the coordinator's chunk queue), each worker
+//! accumulating into a private [`VecState`]. Privatized `count_k` slices
+//! write disjoint keys, so the end-of-loop merge is a plain union;
+//! [`VecState::absorb`] also stays correct for overlapping commutative
+//! adds. Programs outside the vectorized tier fall back to the
+//! interpreter-based fan-out below.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{Context, Result};
 
 use crate::ir::{Domain, LoopKind, Program, Stmt, Value};
 use crate::storage::StorageCatalog;
 
+use super::compile::{compile_program, CStmt, CompiledProgram};
 use super::eval::ArrayStore;
 use super::local::{ExecStats, Interp, Output};
+use super::vector::VecState;
 
-/// Execute a program, running top-level `forall` range loops with one
-/// thread per iteration (bounded by `max_threads`).
+/// Execute a program, running top-level `forall` range loops on a chunked
+/// worker pool (bounded by `max_threads`; `0` is treated as `1`).
 pub fn run_parallel(
+    program: &Program,
+    catalog: &StorageCatalog,
+    max_threads: usize,
+) -> Result<Output> {
+    match compile_program(program, catalog) {
+        Some(cp) => run_parallel_compiled(&cp, max_threads),
+        None => run_parallel_interp(program, catalog, max_threads),
+    }
+}
+
+/// Parallel driver for compiled programs: every worker shares the same
+/// slot-resolved `CompiledProgram`; `forall` iterations are dealt out in
+/// batches from a shared atomic cursor.
+pub fn run_parallel_compiled(cp: &CompiledProgram, max_threads: usize) -> Result<Output> {
+    let threads = max_threads.max(1);
+    let mut master = VecState::new(cp);
+    for s in &cp.body {
+        match s {
+            CStmt::Range {
+                kind: LoopKind::Forall,
+                slot,
+                lo,
+                hi,
+                body,
+            } => {
+                let lo = master
+                    .eval_value(cp, lo)?
+                    .as_int()
+                    .context("forall lo")?;
+                let hi = master
+                    .eval_value(cp, hi)?
+                    .as_int()
+                    .context("forall hi")?;
+                if hi < lo {
+                    continue; // empty iteration space
+                }
+                let iters: Vec<i64> = (lo..=hi).collect();
+                let workers = threads.min(iters.len()).max(1);
+                // ~4 batches per worker balances load without contending
+                // on the cursor; never zero.
+                let batch = iters.len().div_ceil(workers * 4).max(1);
+                let next = AtomicUsize::new(0);
+                let slot = *slot;
+
+                let states: Vec<Result<VecState>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..workers)
+                        .map(|_| {
+                            let next = &next;
+                            let iters = &iters;
+                            scope.spawn(move || -> Result<VecState> {
+                                let mut st = VecState::new(cp);
+                                loop {
+                                    let start = next.fetch_add(batch, Ordering::Relaxed);
+                                    if start >= iters.len() {
+                                        break;
+                                    }
+                                    let end = (start + batch).min(iters.len());
+                                    for &k in &iters[start..end] {
+                                        st.scalars[slot] = Value::Int(k);
+                                        st.exec_stmts(cp, body)?;
+                                    }
+                                }
+                                Ok(st)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("forall worker panicked"))
+                        .collect()
+                });
+
+                for r in states {
+                    master.absorb(r?);
+                }
+            }
+            other => master.exec_stmts(cp, std::slice::from_ref(other))?,
+        }
+    }
+    Ok(master.finish(cp))
+}
+
+/// Interpreter-based fallback for programs the vectorized tier does not
+/// support (value partitions, joins, ...). Each worker runs a private
+/// `Interp` over a static share of the iterations.
+pub(crate) fn run_parallel_interp(
     program: &Program,
     catalog: &StorageCatalog,
     max_threads: usize,
@@ -38,6 +133,9 @@ pub fn run_parallel(
                     let hi = super::eval::eval(hi, &master.env, &master.arrays, program)?
                         .as_int()
                         .context("forall hi")?;
+                    if hi < lo {
+                        continue; // empty range: spawning would div_ceil(0)
+                    }
                     let iters: Vec<i64> = (lo..=hi).collect();
 
                     // Fan out: each worker runs with a PRIVATE, empty
@@ -45,40 +143,46 @@ pub fn run_parallel(
                     // the parallelizing transforms generate: privatized
                     // bodies only touch their own k-slice of each array
                     // and never read pre-loop accumulator state.
-                    let chunks: Vec<Vec<i64>> = iters
-                        .chunks(iters.len().div_ceil(max_threads.max(1)))
-                        .map(|c| c.to_vec())
-                        .collect();
-                    let results: Vec<Result<(ArrayStore, BTreeMap<String, crate::ir::Multiset>, ExecStats)>> =
-                        std::thread::scope(|scope| {
-                            let handles: Vec<_> = chunks
-                                .iter()
-                                .map(|chunk| {
-                                    let body = &l.body;
-                                    let var = &l.var;
-                                    scope.spawn(move || {
-                                        let mut worker = Interp::new(program, catalog);
-                                        for &k in chunk {
-                                            worker.env.push_var(var, Value::Int(k));
-                                            let r = worker.run_body(body);
-                                            worker.env.pop_var();
-                                            r?;
-                                        }
-                                        Ok((worker.arrays, worker.results, worker.stats))
-                                    })
+                    let chunk = iters.len().div_ceil(max_threads.max(1)).max(1);
+                    let chunks: Vec<Vec<i64>> =
+                        iters.chunks(chunk).map(|c| c.to_vec()).collect();
+                    type WorkerOut =
+                        (ArrayStore, BTreeMap<String, crate::ir::Multiset>, ExecStats, Vec<String>);
+                    let results: Vec<Result<WorkerOut>> = std::thread::scope(|scope| {
+                        let handles: Vec<_> = chunks
+                            .iter()
+                            .map(|chunk| {
+                                let body = &l.body;
+                                let var = &l.var;
+                                scope.spawn(move || {
+                                    let mut worker = Interp::new(program, catalog);
+                                    for &k in chunk {
+                                        worker.env.push_var(var, Value::Int(k));
+                                        let r = worker.run_body(body);
+                                        worker.env.pop_var();
+                                        r?;
+                                    }
+                                    Ok((
+                                        worker.arrays,
+                                        worker.results,
+                                        worker.stats,
+                                        worker.prints,
+                                    ))
                                 })
-                                .collect();
-                            handles
-                                .into_iter()
-                                .map(|h| h.join().expect("forall worker panicked"))
-                                .collect()
-                        });
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("forall worker panicked"))
+                            .collect()
+                    });
 
                     // Merge worker stores into the master: privatized
                     // slices are disjoint, and any residual overlap is a
-                    // commutative Add (merge_add handles both).
+                    // commutative Add (merge_add handles both). Prints
+                    // append in chunk order, matching the compiled path.
                     for r in results {
-                        let (arrays, results, stats) = r?;
+                        let (arrays, results, stats, prints) = r?;
                         master.arrays.merge_add(arrays);
                         for (name, m) in results {
                             if let Some(dst) = master.results.get_mut(&name) {
@@ -89,6 +193,7 @@ pub fn run_parallel(
                         }
                         master.stats.rows_visited += stats.rows_visited;
                         master.stats.index_builds += stats.index_builds;
+                        master.prints.extend(prints);
                     }
                     continue;
                 }
@@ -104,6 +209,7 @@ pub fn run_parallel(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::Expr;
     use crate::sql::compile_sql;
     use crate::transform::{DirectPartition, Pass, PassCtx};
     use crate::workload::{access_log, AccessLogSpec};
@@ -142,6 +248,14 @@ mod tests {
     }
 
     #[test]
+    fn interp_fallback_matches_sequential() {
+        let (p, c) = setup(5_000);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let par = run_parallel_interp(&p, &c, 4).unwrap();
+        assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+    }
+
+    #[test]
     fn parallel_handles_programs_without_forall() {
         let m = access_log(&AccessLogSpec {
             rows: 100,
@@ -154,6 +268,35 @@ mod tests {
         let p = compile_sql("SELECT url FROM access", &c.schemas()).unwrap();
         let out = run_parallel(&p, &c, 4).unwrap();
         assert_eq!(out.result().unwrap().len(), 100);
+    }
+
+    #[test]
+    fn zero_max_threads_does_not_panic() {
+        let (p, c) = setup(2_000);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        // Both drivers clamp to one worker.
+        let par = run_parallel(&p, &c, 0).unwrap();
+        assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+        let par = run_parallel_interp(&p, &c, 0).unwrap();
+        assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+    }
+
+    #[test]
+    fn empty_forall_range_does_not_panic() {
+        // forall k = 1..=0 over the accumulation: zero iterations (the
+        // emit loop still runs, so compare against the interpreter rather
+        // than asserting emptiness).
+        let (mut p, c) = setup(500);
+        if let Stmt::Loop(forall) = &mut p.body[0] {
+            if let Domain::Range { hi, .. } = &mut forall.domain {
+                *hi = Expr::int(0);
+            }
+        }
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let out = run_parallel(&p, &c, 4).unwrap();
+        assert!(out.result().unwrap().bag_eq(seq.result().unwrap()));
+        let out = run_parallel_interp(&p, &c, 4).unwrap();
+        assert!(out.result().unwrap().bag_eq(seq.result().unwrap()));
     }
 
     #[test]

@@ -137,8 +137,10 @@ pub fn recognize(p: &Program) -> Option<Idiom> {
     }
 }
 
-/// Execute a program, using a compiled idiom when one is recognized and
-/// falling back to the reference interpreter otherwise.
+/// Execute a program through the tier dispatch: a recognized whole-program
+/// idiom runs on the native/XLA kernels; otherwise the vectorized batch
+/// executor handles the program if its shape is supported; the reference
+/// interpreter is the final fallback (and the semantic oracle for both).
 pub fn run_compiled(
     p: &Program,
     catalog: &StorageCatalog,
@@ -146,7 +148,10 @@ pub fn run_compiled(
 ) -> Result<Output> {
     match recognize(p) {
         Some(idiom) => run_idiom(&idiom, p, catalog, kernels),
-        None => local::run(p, catalog),
+        None => match super::vector::try_run(p, catalog)? {
+            Some(out) => Ok(out),
+            None => local::run(p, catalog),
+        },
     }
 }
 
@@ -164,7 +169,7 @@ fn run_idiom(
             result,
         } => {
             let t = catalog.get(table)?;
-            let fid = t.schema.field_id(key_field).unwrap();
+            let fid = t.schema.require_field(key_field)?;
             let schema = p.results[result].clone();
             let mut m = Multiset::new(schema);
             let mut kernel_calls = 0;
@@ -194,8 +199,8 @@ fn run_idiom(
             result,
         } => {
             let t = catalog.get(table)?;
-            let kf = t.schema.field_id(key_field).unwrap();
-            let vf = t.schema.field_id(val_field).unwrap();
+            let kf = t.schema.require_field(key_field)?;
+            let vf = t.schema.require_field(val_field)?;
             let schema = p.results[result].clone();
             let float_out = matches!(schema.dtype(1), crate::ir::DataType::Float);
             let mut m = Multiset::new(schema);
@@ -372,9 +377,7 @@ fn count_dense_u32(
         }
     }
     let mut counts = vec![0i64; num_keys];
-    for &k in keys {
-        counts[k as usize] += 1;
-    }
+    super::vector::count_batch_u32(keys, &mut counts);
     Ok(counts)
 }
 
@@ -393,9 +396,7 @@ fn count_dense_i64(
         }
     }
     let mut counts = vec![0i64; num_keys];
-    for &k in keys {
-        counts[k as usize] += 1;
-    }
+    super::vector::count_batch_i64(keys, &mut counts);
     Ok(counts)
 }
 
@@ -468,9 +469,7 @@ fn sum_dense(
         }
     }
     let mut sums = vec![0f64; num_keys];
-    for (&k, &v) in keys.iter().zip(vals) {
-        sums[k as usize] += v;
-    }
+    super::vector::sum_batch_i64(keys, vals, &mut sums);
     Ok((sums, seen))
 }
 

@@ -1,0 +1,875 @@
+//! The vectorized execution tier: batch execution of compiled programs.
+//!
+//! Sits between the recognized-idiom kernels (`plan.rs`) and the
+//! reference interpreter (`local.rs`) in the dispatch order. Programs are
+//! first lowered by `exec::compile` to slot-resolved register form; this
+//! module drives `forelem` loops over the columnar storage in batches of
+//! [`BATCH`] rows, with no string lookups or per-row name resolution on
+//! the hot path. Single-statement aggregation bodies additionally fire
+//! the fused batch kernels below — the same inner-loop primitives the
+//! distributed coordinator's `process_chunk` and the idiom kernels'
+//! native fallbacks use, so all three tiers share one code path for the
+//! dense counting/summing loops.
+//!
+//! Semantics contract: for every supported program the output is
+//! `bag_eq`-identical to `local::run`, including scalar results, print
+//! stream and float rounding (fold order is preserved; fused float sums
+//! only fire from a zero accumulator).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{AccumOp, BinOp, Program, Tuple, UnOp, Value};
+use crate::storage::{Column, StorageCatalog, Table};
+use crate::util::FxHashMap;
+
+use super::compile::{compile_program, CStmt, CompiledProgram, ExprProg, FastAgg, Op, ScanLoop};
+use super::eval::{apply_accum, value_binop};
+use super::index::DistinctIndex;
+use super::local::{block_bounds, ExecStats, Output};
+
+/// Rows per batch: large enough to amortize dispatch, small enough to
+/// keep the touched column windows cache-resident.
+pub const BATCH: usize = 1024;
+
+/// Execute a program on the vectorized tier if its shape is supported.
+/// `Ok(None)` means "not this tier" — callers fall back to the
+/// interpreter, preserving observable behaviour exactly.
+pub fn try_run(p: &Program, catalog: &StorageCatalog) -> Result<Option<Output>> {
+    match compile_program(p, catalog) {
+        Some(cp) => run_compiled_program(&cp).map(Some),
+        None => Ok(None),
+    }
+}
+
+/// Execute an already-compiled program (shared by `exec::parallel`).
+pub fn run_compiled_program(cp: &CompiledProgram) -> Result<Output> {
+    let mut st = VecState::new(cp);
+    st.exec_stmts(cp, &cp.body)?;
+    Ok(st.finish(cp))
+}
+
+/// Mutable execution state for one compiled-program run. Workers in
+/// `exec::parallel` each own one and merge via [`VecState::absorb`].
+pub struct VecState {
+    pub(crate) scalars: Vec<Value>,
+    pub(crate) arrays: Vec<FxHashMap<Tuple, Value>>,
+    cursors: Vec<CursorState>,
+    pub(crate) results: Vec<crate::ir::Multiset>,
+    pub(crate) prints: Vec<String>,
+    pub(crate) stats: ExecStats,
+    regs: Vec<Value>,
+}
+
+struct CursorState {
+    table: Option<Arc<Table>>,
+    row: usize,
+}
+
+impl VecState {
+    pub fn new(cp: &CompiledProgram) -> Self {
+        VecState {
+            scalars: cp.scalar_inits.clone(),
+            arrays: vec![FxHashMap::default(); cp.array_inits.len()],
+            cursors: (0..cp.n_cursors)
+                .map(|_| CursorState {
+                    table: None,
+                    row: 0,
+                })
+                .collect(),
+            results: cp
+                .result_schemas
+                .iter()
+                .map(|s| crate::ir::Multiset::new(s.clone()))
+                .collect(),
+            prints: Vec::new(),
+            stats: ExecStats::default(),
+            regs: vec![Value::Null; cp.n_regs],
+        }
+    }
+
+    /// Merge a worker's state into this one: accumulator entries combine
+    /// with `Add` (the privatized-slice merge of §IV), result rows append
+    /// (bag semantics), stats sum.
+    pub fn absorb(&mut self, other: VecState) {
+        for (dst, src) in self.arrays.iter_mut().zip(other.arrays) {
+            for (k, v) in src {
+                match dst.get_mut(&k) {
+                    Some(slot) => *slot = apply_accum(AccumOp::Add, slot, &v),
+                    None => {
+                        dst.insert(k, v);
+                    }
+                }
+            }
+        }
+        for (dst, src) in self.results.iter_mut().zip(other.results) {
+            for row in src.into_rows() {
+                dst.push(row);
+            }
+        }
+        self.prints.extend(other.prints);
+        self.stats.rows_visited += other.stats.rows_visited;
+        self.stats.index_builds += other.stats.index_builds;
+        self.stats.kernel_calls += other.stats.kernel_calls;
+        for idiom in other.stats.idioms {
+            if !self.stats.idioms.contains(&idiom) {
+                self.stats.idioms.push(idiom);
+            }
+        }
+    }
+
+    pub fn finish(self, cp: &CompiledProgram) -> Output {
+        let mut stats = self.stats;
+        stats.idioms.insert(0, "vectorized".into());
+        let mut results = BTreeMap::new();
+        for (name, m) in cp.slots.results.iter().zip(self.results) {
+            results.insert(name.clone(), m);
+        }
+        let mut scalars = BTreeMap::new();
+        for (i, name) in cp.slots.scalars.iter().enumerate() {
+            scalars.insert(name.clone(), self.scalars[i].clone());
+        }
+        Output {
+            results,
+            scalars,
+            prints: self.prints,
+            stats,
+        }
+    }
+
+    /// Evaluate one compiled expression in this state (also used by
+    /// `exec::parallel` to evaluate `forall` bounds).
+    pub(crate) fn eval_value(&mut self, cp: &CompiledProgram, prog: &ExprProg) -> Result<Value> {
+        if self.regs.len() < prog.n_regs {
+            self.regs.resize(prog.n_regs, Value::Null);
+        }
+        eval_ops(
+            &prog.ops,
+            prog.out,
+            &mut self.regs,
+            &mut self.scalars,
+            &self.cursors,
+            &self.arrays,
+            &cp.array_inits,
+        )
+    }
+
+    pub(crate) fn exec_stmts(&mut self, cp: &CompiledProgram, stmts: &[CStmt]) -> Result<()> {
+        for s in stmts {
+            self.exec_stmt(cp, s)?;
+        }
+        Ok(())
+    }
+
+    fn exec_stmt(&mut self, cp: &CompiledProgram, s: &CStmt) -> Result<()> {
+        match s {
+            CStmt::Assign { slot, value } => {
+                let v = self.eval_value(cp, value)?;
+                self.scalars[*slot] = v;
+                Ok(())
+            }
+            CStmt::Accum {
+                array,
+                idx,
+                op,
+                value,
+            } => {
+                let key: Tuple = idx
+                    .iter()
+                    .map(|e| self.eval_value(cp, e))
+                    .collect::<Result<_>>()?;
+                let v = self.eval_value(cp, value)?;
+                let init = &cp.array_inits[*array];
+                let slot = self.arrays[*array]
+                    .entry(key)
+                    .or_insert_with(|| init.clone());
+                *slot = apply_accum(*op, slot, &v);
+                Ok(())
+            }
+            CStmt::Result { result, tuple } => {
+                let row: Tuple = tuple
+                    .iter()
+                    .map(|e| self.eval_value(cp, e))
+                    .collect::<Result<_>>()?;
+                self.results[*result].push(row);
+                Ok(())
+            }
+            CStmt::If { cond, then, els } => {
+                if self.eval_value(cp, cond)?.truthy() {
+                    self.exec_stmts(cp, then)
+                } else {
+                    self.exec_stmts(cp, els)
+                }
+            }
+            CStmt::Print { format, args } => {
+                let values: Vec<Value> = args
+                    .iter()
+                    .map(|a| self.eval_value(cp, a))
+                    .collect::<Result<_>>()?;
+                self.prints.push(super::eval::format_print(format, &values));
+                Ok(())
+            }
+            CStmt::Range {
+                slot,
+                lo,
+                hi,
+                body,
+                ..
+            } => {
+                let lo = self
+                    .eval_value(cp, lo)?
+                    .as_int()
+                    .context("range lo must be an int")?;
+                let hi = self
+                    .eval_value(cp, hi)?
+                    .as_int()
+                    .context("range hi must be an int")?;
+                for k in lo..=hi {
+                    self.scalars[*slot] = Value::Int(k);
+                    self.exec_stmts(cp, body)?;
+                }
+                Ok(())
+            }
+            CStmt::Scan(sl) => self.exec_scan(cp, sl),
+        }
+    }
+
+    fn exec_scan(&mut self, cp: &CompiledProgram, sl: &ScanLoop) -> Result<()> {
+        let len = sl.table.len();
+        let (lo, hi) = match &sl.partition {
+            Some((part, parts)) => {
+                let k = self
+                    .eval_value(cp, part)?
+                    .as_int()
+                    .context("partition id must be an int")?;
+                let n = self
+                    .eval_value(cp, parts)?
+                    .as_int()
+                    .context("partition count must be an int")?;
+                if k < 1 || k > n {
+                    bail!("partition {k} out of 1..={n}");
+                }
+                block_bounds(len, n as usize, k as usize - 1)
+            }
+            None => (0, len),
+        };
+
+        if let Some(field) = sl.distinct {
+            let firsts = DistinctIndex::build(&sl.table, field).firsts;
+            self.stats.index_builds += 1;
+            self.cursors[sl.cursor].table = Some(sl.table.clone());
+            for &row in &firsts {
+                let row = row as usize;
+                if row < lo || row >= hi {
+                    continue;
+                }
+                self.stats.rows_visited += 1;
+                self.cursors[sl.cursor].row = row;
+                self.exec_stmts(cp, &sl.body)?;
+            }
+            return Ok(());
+        }
+
+        if let Some(fast) = sl.fast {
+            if lo < hi && self.fast_agg(sl, fast, lo, hi) {
+                self.stats.rows_visited += (hi - lo) as u64;
+                return Ok(());
+            }
+        }
+
+        self.cursors[sl.cursor].table = Some(sl.table.clone());
+
+        if let Some((fid, key_prog)) = &sl.filter {
+            // Equality-filtered scan: evaluate the key once, then build a
+            // selection vector per batch and run the body over matches.
+            let key = self.eval_value(cp, key_prog)?;
+            let col = sl.table.column(*fid);
+            let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
+            let mut base = lo;
+            while base < hi {
+                let end = (base + BATCH).min(hi);
+                self.stats.rows_visited += (end - base) as u64;
+                sel.clear();
+                for row in base..end {
+                    if col.value(row) == key {
+                        sel.push(row);
+                    }
+                }
+                for &row in &sel {
+                    self.stats.rows_visited += 1;
+                    self.cursors[sl.cursor].row = row;
+                    self.exec_stmts(cp, &sl.body)?;
+                }
+                base = end;
+            }
+            return Ok(());
+        }
+
+        let mut base = lo;
+        while base < hi {
+            let end = (base + BATCH).min(hi);
+            for row in base..end {
+                self.stats.rows_visited += 1;
+                self.cursors[sl.cursor].row = row;
+                self.exec_stmts(cp, &sl.body)?;
+            }
+            base = end;
+        }
+        Ok(())
+    }
+
+    /// Fused whole-loop aggregation. Returns `false` (caller runs the
+    /// generic per-row body) when the target array already holds entries
+    /// — continuing an existing float fold batch-wise would change
+    /// rounding — or when the column pairing is unsupported.
+    fn fast_agg(&mut self, sl: &ScanLoop, fast: FastAgg, lo: usize, hi: usize) -> bool {
+        match fast {
+            FastAgg::Count { array, key_field } => {
+                if !self.arrays[array].is_empty() {
+                    return false;
+                }
+                match sl.table.column(key_field) {
+                    Column::DictStrs { keys, dict } => {
+                        let mut counts = vec![0i64; dict.len()];
+                        count_batch_u32(&keys[lo..hi], &mut counts);
+                        let store = &mut self.arrays[array];
+                        for (k, &n) in counts.iter().enumerate() {
+                            if n != 0 {
+                                let s = dict.decode(k as u32).expect("dict key in range").clone();
+                                store.insert(vec![Value::Str(s)], Value::Int(n));
+                            }
+                        }
+                    }
+                    Column::Ints(vals) => {
+                        let mut map: FxHashMap<i64, i64> = FxHashMap::default();
+                        for &k in &vals[lo..hi] {
+                            *map.entry(k).or_insert(0) += 1;
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, n) in map {
+                            store.insert(vec![Value::Int(k)], Value::Int(n));
+                        }
+                    }
+                    Column::Strs(vals) => {
+                        let mut map: FxHashMap<Arc<str>, i64> = FxHashMap::default();
+                        for s in &vals[lo..hi] {
+                            match map.get_mut(s) {
+                                Some(n) => *n += 1,
+                                None => {
+                                    map.insert(s.clone(), 1);
+                                }
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (s, n) in map {
+                            store.insert(vec![Value::Str(s)], Value::Int(n));
+                        }
+                    }
+                    _ => return false,
+                }
+                self.note_idiom("vec.count");
+                true
+            }
+            FastAgg::Sum {
+                array,
+                key_field,
+                val_field,
+            } => {
+                if !self.arrays[array].is_empty() {
+                    return false;
+                }
+                let kcol = sl.table.column(key_field);
+                let vcol = sl.table.column(val_field);
+                match (kcol, vcol) {
+                    (Column::DictStrs { keys, dict }, Column::Floats(vs)) => {
+                        let mut sums = vec![0f64; dict.len()];
+                        let mut seen = vec![false; dict.len()];
+                        sum_batch_u32(&keys[lo..hi], &vs[lo..hi], &mut sums);
+                        for &k in &keys[lo..hi] {
+                            seen[k as usize] = true;
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                            if was {
+                                let key =
+                                    dict.decode(k as u32).expect("dict key in range").clone();
+                                store.insert(vec![Value::Str(key)], Value::Float(s));
+                            }
+                        }
+                    }
+                    (Column::DictStrs { keys, dict }, Column::Ints(vs)) => {
+                        let mut sums = vec![0i64; dict.len()];
+                        let mut seen = vec![false; dict.len()];
+                        for (&k, &v) in keys[lo..hi].iter().zip(&vs[lo..hi]) {
+                            sums[k as usize] = sums[k as usize].wrapping_add(v);
+                            seen[k as usize] = true;
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                            if was {
+                                let key =
+                                    dict.decode(k as u32).expect("dict key in range").clone();
+                                store.insert(vec![Value::Str(key)], Value::Int(s));
+                            }
+                        }
+                    }
+                    (Column::Ints(ks), Column::Floats(vs)) => {
+                        let mut map: FxHashMap<i64, f64> = FxHashMap::default();
+                        for (&k, &v) in ks[lo..hi].iter().zip(&vs[lo..hi]) {
+                            *map.entry(k).or_insert(0.0) += v;
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, s) in map {
+                            store.insert(vec![Value::Int(k)], Value::Float(s));
+                        }
+                    }
+                    (Column::Ints(ks), Column::Ints(vs)) => {
+                        let mut map: FxHashMap<i64, i64> = FxHashMap::default();
+                        for (&k, &v) in ks[lo..hi].iter().zip(&vs[lo..hi]) {
+                            let e = map.entry(k).or_insert(0);
+                            *e = e.wrapping_add(v);
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, s) in map {
+                            store.insert(vec![Value::Int(k)], Value::Int(s));
+                        }
+                    }
+                    (Column::Strs(ss), Column::Floats(vs)) => {
+                        let mut map: FxHashMap<Arc<str>, f64> = FxHashMap::default();
+                        for (s, &v) in ss[lo..hi].iter().zip(&vs[lo..hi]) {
+                            match map.get_mut(s) {
+                                Some(e) => *e += v,
+                                None => {
+                                    map.insert(s.clone(), v);
+                                }
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (s, v) in map {
+                            store.insert(vec![Value::Str(s)], Value::Float(v));
+                        }
+                    }
+                    (Column::Strs(ss), Column::Ints(vs)) => {
+                        let mut map: FxHashMap<Arc<str>, i64> = FxHashMap::default();
+                        for (s, &v) in ss[lo..hi].iter().zip(&vs[lo..hi]) {
+                            match map.get_mut(s) {
+                                Some(e) => *e = e.wrapping_add(v),
+                                None => {
+                                    map.insert(s.clone(), v);
+                                }
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (s, v) in map {
+                            store.insert(vec![Value::Str(s)], Value::Int(v));
+                        }
+                    }
+                    _ => return false,
+                }
+                self.note_idiom("vec.sum");
+                true
+            }
+        }
+    }
+
+    fn note_idiom(&mut self, tag: &str) {
+        if !self.stats.idioms.iter().any(|i| i == tag) {
+            self.stats.idioms.push(tag.to_string());
+        }
+    }
+}
+
+/// Evaluate a flat register program. `regs` is a reusable scratch buffer
+/// of at least `n_regs` slots.
+fn eval_ops(
+    ops: &[Op],
+    out: usize,
+    regs: &mut Vec<Value>,
+    scalars: &mut Vec<Value>,
+    cursors: &[CursorState],
+    arrays: &[FxHashMap<Tuple, Value>],
+    inits: &[Value],
+) -> Result<Value> {
+    let mut pc = 0;
+    while pc < ops.len() {
+        match &ops[pc] {
+            Op::Const { dst, v } => regs[*dst] = v.clone(),
+            Op::LoadScalar { dst, slot } => regs[*dst] = scalars[*slot].clone(),
+            Op::LoadField { dst, cursor, field } => {
+                let c = &cursors[*cursor];
+                let t = c.table.as_ref().context("unbound cursor")?;
+                regs[*dst] = t.value(c.row, *field);
+            }
+            Op::ReadArray { dst, array, idx } => {
+                let key: Tuple = idx.iter().map(|&r| regs[r].clone()).collect();
+                regs[*dst] = arrays[*array]
+                    .get(&key)
+                    .cloned()
+                    .unwrap_or_else(|| inits[*array].clone());
+            }
+            Op::Binary { dst, op, lhs, rhs } => {
+                let v = value_binop(*op, &regs[*lhs], &regs[*rhs])?;
+                regs[*dst] = v;
+            }
+            Op::Unary { dst, op, src } => {
+                let v = match op {
+                    UnOp::Neg => match &regs[*src] {
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(f) => Value::Float(-f),
+                        other => bail!("cannot negate {other}"),
+                    },
+                    UnOp::Not => Value::Bool(!regs[*src].truthy()),
+                };
+                regs[*dst] = v;
+            }
+            Op::Truthy { dst, src } => {
+                let b = regs[*src].truthy();
+                regs[*dst] = Value::Bool(b);
+            }
+            Op::SkipIfTrue { src, n } => {
+                if regs[*src].truthy() {
+                    pc += n;
+                }
+            }
+            Op::SkipIfFalse { src, n } => {
+                if !regs[*src].truthy() {
+                    pc += n;
+                }
+            }
+            Op::Sum {
+                dst,
+                slot,
+                parts,
+                body,
+            } => {
+                let n = regs[*parts]
+                    .as_int()
+                    .context("non-integer part count")?;
+                let mut total = Value::Int(0);
+                for k in 1..=n {
+                    scalars[*slot] = Value::Int(k);
+                    let v = eval_ops(&body.ops, body.out, regs, scalars, cursors, arrays, inits)?;
+                    total = value_binop(BinOp::Add, &total, &v)?;
+                }
+                regs[*dst] = total;
+            }
+        }
+        pc += 1;
+    }
+    Ok(regs[out].clone())
+}
+
+// ---------------------------------------------------------------------------
+// Shared batch kernels: the dense inner loops used by (1) this tier's
+// fused aggregations, (2) the idiom kernels' native fallbacks in plan.rs,
+// and (3) the distributed coordinator's per-node `process_chunk`.
+// ---------------------------------------------------------------------------
+
+/// `acc[k] += 1` over a batch of dictionary keys.
+pub fn count_batch_u32(keys: &[u32], acc: &mut [i64]) {
+    for &k in keys {
+        acc[k as usize] += 1;
+    }
+}
+
+/// `acc[k] += 1` over a batch of integer keys.
+pub fn count_batch_i64(keys: &[i64], acc: &mut [i64]) {
+    for &k in keys {
+        acc[k as usize] += 1;
+    }
+}
+
+/// f64-accumulator variant (the coordinator's wire format).
+pub fn count_batch_u32_f64(keys: &[u32], acc: &mut [f64]) {
+    for &k in keys {
+        acc[k as usize] += 1.0;
+    }
+}
+
+/// f64-accumulator variant (the coordinator's wire format).
+pub fn count_batch_i64_f64(keys: &[i64], acc: &mut [f64]) {
+    for &k in keys {
+        acc[k as usize] += 1.0;
+    }
+}
+
+/// `acc[k] += v` over aligned key/value batches (dictionary keys).
+pub fn sum_batch_u32(keys: &[u32], vals: &[f64], acc: &mut [f64]) {
+    for (&k, &v) in keys.iter().zip(vals) {
+        acc[k as usize] += v;
+    }
+}
+
+/// `acc[k] += v` over aligned key/value batches (integer keys).
+pub fn sum_batch_i64(keys: &[i64], vals: &[f64], acc: &mut [f64]) {
+    for (&k, &v) in keys.iter().zip(vals) {
+        acc[k as usize] += v;
+    }
+}
+
+/// Associative count over a batch of plain strings: hashes the `Arc<str>`
+/// contents without constructing a `Value` per row.
+pub fn count_batch_strs(keys: &[Arc<str>], acc: &mut FxHashMap<Arc<str>, f64>) {
+    for s in keys {
+        match acc.get_mut(s) {
+            Some(n) => *n += 1.0,
+            None => {
+                acc.insert(s.clone(), 1.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::local;
+    use crate::ir::{ArrayDecl, DataType, Expr, IndexSet, Loop, Multiset, Schema, Stmt};
+    use crate::sql::compile_sql;
+    use crate::workload::{access_log, AccessLogSpec};
+
+    fn catalog(rows: usize, dict: bool) -> StorageCatalog {
+        let m = access_log(&AccessLogSpec {
+            rows,
+            urls: 64,
+            skew: 1.1,
+            seed: 7,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        if dict {
+            let mut t = (**c.get("access").unwrap()).clone();
+            t.dict_encode_field(0).unwrap();
+            c.replace("access", t);
+        }
+        c
+    }
+
+    fn assert_matches_interpreter(p: &Program, c: &StorageCatalog) {
+        let reference = local::run(p, c).unwrap();
+        let out = try_run(p, c).unwrap().expect("vectorized tier must fire");
+        assert!(
+            out.result()
+                .map(|m| m.bag_eq(reference.result().unwrap()))
+                .unwrap_or(reference.result().is_none()),
+            "vectorized diverged from interpreter"
+        );
+        assert_eq!(out.scalars, reference.scalars);
+        assert_eq!(out.prints, reference.prints);
+        assert!(out.stats.idioms.contains(&"vectorized".to_string()));
+    }
+
+    #[test]
+    fn group_count_matches_interpreter_strings_and_dict() {
+        for dict in [false, true] {
+            let c = catalog(3000, dict);
+            let p = compile_sql(
+                "SELECT url, COUNT(url) FROM access GROUP BY url",
+                &c.schemas(),
+            )
+            .unwrap();
+            assert_matches_interpreter(&p, &c);
+            let out = try_run(&p, &c).unwrap().unwrap();
+            assert!(
+                out.stats.idioms.contains(&"vec.count".to_string()),
+                "{:?}",
+                out.stats.idioms
+            );
+        }
+    }
+
+    #[test]
+    fn projection_and_filter_match_interpreter() {
+        let c = catalog(1000, false);
+        for q in [
+            "SELECT url FROM access",
+            "SELECT url FROM access WHERE url = 'http://example.org/site0/page0.html'",
+            "SELECT url FROM access WHERE url = '/nope'",
+        ] {
+            let p = compile_sql(q, &c.schemas()).unwrap();
+            assert_matches_interpreter(&p, &c);
+        }
+    }
+
+    #[test]
+    fn group_sum_floats_match_interpreter_exactly() {
+        let schema = Schema::new(vec![("k", DataType::Str), ("x", DataType::Float)]);
+        let mut m = Multiset::new(schema);
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..500 {
+            m.push(vec![
+                Value::str(format!("k{}", rng.below(10))),
+                Value::Float((rng.f64() - 0.5) * 10.0),
+            ]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("t", &m).unwrap();
+        let p = compile_sql("SELECT k, SUM(x) FROM t GROUP BY k", &c.schemas()).unwrap();
+        // Exact equality (not approximate): fold order must match.
+        let reference = local::run(&p, &c).unwrap();
+        let out = try_run(&p, &c).unwrap().unwrap();
+        assert!(out.result().unwrap().bag_eq(reference.result().unwrap()));
+    }
+
+    #[test]
+    fn weighted_average_scalars_and_prints_match() {
+        let mut c = StorageCatalog::new();
+        let grades = Multiset::with_rows(
+            Schema::new(vec![
+                ("studentID", DataType::Int),
+                ("grade", DataType::Float),
+                ("weight", DataType::Float),
+            ]),
+            vec![
+                vec![Value::Int(25), Value::Float(8.0), Value::Float(0.5)],
+                vec![Value::Int(30), Value::Float(6.0), Value::Float(1.0)],
+                vec![Value::Int(25), Value::Float(6.0), Value::Float(0.5)],
+            ],
+        );
+        c.insert_multiset("Grades", &grades).unwrap();
+        let mut p = Program::new("avg")
+            .with_relation("Grades", c.schemas()["Grades"].clone())
+            .with_scalar("avg", Value::Float(0.0));
+        p.body = vec![
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::filtered("Grades", "studentID", Expr::int(25)),
+                vec![Stmt::assign(
+                    "avg",
+                    Expr::add(
+                        Expr::var("avg"),
+                        Expr::mul(Expr::field("i", "grade"), Expr::field("i", "weight")),
+                    ),
+                )],
+            )),
+            Stmt::Print {
+                format: "Average grade: {}".into(),
+                args: vec![Expr::var("avg")],
+            },
+        ];
+        assert_matches_interpreter(&p, &c);
+        let out = try_run(&p, &c).unwrap().unwrap();
+        assert_eq!(out.scalars["avg"], Value::Float(7.0));
+        assert_eq!(out.prints, vec!["Average grade: 7".to_string()]);
+    }
+
+    #[test]
+    fn partitioned_forall_matches_interpreter() {
+        let c = catalog(900, false);
+        let mut p = Program::new("part")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_array("count", ArrayDecl::counter())
+            .with_param("N", Value::Int(3))
+            .with_result(
+                "R",
+                Schema::new(vec![("url", DataType::Str), ("n", DataType::Int)]),
+            );
+        p.body = vec![
+            Stmt::Loop(Loop::forall_range(
+                "k",
+                Expr::int(1),
+                Expr::var("N"),
+                vec![Stmt::Loop(Loop::forelem(
+                    "i",
+                    IndexSet::all("access").with_partition(Expr::var("k"), Expr::var("N")),
+                    vec![Stmt::increment("count", vec![Expr::field("i", "url")])],
+                ))],
+            )),
+            Stmt::Loop(Loop::forelem(
+                "i",
+                IndexSet::distinct_of("access", "url"),
+                vec![Stmt::result_union(
+                    "R",
+                    vec![
+                        Expr::field("i", "url"),
+                        Expr::array("count", vec![Expr::field("i", "url")]),
+                    ],
+                )],
+            )),
+        ];
+        assert_matches_interpreter(&p, &c);
+    }
+
+    #[test]
+    fn empty_table_and_empty_range_are_fine() {
+        let mut c = StorageCatalog::new();
+        let m = Multiset::new(Schema::new(vec![("url", DataType::Str)]));
+        c.insert_multiset("access", &m).unwrap();
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert_matches_interpreter(&p, &c);
+
+        // Range with hi < lo runs zero iterations.
+        let mut p2 = Program::new("empty")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_scalar("x", Value::Int(0));
+        p2.body = vec![Stmt::Loop(Loop::for_range(
+            "k",
+            Expr::int(5),
+            Expr::int(4),
+            vec![Stmt::assign("x", Expr::var("k"))],
+        ))];
+        assert_matches_interpreter(&p2, &c);
+    }
+
+    #[test]
+    fn unsupported_shapes_return_none() {
+        let c = catalog(100, false);
+        // Joins stay on the interpreter tier.
+        let mut c2 = StorageCatalog::new();
+        let a = Multiset::with_rows(
+            Schema::new(vec![("b_id", DataType::Int)]),
+            vec![vec![Value::Int(1)]],
+        );
+        c2.insert_multiset("A", &a).unwrap();
+        let b = Multiset::with_rows(
+            Schema::new(vec![("id", DataType::Int)]),
+            vec![vec![Value::Int(1)]],
+        );
+        c2.insert_multiset("B", &b).unwrap();
+        let join = compile_sql(
+            "SELECT A.b_id FROM A JOIN B ON A.b_id = B.id",
+            &c2.schemas(),
+        )
+        .unwrap();
+        assert!(try_run(&join, &c2).unwrap().is_none());
+        let _ = c;
+    }
+
+    #[test]
+    fn batch_kernels_agree_with_scalar_loops() {
+        let keys_u32: Vec<u32> = (0..5000u32).map(|i| i % 37).collect();
+        let keys_i64: Vec<i64> = keys_u32.iter().map(|&k| k as i64).collect();
+        let vals: Vec<f64> = (0..5000).map(|i| (i % 11) as f64 * 0.25).collect();
+
+        let mut a = vec![0i64; 37];
+        count_batch_u32(&keys_u32, &mut a);
+        let mut b = vec![0i64; 37];
+        count_batch_i64(&keys_i64, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.iter().sum::<i64>(), 5000);
+
+        let mut f1 = vec![0f64; 37];
+        count_batch_u32_f64(&keys_u32, &mut f1);
+        let mut f2 = vec![0f64; 37];
+        count_batch_i64_f64(&keys_i64, &mut f2);
+        assert_eq!(f1, f2);
+
+        let mut s1 = vec![0f64; 37];
+        sum_batch_u32(&keys_u32, &vals, &mut s1);
+        let mut s2 = vec![0f64; 37];
+        sum_batch_i64(&keys_i64, &vals, &mut s2);
+        assert_eq!(s1, s2);
+
+        let strs: Vec<Arc<str>> = ["/a", "/b", "/a"].iter().map(|s| Arc::from(*s)).collect();
+        let mut m: FxHashMap<Arc<str>, f64> = FxHashMap::default();
+        count_batch_strs(&strs, &mut m);
+        assert_eq!(m[&Arc::<str>::from("/a")], 2.0);
+        assert_eq!(m[&Arc::<str>::from("/b")], 1.0);
+    }
+}

@@ -18,7 +18,7 @@ pub mod value;
 pub use expr::{BinOp, Expr, UnOp};
 pub use index_set::{IndexSet, Partition, Strategy};
 pub use multiset::Multiset;
-pub use program::{ArrayDecl, Program};
+pub use program::{ArrayDecl, Program, SlotMap};
 pub use schema::{Field, FieldId, Schema};
 pub use stmt::{AccumOp, Domain, Loop, LoopKind, Stmt};
 pub use validate::validate;

@@ -44,6 +44,38 @@ impl ArrayDecl {
     }
 }
 
+/// Slot-resolution metadata: stable integer ids for every named entity a
+/// program declares. The vectorized execution tier (`exec::compile`)
+/// resolves all string names to these slots once, at compile time, so the
+/// per-row hot path performs no string comparison or allocation.
+///
+/// Slot order is deterministic (the `BTreeMap` iteration order of the
+/// declarations), so two compilations of the same program agree on ids —
+/// which is what lets `exec::parallel` workers share one compiled program.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SlotMap {
+    /// Scalar variables, by declaration order; slot = index.
+    pub scalars: Vec<String>,
+    /// Accumulator arrays, by declaration order; slot = index.
+    pub arrays: Vec<String>,
+    /// Result multisets, by declaration order; slot = index.
+    pub results: Vec<String>,
+}
+
+impl SlotMap {
+    pub fn scalar_slot(&self, name: &str) -> Option<usize> {
+        self.scalars.iter().position(|n| n == name)
+    }
+
+    pub fn array_slot(&self, name: &str) -> Option<usize> {
+        self.arrays.iter().position(|n| n == name)
+    }
+
+    pub fn result_slot(&self, name: &str) -> Option<usize> {
+        self.results.iter().position(|n| n == name)
+    }
+}
+
 /// A complete program in the single intermediate representation.
 #[derive(Debug, Clone, Default)]
 pub struct Program {
@@ -138,6 +170,15 @@ impl Program {
         out
     }
 
+    /// Slot-resolution metadata for this program's declarations.
+    pub fn slot_map(&self) -> SlotMap {
+        SlotMap {
+            scalars: self.scalars.keys().cloned().collect(),
+            arrays: self.arrays.keys().cloned().collect(),
+            results: self.results.keys().cloned().collect(),
+        }
+    }
+
     /// Fresh variable name not colliding with params/scalars/loop vars.
     pub fn fresh_var(&self, base: &str) -> String {
         let mut used: std::collections::HashSet<String> = self
@@ -204,6 +245,17 @@ mod tests {
     #[test]
     fn top_loops_counts_only_top_level() {
         assert_eq!(url_count().top_loops().len(), 2);
+    }
+
+    #[test]
+    fn slot_map_is_deterministic_and_resolves() {
+        let p = url_count().with_scalar("avg", crate::ir::Value::Float(0.0));
+        let slots = p.slot_map();
+        assert_eq!(slots, p.slot_map());
+        assert_eq!(slots.array_slot("count"), Some(0));
+        assert_eq!(slots.result_slot("R"), Some(0));
+        assert_eq!(slots.scalar_slot("avg"), Some(0));
+        assert_eq!(slots.scalar_slot("nope"), None);
     }
 
     #[test]

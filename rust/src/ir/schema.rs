@@ -64,6 +64,13 @@ impl Schema {
         self.fields.iter().position(|f| f.name == name)
     }
 
+    /// Resolve a field name to its id, with the standard error message
+    /// used across the execution engine.
+    pub fn require_field(&self, name: &str) -> anyhow::Result<FieldId> {
+        self.field_id(name)
+            .ok_or_else(|| anyhow::anyhow!("no field `{name}`"))
+    }
+
     pub fn dtype(&self, id: FieldId) -> DataType {
         self.fields[id].dtype
     }
@@ -146,6 +153,14 @@ mod tests {
         assert_eq!(s.field_id("nope"), None);
         assert_eq!(s.dtype(0), DataType::Int);
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn require_field_errors_with_name() {
+        let s = grades();
+        assert_eq!(s.require_field("weight").unwrap(), 2);
+        let e = s.require_field("nope").unwrap_err().to_string();
+        assert!(e.contains("nope"), "{e}");
     }
 
     #[test]

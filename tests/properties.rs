@@ -82,6 +82,64 @@ fn group_by_pipeline_agrees_across_all_configurations() {
 }
 
 #[test]
+fn vectorized_interpreter_and_idiom_tiers_agree_on_random_programs() {
+    // For random data, the three executor tiers must agree bag-for-bag:
+    // the reference interpreter (`exec::run`), the dispatching
+    // `run_compiled` (idiom kernels where recognized), and the vectorized
+    // batch executor (`run_vectorized`). Shapes the vectorized tier must
+    // handle (group/filter/guard) are asserted to actually fire; joins
+    // are allowed to fall back.
+    forall_seeds(20, |rng| {
+        let m = random_multiset(rng, 300);
+        let m2 = random_multiset(rng, 80);
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("t", &m).unwrap();
+        catalog.insert_multiset("u", &m2).unwrap();
+        let queries = [
+            ("SELECT k, COUNT(k) FROM t GROUP BY k", true),
+            ("SELECT k, SUM(x) FROM t GROUP BY k", true),
+            ("SELECT k, n FROM t WHERE k = 'key0'", true),
+            ("SELECT k FROM t WHERE n > 0", true),
+            ("SELECT k, COUNT(k) FROM t WHERE n > 0 GROUP BY k", true),
+            ("SELECT t.k, u.k FROM t JOIN u ON t.n = u.n", false),
+        ];
+        for (q, expect_vectorized) in queries {
+            let p = forelem::sql::compile_sql(q, &catalog.schemas())
+                .map_err(|e| e.to_string())?;
+            let reference = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+            let compiled =
+                forelem::exec::run_compiled(&p, &catalog, None).map_err(|e| e.to_string())?;
+            prop_assert!(
+                compiled
+                    .result()
+                    .unwrap()
+                    .bag_eq(reference.result().unwrap()),
+                "run_compiled diverged from interpreter for `{q}`"
+            );
+            match forelem::exec::run_vectorized(&p, &catalog).map_err(|e| e.to_string())? {
+                Some(out) => {
+                    prop_assert!(
+                        out.result().unwrap().bag_eq(reference.result().unwrap()),
+                        "vectorized diverged from interpreter for `{q}`"
+                    );
+                    prop_assert!(
+                        out.stats.idioms.contains(&"vectorized".to_string()),
+                        "vectorized output missing tier tag for `{q}`"
+                    );
+                }
+                None => {
+                    prop_assert!(
+                        !expect_vectorized,
+                        "vectorized tier unexpectedly skipped `{q}`"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn sum_aggregate_matches_scalar_fold() {
     forall_seeds(15, |rng| {
         let m = random_multiset(rng, 300);

@@ -1,0 +1,160 @@
+//! Minimal, offline shim for the `anyhow` API surface this workspace uses:
+//! `Result`, `Error`, `Context` (on `Result` and `Option`), `anyhow!` and
+//! `bail!`. Messages are stored as strings (no downcasting is used in the
+//! workspace); `Display` shows the outermost context, `Debug` and the
+//! alternate `{:#}` form show the full cause chain, matching how the real
+//! crate is observed by our tests.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error with a context chain. `stack[0]` is the
+/// outermost (most recently attached) message.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a plain message.
+    pub fn msg(message: impl Into<String>) -> Error {
+        Error {
+            stack: vec![message.into()],
+        }
+    }
+
+    /// Push a new outermost context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.stack.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost message (the original error).
+    pub fn root_cause(&self) -> &str {
+        self.stack.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.stack[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what allows the blanket `From` below to coexist with the reflexive
+// `impl From<T> for T` (the same trick the real crate uses).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut stack = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        Error { stack }
+    }
+}
+
+/// Context-attachment extension trait for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("opening catalog")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "opening catalog");
+        assert_eq!(format!("{e:#}"), "opening catalog: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Result<i32> = None.context("no value");
+        assert!(v.unwrap_err().to_string().contains("no value"));
+    }
+
+    #[test]
+    fn macros_format() {
+        fn fails() -> Result<()> {
+            bail!("bad {}", 42)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "bad 42");
+        assert_eq!(anyhow!("x={}", 1).to_string(), "x=1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i64> {
+            Ok("12x".parse::<i64>()?)
+        }
+        assert!(parse().is_err());
+    }
+}
