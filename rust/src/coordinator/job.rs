@@ -1,9 +1,16 @@
 //! Job specifications and partial results for the coordinator.
+//!
+//! Besides the single-table count/sum jobs, a job can carry a
+//! [`JoinProbe`]: the hash table over the build side is constructed once
+//! and shared read-only by every worker (`Arc`), while chunks of the
+//! probe side stream through [`process_chunk`] — the distributed analogue
+//! of `exec::parallel`'s shared-build, partitioned-probe compiled join.
 
 
 use crate::util::FxHashMap;
 use std::sync::Arc;
 
+use crate::exec::vector::JoinHashTable;
 use crate::ir::Value;
 use crate::storage::{Column, Table};
 
@@ -17,6 +24,29 @@ pub enum AggOp {
     Sum,
 }
 
+/// A hash-join probe attached to a distributed aggregation job. The
+/// job's `table` becomes the probe (outer) side; every matched
+/// (probe row, build row) pair contributes one unit (count) or one value
+/// (sum) to the aggregate. Only the hash table is retained — the
+/// build-side table itself is not needed after construction.
+#[derive(Clone)]
+pub struct JoinProbe {
+    /// Probe-side field compared against the build key.
+    pub probe_field: usize,
+    /// The hash table, built once and shared read-only by all workers.
+    pub table: Arc<JoinHashTable>,
+}
+
+impl JoinProbe {
+    /// Build the shared hash table over `build.column(build_key_field)`.
+    pub fn new(build: &Table, build_key_field: usize, probe_field: usize) -> Self {
+        JoinProbe {
+            probe_field,
+            table: Arc::new(JoinHashTable::build(build, build_key_field)),
+        }
+    }
+}
+
 /// A distributed aggregation job over a table.
 #[derive(Clone)]
 pub struct AggJob {
@@ -28,6 +58,9 @@ pub struct AggJob {
     /// Dense key-space width if the key column is integer-keyed
     /// (dictionary-encoded); None → associative (string) accumulation.
     pub num_keys: Option<usize>,
+    /// When set, each probe-side row is weighted by its number of
+    /// build-side matches (the Figure-1 join feeding a GROUP BY).
+    pub join: Option<JoinProbe>,
 }
 
 impl AggJob {
@@ -39,6 +72,7 @@ impl AggJob {
             key_field,
             val_field: None,
             num_keys,
+            join: None,
         }
     }
 
@@ -50,7 +84,29 @@ impl AggJob {
             key_field,
             val_field: Some(val_field),
             num_keys,
+            join: None,
         }
+    }
+
+    /// `COUNT` of matched pairs per probe-side key — the join + GROUP BY
+    /// COUNT shape, distributed.
+    pub fn count_join(table: Arc<Table>, key_field: usize, probe: JoinProbe) -> Self {
+        let mut job = AggJob::count(table, key_field);
+        job.join = Some(probe);
+        job
+    }
+
+    /// `SUM(val_field)` (a probe-side column) weighted by build-side
+    /// match count per probe-side key.
+    pub fn sum_join(
+        table: Arc<Table>,
+        key_field: usize,
+        val_field: usize,
+        probe: JoinProbe,
+    ) -> Self {
+        let mut job = AggJob::sum(table, key_field, val_field);
+        job.join = Some(probe);
+        job
     }
 
     pub fn rows(&self) -> usize {
@@ -178,6 +234,9 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
     use crate::exec::vector::{
         count_batch_i64_f64, count_batch_strs, count_batch_u32_f64, sum_batch_i64, sum_batch_u32,
     };
+    if let Some(probe) = &job.join {
+        return process_join_chunk(job, probe, lo, hi);
+    }
     let t = &job.table;
     match job.num_keys {
         Some(num_keys) => {
@@ -259,6 +318,55 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
     }
 }
 
+/// Join-probe worker loop: rows `[lo, hi)` of the probe table, each
+/// weighted by its number of build-side matches from the shared hash
+/// table. Counts stay exact in the coordinator's f64 wire format; sums
+/// use multiply-by-multiplicity (the coordinator's aggregates are f64
+/// approximations by design, see [`Partial`]).
+fn process_join_chunk(job: &AggJob, probe: &JoinProbe, lo: usize, hi: usize) -> Partial {
+    let t = &job.table;
+    let pcol = t.column(probe.probe_field);
+    let weight = |r: usize, n: f64| -> f64 {
+        match job.op {
+            AggOp::Count => n,
+            AggOp::Sum => {
+                let vf = job.val_field.expect("sum job needs val_field");
+                t.value(r, vf).as_float().unwrap_or(0.0) * n
+            }
+        }
+    };
+    match job.num_keys {
+        Some(num_keys) => {
+            let kcol = t.column(job.key_field);
+            let mut acc = vec![0.0f64; num_keys];
+            for r in lo..hi {
+                let n = probe.table.probe(&pcol.value(r)).len() as f64;
+                if n == 0.0 {
+                    continue;
+                }
+                let k = match kcol {
+                    Column::DictStrs { keys, .. } => keys[r] as usize,
+                    Column::Ints(keys) => keys[r] as usize,
+                    _ => t.value(r, job.key_field).as_int().unwrap_or(0) as usize,
+                };
+                acc[k] += weight(r, n);
+            }
+            Partial::Dense(acc)
+        }
+        None => {
+            let mut map: FxHashMap<Value, f64> = FxHashMap::default();
+            for r in lo..hi {
+                let n = probe.table.probe(&pcol.value(r)).len() as f64;
+                if n == 0.0 {
+                    continue;
+                }
+                *map.entry(t.value(r, job.key_field)).or_insert(0.0) += weight(r, n);
+            }
+            Partial::Assoc(map.into_iter().collect())
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,6 +422,80 @@ mod tests {
         pairs.sort_by(|x, y| x.0.cmp(&y.0));
         assert_eq!(pairs[0], (Value::str("/a"), 3.0));
         assert_eq!(pairs[1], (Value::str("/b"), 1.0));
+    }
+
+    #[test]
+    fn join_count_chunks_match_nested_loop_oracle() {
+        // Probe table A(b_id, g) against build table B(id); count matched
+        // pairs per g — chunked processing must equal the whole table and
+        // the brute-force nested loop.
+        let a = {
+            let schema = Schema::new(vec![("b_id", DataType::Int), ("g", DataType::Str)]);
+            let mut m = Multiset::new(schema);
+            for (id, g) in [(1, "x"), (2, "y"), (1, "x"), (9, "z"), (2, "x")] {
+                m.push(vec![Value::Int(id), Value::str(g)]);
+            }
+            Arc::new(Table::from_multiset(&m).unwrap())
+        };
+        let b = {
+            let schema = Schema::new(vec![("id", DataType::Int)]);
+            let mut m = Multiset::new(schema);
+            for id in [1, 1, 2] {
+                m.push(vec![Value::Int(id)]);
+            }
+            Arc::new(Table::from_multiset(&m).unwrap())
+        };
+        // Oracle: nested loops.
+        let mut want: std::collections::BTreeMap<String, f64> = Default::default();
+        for ar in 0..a.len() {
+            for br in 0..b.len() {
+                if a.value(ar, 0) == b.value(br, 0) {
+                    *want.entry(a.value(ar, 1).to_string()).or_default() += 1.0;
+                }
+            }
+        }
+        let probe = JoinProbe::new(&b, 0, 0);
+        let job = AggJob::count_join(a, 1, probe);
+        let mut whole = Acc::for_job(&job);
+        whole.merge(process_chunk(&job, 0, 5));
+        let mut chunked = Acc::for_job(&job);
+        chunked.merge(process_chunk(&job, 0, 2));
+        chunked.merge(process_chunk(&job, 2, 5));
+        for acc in [whole, chunked] {
+            let pairs = acc.into_pairs(&job);
+            assert_eq!(pairs.len(), want.len());
+            for (k, x) in pairs {
+                assert_eq!(want[&k.to_string()], x, "key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn join_sum_weights_by_multiplicity() {
+        let a = {
+            let schema = Schema::new(vec![("b_id", DataType::Int), ("v", DataType::Float)]);
+            let mut m = Multiset::new(schema);
+            for (id, v) in [(0, 1.5), (1, 2.0), (0, 0.5)] {
+                m.push(vec![Value::Int(id), Value::Float(v)]);
+            }
+            Arc::new(Table::from_multiset(&m).unwrap())
+        };
+        let b = {
+            let schema = Schema::new(vec![("id", DataType::Int)]);
+            let mut m = Multiset::new(schema);
+            for id in [0, 0, 1] {
+                m.push(vec![Value::Int(id)]);
+            }
+            Arc::new(Table::from_multiset(&m).unwrap())
+        };
+        let probe = JoinProbe::new(&b, 0, 0);
+        let job = AggJob::sum_join(a, 0, 1, probe);
+        let mut acc = Acc::for_job(&job);
+        acc.merge(process_chunk(&job, 0, 3));
+        let mut pairs = acc.into_pairs(&job);
+        pairs.sort_by(|x, y| x.0.cmp(&y.0));
+        // key 0: (1.5 + 0.5) * 2 matches; key 1: 2.0 * 1 match.
+        assert_eq!(pairs, vec![(Value::Int(0), 4.0), (Value::Int(1), 2.0)]);
     }
 
     #[test]

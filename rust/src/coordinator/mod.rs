@@ -23,7 +23,7 @@ use crate::distrib::{channel, CommStats, LinkModel, Tx};
 use crate::ir::{Multiset, Schema, Value};
 use crate::sched::{Chunk, Policy, Scheduler};
 
-pub use job::{process_chunk, Acc, AggJob, AggOp, Partial};
+pub use job::{process_chunk, Acc, AggJob, AggOp, JoinProbe, Partial};
 
 /// Failure injection: `worker` dies after completing `after_chunks`.
 #[derive(Debug, Clone, Copy)]
@@ -507,6 +507,42 @@ mod tests {
             want.push(vec![k, Value::Int(v as i64)]);
         }
         assert!(got.bag_eq(&want));
+    }
+
+    #[test]
+    fn distributed_join_count_matches_single_chunk_oracle() {
+        let probe_t = table(20_000, 300, true);
+        // Dimension side: a sample of the probe table's url values, with
+        // one duplicate so multiplicities > 1 occur.
+        let build = {
+            let schema = Schema::new(vec![("url", DataType::Str)]);
+            let mut m = Multiset::new(schema);
+            for r in (0..probe_t.len()).step_by(97) {
+                m.push(vec![probe_t.value(r, 0)]);
+            }
+            m.push(vec![probe_t.value(0, 0)]);
+            Arc::new(crate::storage::Table::from_multiset(&m).unwrap())
+        };
+        let probe = JoinProbe::new(&build, 0, 0);
+        let job = AggJob::count_join(probe_t.clone(), 0, probe);
+
+        let mut acc = Acc::for_job(&job);
+        acc.merge(process_chunk(&job, 0, probe_t.len()));
+        let mut want = acc.into_pairs(&job);
+        want.sort_by(|x, y| x.0.cmp(&y.0));
+
+        for cfg in [
+            ClusterConfig::new(4, Policy::Gss),
+            ClusterConfig::new(4, Policy::FixedChunk(512)).with_failure(Failure {
+                worker: 1,
+                after_chunks: 2,
+            }),
+        ] {
+            let r = run_job(&cfg, &job).unwrap();
+            let mut got = r.pairs.clone();
+            got.sort_by(|x, y| x.0.cmp(&y.0));
+            assert_eq!(got, want);
+        }
     }
 
     #[test]

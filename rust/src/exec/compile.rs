@@ -10,12 +10,21 @@
 //! batch kernel tag ([`FastAgg`]). The vectorized executor (`vector.rs`)
 //! then drives the compiled form in column batches.
 //!
+//! Join-shaped programs compile too: the Figure-1 nested `forelem` with a
+//! filtered inner index set (`forelem i ∈ pA { forelem j ∈ pB.id[i.b_id]
+//! { ... } }`, the exact form `sql::lower` emits for equi-joins) becomes a
+//! [`JoinLoop`] — a build+probe hash join the vectorized executor drives
+//! with the same selection-vector and slot-resolved-register machinery as
+//! plain scans. Single-statement aggregation bodies over the matched
+//! pairs (join + GROUP BY) carry a fused [`JoinFastAgg`] kernel tag.
+//!
 //! Compilation is *total or nothing*: [`compile_program`] returns `None`
-//! for any program shape outside the supported tier (nested data loops,
-//! value partitions, distinct-value domains, assignments that the
-//! interpreter's scope stack would treat subtly differently), so the
-//! dispatch in `plan.rs` can fall back to the interpreter and observable
-//! behaviour — including error behaviour — is preserved exactly.
+//! for any program shape outside the supported tier (data loops nested
+//! deeper than the join shape, value partitions, distinct-value domains,
+//! assignments that the interpreter's scope stack would treat subtly
+//! differently), so the dispatch in `plan.rs` can fall back to the
+//! interpreter and observable behaviour — including error behaviour — is
+//! preserved exactly.
 
 use std::sync::Arc;
 
@@ -90,6 +99,7 @@ pub enum CStmt {
         body: Vec<CStmt>,
     },
     Scan(ScanLoop),
+    Join(JoinLoop),
 }
 
 /// A compiled `forelem` loop over an index set: the unit the vectorized
@@ -125,6 +135,75 @@ pub enum FastAgg {
     Sum {
         array: usize,
         key_field: usize,
+        val_field: usize,
+    },
+}
+
+/// A compiled equi-join: the Figure-1 nested-`forelem`-with-filtered-inner
+/// shape, executed as build + probe instead of nested scans. The inner
+/// (build) table is hashed once on [`JoinLoop::build_key`]; the outer
+/// (probe) side streams through in column batches, each row's probe key
+/// selecting the bucket of matching build rows. Buckets preserve table
+/// order, so the (outer-major, inner-in-table-order) match sequence is
+/// exactly the interpreter's nested-loop order — results, prints and
+/// float fold order all stay identical.
+#[derive(Debug, Clone)]
+pub struct JoinLoop {
+    /// Probe (outer) side table.
+    pub outer: Arc<Table>,
+    /// Cursor slot the outer loop variable binds.
+    pub outer_cursor: usize,
+    /// Equality filter on the outer scan, as in [`ScanLoop::filter`].
+    pub outer_filter: Option<(usize, ExprProg)>,
+    /// Direct partition restriction of the outer scan: (part, parts).
+    pub partition: Option<(ExprProg, ExprProg)>,
+    /// Build (inner) side table — the hash table is built over this side.
+    pub build: Arc<Table>,
+    /// Cursor slot the inner loop variable binds.
+    pub build_cursor: usize,
+    /// Field of `build` the hash table is keyed on.
+    pub build_key: usize,
+    /// Probe key, evaluated once per outer row with the outer cursor (but
+    /// not the inner one) in scope — interpreter parity for the inner
+    /// index set's filter expression.
+    pub probe_key: ExprProg,
+    /// When the probe key is a plain outer-cursor field load, its field
+    /// id — executors then read the probe column directly instead of
+    /// running the register program per row.
+    pub probe_field: Option<usize>,
+    /// Per-match body, with both cursors in scope.
+    pub body: Vec<CStmt>,
+    /// Fused per-match aggregation (join + GROUP BY shapes). Subject to
+    /// the same empty-array entry guard as [`ScanLoop::fast`].
+    pub fast: Option<JoinFastAgg>,
+}
+
+/// Which side of a compiled join a fused-aggregation column lives on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinSide {
+    /// The probe (outer) table.
+    Outer,
+    /// The build (inner) table.
+    Build,
+}
+
+/// Recognized single-statement per-match aggregations of a join body:
+/// the `SELECT g, AGG(x) ... JOIN ... GROUP BY g` accumulation loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinFastAgg {
+    /// `count[key]++` per matched pair, with integer-zero init.
+    Count {
+        array: usize,
+        key_side: JoinSide,
+        key_field: usize,
+    },
+    /// `sum[key] += val` per matched pair, with zero init and a numeric
+    /// value column; key and value may live on either side.
+    Sum {
+        array: usize,
+        key_side: JoinSide,
+        key_field: usize,
+        val_side: JoinSide,
         val_field: usize,
     },
 }
@@ -321,7 +400,17 @@ impl<'a> Compiler<'a> {
                 })
             }
             Domain::IndexSet(ix) => {
-                // One data loop at a time: nested forelem loops (joins)
+                // The Figure-1 join shape — an outer scan whose whole body
+                // is one inner forelem filtered on a key from the outer
+                // cursor — compiles to a build+probe hash join.
+                if self.cursors.is_empty() {
+                    if let [Stmt::Loop(inner)] = l.body.as_slice() {
+                        if let Some(join) = self.try_compile_join(l, ix, inner) {
+                            return Some(join);
+                        }
+                    }
+                }
+                // Otherwise one data loop at a time: deeper forelem nests
                 // keep the interpreter's index strategies.
                 if !self.cursors.is_empty() {
                     return None;
@@ -380,6 +469,175 @@ impl<'a> Compiler<'a> {
             // Indirect (value) partitioning and distinct-value domains
             // stay on the interpreter tier.
             Domain::ValuePartition { .. } | Domain::DistinctValues { .. } => None,
+        }
+    }
+
+    /// Recognize and compile the Figure-1 join shape:
+    ///
+    /// ```text
+    /// forelem (i; i ∈ pA) { forelem (j; j ∈ pB.id[i.b_id]) { BODY } }
+    /// ```
+    ///
+    /// into a [`JoinLoop`]. Returns `None` for shapes outside the
+    /// supported form (outer distinct, inner distinct/partition, missing
+    /// inner filter); the caller then falls through to the generic paths,
+    /// which reject nested data loops and leave the program on the
+    /// interpreter tier.
+    fn try_compile_join(&mut self, outer: &Loop, ox: &IndexSet, inner: &Loop) -> Option<CStmt> {
+        let Domain::IndexSet(iix) = &inner.domain else {
+            return None;
+        };
+        let (ifield, ikey) = iix.field_filter.as_ref()?;
+        if ox.distinct.is_some() || iix.distinct.is_some() || iix.partition.is_some() {
+            return None;
+        }
+        let outer_table = self.catalog.get(&ox.relation).ok()?.clone();
+        let build = self.catalog.get(&iix.relation).ok()?.clone();
+        let build_key = build.schema.field_id(ifield)?;
+        let outer_filter = match &ox.field_filter {
+            Some((field, value)) => {
+                let fid = outer_table.schema.field_id(field)?;
+                Some((fid, self.expr_prog(value)?))
+            }
+            None => None,
+        };
+        let partition = match &ox.partition {
+            Some(p) => Some((self.expr_prog(&p.part)?, self.expr_prog(&p.parts)?)),
+            None => None,
+        };
+        let outer_cursor = self.n_cursors;
+        self.n_cursors += 1;
+        self.cursors
+            .push((outer.var.clone(), outer_table.clone(), outer_cursor));
+        // Probe key: compiled with the outer cursor (but not the inner
+        // one) in scope, exactly the scope the interpreter evaluates the
+        // inner index set's filter in.
+        let probe_key = self.expr_prog(ikey);
+        let build_cursor = self.n_cursors;
+        self.n_cursors += 1;
+        self.cursors
+            .push((inner.var.clone(), build.clone(), build_cursor));
+        self.no_fresh_binds += 1;
+        let body = self.stmts(&inner.body);
+        self.no_fresh_binds -= 1;
+        self.cursors.pop();
+        self.cursors.pop();
+        let probe_key = probe_key?;
+        let body = body?;
+        let probe_field = match probe_key.ops.as_slice() {
+            [Op::LoadField { cursor, field, .. }] if *cursor == outer_cursor => Some(*field),
+            _ => None,
+        };
+        // Fused aggregation only without an outer filter (mirroring
+        // `detect_fast`) and with a direct probe column.
+        let fast = if ox.field_filter.is_none() && probe_field.is_some() {
+            self.detect_join_fast(outer, inner, &outer_table, &build)
+        } else {
+            None
+        };
+        Some(CStmt::Join(JoinLoop {
+            outer: outer_table,
+            outer_cursor,
+            outer_filter,
+            partition,
+            build,
+            build_cursor,
+            build_key,
+            probe_key,
+            probe_field,
+            body,
+            fast,
+        }))
+    }
+
+    /// Recognize `forelem i { forelem j { a[key]++ / a[key] += v } }`
+    /// join bodies the fused per-match kernels can execute; `key` and `v`
+    /// may live on either side. Zero-init guards mirror `detect_fast`.
+    fn detect_join_fast(
+        &self,
+        outer: &Loop,
+        inner: &Loop,
+        outer_table: &Arc<Table>,
+        build: &Arc<Table>,
+    ) -> Option<JoinFastAgg> {
+        use crate::storage::Column;
+        let [Stmt::Accum {
+            array,
+            indices,
+            op: AccumOp::Add,
+            value,
+        }] = inner.body.as_slice()
+        else {
+            return None;
+        };
+        let [Expr::Field { var, field }] = indices.as_slice() else {
+            return None;
+        };
+        // Innermost binding wins, mirroring cursor resolution in `expr`
+        // (and the interpreter's env stack): when both loops bind the
+        // same name, it refers to the inner (build) cursor.
+        let side_of = |v: &str| -> Option<JoinSide> {
+            if v == inner.var {
+                Some(JoinSide::Build)
+            } else if v == outer.var {
+                Some(JoinSide::Outer)
+            } else {
+                None
+            }
+        };
+        let key_side = side_of(var)?;
+        let key_table = match key_side {
+            JoinSide::Outer => outer_table,
+            JoinSide::Build => build,
+        };
+        let key_field = key_table.schema.field_id(field)?;
+        if !matches!(
+            key_table.column(key_field),
+            Column::Ints(_) | Column::DictStrs { .. } | Column::Strs(_)
+        ) {
+            return None;
+        }
+        let slot = self.slots.array_slot(array)?;
+        let init = &self.program.arrays[array].init;
+        match value {
+            Expr::Const(Value::Int(1)) if matches!(init, Value::Int(0)) => {
+                Some(JoinFastAgg::Count {
+                    array: slot,
+                    key_side,
+                    key_field,
+                })
+            }
+            Expr::Field {
+                var: vvar,
+                field: vfield,
+            } => {
+                let val_side = side_of(vvar)?;
+                let val_table = match val_side {
+                    JoinSide::Outer => outer_table,
+                    JoinSide::Build => build,
+                };
+                let val_field = val_table.schema.field_id(vfield)?;
+                let zero_init = match (val_table.column(val_field), init) {
+                    // i64 accumulation requires a strict Int(0) start.
+                    (Column::Ints(_), Value::Int(0)) => true,
+                    // f64 accumulation: Int(0) and +0.0 fold identically.
+                    (Column::Floats(_), Value::Int(0)) => true,
+                    (Column::Floats(_), Value::Float(f)) => f.to_bits() == 0f64.to_bits(),
+                    _ => false,
+                };
+                if zero_init {
+                    Some(JoinFastAgg::Sum {
+                        array: slot,
+                        key_side,
+                        key_field,
+                        val_side,
+                        val_field,
+                    })
+                } else {
+                    None
+                }
+            }
+            _ => None,
         }
     }
 
@@ -643,24 +901,113 @@ mod tests {
         assert!(matches!(acc.fast, Some(FastAgg::Sum { .. })));
     }
 
-    #[test]
-    fn joins_fall_back_to_interpreter() {
+    fn join_catalog() -> StorageCatalog {
         let mut c = StorageCatalog::new();
         let a = Multiset::with_rows(
-            Schema::new(vec![("b_id", DataType::Int)]),
-            vec![vec![Value::Int(1)]],
+            Schema::new(vec![("b_id", DataType::Int), ("g", DataType::Str)]),
+            vec![
+                vec![Value::Int(1), Value::str("x")],
+                vec![Value::Int(2), Value::str("y")],
+                vec![Value::Int(1), Value::str("x")],
+            ],
         );
         let b = Multiset::with_rows(
-            Schema::new(vec![("id", DataType::Int)]),
-            vec![vec![Value::Int(1)]],
+            Schema::new(vec![("id", DataType::Int), ("v", DataType::Float)]),
+            vec![
+                vec![Value::Int(1), Value::Float(0.5)],
+                vec![Value::Int(2), Value::Float(1.5)],
+            ],
         );
         c.insert_multiset("A", &a).unwrap();
         c.insert_multiset("B", &b).unwrap();
+        c
+    }
+
+    #[test]
+    fn figure1_join_compiles_to_hash_join() {
+        let c = join_catalog();
         let p = compile_sql(
             "SELECT A.b_id FROM A JOIN B ON A.b_id = B.id",
             &c.schemas(),
         )
         .unwrap();
+        let cp = compile_program(&p, &c).expect("join shape is supported");
+        let [CStmt::Join(j)] = cp.body.as_slice() else {
+            panic!("expected a compiled join, got {:?}", cp.body);
+        };
+        assert_eq!(j.build_key, 0);
+        assert_eq!(j.probe_field, Some(0));
+        assert!(j.outer_filter.is_none());
+        assert!(j.fast.is_none()); // plain projection body
+    }
+
+    #[test]
+    fn join_group_by_count_detects_fast_agg() {
+        let c = join_catalog();
+        let p = compile_sql(
+            "SELECT g, COUNT(g) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).expect("join aggregate is supported");
+        let CStmt::Join(j) = &cp.body[0] else {
+            panic!("expected a compiled join, got {:?}", cp.body);
+        };
+        assert!(matches!(
+            j.fast,
+            Some(JoinFastAgg::Count {
+                key_side: JoinSide::Outer,
+                ..
+            })
+        ));
+        // Emit loop over distinct group keys follows.
+        assert!(matches!(&cp.body[1], CStmt::Scan(s) if s.distinct.is_some()));
+    }
+
+    #[test]
+    fn join_group_by_sum_detects_cross_side_fast_agg() {
+        let c = join_catalog();
+        let p = compile_sql(
+            "SELECT g, SUM(v) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).expect("join aggregate is supported");
+        let CStmt::Join(j) = &cp.body[0] else {
+            panic!("expected a compiled join");
+        };
+        assert!(matches!(
+            j.fast,
+            Some(JoinFastAgg::Sum {
+                key_side: JoinSide::Outer,
+                val_side: JoinSide::Build,
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn three_deep_forelem_nests_fall_back() {
+        // Only the two-table Figure-1 shape is compiled; a forelem nest
+        // inside the join body keeps the interpreter.
+        let c = join_catalog();
+        let mut p = Program::new("deep")
+            .with_relation("A", c.schemas()["A"].clone())
+            .with_relation("B", c.schemas()["B"].clone())
+            .with_result("R", Schema::new(vec![("g", DataType::Str)]));
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::Loop(Loop::forelem(
+                "j",
+                IndexSet::filtered("B", "id", Expr::field("i", "b_id")),
+                vec![Stmt::Loop(Loop::forelem(
+                    "k",
+                    IndexSet::filtered("A", "b_id", Expr::field("j", "id")),
+                    vec![Stmt::result_union("R", vec![Expr::field("k", "g")])],
+                ))],
+            ))],
+        ))];
         assert!(compile_program(&p, &c).is_none());
     }
 

@@ -7,7 +7,8 @@
 //!    generated C code);
 //! 2. [`vector`]  — the vectorized batch executor: programs lowered by
 //!    [`compile`] to slot-resolved register form and driven over column
-//!    batches (no per-row name resolution);
+//!    batches (no per-row name resolution); equi-joins run here as
+//!    build+probe hash joins (`"vec.hash_join"`);
 //! 3. [`local`]   — the sequential reference interpreter (semantic
 //!    oracle); every other tier must produce `bag_eq` results with it.
 //!
@@ -33,4 +34,4 @@ pub use index::{DistinctIndex, HashIndex, IndexCache, TreeIndex};
 pub use local::{block_bounds, partition_values, run, ExecStats, Output};
 pub use parallel::run_parallel;
 pub use plan::{recognize, run_compiled, Idiom};
-pub use vector::{run_compiled_program, try_run as run_vectorized, BATCH};
+pub use vector::{run_compiled_program, try_run as run_vectorized, JoinHashTable, BATCH};

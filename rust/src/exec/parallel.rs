@@ -14,6 +14,15 @@
 //! [`VecState::absorb`] also stays correct for overlapping commutative
 //! adds. Programs outside the vectorized tier fall back to the
 //! interpreter-based fan-out below.
+//!
+//! Compiled hash joins parallelize similarly: the [`JoinHashTable`] is
+//! built **once** and shared read-only across the pool while each worker
+//! probes one contiguous block of probe-side rows, provided the join
+//! body's effects are only commutative accumulator adds and result
+//! appends (checked by `join_parallel_safe`; scalar writes, prints and
+//! array reads keep the join on the sequential driver). As with the
+//! `forall` fan-out, merging per-worker float partials may reorder a
+//! floating-point fold across workers.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -23,10 +32,11 @@ use anyhow::{Context, Result};
 use crate::ir::{Domain, LoopKind, Program, Stmt, Value};
 use crate::storage::StorageCatalog;
 
-use super::compile::{compile_program, CStmt, CompiledProgram};
+use super::compile::{compile_program, CStmt, CompiledProgram, ExprProg, Op};
 use super::eval::ArrayStore;
 use super::local::{ExecStats, Interp, Output};
-use super::vector::VecState;
+use super::vector::{JoinHashTable, VecState, BATCH};
+use crate::ir::AccumOp;
 
 /// Execute a program, running top-level `forall` range loops on a chunked
 /// worker pool (bounded by `max_threads`; `0` is treated as `1`).
@@ -107,15 +117,93 @@ pub fn run_parallel_compiled(cp: &CompiledProgram, max_threads: usize) -> Result
                     master.absorb(r?);
                 }
             }
+            CStmt::Join(jl)
+                if threads > 1 && jl.outer.len() > BATCH && join_parallel_safe(jl) =>
+            {
+                // Build once, probe everywhere: the hash table is shared
+                // read-only. Each worker gets ONE contiguous block of
+                // probe-side rows (probe cost is uniform per row, and a
+                // single probe_join call keeps the fused per-match
+                // kernels eligible for the worker's whole range — with
+                // batch stealing only the first stolen range would fuse).
+                let build = JoinHashTable::build(&jl.build, jl.build_key);
+                master.stats.index_builds += 1;
+                let len = jl.outer.len();
+                let workers = threads.min(len.div_ceil(BATCH)).max(1);
+                let build = &build;
+                // Workers see the master's current scalar state (read-only
+                // — the safety check rejects scalar writes in the body).
+                let scalars = master.scalars.clone();
+                let scalars = &scalars;
+
+                let states: Vec<Result<VecState>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..workers)
+                        .map(|w| {
+                            scope.spawn(move || -> Result<VecState> {
+                                let mut st = VecState::new(cp);
+                                st.scalars.clone_from(scalars);
+                                let (lo, hi) =
+                                    super::local::block_bounds(len, workers, w);
+                                st.probe_join(cp, jl, build, lo, hi)?;
+                                Ok(st)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("join worker panicked"))
+                        .collect()
+                });
+
+                for r in states {
+                    master.absorb(r?);
+                }
+            }
             other => master.exec_stmts(cp, std::slice::from_ref(other))?,
         }
     }
     Ok(master.finish(cp))
 }
 
+/// True when a compiled join can fan out across workers: the body's
+/// effects are only commutative accumulator adds and result appends —
+/// the effects [`VecState::absorb`] merges losslessly — and no involved
+/// expression reads accumulator arrays (a worker would observe its own
+/// partial state instead of the global one). Scalar assignments, prints,
+/// nested loops and partitioned outers keep the join on the sequential
+/// driver.
+fn join_parallel_safe(jl: &super::compile::JoinLoop) -> bool {
+    jl.partition.is_none()
+        && expr_safe(&jl.probe_key)
+        && match &jl.outer_filter {
+            Some((_, p)) => expr_safe(p),
+            None => true,
+        }
+        && join_body_parallel_safe(&jl.body)
+}
+
+fn expr_safe(p: &ExprProg) -> bool {
+    p.ops
+        .iter()
+        .all(|o| !matches!(o, Op::ReadArray { .. } | Op::Sum { .. }))
+}
+
+fn join_body_parallel_safe(body: &[CStmt]) -> bool {
+    body.iter().all(|s| match s {
+        CStmt::Result { tuple, .. } => tuple.iter().all(expr_safe),
+        CStmt::Accum { idx, op, value, .. } => {
+            *op == AccumOp::Add && idx.iter().all(expr_safe) && expr_safe(value)
+        }
+        CStmt::If { cond, then, els } => {
+            expr_safe(cond) && join_body_parallel_safe(then) && join_body_parallel_safe(els)
+        }
+        _ => false,
+    })
+}
+
 /// Interpreter-based fallback for programs the vectorized tier does not
-/// support (value partitions, joins, ...). Each worker runs a private
-/// `Interp` over a static share of the iterations.
+/// support (value partitions, distinct-value domains, ...). Each worker
+/// runs a private `Interp` over a static share of the iterations.
 pub(crate) fn run_parallel_interp(
     program: &Program,
     catalog: &StorageCatalog,
@@ -297,6 +385,76 @@ mod tests {
         assert!(out.result().unwrap().bag_eq(seq.result().unwrap()));
         let out = run_parallel_interp(&p, &c, 4).unwrap();
         assert!(out.result().unwrap().bag_eq(seq.result().unwrap()));
+    }
+
+    fn join_setup(arows: usize, brows: usize) -> (StorageCatalog, Program, Program) {
+        use crate::ir::{DataType, Multiset, Schema, Value};
+        let mut rng = crate::util::Rng::new(21);
+        let mut a = Multiset::new(Schema::new(vec![
+            ("b_id", DataType::Int),
+            ("g", DataType::Str),
+        ]));
+        for _ in 0..arows {
+            a.push(vec![
+                Value::Int(rng.range(0, brows as i64 * 2)),
+                Value::str(format!("g{}", rng.below(16))),
+            ]);
+        }
+        let mut b = Multiset::new(Schema::new(vec![("id", DataType::Int)]));
+        for i in 0..brows {
+            b.push(vec![Value::Int(i as i64)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("A", &a).unwrap();
+        c.insert_multiset("B", &b).unwrap();
+        let join = compile_sql(
+            "SELECT A.g, B.id FROM A JOIN B ON A.b_id = B.id",
+            &c.schemas(),
+        )
+        .unwrap();
+        let agg = compile_sql(
+            "SELECT g, COUNT(g) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+            &c.schemas(),
+        )
+        .unwrap();
+        (c, join, agg)
+    }
+
+    #[test]
+    fn parallel_hash_join_matches_sequential() {
+        let (c, join, agg) = join_setup(20_000, 500);
+        for p in [&join, &agg] {
+            let seq = super::super::local::run(p, &c).unwrap();
+            for threads in [1, 2, 4, 8] {
+                let par = run_parallel(p, &c, threads).unwrap();
+                assert!(
+                    par.result().unwrap().bag_eq(seq.result().unwrap()),
+                    "threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_join_tags_hash_join_idiom() {
+        let (c, join, _) = join_setup(10_000, 200);
+        let par = run_parallel(&join, &c, 4).unwrap();
+        assert!(
+            par.stats.idioms.contains(&"vec.hash_join".to_string()),
+            "{:?}",
+            par.stats.idioms
+        );
+    }
+
+    #[test]
+    fn tiny_join_runs_sequentially_and_matches() {
+        // Below the fan-out threshold the join stays on the master state.
+        let (c, join, agg) = join_setup(50, 10);
+        for p in [&join, &agg] {
+            let seq = super::super::local::run(p, &c).unwrap();
+            let par = run_parallel(p, &c, 8).unwrap();
+            assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+        }
     }
 
     #[test]

@@ -11,10 +11,19 @@
 //! native fallbacks use, so all three tiers share one code path for the
 //! dense counting/summing loops.
 //!
+//! Equi-joins execute here too: a compiled [`JoinLoop`] builds a
+//! [`JoinHashTable`] over the inner table once, then probes it from the
+//! outer cursor in [`BATCH`]-row batches (selection vectors handle any
+//! outer equality filter). Matched pairs run the slot-resolved body, or —
+//! for the join + GROUP BY shapes — the fused per-match `vec.count` /
+//! `vec.sum` kernels. `"vec.hash_join"` is pushed into
+//! [`ExecStats::idioms`] whenever the join kernel fires.
+//!
 //! Semantics contract: for every supported program the output is
 //! `bag_eq`-identical to `local::run`, including scalar results, print
 //! stream and float rounding (fold order is preserved; fused float sums
-//! only fire from a zero accumulator).
+//! only fire from a zero accumulator, and join probes visit matches in
+//! the interpreter's nested-loop order).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -25,7 +34,10 @@ use crate::ir::{AccumOp, BinOp, Program, Tuple, UnOp, Value};
 use crate::storage::{Column, StorageCatalog, Table};
 use crate::util::FxHashMap;
 
-use super::compile::{compile_program, CStmt, CompiledProgram, ExprProg, FastAgg, Op, ScanLoop};
+use super::compile::{
+    compile_program, CStmt, CompiledProgram, ExprProg, FastAgg, JoinFastAgg, JoinLoop, JoinSide,
+    Op, ScanLoop,
+};
 use super::eval::{apply_accum, value_binop};
 use super::index::DistinctIndex;
 use super::local::{block_bounds, ExecStats, Output};
@@ -33,6 +45,48 @@ use super::local::{block_bounds, ExecStats, Output};
 /// Rows per batch: large enough to amortize dispatch, small enough to
 /// keep the touched column windows cache-resident.
 pub const BATCH: usize = 1024;
+
+/// Hash table over the build side of a compiled join: key value → row ids
+/// in table order.
+///
+/// Probing uses the interpreter's `Value` equality (cross-type numeric
+/// `Eq` and `Hash` agree, see `ir::value`), so the match set is identical
+/// to the reference scan filter's; buckets preserve table order, so the
+/// probe's (outer-major, inner-in-table-order) match sequence is exactly
+/// the interpreter's nested-loop order. Built once per join execution and
+/// shared read-only across workers by `exec::parallel` and the
+/// coordinator's join jobs.
+#[derive(Debug, Default)]
+pub struct JoinHashTable {
+    map: FxHashMap<Value, Vec<u32>>,
+}
+
+impl JoinHashTable {
+    /// Build over `table.column(key_field)` in one pass.
+    pub fn build(table: &Table, key_field: usize) -> JoinHashTable {
+        let col = table.column(key_field);
+        let mut map: FxHashMap<Value, Vec<u32>> = FxHashMap::default();
+        for row in 0..table.len() {
+            map.entry(col.value(row)).or_default().push(row as u32);
+        }
+        JoinHashTable { map }
+    }
+
+    /// Rows whose key column equals `key`, in table order.
+    pub fn probe(&self, key: &Value) -> &[u32] {
+        self.map.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Number of distinct keys.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when the build side held no rows.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
 
 /// Execute a program on the vectorized tier if its shape is supported.
 /// `Ok(None)` means "not this tier" — callers fall back to the
@@ -233,6 +287,406 @@ impl VecState {
                 Ok(())
             }
             CStmt::Scan(sl) => self.exec_scan(cp, sl),
+            CStmt::Join(jl) => self.exec_join(cp, jl),
+        }
+    }
+
+    /// Execute a compiled join: build the hash table over the inner side,
+    /// then probe it from the outer cursor.
+    fn exec_join(&mut self, cp: &CompiledProgram, jl: &JoinLoop) -> Result<()> {
+        let len = jl.outer.len();
+        let (lo, hi) = match &jl.partition {
+            Some((part, parts)) => {
+                let k = self
+                    .eval_value(cp, part)?
+                    .as_int()
+                    .context("partition id must be an int")?;
+                let n = self
+                    .eval_value(cp, parts)?
+                    .as_int()
+                    .context("partition count must be an int")?;
+                if k < 1 || k > n {
+                    bail!("partition {k} out of 1..={n}");
+                }
+                block_bounds(len, n as usize, k as usize - 1)
+            }
+            None => (0, len),
+        };
+        let build = JoinHashTable::build(&jl.build, jl.build_key);
+        self.stats.index_builds += 1;
+        self.probe_join(cp, jl, &build, lo, hi)
+    }
+
+    /// Probe rows `[lo, hi)` of the outer table against an already-built
+    /// hash table. `exec::parallel` calls this directly with stolen row
+    /// ranges, sharing one build across the worker pool.
+    pub(crate) fn probe_join(
+        &mut self,
+        cp: &CompiledProgram,
+        jl: &JoinLoop,
+        build: &JoinHashTable,
+        lo: usize,
+        hi: usize,
+    ) -> Result<()> {
+        self.note_idiom("vec.hash_join");
+        if let Some(fast) = jl.fast {
+            if lo < hi && self.join_fast_agg(jl, build, fast, lo, hi) {
+                return Ok(());
+            }
+        }
+        self.cursors[jl.outer_cursor].table = Some(jl.outer.clone());
+        self.cursors[jl.build_cursor].table = Some(jl.build.clone());
+        // Outer equality filter: the key is scope-constant, evaluated once.
+        let filter = match &jl.outer_filter {
+            Some((fid, prog)) => Some((*fid, self.eval_value(cp, prog)?)),
+            None => None,
+        };
+        let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
+        let mut base = lo;
+        while base < hi {
+            let end = (base + BATCH).min(hi);
+            self.stats.rows_visited += (end - base) as u64;
+            sel.clear();
+            match &filter {
+                Some((fid, key)) => {
+                    let col = jl.outer.column(*fid);
+                    for row in base..end {
+                        if col.value(row) == *key {
+                            sel.push(row);
+                        }
+                    }
+                }
+                None => sel.extend(base..end),
+            }
+            for &row in &sel {
+                self.cursors[jl.outer_cursor].row = row;
+                let key = match jl.probe_field {
+                    Some(f) => jl.outer.column(f).value(row),
+                    None => self.eval_value(cp, &jl.probe_key)?,
+                };
+                for &irow in build.probe(&key) {
+                    self.stats.rows_visited += 1;
+                    self.cursors[jl.build_cursor].row = irow as usize;
+                    self.exec_stmts(cp, &jl.body)?;
+                }
+            }
+            base = end;
+        }
+        Ok(())
+    }
+
+    /// Fused per-match join aggregation: `count[key]++` / `sum[key] += v`
+    /// over the matched pairs, driving the shared batch kernels where the
+    /// key column is dictionary-encoded. Returns `false` (caller runs the
+    /// generic per-pair body) when the target array already holds entries
+    /// or the column pairing is unsupported.
+    fn join_fast_agg(
+        &mut self,
+        jl: &JoinLoop,
+        build: &JoinHashTable,
+        fast: JoinFastAgg,
+        lo: usize,
+        hi: usize,
+    ) -> bool {
+        let Some(pf) = jl.probe_field else {
+            return false;
+        };
+        let pcol = jl.outer.column(pf);
+        // Matched build rows, counted so `rows_visited` reports probe
+        // rows + matches exactly like the generic per-pair path.
+        let mut matched: u64 = 0;
+        // Row a column on `s` reads for the matched pair (orow, irow).
+        let pick = |s: JoinSide, orow: usize, irow: usize| -> usize {
+            match s {
+                JoinSide::Outer => orow,
+                JoinSide::Build => irow,
+            }
+        };
+        match fast {
+            JoinFastAgg::Count {
+                array,
+                key_side,
+                key_field,
+            } => {
+                if !self.arrays[array].is_empty() {
+                    return false;
+                }
+                let kcol = match key_side {
+                    JoinSide::Outer => jl.outer.column(key_field),
+                    JoinSide::Build => jl.build.column(key_field),
+                };
+                match (key_side, kcol) {
+                    (JoinSide::Outer, Column::DictStrs { keys, dict }) => {
+                        // Per outer row, all matches share the outer key:
+                        // add the bucket length in one go.
+                        let mut counts = vec![0i64; dict.len()];
+                        for row in lo..hi {
+                            let n = build.probe(&pcol.value(row)).len() as i64;
+                            matched += n as u64;
+                            if n != 0 {
+                                counts[keys[row] as usize] += n;
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, &n) in counts.iter().enumerate() {
+                            if n != 0 {
+                                let s = dict.decode(k as u32).expect("dict key in range").clone();
+                                store.insert(vec![Value::Str(s)], Value::Int(n));
+                            }
+                        }
+                    }
+                    (JoinSide::Outer, Column::Ints(keys)) => {
+                        let mut map: FxHashMap<i64, i64> = FxHashMap::default();
+                        for row in lo..hi {
+                            let n = build.probe(&pcol.value(row)).len() as i64;
+                            matched += n as u64;
+                            if n != 0 {
+                                *map.entry(keys[row]).or_insert(0) += n;
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, n) in map {
+                            store.insert(vec![Value::Int(k)], Value::Int(n));
+                        }
+                    }
+                    (JoinSide::Outer, Column::Strs(keys)) => {
+                        let mut map: FxHashMap<Arc<str>, i64> = FxHashMap::default();
+                        for row in lo..hi {
+                            let n = build.probe(&pcol.value(row)).len() as i64;
+                            matched += n as u64;
+                            if n == 0 {
+                                continue;
+                            }
+                            match map.get_mut(&keys[row]) {
+                                Some(e) => *e += n,
+                                None => {
+                                    map.insert(keys[row].clone(), n);
+                                }
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (s, n) in map {
+                            store.insert(vec![Value::Str(s)], Value::Int(n));
+                        }
+                    }
+                    (JoinSide::Build, Column::DictStrs { keys, dict }) => {
+                        // Gather matched build-row dict codes and drive the
+                        // shared dense count kernel batch-wise.
+                        let mut counts = vec![0i64; dict.len()];
+                        let mut batch: Vec<u32> = Vec::with_capacity(BATCH);
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                batch.push(keys[irow as usize]);
+                                if batch.len() == BATCH {
+                                    count_batch_u32(&batch, &mut counts);
+                                    batch.clear();
+                                }
+                            }
+                        }
+                        count_batch_u32(&batch, &mut counts);
+                        let store = &mut self.arrays[array];
+                        for (k, &n) in counts.iter().enumerate() {
+                            if n != 0 {
+                                let s = dict.decode(k as u32).expect("dict key in range").clone();
+                                store.insert(vec![Value::Str(s)], Value::Int(n));
+                            }
+                        }
+                    }
+                    (JoinSide::Build, Column::Ints(keys)) => {
+                        let mut map: FxHashMap<i64, i64> = FxHashMap::default();
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                *map.entry(keys[irow as usize]).or_insert(0) += 1;
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, n) in map {
+                            store.insert(vec![Value::Int(k)], Value::Int(n));
+                        }
+                    }
+                    (JoinSide::Build, Column::Strs(keys)) => {
+                        let mut map: FxHashMap<Arc<str>, i64> = FxHashMap::default();
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                let s = &keys[irow as usize];
+                                match map.get_mut(s) {
+                                    Some(e) => *e += 1,
+                                    None => {
+                                        map.insert(s.clone(), 1);
+                                    }
+                                }
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (s, n) in map {
+                            store.insert(vec![Value::Str(s)], Value::Int(n));
+                        }
+                    }
+                    _ => return false,
+                }
+                self.stats.rows_visited += (hi - lo) as u64 + matched;
+                self.note_idiom("vec.count");
+                true
+            }
+            JoinFastAgg::Sum {
+                array,
+                key_side,
+                key_field,
+                val_side,
+                val_field,
+            } => {
+                if !self.arrays[array].is_empty() {
+                    return false;
+                }
+                let kcol = match key_side {
+                    JoinSide::Outer => jl.outer.column(key_field),
+                    JoinSide::Build => jl.build.column(key_field),
+                };
+                let vcol = match val_side {
+                    JoinSide::Outer => jl.outer.column(val_field),
+                    JoinSide::Build => jl.build.column(val_field),
+                };
+                match (kcol, vcol) {
+                    (Column::DictStrs { keys, dict }, Column::Floats(vs)) => {
+                        // Gather matched (code, value) pairs and drive the
+                        // shared dense sum kernel batch-wise; pair order is
+                        // probe order, so per-key fold order matches the
+                        // interpreter exactly.
+                        let mut sums = vec![0f64; dict.len()];
+                        let mut seen = vec![false; dict.len()];
+                        let mut kb: Vec<u32> = Vec::with_capacity(BATCH);
+                        let mut vb: Vec<f64> = Vec::with_capacity(BATCH);
+                        let mut flush = |kb: &mut Vec<u32>, vb: &mut Vec<f64>| {
+                            sum_batch_u32(kb, vb, &mut sums);
+                            for &k in kb.iter() {
+                                seen[k as usize] = true;
+                            }
+                            kb.clear();
+                            vb.clear();
+                        };
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                let irow = irow as usize;
+                                kb.push(keys[pick(key_side, row, irow)]);
+                                vb.push(vs[pick(val_side, row, irow)]);
+                                if kb.len() == BATCH {
+                                    flush(&mut kb, &mut vb);
+                                }
+                            }
+                        }
+                        flush(&mut kb, &mut vb);
+                        let store = &mut self.arrays[array];
+                        for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                            if was {
+                                let key =
+                                    dict.decode(k as u32).expect("dict key in range").clone();
+                                store.insert(vec![Value::Str(key)], Value::Float(s));
+                            }
+                        }
+                    }
+                    (Column::DictStrs { keys, dict }, Column::Ints(vs)) => {
+                        let mut sums = vec![0i64; dict.len()];
+                        let mut seen = vec![false; dict.len()];
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                let irow = irow as usize;
+                                let k = keys[pick(key_side, row, irow)] as usize;
+                                sums[k] = sums[k].wrapping_add(vs[pick(val_side, row, irow)]);
+                                seen[k] = true;
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                            if was {
+                                let key =
+                                    dict.decode(k as u32).expect("dict key in range").clone();
+                                store.insert(vec![Value::Str(key)], Value::Int(s));
+                            }
+                        }
+                    }
+                    (Column::Ints(ks), Column::Floats(vs)) => {
+                        let mut map: FxHashMap<i64, f64> = FxHashMap::default();
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                let irow = irow as usize;
+                                *map.entry(ks[pick(key_side, row, irow)]).or_insert(0.0) +=
+                                    vs[pick(val_side, row, irow)];
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, s) in map {
+                            store.insert(vec![Value::Int(k)], Value::Float(s));
+                        }
+                    }
+                    (Column::Ints(ks), Column::Ints(vs)) => {
+                        let mut map: FxHashMap<i64, i64> = FxHashMap::default();
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                let irow = irow as usize;
+                                let e = map.entry(ks[pick(key_side, row, irow)]).or_insert(0);
+                                *e = e.wrapping_add(vs[pick(val_side, row, irow)]);
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (k, s) in map {
+                            store.insert(vec![Value::Int(k)], Value::Int(s));
+                        }
+                    }
+                    (Column::Strs(ss), Column::Floats(vs)) => {
+                        let mut map: FxHashMap<Arc<str>, f64> = FxHashMap::default();
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                let irow = irow as usize;
+                                let s = &ss[pick(key_side, row, irow)];
+                                let v = vs[pick(val_side, row, irow)];
+                                match map.get_mut(s) {
+                                    Some(e) => *e += v,
+                                    None => {
+                                        map.insert(s.clone(), v);
+                                    }
+                                }
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (s, v) in map {
+                            store.insert(vec![Value::Str(s)], Value::Float(v));
+                        }
+                    }
+                    (Column::Strs(ss), Column::Ints(vs)) => {
+                        let mut map: FxHashMap<Arc<str>, i64> = FxHashMap::default();
+                        for row in lo..hi {
+                            for &irow in build.probe(&pcol.value(row)) {
+                                matched += 1;
+                                let irow = irow as usize;
+                                let s = &ss[pick(key_side, row, irow)];
+                                let v = vs[pick(val_side, row, irow)];
+                                match map.get_mut(s) {
+                                    Some(e) => *e = e.wrapping_add(v),
+                                    None => {
+                                        map.insert(s.clone(), v);
+                                    }
+                                }
+                            }
+                        }
+                        let store = &mut self.arrays[array];
+                        for (s, v) in map {
+                            store.insert(vec![Value::Str(s)], Value::Int(v));
+                        }
+                    }
+                    _ => return false,
+                }
+                self.stats.rows_visited += (hi - lo) as u64 + matched;
+                self.note_idiom("vec.sum");
+                true
+            }
         }
     }
 
@@ -819,26 +1273,168 @@ mod tests {
 
     #[test]
     fn unsupported_shapes_return_none() {
+        // Value partitions stay on the interpreter tier.
         let c = catalog(100, false);
-        // Joins stay on the interpreter tier.
-        let mut c2 = StorageCatalog::new();
-        let a = Multiset::with_rows(
-            Schema::new(vec![("b_id", DataType::Int)]),
-            vec![vec![Value::Int(1)]],
-        );
-        c2.insert_multiset("A", &a).unwrap();
-        let b = Multiset::with_rows(
-            Schema::new(vec![("id", DataType::Int)]),
-            vec![vec![Value::Int(1)]],
-        );
-        c2.insert_multiset("B", &b).unwrap();
-        let join = compile_sql(
-            "SELECT A.b_id FROM A JOIN B ON A.b_id = B.id",
-            &c2.schemas(),
+        let mut p = Program::new("vpart")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_array("count", ArrayDecl::counter());
+        p.body = vec![Stmt::Loop(crate::ir::Loop {
+            kind: crate::ir::LoopKind::For,
+            var: "l".into(),
+            domain: crate::ir::Domain::ValuePartition {
+                relation: "access".into(),
+                field: "url".into(),
+                part: Expr::int(1),
+                parts: Expr::int(2),
+            },
+            body: vec![],
+        })];
+        assert!(try_run(&p, &c).unwrap().is_none());
+    }
+
+    fn join_catalog(arows: usize, brows: usize, dict: bool) -> StorageCatalog {
+        let mut rng = crate::util::Rng::new(13);
+        let mut a = Multiset::new(Schema::new(vec![
+            ("b_id", DataType::Int),
+            ("g", DataType::Str),
+        ]));
+        for _ in 0..arows {
+            a.push(vec![
+                Value::Int(rng.range(0, brows.max(1) as i64 * 2)),
+                Value::str(format!("g{}", rng.below(7))),
+            ]);
+        }
+        let mut b = Multiset::new(Schema::new(vec![
+            ("id", DataType::Int),
+            ("tag", DataType::Str),
+            ("v", DataType::Float),
+        ]));
+        for i in 0..brows {
+            b.push(vec![
+                Value::Int(i as i64),
+                Value::str(format!("t{}", rng.below(5))),
+                Value::Float((rng.f64() - 0.5) * 4.0),
+            ]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("A", &a).unwrap();
+        c.insert_multiset("B", &b).unwrap();
+        if dict {
+            let mut t = (**c.get("A").unwrap()).clone();
+            t.dict_encode_field(1).unwrap();
+            c.replace("A", t);
+        }
+        c
+    }
+
+    #[test]
+    fn hash_join_matches_interpreter_and_tags_idiom() {
+        let c = join_catalog(500, 40, false);
+        let p = compile_sql(
+            "SELECT A.g, B.tag FROM A JOIN B ON A.b_id = B.id",
+            &c.schemas(),
         )
         .unwrap();
-        assert!(try_run(&join, &c2).unwrap().is_none());
-        let _ = c;
+        assert_matches_interpreter(&p, &c);
+        let out = try_run(&p, &c).unwrap().unwrap();
+        assert!(
+            out.stats.idioms.contains(&"vec.hash_join".to_string()),
+            "{:?}",
+            out.stats.idioms
+        );
+    }
+
+    #[test]
+    fn join_group_by_count_fuses_and_matches() {
+        for dict in [false, true] {
+            let c = join_catalog(800, 60, dict);
+            let p = compile_sql(
+                "SELECT g, COUNT(g) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+                &c.schemas(),
+            )
+            .unwrap();
+            assert_matches_interpreter(&p, &c);
+            let out = try_run(&p, &c).unwrap().unwrap();
+            assert!(
+                out.stats.idioms.contains(&"vec.hash_join".to_string())
+                    && out.stats.idioms.contains(&"vec.count".to_string()),
+                "dict={dict}: {:?}",
+                out.stats.idioms
+            );
+        }
+    }
+
+    #[test]
+    fn join_group_by_float_sum_matches_exactly() {
+        // Group key on the probe side, summed value on the build side;
+        // exact equality — per-key fold order must match the interpreter.
+        let c = join_catalog(600, 50, false);
+        let p = compile_sql(
+            "SELECT g, SUM(v) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+            &c.schemas(),
+        )
+        .unwrap();
+        let reference = local::run(&p, &c).unwrap();
+        let out = try_run(&p, &c).unwrap().unwrap();
+        assert!(out.result().unwrap().bag_eq(reference.result().unwrap()));
+        assert!(out.stats.idioms.contains(&"vec.sum".to_string()));
+    }
+
+    #[test]
+    fn join_group_by_build_side_key_matches() {
+        let c = join_catalog(400, 30, false);
+        let p = compile_sql(
+            "SELECT tag, COUNT(tag) FROM A JOIN B ON A.b_id = B.id GROUP BY tag",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert_matches_interpreter(&p, &c);
+    }
+
+    #[test]
+    fn join_with_residual_guard_matches() {
+        let c = join_catalog(300, 25, false);
+        let p = compile_sql(
+            "SELECT A.g FROM A JOIN B ON A.b_id = B.id WHERE B.v > 0.0",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert_matches_interpreter(&p, &c);
+    }
+
+    #[test]
+    fn join_with_empty_sides_is_fine() {
+        for (arows, brows) in [(0, 20), (20, 0), (0, 0)] {
+            let c = join_catalog(arows, brows, false);
+            let p = compile_sql(
+                "SELECT A.g, B.tag FROM A JOIN B ON A.b_id = B.id",
+                &c.schemas(),
+            )
+            .unwrap();
+            assert_matches_interpreter(&p, &c);
+        }
+    }
+
+    #[test]
+    fn join_hash_table_buckets_preserve_table_order() {
+        let m = Multiset::with_rows(
+            Schema::new(vec![("id", DataType::Int)]),
+            vec![
+                vec![Value::Int(7)],
+                vec![Value::Int(3)],
+                vec![Value::Int(7)],
+                vec![Value::Int(7)],
+            ],
+        );
+        let t = crate::storage::Table::from_multiset(&m).unwrap();
+        let ht = JoinHashTable::build(&t, 0);
+        assert_eq!(ht.len(), 2);
+        assert!(!ht.is_empty());
+        assert_eq!(ht.probe(&Value::Int(7)), &[0, 2, 3]);
+        assert_eq!(ht.probe(&Value::Int(3)), &[1]);
+        assert_eq!(ht.probe(&Value::Int(99)), &[] as &[u32]);
+        // Cross-type numeric probe matches the interpreter's Value eq.
+        assert_eq!(ht.probe(&Value::Float(3.0)), &[1]);
     }
 
     #[test]

@@ -9,7 +9,17 @@
 //!   (exactly the §IV URL-count IR);
 //! * equi-join → nested `forelem` with a filtered inner index set
 //!   (exactly Figure 1's top spec);
-//! * select-project → single loop with filter (the §III-B grades query).
+//! * select-project → single loop with filter (the §III-B grades query);
+//! * aggregate over a join → the Figure-1 nest accumulating into
+//!   per-group arrays, followed by the distinct-iteration emit loop. The
+//!   group key and aggregate arguments may come from either table; the
+//!   vectorized tier executes the nest as a build+probe hash join with
+//!   fused `vec.count`/`vec.sum` kernels (see `exec::compile`).
+//!
+//! Like the plain group-by shape, an aggregate over a join emits one row
+//! per distinct group-key value of the owning table — groups with no
+//! matching rows surface with the accumulator's init value, matching the
+//! reference interpreter on the same IR.
 
 use std::collections::BTreeMap;
 
@@ -56,7 +66,11 @@ struct LowerCtx<'a> {
 impl<'a> LowerCtx<'a> {
     fn new(sel: &Select, catalog: &'a Catalog) -> Result<Self> {
         if !catalog.contains_key(&sel.table) {
-            bail!("unknown table `{}`", sel.table);
+            bail!(
+                "unknown table `{}` (known tables: {})",
+                sel.table,
+                known_tables(catalog)
+            );
         }
         let mut aliases = BTreeMap::new();
         aliases.insert(sel.table.clone(), sel.table.clone());
@@ -66,7 +80,11 @@ impl<'a> LowerCtx<'a> {
         let joined = match &sel.join {
             Some(j) => {
                 if !catalog.contains_key(&j.table) {
-                    bail!("unknown join table `{}`", j.table);
+                    bail!(
+                        "unknown join table `{}` (known tables: {})",
+                        j.table,
+                        known_tables(catalog)
+                    );
                 }
                 aliases.insert(j.table.clone(), j.table.clone());
                 if let Some(a) = &j.alias {
@@ -88,16 +106,37 @@ impl<'a> LowerCtx<'a> {
         &self.catalog[table]
     }
 
+    /// Tables this query's columns can resolve against (FROM + JOIN).
+    fn tables_in_scope(&self) -> String {
+        let mut names = vec![self.main.1.clone()];
+        if let Some((_, jtable)) = &self.joined {
+            names.push(jtable.clone());
+        }
+        names.join(", ")
+    }
+
     /// Resolve a column reference to (cursor var, table, field name).
     fn resolve(&self, c: &ColumnRef) -> Result<(String, String, String)> {
         if let Some(t) = &c.table {
-            let table = self
-                .aliases
-                .get(t)
-                .with_context(|| format!("unknown table or alias `{t}`"))?;
+            let table = self.aliases.get(t).with_context(|| {
+                format!(
+                    "unknown table or alias `{t}` (tables in scope: {})",
+                    self.tables_in_scope()
+                )
+            })?;
             let (var, _) = self.cursor_for(table)?;
             if self.schema(table).field_id(&c.column).is_none() {
-                bail!("no column `{}` in table `{table}`", c.column);
+                let columns = self
+                    .schema(table)
+                    .fields()
+                    .iter()
+                    .map(|f| f.name.clone())
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                bail!(
+                    "no column `{}` in table `{table}` (columns: {columns})",
+                    c.column
+                );
             }
             return Ok((var, table.clone(), c.column.clone()));
         }
@@ -111,7 +150,11 @@ impl<'a> LowerCtx<'a> {
                 return Ok((jvar.clone(), jtable.clone(), c.column.clone()));
             }
         }
-        bail!("column `{}` not found in any table", c.column)
+        bail!(
+            "column `{}` not found in any table (searched {})",
+            c.column,
+            self.tables_in_scope()
+        )
     }
 
     fn cursor_for(&self, table: &str) -> Result<(String, String)> {
@@ -229,12 +272,11 @@ impl<'a> LowerCtx<'a> {
 
     // ---- shapes ---------------------------------------------------------
 
-    /// `SELECT g, AGG(x) FROM t [WHERE ...] GROUP BY g` →
-    /// counting loop + distinct loop (§IV).
+    /// `SELECT g, AGG(x) FROM t [JOIN u ON ...] [WHERE ...] GROUP BY g` →
+    /// counting loop (a Figure-1 join nest when a JOIN is present) +
+    /// distinct emit loop (§IV). The group key and aggregate arguments may
+    /// come from either joined table.
     fn lower_aggregate(&self, sel: &Select) -> Result<Program> {
-        if sel.join.is_some() {
-            bail!("aggregate over a join is not supported yet");
-        }
         if sel.group_by.len() != 1 {
             bail!(
                 "exactly one GROUP BY column is supported (got {})",
@@ -242,9 +284,6 @@ impl<'a> LowerCtx<'a> {
             );
         }
         let (gvar, gtable, gfield) = self.resolve(&sel.group_by[0])?;
-        if gvar != self.main.0 {
-            bail!("GROUP BY column must come from the FROM table");
-        }
         let gdtype = {
             let s = self.schema(&gtable);
             s.dtype(s.field_id(&gfield).unwrap())
@@ -255,14 +294,20 @@ impl<'a> LowerCtx<'a> {
             None => (None, None),
         };
 
+        let (ivar, itable) = self.main.clone();
         let mut program = Program::new(&format!("groupby_{}", gtable));
-        program = program.with_relation(&gtable, self.schema(&gtable).clone());
+        program = program.with_relation(&itable, self.schema(&itable).clone());
+        if let Some((_, jtable)) = &self.joined {
+            if jtable != &itable {
+                program = program.with_relation(jtable, self.schema(jtable).clone());
+            }
+        }
 
         // One accumulator array per aggregate item + the result schema.
         let mut result_fields: Vec<(String, DataType)> = Vec::new();
         let mut accum_stmts: Vec<Stmt> = Vec::new();
         let mut union_tuple: Vec<Expr> = Vec::new();
-        let group_key = Expr::field(&self.main.0, &gfield);
+        let group_key = Expr::field(&gvar, &gfield);
 
         for (idx, item) in sel.items.iter().enumerate() {
             match item {
@@ -305,22 +350,57 @@ impl<'a> LowerCtx<'a> {
         );
         program = program.with_result("R", result_schema);
 
-        // Loop 1: accumulate.
-        let ix1 = match &index_filter {
-            Some((f, v)) => IndexSet::filtered(&gtable, f, v.clone()),
-            None => IndexSet::all(&gtable),
+        // Loop 1: accumulate — a plain scan of the FROM table, or the
+        // Figure-1 join nest when a JOIN is present.
+        let outer_ix = match &index_filter {
+            Some((f, v)) => IndexSet::filtered(&itable, f, v.clone()),
+            None => IndexSet::all(&itable),
         };
-        let body1 = self.guard(&residual, accum_stmts)?;
-        // Loop 2: iterate distinct group keys, emit result rows.
+        let accum_body = self.guard(&residual, accum_stmts)?;
+        let loop1 = match &self.joined {
+            Some((jvar, jtable)) => {
+                let (outer_field, inner_field) = self.join_on_fields(sel)?;
+                let inner_ix = IndexSet::filtered(
+                    jtable,
+                    &inner_field,
+                    Expr::field(&ivar, &outer_field),
+                );
+                Loop::forelem(
+                    &ivar,
+                    outer_ix,
+                    vec![Stmt::Loop(Loop::forelem(jvar, inner_ix, accum_body))],
+                )
+            }
+            None => Loop::forelem(&ivar, outer_ix, accum_body),
+        };
+        // Loop 2: iterate distinct group keys of the owning table, emit
+        // result rows (the emit cursor reuses the group key's cursor var).
         let ix2 = IndexSet::distinct_of(&gtable, &gfield);
         let body2 = vec![Stmt::result_union("R", union_tuple)];
 
         program.body = vec![
-            Stmt::Loop(Loop::forelem(&self.main.0, ix1, body1)),
-            Stmt::Loop(Loop::forelem(&self.main.0, ix2, body2)),
+            Stmt::Loop(loop1),
+            Stmt::Loop(Loop::forelem(&gvar, ix2, body2)),
         ];
         crate::ir::validate(&program)?;
         Ok(program)
+    }
+
+    /// Orient the JOIN's ON clause: returns (main-table field, join-table
+    /// field) regardless of which side each was written on.
+    fn join_on_fields(&self, sel: &Select) -> Result<(String, String)> {
+        let join: &JoinClause = sel.join.as_ref().context("no JOIN clause")?;
+        let (ivar, _) = &self.main;
+        let (jvar, _) = self.joined.as_ref().context("no JOIN clause")?;
+        let (lvar, _, lfield) = self.resolve(&join.left)?;
+        let (rvar, _, rfield) = self.resolve(&join.right)?;
+        if &lvar == ivar && &rvar == jvar {
+            Ok((lfield, rfield))
+        } else if &lvar == jvar && &rvar == ivar {
+            Ok((rfield, lfield))
+        } else {
+            bail!("JOIN ON must relate the two FROM tables")
+        }
     }
 
     /// Build the accumulation statement(s) + read-back expression for one
@@ -405,20 +485,9 @@ impl<'a> LowerCtx<'a> {
 
     /// Equi-join → nested forelem with filtered inner index set (Figure 1).
     fn lower_join(&self, sel: &Select) -> Result<Program> {
-        let join: &JoinClause = sel.join.as_ref().unwrap();
         let (ivar, itable) = self.main.clone();
         let (jvar, jtable) = self.joined.clone().unwrap();
-
-        // Orient the ON clause: outer side must reference the main table.
-        let (lvar, _, lfield) = self.resolve(&join.left)?;
-        let (rvar, _, rfield) = self.resolve(&join.right)?;
-        let (outer_field, inner_field) = if lvar == ivar && rvar == jvar {
-            (lfield, rfield)
-        } else if lvar == jvar && rvar == ivar {
-            (rfield, lfield)
-        } else {
-            bail!("JOIN ON must relate the two FROM tables");
-        };
+        let (outer_field, inner_field) = self.join_on_fields(sel)?;
 
         let (index_filter, residual) = match &sel.filter {
             Some(f) => self.split_filter(f),
@@ -443,7 +512,7 @@ impl<'a> LowerCtx<'a> {
                     fields.push((name, self.expr_dtype(expr)?));
                     tuple.push(self.expr(expr)?);
                 }
-                SelectItem::Agg { .. } => bail!("aggregate over a join is not supported yet"),
+                SelectItem::Agg { .. } => unreachable!("handled by lower_aggregate"),
             }
         }
         let result_schema =
@@ -512,6 +581,11 @@ impl<'a> LowerCtx<'a> {
         crate::ir::validate(&program)?;
         Ok(program)
     }
+}
+
+/// Comma-separated catalog table names, for error messages.
+fn known_tables(catalog: &Catalog) -> String {
+    catalog.keys().cloned().collect::<Vec<_>>().join(", ")
 }
 
 fn collect_conjuncts(e: &SqlExpr, out: &mut Vec<SqlExpr>) {
@@ -659,6 +733,37 @@ mod tests {
     }
 
     #[test]
+    fn join_aggregate_lowers_to_figure1_nest_plus_emit() {
+        let p = compile_sql(
+            "SELECT A.field, COUNT(A.field) FROM A JOIN B ON A.b_id = B.id GROUP BY A.field",
+            &catalog(),
+        )
+        .unwrap();
+        let text = pretty::program(&p);
+        // Figure-1 nest accumulating per group key...
+        assert!(text.contains("forelem (i; i ∈ pA)"), "{text}");
+        assert!(text.contains("forelem (j; j ∈ pB.id[i.b_id])"), "{text}");
+        assert!(text.contains("agg1[i.field]++;"), "{text}");
+        // ...then the distinct emit loop over the owning table.
+        assert!(text.contains("i ∈ pA.distinct(field)"), "{text}");
+        assert!(text.contains("R = R ∪ (i.field, agg1[i.field]);"), "{text}");
+    }
+
+    #[test]
+    fn join_aggregate_group_key_may_come_from_join_table() {
+        let p = compile_sql(
+            "SELECT B.field, SUM(A.b_id) FROM A JOIN B ON A.b_id = B.id GROUP BY B.field",
+            &catalog(),
+        )
+        .unwrap();
+        let text = pretty::program(&p);
+        assert!(text.contains("forelem (j; j ∈ pB.id[i.b_id])"), "{text}");
+        assert!(text.contains("agg1[j.field] += i.b_id;"), "{text}");
+        // Emit loop binds the join table's cursor var.
+        assert!(text.contains("forelem (j; j ∈ pB.distinct(field))"), "{text}");
+    }
+
+    #[test]
     fn errors_are_descriptive() {
         let c = catalog();
         assert!(compile_sql("SELECT x FROM nope", &c)
@@ -674,6 +779,33 @@ mod tests {
             &c
         )
         .is_err());
+    }
+
+    #[test]
+    fn unknown_join_tables_and_columns_name_candidates() {
+        let c = catalog();
+        // Unknown JOIN table: the message lists the catalog's tables.
+        let err = compile_sql("SELECT url FROM access JOIN nope ON access.url = nope.x", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown join table `nope`"), "{err}");
+        assert!(err.contains("known tables:"), "{err}");
+        assert!(err.contains("access") && err.contains("links"), "{err}");
+        // Unknown column in a join: the message names the searched tables.
+        let err = compile_sql("SELECT nope FROM A JOIN B ON A.b_id = B.id", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("searched A, B"), "{err}");
+        // Unknown qualified column: the message lists the table's columns.
+        let err = compile_sql("SELECT A.nope FROM A JOIN B ON A.b_id = B.id", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("columns: b_id, field"), "{err}");
+        // Unknown alias: the message names the tables in scope.
+        let err = compile_sql("SELECT Z.field FROM A JOIN B ON A.b_id = B.id", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tables in scope: A, B"), "{err}");
     }
 
     #[test]

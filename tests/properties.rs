@@ -87,8 +87,7 @@ fn vectorized_interpreter_and_idiom_tiers_agree_on_random_programs() {
     // the reference interpreter (`exec::run`), the dispatching
     // `run_compiled` (idiom kernels where recognized), and the vectorized
     // batch executor (`run_vectorized`). Shapes the vectorized tier must
-    // handle (group/filter/guard) are asserted to actually fire; joins
-    // are allowed to fall back.
+    // handle (group/filter/guard/join) are asserted to actually fire.
     forall_seeds(20, |rng| {
         let m = random_multiset(rng, 300);
         let m2 = random_multiset(rng, 80);
@@ -101,7 +100,8 @@ fn vectorized_interpreter_and_idiom_tiers_agree_on_random_programs() {
             ("SELECT k, n FROM t WHERE k = 'key0'", true),
             ("SELECT k FROM t WHERE n > 0", true),
             ("SELECT k, COUNT(k) FROM t WHERE n > 0 GROUP BY k", true),
-            ("SELECT t.k, u.k FROM t JOIN u ON t.n = u.n", false),
+            // Joins route through the vectorized hash-join kernel now.
+            ("SELECT t.k, u.k FROM t JOIN u ON t.n = u.n", true),
         ];
         for (q, expect_vectorized) in queries {
             let p = forelem::sql::compile_sql(q, &catalog.schemas())
@@ -135,6 +135,103 @@ fn vectorized_interpreter_and_idiom_tiers_agree_on_random_programs() {
                 }
             }
         }
+        Ok(())
+    });
+}
+
+/// Random pair of joinable tables: `A(b_id, g, w)` probes `B(id, tag, v)`
+/// on `b_id = id`, with key ranges narrow enough that matches (including
+/// multiplicities > 1) are common.
+fn random_join_tables(rng: &mut Rng) -> (Multiset, Multiset) {
+    let arows = 1 + rng.below(300) as usize;
+    let brows = 1 + rng.below(120) as usize;
+    let keys = 1 + rng.below(40) as i64;
+    let mut a = Multiset::new(Schema::new(vec![
+        ("b_id", DataType::Int),
+        ("g", DataType::Str),
+        ("w", DataType::Float),
+    ]));
+    for _ in 0..arows {
+        a.push(vec![
+            Value::Int(rng.range(0, keys)),
+            Value::str(format!("g{}", rng.below(8))),
+            Value::Float((rng.f64() - 0.5) * 10.0),
+        ]);
+    }
+    let mut b = Multiset::new(Schema::new(vec![
+        ("id", DataType::Int),
+        ("tag", DataType::Str),
+        ("v", DataType::Float),
+    ]));
+    for _ in 0..brows {
+        b.push(vec![
+            Value::Int(rng.range(0, keys)),
+            Value::str(format!("t{}", rng.below(6))),
+            Value::Float((rng.f64() - 0.5) * 10.0),
+        ]);
+    }
+    (a, b)
+}
+
+#[test]
+fn hash_join_three_tiers_agree_on_random_joins() {
+    // For random joinable tables, plain joins and join + GROUP BY
+    // aggregates must agree bag-for-bag across the reference interpreter,
+    // the dispatching `run_compiled`, and the vectorized tier — and the
+    // vectorized tier must actually fire its hash-join kernel.
+    forall_seeds(15, |rng| {
+        let (a, b) = random_join_tables(rng);
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("A", &a).unwrap();
+        catalog.insert_multiset("B", &b).unwrap();
+        let queries = [
+            "SELECT A.g, B.tag FROM A JOIN B ON A.b_id = B.id",
+            "SELECT A.g, B.v FROM A JOIN B ON A.b_id = B.id WHERE B.v > 0.0",
+            "SELECT g, COUNT(g) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+            "SELECT tag, COUNT(tag) FROM A JOIN B ON A.b_id = B.id GROUP BY tag",
+            "SELECT g, SUM(v) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+            "SELECT g, SUM(w) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+        ];
+        for q in queries {
+            let p = forelem::sql::compile_sql(q, &catalog.schemas())
+                .map_err(|e| e.to_string())?;
+            let reference = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+            let compiled =
+                forelem::exec::run_compiled(&p, &catalog, None).map_err(|e| e.to_string())?;
+            prop_assert!(
+                compiled
+                    .result()
+                    .unwrap()
+                    .bag_eq(reference.result().unwrap()),
+                "run_compiled diverged from interpreter for `{q}`"
+            );
+            let out = forelem::exec::run_vectorized(&p, &catalog)
+                .map_err(|e| e.to_string())?
+                .ok_or_else(|| format!("vectorized tier skipped join `{q}`"))?;
+            prop_assert!(
+                out.result().unwrap().bag_eq(reference.result().unwrap()),
+                "vectorized diverged from interpreter for `{q}`"
+            );
+            prop_assert!(
+                out.stats.idioms.contains(&"vec.hash_join".to_string()),
+                "`{q}` missing vec.hash_join tag: {:?}",
+                out.stats.idioms
+            );
+        }
+        // The COUNT aggregate must also survive the parallel driver.
+        let p = forelem::sql::compile_sql(
+            "SELECT g, COUNT(g) FROM A JOIN B ON A.b_id = B.id GROUP BY g",
+            &catalog.schemas(),
+        )
+        .map_err(|e| e.to_string())?;
+        let reference = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+        let threads = 1 + rng.below(8) as usize;
+        let par = forelem::exec::run_parallel(&p, &catalog, threads)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            par.result().unwrap().bag_eq(reference.result().unwrap()),
+            "run_parallel diverged on the join aggregate (threads={threads})"
+        );
         Ok(())
     });
 }
