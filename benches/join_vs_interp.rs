@@ -22,7 +22,7 @@ use forelem::exec::compile::compile_program;
 use forelem::ir::{DataType, Multiset, Schema, Stmt, Strategy, Value};
 use forelem::sql::compile_sql;
 use forelem::storage::StorageCatalog;
-use forelem::util::{fmt_duration, time_fn, Rng};
+use forelem::util::{fmt_duration, time_fn, write_bench_json, Rng};
 
 fn main() {
     let rows: usize = std::env::var("BENCH_ROWS")
@@ -154,4 +154,20 @@ fn main() {
             "FAIL (< 3x acceptance bar)"
         }
     );
+
+    let path = write_bench_json(
+        "join_vs_interp",
+        rows,
+        &[
+            ("interpreter-as-lowered", interp.median().as_nanos()),
+            ("interpreter-hash-index", interp_hash.median().as_nanos()),
+            ("vec-hash-join", vector.median().as_nanos()),
+            ("vec-hash-join-precompiled", vector_precompiled.median().as_nanos()),
+            ("join-group-by-interpreter", agg_interp.median().as_nanos()),
+            ("join-group-by-vec-count", agg_vector.median().as_nanos()),
+        ],
+        speedup,
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
 }

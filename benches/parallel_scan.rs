@@ -1,0 +1,116 @@
+//! Perf baseline: morsel-driven parallel scans vs the 1-thread compiled
+//! tier on a group-by workload.
+//!
+//! The query is a guarded group-by (`WHERE bytes >= 0` keeps every row
+//! but is a residual predicate, so the per-row register-program body —
+//! not the fused whole-loop kernel — runs on the hot path): the shape
+//! where morsel parallelism pays most. The acceptance bar is ≥ 2× over
+//! the 1-thread compiled tier at 4 threads on 200k rows; the run prints
+//! a PASS/FAIL line for it, reports every `sched::Policy` end-to-end,
+//! and emits `BENCH_parallel_scan.json` for the CI perf-trajectory
+//! artifact. Row count scales via BENCH_ROWS.
+
+use forelem::exec::compile::compile_program;
+use forelem::exec::parallel::{run_parallel_compiled, run_parallel_compiled_with_policy};
+use forelem::sched::Policy;
+use forelem::sql::compile_sql;
+use forelem::storage::StorageCatalog;
+use forelem::util::{fmt_duration, time_fn, write_bench_json};
+use forelem::workload::{access_log_wide, AccessLogSpec};
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let threads: usize = std::env::var("BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let urls = 512;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "# Morsel-driven parallel scan (guarded group count): {rows} rows, {urls} URLs, \
+         {threads} threads on {cores} cores"
+    );
+
+    let m = access_log_wide(&AccessLogSpec {
+        rows,
+        urls,
+        skew: 1.1,
+        seed: 42,
+    });
+    let mut catalog = StorageCatalog::new();
+    catalog.insert_multiset("access", &m).unwrap();
+    let p = compile_sql(
+        "SELECT url, COUNT(url) FROM access WHERE bytes >= 0 GROUP BY url",
+        &catalog.schemas(),
+    )
+    .unwrap();
+    let cp = compile_program(&p, &catalog).expect("supported shape");
+
+    // Sanity: the parallel driver agrees with the sequential tier and
+    // actually takes the morsel path.
+    let seq = run_parallel_compiled(&cp, 1).unwrap();
+    let par = run_parallel_compiled(&cp, threads).unwrap();
+    assert!(
+        par.result().unwrap().bag_eq(seq.result().unwrap()),
+        "parallel output diverged from the sequential compiled tier"
+    );
+    assert!(
+        par.stats.idioms.contains(&"vec.morsel".to_string()),
+        "morsel driver did not fire: {:?}",
+        par.stats.idioms
+    );
+
+    let one = time_fn(1, 5, || run_parallel_compiled(&cp, 1).unwrap());
+    let many = time_fn(1, 5, || run_parallel_compiled(&cp, threads).unwrap());
+
+    let mrows = rows as f64 / 1e6;
+    let throughput = |d: std::time::Duration| mrows / d.as_secs_f64();
+    println!(
+        "compiled 1 thread        {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(one.median()),
+        throughput(one.median())
+    );
+    println!(
+        "compiled {threads} threads (gss)  {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(many.median()),
+        throughput(many.median())
+    );
+
+    // Every §III-A2 policy end-to-end at the same thread count.
+    let mut medians: Vec<(String, u128)> = vec![
+        ("compiled-1-thread".to_string(), one.median().as_nanos()),
+        (
+            format!("compiled-{threads}-threads-gss"),
+            many.median().as_nanos(),
+        ),
+    ];
+    for policy in Policy::ALL {
+        let stats = time_fn(1, 3, || {
+            run_parallel_compiled_with_policy(&cp, threads, policy).unwrap()
+        });
+        println!(
+            "  sched.{:<14}         {:>10}  {:>8.2} Mrows/s",
+            policy.name(),
+            fmt_duration(stats.median()),
+            throughput(stats.median())
+        );
+        medians.push((format!("sched-{}", policy.name()), stats.median().as_nanos()));
+    }
+
+    let speedup = one.median().as_secs_f64() / many.median().as_secs_f64();
+    println!(
+        "morsel speedup over 1-thread compiled tier at {threads} threads: {speedup:.1}x — {}",
+        if speedup >= 2.0 {
+            "PASS (>= 2x)"
+        } else {
+            "FAIL (< 2x acceptance bar)"
+        }
+    );
+
+    let entries: Vec<(&str, u128)> = medians.iter().map(|(n, ns)| (n.as_str(), *ns)).collect();
+    let path = write_bench_json("parallel_scan", rows, &entries, speedup).unwrap();
+    println!("wrote {}", path.display());
+}

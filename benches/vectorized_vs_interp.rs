@@ -10,7 +10,7 @@ use forelem::exec;
 use forelem::exec::compile::compile_program;
 use forelem::sql::compile_sql;
 use forelem::storage::StorageCatalog;
-use forelem::util::{fmt_duration, time_fn};
+use forelem::util::{fmt_duration, time_fn, write_bench_json};
 use forelem::workload::{access_log, AccessLogSpec};
 
 fn main() {
@@ -88,4 +88,18 @@ fn main() {
             "FAIL (< 3x acceptance bar)"
         }
     );
+
+    let path = write_bench_json(
+        "vectorized_vs_interp",
+        rows,
+        &[
+            ("interpreter", interp.median().as_nanos()),
+            ("vectorized", vector.median().as_nanos()),
+            ("vectorized-precompiled", vector_precompiled.median().as_nanos()),
+            ("idiom-kernel", idiom.median().as_nanos()),
+        ],
+        speedup,
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
 }

@@ -116,7 +116,15 @@ impl Engine {
     /// stored tables when reformatting is enabled.
     pub fn compile(&mut self, query: &str) -> Result<Compiled> {
         let select = sql::parse(query)?;
-        let mut program = sql::lower(&select, &self.catalog.schemas())?;
+        // The Engine takes ownership of ORDER BY / LIMIT (applied to the
+        // result multiset after execution), so they are stripped before
+        // lowering — `sql::lower` rejects the clauses it cannot express,
+        // protecting bare `compile_sql` users from silently unordered
+        // results.
+        let mut stripped = select.clone();
+        stripped.order_by = None;
+        stripped.limit = None;
+        let mut program = sql::lower(&stripped, &self.catalog.schemas())?;
 
         // ORDER BY / LIMIT live outside the order-free IR: resolve the
         // sort column against the result schema now, apply after

@@ -5,6 +5,13 @@
 //! and shared read-only by every worker (`Arc`), while chunks of the
 //! probe side stream through [`process_chunk`] — the distributed analogue
 //! of `exec::parallel`'s shared-build, partitioned-probe compiled join.
+//!
+//! Chunk distribution and chunk processing are both shared with the
+//! in-process driver: the leader hands out chunks through the same
+//! `sched::Scheduler` policies `exec::parallel`'s `SharedScheduler`
+//! wraps, and [`process_chunk`] walks its range at the same
+//! `exec::vector::morsel_ranges` granularity, driving the same batch
+//! kernels.
 
 
 use crate::util::FxHashMap;
@@ -226,13 +233,15 @@ impl Acc {
 
 /// Compute the partial aggregate for chunk `[lo, hi)` of the job's table.
 /// This is the worker inner loop — the generated-code analogue. The dense
-/// integer-keyed loops are the shared batch kernels in `exec::vector`, the
-/// same primitives the vectorized executor's fused aggregations and
-/// `exec::plan`'s native idiom fallbacks drive — one code path for all
-/// three tiers.
+/// integer-keyed loops are the shared batch kernels in `exec::vector`,
+/// driven per `morsel_ranges` window — the same primitives, at the same
+/// morsel granularity, as the vectorized executor's fused aggregations,
+/// `exec::parallel`'s morsel workers and `exec::plan`'s native idiom
+/// fallbacks — one code path for all three tiers.
 pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
     use crate::exec::vector::{
-        count_batch_i64_f64, count_batch_strs, count_batch_u32_f64, sum_batch_i64, sum_batch_u32,
+        count_batch_i64_f64, count_batch_strs, count_batch_u32_f64, morsel_ranges, sum_batch_i64,
+        sum_batch_u32,
     };
     if let Some(probe) = &job.join {
         return process_join_chunk(job, probe, lo, hi);
@@ -243,10 +252,14 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
             let mut acc = vec![0.0f64; num_keys];
             match (job.op, t.column(job.key_field)) {
                 (AggOp::Count, Column::DictStrs { keys, .. }) => {
-                    count_batch_u32_f64(&keys[lo..hi], &mut acc);
+                    for (mlo, mhi) in morsel_ranges(lo, hi) {
+                        count_batch_u32_f64(&keys[mlo..mhi], &mut acc);
+                    }
                 }
                 (AggOp::Count, Column::Ints(keys)) => {
-                    count_batch_i64_f64(&keys[lo..hi], &mut acc);
+                    for (mlo, mhi) in morsel_ranges(lo, hi) {
+                        count_batch_i64_f64(&keys[mlo..mhi], &mut acc);
+                    }
                 }
                 (AggOp::Sum, kcol) => {
                     let vf = job.val_field.expect("sum job needs val_field");
@@ -265,10 +278,16 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
                     };
                     match kcol {
                         Column::DictStrs { keys, .. } => {
-                            sum_batch_u32(&keys[lo..hi], window, &mut acc);
+                            for (mlo, mhi) in morsel_ranges(lo, hi) {
+                                let w = &window[mlo - lo..mhi - lo];
+                                sum_batch_u32(&keys[mlo..mhi], w, &mut acc);
+                            }
                         }
                         Column::Ints(keys) => {
-                            sum_batch_i64(&keys[lo..hi], window, &mut acc);
+                            for (mlo, mhi) in morsel_ranges(lo, hi) {
+                                let w = &window[mlo - lo..mhi - lo];
+                                sum_batch_i64(&keys[mlo..mhi], w, &mut acc);
+                            }
                         }
                         _ => {
                             for (i, r) in (lo..hi).enumerate() {
@@ -295,7 +314,9 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
             if job.op == AggOp::Count {
                 if let Column::Strs(vals) = t.column(job.key_field) {
                     let mut map: FxHashMap<std::sync::Arc<str>, f64> = FxHashMap::default();
-                    count_batch_strs(&vals[lo..hi], &mut map);
+                    for (mlo, mhi) in morsel_ranges(lo, hi) {
+                        count_batch_strs(&vals[mlo..mhi], &mut map);
+                    }
                     return Partial::Assoc(
                         map.into_iter().map(|(s, n)| (Value::Str(s), n)).collect(),
                     );

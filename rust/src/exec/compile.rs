@@ -139,6 +139,15 @@ pub enum FastAgg {
     },
 }
 
+impl FastAgg {
+    /// Slot of the accumulator array this aggregation targets.
+    pub fn array(self) -> usize {
+        match self {
+            FastAgg::Count { array, .. } | FastAgg::Sum { array, .. } => array,
+        }
+    }
+}
+
 /// A compiled equi-join: the Figure-1 nested-`forelem`-with-filtered-inner
 /// shape, executed as build + probe instead of nested scans. The inner
 /// (build) table is hashed once on [`JoinLoop::build_key`]; the outer
@@ -227,6 +236,56 @@ pub struct CompiledProgram {
     /// Maximum register count over all expression programs.
     pub n_regs: usize,
     pub body: Vec<CStmt>,
+}
+
+/// True when `p` never reads accumulator-array state (directly or via a
+/// cross-partition `Sum`). A parallel worker evaluating such a read would
+/// observe its own partial accumulator instead of the global one.
+pub fn expr_parallel_safe(p: &ExprProg) -> bool {
+    p.ops
+        .iter()
+        .all(|o| !matches!(o, Op::ReadArray { .. } | Op::Sum { .. }))
+}
+
+/// True when a compiled loop body's only effects are commutative
+/// accumulator adds and result appends — exactly the effects
+/// `VecState::absorb` merges losslessly across workers. Scalar
+/// assignments, prints and nested loops are rejected.
+pub fn body_parallel_safe(body: &[CStmt]) -> bool {
+    body.iter().all(|s| match s {
+        CStmt::Result { tuple, .. } => tuple.iter().all(expr_parallel_safe),
+        CStmt::Accum { idx, op, value, .. } => {
+            *op == AccumOp::Add && idx.iter().all(expr_parallel_safe) && expr_parallel_safe(value)
+        }
+        CStmt::If { cond, then, els } => {
+            expr_parallel_safe(cond) && body_parallel_safe(then) && body_parallel_safe(els)
+        }
+        _ => false,
+    })
+}
+
+/// True when a compiled scan can execute as morsel-driven parallel
+/// batches: no distinct iteration (the distinct index probe is a
+/// whole-table concern) and no explicit partition restriction (the
+/// program is already managing its own distribution), with a
+/// [`body_parallel_safe`] body. The equality-filter key needs no check:
+/// it is scope-constant and evaluated once in the master's complete
+/// pre-loop state, then shared with the workers as a plain value.
+pub fn scan_parallel_safe(sl: &ScanLoop) -> bool {
+    sl.distinct.is_none() && sl.partition.is_none() && body_parallel_safe(&sl.body)
+}
+
+/// Join analogue of [`scan_parallel_safe`]: the probe key and outer
+/// filter are evaluated *inside* workers (per probe row / per fan-out),
+/// so both must also be free of accumulator reads.
+pub fn join_parallel_safe(jl: &JoinLoop) -> bool {
+    jl.partition.is_none()
+        && expr_parallel_safe(&jl.probe_key)
+        && match &jl.outer_filter {
+            Some((_, p)) => expr_parallel_safe(p),
+            None => true,
+        }
+        && body_parallel_safe(&jl.body)
 }
 
 /// Compile a program against a catalog. Returns `None` when the program
@@ -1140,6 +1199,59 @@ mod tests {
         };
         assert_eq!(*kind, LoopKind::Forall);
         assert!(matches!(body.as_slice(), [CStmt::Scan(_)]));
+    }
+
+    #[test]
+    fn scan_parallel_safety_classifies_bodies() {
+        let c = catalog();
+        // Accumulate-only body: eligible for the morsel driver.
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).unwrap();
+        let CStmt::Scan(acc) = &cp.body[0] else {
+            panic!("expected scan loop");
+        };
+        assert!(scan_parallel_safe(acc));
+        // The distinct emit loop reads accumulator state: ineligible.
+        let CStmt::Scan(emit) = &cp.body[1] else {
+            panic!("expected scan loop");
+        };
+        assert!(!scan_parallel_safe(emit));
+
+        // Scalar assignments keep a scan on the sequential driver.
+        let mut p2 = Program::new("assign")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_scalar("x", Value::Float(0.0));
+        p2.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("access"),
+            vec![Stmt::assign("x", Expr::field("i", "ms"))],
+        ))];
+        let cp2 = compile_program(&p2, &c).unwrap();
+        let CStmt::Scan(s) = &cp2.body[0] else {
+            panic!("expected scan loop");
+        };
+        assert!(!scan_parallel_safe(s));
+
+        // Prints keep a scan on the sequential driver.
+        let mut p3 = Program::new("print")
+            .with_relation("access", c.schemas()["access"].clone());
+        p3.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("access"),
+            vec![Stmt::Print {
+                format: "{}".into(),
+                args: vec![Expr::field("i", "url")],
+            }],
+        ))];
+        let cp3 = compile_program(&p3, &c).unwrap();
+        let CStmt::Scan(s) = &cp3.body[0] else {
+            panic!("expected scan loop");
+        };
+        assert!(!scan_parallel_safe(s));
     }
 
     #[test]

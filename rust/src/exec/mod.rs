@@ -15,10 +15,14 @@
 //! Support modules:
 //!
 //! * [`eval`]    — expression evaluation, environments, accumulator store;
-//! * [`compile`] — the one-pass IR → register-program compiler;
+//! * [`compile`] — the one-pass IR → register-program compiler (including
+//!   the `scan_parallel_safe`/`join_parallel_safe` effect analyses);
 //! * [`index`]   — temporary runtime index structures (hash/tree/distinct);
-//! * [`parallel`] — shared-memory `forall` execution over a chunked
-//!   worker pool, reusing the compiled programs across workers.
+//! * [`parallel`] — shared-memory morsel-driven execution: `forall`
+//!   loops, eligible `forelem` scans and compiled hash joins fan out
+//!   over a worker pool pulling chunks through the `sched::Policy`
+//!   machinery (GSS by default), reusing the compiled programs across
+//!   workers.
 
 pub mod compile;
 pub mod eval;
@@ -32,6 +36,8 @@ pub use compile::{compile_program, CompiledProgram};
 pub use eval::{ArrayStore, Cursor, Env};
 pub use index::{DistinctIndex, HashIndex, IndexCache, TreeIndex};
 pub use local::{block_bounds, partition_values, run, ExecStats, Output};
-pub use parallel::run_parallel;
+pub use parallel::{run_parallel, run_parallel_with_policy};
 pub use plan::{recognize, run_compiled, Idiom};
-pub use vector::{run_compiled_program, try_run as run_vectorized, JoinHashTable, BATCH};
+pub use vector::{
+    morsel_ranges, run_compiled_program, try_run as run_vectorized, JoinHashTable, BATCH,
+};

@@ -1,4 +1,4 @@
-//! In-process parallel execution of `forall` loops.
+//! In-process morsel-driven parallel execution of compiled programs.
 //!
 //! The coordinator (crate::coordinator) is the *distributed* runtime; this
 //! module is its shared-memory little sibling — the OpenMP half of the
@@ -6,66 +6,218 @@
 //!
 //! Programs supported by the vectorized tier are compiled **once**
 //! (`exec::compile`) and the slot-resolved program is shared read-only by
-//! every worker: a chunked worker pool pulls batches of `forall`
-//! iterations from a shared cursor (dynamic self-scheduling, the
-//! in-process analogue of the coordinator's chunk queue), each worker
-//! accumulating into a private [`VecState`]. Privatized `count_k` slices
-//! write disjoint keys, so the end-of-loop merge is a plain union;
-//! [`VecState::absorb`] also stays correct for overlapping commutative
-//! adds. Programs outside the vectorized tier fall back to the
-//! interpreter-based fan-out below.
+//! every worker. All fan-out flows through one morsel-dispatch
+//! abstraction (`morsel_dispatch` below): workers pull chunks of the
+//! iteration space from a [`SharedScheduler`] driving the §III-A2 loop
+//! scheduling policies (GSS by default; selectable per run via
+//! [`run_parallel_with_policy`]), time each chunk for the feedback-guided
+//! policy, and accumulate into private [`VecState`]s that the master
+//! merges via [`VecState::absorb`]. Three loop shapes fan out:
 //!
-//! Compiled hash joins parallelize similarly: the [`JoinHashTable`] is
-//! built **once** and shared read-only across the pool while each worker
-//! probes one contiguous block of probe-side rows, provided the join
-//! body's effects are only commutative accumulator adds and result
-//! appends (checked by `join_parallel_safe`; scalar writes, prints and
-//! array reads keep the join on the sequential driver). As with the
-//! `forall` fan-out, merging per-worker float partials may reorder a
-//! floating-point fold across workers.
+//! * **`forall` range loops** — scheduled per iteration (each iteration
+//!   is typically a whole inner scan). Bodies are assumed privatized by
+//!   the parallelizing transforms (disjoint `count_k` slices or
+//!   commutative adds), as before.
+//! * **`forelem` scans** — the bread-and-butter SQL shape (scans,
+//!   filters, group-by accumulation loops), scheduled in [`BATCH`]-row
+//!   morsels when `scan_parallel_safe` proves the body's only effects are
+//!   commutative accumulator adds and result appends. The fused
+//!   `vec.count`/`vec.sum` batch kernels fire per-morsel through a
+//!   per-worker incremental aggregation state, exactly as they do
+//!   sequentially.
+//! * **compiled hash joins** — the [`JoinHashTable`] is built **once**
+//!   and shared read-only while workers probe morsels of the outer side
+//!   (`join_parallel_safe` gates the body). Joins with a fused per-match
+//!   aggregation pin [`Policy::StaticBlock`] so each worker probes one
+//!   contiguous range — a fragmented schedule would fuse only the first
+//!   chunk per worker.
+//!
+//! Ineligible bodies (scalar writes, prints, accumulator reads, distinct
+//! or partitioned iteration) run sequentially on the master state, so
+//! print order and scalar results stay identical to the interpreter.
+//! Merging per-worker float partials may reorder a floating-point fold
+//! across workers; integer aggregates are exact. A successful fan-out
+//! pushes `"vec.morsel"` plus the active policy (e.g. `"sched.gss"`)
+//! into [`ExecStats::idioms`].
+//!
+//! Programs outside the vectorized tier fall back to the
+//! interpreter-based fan-out at the bottom of this module.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::ir::{Domain, LoopKind, Program, Stmt, Value};
+use crate::sched::{Chunk, Policy, SharedScheduler};
 use crate::storage::StorageCatalog;
 
-use super::compile::{compile_program, CStmt, CompiledProgram, ExprProg, Op};
+use super::compile::{
+    compile_program, join_parallel_safe, scan_parallel_safe, CStmt, CompiledProgram,
+};
 use super::eval::ArrayStore;
 use super::local::{ExecStats, Interp, Output};
-use super::vector::{JoinHashTable, VecState, BATCH};
-use crate::ir::AccumOp;
+use super::vector::{FastAggState, JoinHashTable, VecState, BATCH};
 
-/// Execute a program, running top-level `forall` range loops on a chunked
-/// worker pool (bounded by `max_threads`; `0` is treated as `1`).
+/// Default scheduling policy for the in-process pool (§III-A2's guided
+/// self-scheduling: large chunks early, small chunks to balance the tail).
+pub const DEFAULT_POLICY: Policy = Policy::Gss;
+
+/// The single authoritative `max_threads` clamp, shared by every driver
+/// in this module: `0` means "caller did not decide" and runs
+/// sequentially, exactly like `1`.
+fn clamp_threads(max_threads: usize) -> usize {
+    max_threads.max(1)
+}
+
+/// Execute a program on a morsel-driven worker pool (bounded by
+/// `max_threads`; `0` is treated as `1`) under the default GSS policy.
 pub fn run_parallel(
     program: &Program,
     catalog: &StorageCatalog,
     max_threads: usize,
 ) -> Result<Output> {
+    run_parallel_with_policy(program, catalog, max_threads, DEFAULT_POLICY)
+}
+
+/// [`run_parallel`] with an explicit §III-A2 scheduling policy. Programs
+/// the vectorized tier cannot compile fall back to the interpreter-based
+/// fan-out, which uses static chunking (the policies need the compiled
+/// form's cheap chunk boundaries to pay off).
+pub fn run_parallel_with_policy(
+    program: &Program,
+    catalog: &StorageCatalog,
+    max_threads: usize,
+    policy: Policy,
+) -> Result<Output> {
     match compile_program(program, catalog) {
-        Some(cp) => run_parallel_compiled(&cp, max_threads),
+        Some(cp) => run_parallel_compiled_with_policy(&cp, max_threads, policy),
         None => run_parallel_interp(program, catalog, max_threads),
     }
 }
 
-/// Parallel driver for compiled programs: every worker shares the same
-/// slot-resolved `CompiledProgram`; `forall` iterations are dealt out in
-/// batches from a shared atomic cursor.
+/// Parallel driver for compiled programs under the default GSS policy.
 pub fn run_parallel_compiled(cp: &CompiledProgram, max_threads: usize) -> Result<Output> {
-    let threads = max_threads.max(1);
+    run_parallel_compiled_with_policy(cp, max_threads, DEFAULT_POLICY)
+}
+
+/// One shared morsel-dispatch job: every worker shares the same
+/// slot-resolved `CompiledProgram` and the master's scalar snapshot.
+struct MorselJob<'a> {
+    cp: &'a CompiledProgram,
+    /// Master scalars at loop entry, fanned out read-only (the safety
+    /// analyses reject scalar writes in eligible bodies; `forall` bodies
+    /// overwrite only their own loop slot).
+    scalars: &'a [Value],
+    /// Size of the scheduled space (iterations for `forall`, [`BATCH`]-row
+    /// morsels for scans and join probes).
+    units: usize,
+    workers: usize,
+    policy: Policy,
+}
+
+/// The shared morsel-dispatch driver unifying the `forall`, scan and join
+/// fan-outs: `workers` scoped threads pull [`Chunk`]s of `[0, units)`
+/// from one [`SharedScheduler`], timing each chunk for the
+/// feedback-guided policy. Each worker owns a private [`VecState`]
+/// (seeded with the master's scalars) plus a caller-defined per-worker
+/// context `C` (`init` → per-chunk `body` → `finish`); the caller merges
+/// the returned states via [`VecState::absorb`].
+fn morsel_dispatch<C>(
+    job: MorselJob<'_>,
+    init: impl Fn(&mut VecState) -> C + Sync,
+    body: impl Fn(&mut VecState, &mut C, Chunk) -> Result<()> + Sync,
+    finish: impl Fn(&mut VecState, C) -> Result<()> + Sync,
+) -> Result<Vec<VecState>> {
+    let MorselJob {
+        cp,
+        scalars,
+        units,
+        workers,
+        policy,
+    } = job;
+    let sched = SharedScheduler::new(policy, units, workers);
+    let sched = &sched;
+    let (init, body, finish) = (&init, &body, &finish);
+    let states: Vec<Result<VecState>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || -> Result<VecState> {
+                    let mut st = VecState::new(cp);
+                    st.scalars.clear();
+                    st.scalars.extend_from_slice(scalars);
+                    let mut ctx = init(&mut st);
+                    while let Some(chunk) = sched.next_chunk(w) {
+                        let t0 = Instant::now();
+                        body(&mut st, &mut ctx, chunk)?;
+                        sched.report(w, chunk, t0.elapsed());
+                    }
+                    finish(&mut st, ctx)?;
+                    Ok(st)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("morsel worker panicked"))
+            .collect()
+    });
+    states.into_iter().collect()
+}
+
+/// True when `v` is the additive identity. Worker-private accumulators
+/// merge into the master by plain `Add` ([`VecState::absorb`]), so every
+/// array an eligible body writes must start from zero — otherwise each
+/// worker's `or_insert(init)` would contribute the init once per worker
+/// instead of once overall.
+fn zero_init(v: &Value) -> bool {
+    match v {
+        Value::Int(0) => true,
+        Value::Float(f) => f.to_bits() == 0f64.to_bits(),
+        _ => false,
+    }
+}
+
+/// All accumulator arrays written anywhere in `body` (including nested
+/// loops — `forall` bodies wrap scans) have a zero initial value.
+fn zero_init_accums(cp: &CompiledProgram, body: &[CStmt]) -> bool {
+    body.iter().all(|s| match s {
+        CStmt::Accum { array, .. } => zero_init(&cp.array_inits[*array]),
+        CStmt::If { then, els, .. } => {
+            zero_init_accums(cp, then) && zero_init_accums(cp, els)
+        }
+        CStmt::Range { body, .. } => zero_init_accums(cp, body),
+        CStmt::Scan(sl) => zero_init_accums(cp, &sl.body),
+        CStmt::Join(jl) => zero_init_accums(cp, &jl.body),
+        _ => true,
+    })
+}
+
+/// Parallel driver for compiled programs: top-level `forall` loops,
+/// eligible `forelem` scans and compiled hash joins fan out through the
+/// shared morsel dispatch; everything else runs sequentially on the
+/// master state in program order, so the master always holds the
+/// complete accumulator state before any statement that reads it.
+pub fn run_parallel_compiled_with_policy(
+    cp: &CompiledProgram,
+    max_threads: usize,
+    policy: Policy,
+) -> Result<Output> {
+    let threads = clamp_threads(max_threads);
     let mut master = VecState::new(cp);
     for s in &cp.body {
         match s {
+            // `forall` bodies are assumed privatized by the parallelizing
+            // transforms, but the worker merge is still add-based: arrays
+            // with a non-zero init would count the init once per worker,
+            // so those loops run sequentially.
             CStmt::Range {
                 kind: LoopKind::Forall,
                 slot,
                 lo,
                 hi,
                 body,
-            } => {
+            } if threads > 1 && zero_init_accums(cp, body) => {
                 let lo = master
                     .eval_value(cp, lo)?
                     .as_int()
@@ -77,128 +229,138 @@ pub fn run_parallel_compiled(cp: &CompiledProgram, max_threads: usize) -> Result
                 if hi < lo {
                     continue; // empty iteration space
                 }
-                let iters: Vec<i64> = (lo..=hi).collect();
-                let workers = threads.min(iters.len()).max(1);
-                // ~4 batches per worker balances load without contending
-                // on the cursor; never zero.
-                let batch = iters.len().div_ceil(workers * 4).max(1);
-                let next = AtomicUsize::new(0);
+                let n = (hi - lo) as usize + 1;
+                let workers = threads.min(n);
                 let slot = *slot;
-
-                let states: Vec<Result<VecState>> = std::thread::scope(|scope| {
-                    let handles: Vec<_> = (0..workers)
-                        .map(|_| {
-                            let next = &next;
-                            let iters = &iters;
-                            scope.spawn(move || -> Result<VecState> {
-                                let mut st = VecState::new(cp);
-                                loop {
-                                    let start = next.fetch_add(batch, Ordering::Relaxed);
-                                    if start >= iters.len() {
-                                        break;
-                                    }
-                                    let end = (start + batch).min(iters.len());
-                                    for &k in &iters[start..end] {
-                                        st.scalars[slot] = Value::Int(k);
-                                        st.exec_stmts(cp, body)?;
-                                    }
-                                }
-                                Ok(st)
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("forall worker panicked"))
-                        .collect()
-                });
-
-                for r in states {
-                    master.absorb(r?);
+                let states = morsel_dispatch(
+                    MorselJob {
+                        cp,
+                        scalars: &master.scalars,
+                        units: n,
+                        workers,
+                        policy,
+                    },
+                    |_st| (),
+                    |st, _ctx, c| {
+                        for i in c.lo..c.hi {
+                            st.scalars[slot] = Value::Int(lo + i as i64);
+                            st.exec_stmts(cp, body)?;
+                        }
+                        Ok(())
+                    },
+                    |_st, _ctx| Ok(()),
+                )?;
+                for st in states {
+                    master.absorb(st);
                 }
+                master.note_idiom("vec.morsel");
+                master.note_idiom(&format!("sched.{}", policy.name()));
+            }
+            CStmt::Scan(sl)
+                if threads > 1
+                    && sl.table.len() > BATCH
+                    && scan_parallel_safe(sl)
+                    && zero_init_accums(cp, &sl.body) =>
+            {
+                // Equality-filter keys are scope-constant: evaluated once
+                // in the master's complete pre-loop state, then fanned
+                // out to the workers as a plain value.
+                let filter = match &sl.filter {
+                    Some((fid, prog)) => Some((*fid, master.eval_value(cp, prog)?)),
+                    None => None,
+                };
+                let filter = &filter;
+                let len = sl.table.len();
+                let units = len.div_ceil(BATCH);
+                let workers = threads.min(units);
+                let states = morsel_dispatch(
+                    MorselJob {
+                        cp,
+                        scalars: &master.scalars,
+                        units,
+                        workers,
+                        policy,
+                    },
+                    // Per-worker fused aggregation state, fed one morsel
+                    // range per chunk and materialized once at the end
+                    // (compile sets `fast` only for filterless,
+                    // distinct-free single-accumulation bodies).
+                    |_st| sl.fast.and_then(|f| FastAggState::new(&sl.table, f)),
+                    |st, fast, c| {
+                        let (rlo, rhi) = (c.lo * BATCH, (c.hi * BATCH).min(len));
+                        match fast {
+                            Some(fa) => {
+                                fa.update(rlo, rhi);
+                                st.stats.rows_visited += (rhi - rlo) as u64;
+                            }
+                            None => st.scan_rows(cp, sl, filter.as_ref(), rlo, rhi)?,
+                        }
+                        Ok(())
+                    },
+                    |st, fast| {
+                        if let Some(fa) = fast {
+                            let tag = fa.idiom();
+                            let array = sl.fast.expect("ctx implies fast").array();
+                            fa.finish(&mut st.arrays[array]);
+                            st.note_idiom(tag);
+                        }
+                        Ok(())
+                    },
+                )?;
+                for st in states {
+                    master.absorb(st);
+                }
+                master.note_idiom("vec.morsel");
+                master.note_idiom(&format!("sched.{}", policy.name()));
             }
             CStmt::Join(jl)
-                if threads > 1 && jl.outer.len() > BATCH && join_parallel_safe(jl) =>
+                if threads > 1
+                    && jl.outer.len() > BATCH
+                    && join_parallel_safe(jl)
+                    && zero_init_accums(cp, &jl.body) =>
             {
                 // Build once, probe everywhere: the hash table is shared
-                // read-only. Each worker gets ONE contiguous block of
-                // probe-side rows (probe cost is uniform per row, and a
-                // single probe_join call keeps the fused per-match
-                // kernels eligible for the worker's whole range — with
-                // batch stealing only the first stolen range would fuse).
+                // read-only across the pool.
                 let build = JoinHashTable::build(&jl.build, jl.build_key);
                 master.stats.index_builds += 1;
-                let len = jl.outer.len();
-                let workers = threads.min(len.div_ceil(BATCH)).max(1);
                 let build = &build;
-                // Workers see the master's current scalar state (read-only
-                // — the safety check rejects scalar writes in the body).
-                let scalars = master.scalars.clone();
-                let scalars = &scalars;
-
-                let states: Vec<Result<VecState>> = std::thread::scope(|scope| {
-                    let handles: Vec<_> = (0..workers)
-                        .map(|w| {
-                            scope.spawn(move || -> Result<VecState> {
-                                let mut st = VecState::new(cp);
-                                st.scalars.clone_from(scalars);
-                                let (lo, hi) =
-                                    super::local::block_bounds(len, workers, w);
-                                st.probe_join(cp, jl, build, lo, hi)?;
-                                Ok(st)
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("join worker panicked"))
-                        .collect()
-                });
-
-                for r in states {
-                    master.absorb(r?);
+                let len = jl.outer.len();
+                let units = len.div_ceil(BATCH);
+                let workers = threads.min(units);
+                // Fused per-match kernels need one contiguous probe range
+                // per worker (a fragmented schedule would fuse only each
+                // worker's first chunk), so fused joins pin the static
+                // block schedule; generic join bodies honour the
+                // requested policy.
+                let jpolicy = if jl.fast.is_some() {
+                    Policy::StaticBlock
+                } else {
+                    policy
+                };
+                let states = morsel_dispatch(
+                    MorselJob {
+                        cp,
+                        scalars: &master.scalars,
+                        units,
+                        workers,
+                        policy: jpolicy,
+                    },
+                    |_st| (),
+                    |st, _ctx, c| {
+                        st.probe_join(cp, jl, build, c.lo * BATCH, (c.hi * BATCH).min(len))
+                    },
+                    |_st, _ctx| Ok(()),
+                )?;
+                for st in states {
+                    master.absorb(st);
                 }
+                master.note_idiom("vec.morsel");
+                master.note_idiom(&format!("sched.{}", jpolicy.name()));
             }
             other => master.exec_stmts(cp, std::slice::from_ref(other))?,
         }
     }
     Ok(master.finish(cp))
-}
-
-/// True when a compiled join can fan out across workers: the body's
-/// effects are only commutative accumulator adds and result appends —
-/// the effects [`VecState::absorb`] merges losslessly — and no involved
-/// expression reads accumulator arrays (a worker would observe its own
-/// partial state instead of the global one). Scalar assignments, prints,
-/// nested loops and partitioned outers keep the join on the sequential
-/// driver.
-fn join_parallel_safe(jl: &super::compile::JoinLoop) -> bool {
-    jl.partition.is_none()
-        && expr_safe(&jl.probe_key)
-        && match &jl.outer_filter {
-            Some((_, p)) => expr_safe(p),
-            None => true,
-        }
-        && join_body_parallel_safe(&jl.body)
-}
-
-fn expr_safe(p: &ExprProg) -> bool {
-    p.ops
-        .iter()
-        .all(|o| !matches!(o, Op::ReadArray { .. } | Op::Sum { .. }))
-}
-
-fn join_body_parallel_safe(body: &[CStmt]) -> bool {
-    body.iter().all(|s| match s {
-        CStmt::Result { tuple, .. } => tuple.iter().all(expr_safe),
-        CStmt::Accum { idx, op, value, .. } => {
-            *op == AccumOp::Add && idx.iter().all(expr_safe) && expr_safe(value)
-        }
-        CStmt::If { cond, then, els } => {
-            expr_safe(cond) && join_body_parallel_safe(then) && join_body_parallel_safe(els)
-        }
-        _ => false,
-    })
 }
 
 /// Interpreter-based fallback for programs the vectorized tier does not
@@ -209,6 +371,7 @@ pub(crate) fn run_parallel_interp(
     catalog: &StorageCatalog,
     max_threads: usize,
 ) -> Result<Output> {
+    let threads = clamp_threads(max_threads);
     let mut master = Interp::new(program, catalog);
     for s in &program.body {
         match s {
@@ -231,7 +394,7 @@ pub(crate) fn run_parallel_interp(
                     // the parallelizing transforms generate: privatized
                     // bodies only touch their own k-slice of each array
                     // and never read pre-loop accumulator state.
-                    let chunk = iters.len().div_ceil(max_threads.max(1)).max(1);
+                    let chunk = iters.len().div_ceil(threads).max(1);
                     let chunks: Vec<Vec<i64>> =
                         iters.chunks(chunk).map(|c| c.to_vec()).collect();
                     type WorkerOut =
@@ -322,6 +485,25 @@ mod tests {
         (p, c)
     }
 
+    /// Plain SQL group-by (no forall): the morsel scan path's bread and
+    /// butter.
+    fn scan_setup(rows: usize) -> (Program, StorageCatalog) {
+        let m = access_log(&AccessLogSpec {
+            rows,
+            urls: 200,
+            skew: 1.1,
+            seed: 5,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        (p, c)
+    }
+
     #[test]
     fn parallel_forall_matches_sequential() {
         let (p, c) = setup(20_000);
@@ -333,6 +515,51 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn morsel_scan_matches_sequential_and_tags_policy() {
+        let (p, c) = scan_setup(10_000);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        for policy in Policy::ALL {
+            let par = run_parallel_compiled_with_policy(
+                &compile_program(&p, &c).unwrap(),
+                4,
+                policy,
+            )
+            .unwrap();
+            assert!(
+                par.result().unwrap().bag_eq(seq.result().unwrap()),
+                "{policy:?}"
+            );
+            assert!(
+                par.stats.idioms.contains(&"vec.morsel".to_string()),
+                "{policy:?}: {:?}",
+                par.stats.idioms
+            );
+            let tag = format!("sched.{}", policy.name());
+            assert!(
+                par.stats.idioms.contains(&tag),
+                "{policy:?}: {:?}",
+                par.stats.idioms
+            );
+            // The fused count kernel fires per-morsel inside the workers.
+            assert!(
+                par.stats.idioms.contains(&"vec.count".to_string()),
+                "{policy:?}: {:?}",
+                par.stats.idioms
+            );
+        }
+    }
+
+    #[test]
+    fn small_scans_stay_sequential() {
+        // Below one BATCH there is nothing to fan out: no morsel tag.
+        let (p, c) = scan_setup(500);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let par = run_parallel(&p, &c, 8).unwrap();
+        assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+        assert!(!par.stats.idioms.contains(&"vec.morsel".to_string()));
     }
 
     #[test]
@@ -356,6 +583,41 @@ mod tests {
         let p = compile_sql("SELECT url FROM access", &c.schemas()).unwrap();
         let out = run_parallel(&p, &c, 4).unwrap();
         assert_eq!(out.result().unwrap().len(), 100);
+    }
+
+    #[test]
+    fn max_threads_clamp_is_uniform_across_paths() {
+        // One clamp (`clamp_threads`) governs every arm: 0 behaves like 1
+        // and oversubscription is capped by the work itself.
+        let (p, c) = scan_setup(3_000);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        for threads in [0, 1, 64] {
+            let par = run_parallel(&p, &c, threads).unwrap();
+            assert!(
+                par.result().unwrap().bag_eq(seq.result().unwrap()),
+                "scan path, threads={threads}"
+            );
+        }
+        let (fp, fc) = setup(3_000);
+        let fseq = super::super::local::run(&fp, &fc).unwrap();
+        for threads in [0, 1, 64] {
+            let par = run_parallel(&fp, &fc, threads).unwrap();
+            assert!(
+                par.result().unwrap().bag_eq(fseq.result().unwrap()),
+                "forall path, threads={threads}"
+            );
+        }
+        let (jc, join, agg) = join_setup(5_000, 100);
+        for p in [&join, &agg] {
+            let jseq = super::super::local::run(p, &jc).unwrap();
+            for threads in [0, 1, 64] {
+                let par = run_parallel(p, &jc, threads).unwrap();
+                assert!(
+                    par.result().unwrap().bag_eq(jseq.result().unwrap()),
+                    "join path, threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -444,6 +706,31 @@ mod tests {
             "{:?}",
             par.stats.idioms
         );
+        assert!(
+            par.stats.idioms.contains(&"vec.morsel".to_string()),
+            "{:?}",
+            par.stats.idioms
+        );
+    }
+
+    #[test]
+    fn parallel_join_matches_under_every_policy() {
+        let (c, join, agg) = join_setup(15_000, 300);
+        for p in [&join, &agg] {
+            let seq = super::super::local::run(p, &c).unwrap();
+            for policy in Policy::ALL {
+                let par = run_parallel_compiled_with_policy(
+                    &compile_program(p, &c).unwrap(),
+                    4,
+                    policy,
+                )
+                .unwrap();
+                assert!(
+                    par.result().unwrap().bag_eq(seq.result().unwrap()),
+                    "{policy:?}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -455,6 +742,82 @@ mod tests {
             let par = run_parallel(p, &c, 8).unwrap();
             assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
         }
+    }
+
+    #[test]
+    fn nonzero_init_accumulators_keep_forall_sequential() {
+        // Worker merges are add-based: a non-zero array init would be
+        // counted once per worker, so such forall loops must not fan out.
+        use crate::ir::{AccumOp, ArrayDecl, BinOp, DataType, Loop, Multiset, Schema};
+        let mut c = StorageCatalog::new();
+        let m = Multiset::new(Schema::new(vec![("x", DataType::Int)]));
+        c.insert_multiset("t", &m).unwrap();
+        let mut p = Program::new("init5")
+            .with_relation("t", c.schemas()["t"].clone())
+            .with_array(
+                "acc",
+                ArrayDecl {
+                    dims: 1,
+                    dtype: DataType::Int,
+                    init: Value::Int(5),
+                },
+            )
+            .with_result(
+                "R",
+                Schema::new(vec![("a", DataType::Int), ("b", DataType::Int)]),
+            );
+        p.body = vec![
+            Stmt::Loop(Loop::forall_range(
+                "k",
+                Expr::int(1),
+                Expr::int(8),
+                vec![Stmt::accum(
+                    "acc",
+                    vec![Expr::bin(BinOp::Mod, Expr::var("k"), Expr::int(2))],
+                    AccumOp::Add,
+                    Expr::int(1),
+                )],
+            )),
+            Stmt::result_union(
+                "R",
+                vec![
+                    Expr::array("acc", vec![Expr::int(0)]),
+                    Expr::array("acc", vec![Expr::int(1)]),
+                ],
+            ),
+        ];
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let par = run_parallel(&p, &c, 4).unwrap();
+        assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+        assert!(!par.stats.idioms.contains(&"vec.morsel".to_string()));
+    }
+
+    #[test]
+    fn ineligible_scan_bodies_stay_sequential() {
+        // A scalar-assigning scan body must not fan out: the final scalar
+        // is order-dependent, so it runs on the master and matches the
+        // interpreter exactly.
+        use crate::ir::{IndexSet, Loop};
+        let m = access_log(&AccessLogSpec {
+            rows: 3_000,
+            urls: 50,
+            skew: 1.0,
+            seed: 9,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        let mut p = Program::new("assign")
+            .with_relation("access", c.schemas()["access"].clone())
+            .with_scalar("last", Value::str(""));
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("access"),
+            vec![Stmt::assign("last", Expr::field("i", "url"))],
+        ))];
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let par = run_parallel(&p, &c, 8).unwrap();
+        assert_eq!(par.scalars, seq.scalars);
+        assert!(!par.stats.idioms.contains(&"vec.morsel".to_string()));
     }
 
     #[test]

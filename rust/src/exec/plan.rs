@@ -141,6 +141,10 @@ pub fn recognize(p: &Program) -> Option<Idiom> {
 /// idiom runs on the native/XLA kernels; otherwise the vectorized batch
 /// executor handles the program if its shape is supported; the reference
 /// interpreter is the final fallback (and the semantic oracle for both).
+///
+/// This dispatch is sequential; `exec::run_parallel` (and its
+/// policy-selecting variant) is the shared-memory counterpart that runs
+/// the same compiled form morsel-driven across a worker pool.
 pub fn run_compiled(
     p: &Program,
     catalog: &StorageCatalog,

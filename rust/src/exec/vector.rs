@@ -31,7 +31,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::ir::{AccumOp, BinOp, Program, Tuple, UnOp, Value};
-use crate::storage::{Column, StorageCatalog, Table};
+use crate::storage::{Column, Dictionary, StorageCatalog, Table};
 use crate::util::FxHashMap;
 
 use super::compile::{
@@ -45,6 +45,16 @@ use super::local::{block_bounds, ExecStats, Output};
 /// Rows per batch: large enough to amortize dispatch, small enough to
 /// keep the touched column windows cache-resident.
 pub const BATCH: usize = 1024;
+
+/// Iterate `[lo, hi)` as `(start, end)` windows of at most [`BATCH`]
+/// rows — the shared morsel granularity used by this module's scan and
+/// join-probe drivers, `exec::parallel`'s morsel workers and the
+/// coordinator's `process_chunk`.
+pub fn morsel_ranges(lo: usize, hi: usize) -> impl Iterator<Item = (usize, usize)> {
+    (lo..hi)
+        .step_by(BATCH)
+        .map(move |base| (base, (base + BATCH).min(hi)))
+}
 
 /// Hash table over the build side of a compiled join: key value → row ids
 /// in table order.
@@ -342,9 +352,7 @@ impl VecState {
             None => None,
         };
         let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
-        let mut base = lo;
-        while base < hi {
-            let end = (base + BATCH).min(hi);
+        for (base, end) in morsel_ranges(lo, hi) {
             self.stats.rows_visited += (end - base) as u64;
             sel.clear();
             match &filter {
@@ -370,7 +378,6 @@ impl VecState {
                     self.exec_stmts(cp, &jl.body)?;
                 }
             }
-            base = end;
         }
         Ok(())
     }
@@ -733,21 +740,39 @@ impl VecState {
             }
         }
 
+        // Filter keys are scope-constant: evaluate once, then scan.
+        let filter = match &sl.filter {
+            Some((fid, key_prog)) => Some((*fid, self.eval_value(cp, key_prog)?)),
+            None => None,
+        };
+        self.scan_rows(cp, sl, filter.as_ref(), lo, hi)
+    }
+
+    /// Run a compiled scan's body over rows `[lo, hi)` of its table, with
+    /// an optional pre-evaluated equality-filter key (field id, key
+    /// value). Shared by the sequential batch driver above and
+    /// `exec::parallel`'s morsel workers, which evaluate the key once on
+    /// the master state and fan the value out read-only.
+    pub(crate) fn scan_rows(
+        &mut self,
+        cp: &CompiledProgram,
+        sl: &ScanLoop,
+        filter: Option<&(usize, Value)>,
+        lo: usize,
+        hi: usize,
+    ) -> Result<()> {
         self.cursors[sl.cursor].table = Some(sl.table.clone());
 
-        if let Some((fid, key_prog)) = &sl.filter {
-            // Equality-filtered scan: evaluate the key once, then build a
-            // selection vector per batch and run the body over matches.
-            let key = self.eval_value(cp, key_prog)?;
+        if let Some((fid, key)) = filter {
+            // Equality-filtered scan: build a selection vector per batch
+            // and run the body over matches.
             let col = sl.table.column(*fid);
             let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
-            let mut base = lo;
-            while base < hi {
-                let end = (base + BATCH).min(hi);
+            for (base, end) in morsel_ranges(lo, hi) {
                 self.stats.rows_visited += (end - base) as u64;
                 sel.clear();
                 for row in base..end {
-                    if col.value(row) == key {
+                    if col.value(row) == *key {
                         sel.push(row);
                     }
                 }
@@ -756,20 +781,16 @@ impl VecState {
                     self.cursors[sl.cursor].row = row;
                     self.exec_stmts(cp, &sl.body)?;
                 }
-                base = end;
             }
             return Ok(());
         }
 
-        let mut base = lo;
-        while base < hi {
-            let end = (base + BATCH).min(hi);
+        for (base, end) in morsel_ranges(lo, hi) {
             for row in base..end {
                 self.stats.rows_visited += 1;
                 self.cursors[sl.cursor].row = row;
                 self.exec_stmts(cp, &sl.body)?;
             }
-            base = end;
         }
         Ok(())
     }
@@ -779,158 +800,303 @@ impl VecState {
     /// — continuing an existing float fold batch-wise would change
     /// rounding — or when the column pairing is unsupported.
     fn fast_agg(&mut self, sl: &ScanLoop, fast: FastAgg, lo: usize, hi: usize) -> bool {
+        if !self.arrays[fast.array()].is_empty() {
+            return false;
+        }
+        let Some(mut st) = FastAggState::new(&sl.table, fast) else {
+            return false;
+        };
+        st.update(lo, hi);
+        let tag = st.idiom();
+        st.finish(&mut self.arrays[fast.array()]);
+        self.note_idiom(tag);
+        true
+    }
+
+    pub(crate) fn note_idiom(&mut self, tag: &str) {
+        if !self.stats.idioms.iter().any(|i| i == tag) {
+            self.stats.idioms.push(tag.to_string());
+        }
+    }
+}
+
+/// Incremental state for one fused [`FastAgg`]: disjoint row ranges are
+/// folded in via [`FastAggState::update`] and materialized into an
+/// accumulator-array store once at the end, driving the same shared batch
+/// kernels as before. The sequential fast path above updates one
+/// contiguous range; `exec::parallel`'s morsel workers update one range
+/// per pulled chunk — the kernels fire per-morsel exactly as they do
+/// sequentially — and the materialized per-worker arrays merge through
+/// [`VecState::absorb`].
+pub(crate) enum FastAggState<'a> {
+    CountDense {
+        keys: &'a [u32],
+        dict: &'a Dictionary,
+        counts: Vec<i64>,
+    },
+    CountInts {
+        keys: &'a [i64],
+        map: FxHashMap<i64, i64>,
+    },
+    CountStrs {
+        keys: &'a [Arc<str>],
+        map: FxHashMap<Arc<str>, i64>,
+    },
+    SumDenseFloat {
+        keys: &'a [u32],
+        vals: &'a [f64],
+        dict: &'a Dictionary,
+        sums: Vec<f64>,
+        seen: Vec<bool>,
+    },
+    SumDenseInt {
+        keys: &'a [u32],
+        vals: &'a [i64],
+        dict: &'a Dictionary,
+        sums: Vec<i64>,
+        seen: Vec<bool>,
+    },
+    SumIntFloat {
+        keys: &'a [i64],
+        vals: &'a [f64],
+        map: FxHashMap<i64, f64>,
+    },
+    SumIntInt {
+        keys: &'a [i64],
+        vals: &'a [i64],
+        map: FxHashMap<i64, i64>,
+    },
+    SumStrFloat {
+        keys: &'a [Arc<str>],
+        vals: &'a [f64],
+        map: FxHashMap<Arc<str>, f64>,
+    },
+    SumStrInt {
+        keys: &'a [Arc<str>],
+        vals: &'a [i64],
+        map: FxHashMap<Arc<str>, i64>,
+    },
+}
+
+impl<'a> FastAggState<'a> {
+    /// Bind the fused aggregation's columns, or `None` when the column
+    /// pairing is unsupported (callers fall back to the generic body).
+    pub(crate) fn new(table: &'a Table, fast: FastAgg) -> Option<FastAggState<'a>> {
         match fast {
-            FastAgg::Count { array, key_field } => {
-                if !self.arrays[array].is_empty() {
-                    return false;
-                }
-                match sl.table.column(key_field) {
-                    Column::DictStrs { keys, dict } => {
-                        let mut counts = vec![0i64; dict.len()];
-                        count_batch_u32(&keys[lo..hi], &mut counts);
-                        let store = &mut self.arrays[array];
-                        for (k, &n) in counts.iter().enumerate() {
-                            if n != 0 {
-                                let s = dict.decode(k as u32).expect("dict key in range").clone();
-                                store.insert(vec![Value::Str(s)], Value::Int(n));
-                            }
-                        }
-                    }
-                    Column::Ints(vals) => {
-                        let mut map: FxHashMap<i64, i64> = FxHashMap::default();
-                        for &k in &vals[lo..hi] {
-                            *map.entry(k).or_insert(0) += 1;
-                        }
-                        let store = &mut self.arrays[array];
-                        for (k, n) in map {
-                            store.insert(vec![Value::Int(k)], Value::Int(n));
-                        }
-                    }
-                    Column::Strs(vals) => {
-                        let mut map: FxHashMap<Arc<str>, i64> = FxHashMap::default();
-                        for s in &vals[lo..hi] {
-                            match map.get_mut(s) {
-                                Some(n) => *n += 1,
-                                None => {
-                                    map.insert(s.clone(), 1);
-                                }
-                            }
-                        }
-                        let store = &mut self.arrays[array];
-                        for (s, n) in map {
-                            store.insert(vec![Value::Str(s)], Value::Int(n));
-                        }
-                    }
-                    _ => return false,
-                }
-                self.note_idiom("vec.count");
-                true
-            }
+            FastAgg::Count { key_field, .. } => match table.column(key_field) {
+                Column::DictStrs { keys, dict } => Some(FastAggState::CountDense {
+                    keys,
+                    dict,
+                    counts: vec![0i64; dict.len()],
+                }),
+                Column::Ints(keys) => Some(FastAggState::CountInts {
+                    keys,
+                    map: FxHashMap::default(),
+                }),
+                Column::Strs(keys) => Some(FastAggState::CountStrs {
+                    keys,
+                    map: FxHashMap::default(),
+                }),
+                _ => None,
+            },
             FastAgg::Sum {
-                array,
                 key_field,
                 val_field,
+                ..
+            } => match (table.column(key_field), table.column(val_field)) {
+                (Column::DictStrs { keys, dict }, Column::Floats(vals)) => {
+                    Some(FastAggState::SumDenseFloat {
+                        keys,
+                        vals,
+                        dict,
+                        sums: vec![0f64; dict.len()],
+                        seen: vec![false; dict.len()],
+                    })
+                }
+                (Column::DictStrs { keys, dict }, Column::Ints(vals)) => {
+                    Some(FastAggState::SumDenseInt {
+                        keys,
+                        vals,
+                        dict,
+                        sums: vec![0i64; dict.len()],
+                        seen: vec![false; dict.len()],
+                    })
+                }
+                (Column::Ints(keys), Column::Floats(vals)) => Some(FastAggState::SumIntFloat {
+                    keys,
+                    vals,
+                    map: FxHashMap::default(),
+                }),
+                (Column::Ints(keys), Column::Ints(vals)) => Some(FastAggState::SumIntInt {
+                    keys,
+                    vals,
+                    map: FxHashMap::default(),
+                }),
+                (Column::Strs(keys), Column::Floats(vals)) => Some(FastAggState::SumStrFloat {
+                    keys,
+                    vals,
+                    map: FxHashMap::default(),
+                }),
+                (Column::Strs(keys), Column::Ints(vals)) => Some(FastAggState::SumStrInt {
+                    keys,
+                    vals,
+                    map: FxHashMap::default(),
+                }),
+                _ => None,
+            },
+        }
+    }
+
+    /// Fold rows `[lo, hi)` of the bound columns into the accumulation.
+    pub(crate) fn update(&mut self, lo: usize, hi: usize) {
+        match self {
+            FastAggState::CountDense { keys, counts, .. } => {
+                count_batch_u32(&keys[lo..hi], counts);
+            }
+            FastAggState::CountInts { keys, map } => {
+                for &k in &keys[lo..hi] {
+                    *map.entry(k).or_insert(0) += 1;
+                }
+            }
+            FastAggState::CountStrs { keys, map } => {
+                for s in &keys[lo..hi] {
+                    match map.get_mut(s) {
+                        Some(n) => *n += 1,
+                        None => {
+                            map.insert(s.clone(), 1);
+                        }
+                    }
+                }
+            }
+            FastAggState::SumDenseFloat {
+                keys,
+                vals,
+                sums,
+                seen,
+                ..
             } => {
-                if !self.arrays[array].is_empty() {
-                    return false;
+                sum_batch_u32(&keys[lo..hi], &vals[lo..hi], sums);
+                for &k in &keys[lo..hi] {
+                    seen[k as usize] = true;
                 }
-                let kcol = sl.table.column(key_field);
-                let vcol = sl.table.column(val_field);
-                match (kcol, vcol) {
-                    (Column::DictStrs { keys, dict }, Column::Floats(vs)) => {
-                        let mut sums = vec![0f64; dict.len()];
-                        let mut seen = vec![false; dict.len()];
-                        sum_batch_u32(&keys[lo..hi], &vs[lo..hi], &mut sums);
-                        for &k in &keys[lo..hi] {
-                            seen[k as usize] = true;
-                        }
-                        let store = &mut self.arrays[array];
-                        for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
-                            if was {
-                                let key =
-                                    dict.decode(k as u32).expect("dict key in range").clone();
-                                store.insert(vec![Value::Str(key)], Value::Float(s));
-                            }
-                        }
-                    }
-                    (Column::DictStrs { keys, dict }, Column::Ints(vs)) => {
-                        let mut sums = vec![0i64; dict.len()];
-                        let mut seen = vec![false; dict.len()];
-                        for (&k, &v) in keys[lo..hi].iter().zip(&vs[lo..hi]) {
-                            sums[k as usize] = sums[k as usize].wrapping_add(v);
-                            seen[k as usize] = true;
-                        }
-                        let store = &mut self.arrays[array];
-                        for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
-                            if was {
-                                let key =
-                                    dict.decode(k as u32).expect("dict key in range").clone();
-                                store.insert(vec![Value::Str(key)], Value::Int(s));
-                            }
-                        }
-                    }
-                    (Column::Ints(ks), Column::Floats(vs)) => {
-                        let mut map: FxHashMap<i64, f64> = FxHashMap::default();
-                        for (&k, &v) in ks[lo..hi].iter().zip(&vs[lo..hi]) {
-                            *map.entry(k).or_insert(0.0) += v;
-                        }
-                        let store = &mut self.arrays[array];
-                        for (k, s) in map {
-                            store.insert(vec![Value::Int(k)], Value::Float(s));
-                        }
-                    }
-                    (Column::Ints(ks), Column::Ints(vs)) => {
-                        let mut map: FxHashMap<i64, i64> = FxHashMap::default();
-                        for (&k, &v) in ks[lo..hi].iter().zip(&vs[lo..hi]) {
-                            let e = map.entry(k).or_insert(0);
-                            *e = e.wrapping_add(v);
-                        }
-                        let store = &mut self.arrays[array];
-                        for (k, s) in map {
-                            store.insert(vec![Value::Int(k)], Value::Int(s));
-                        }
-                    }
-                    (Column::Strs(ss), Column::Floats(vs)) => {
-                        let mut map: FxHashMap<Arc<str>, f64> = FxHashMap::default();
-                        for (s, &v) in ss[lo..hi].iter().zip(&vs[lo..hi]) {
-                            match map.get_mut(s) {
-                                Some(e) => *e += v,
-                                None => {
-                                    map.insert(s.clone(), v);
-                                }
-                            }
-                        }
-                        let store = &mut self.arrays[array];
-                        for (s, v) in map {
-                            store.insert(vec![Value::Str(s)], Value::Float(v));
-                        }
-                    }
-                    (Column::Strs(ss), Column::Ints(vs)) => {
-                        let mut map: FxHashMap<Arc<str>, i64> = FxHashMap::default();
-                        for (s, &v) in ss[lo..hi].iter().zip(&vs[lo..hi]) {
-                            match map.get_mut(s) {
-                                Some(e) => *e = e.wrapping_add(v),
-                                None => {
-                                    map.insert(s.clone(), v);
-                                }
-                            }
-                        }
-                        let store = &mut self.arrays[array];
-                        for (s, v) in map {
-                            store.insert(vec![Value::Str(s)], Value::Int(v));
-                        }
-                    }
-                    _ => return false,
+            }
+            FastAggState::SumDenseInt {
+                keys,
+                vals,
+                sums,
+                seen,
+                ..
+            } => {
+                for (&k, &v) in keys[lo..hi].iter().zip(&vals[lo..hi]) {
+                    sums[k as usize] = sums[k as usize].wrapping_add(v);
+                    seen[k as usize] = true;
                 }
-                self.note_idiom("vec.sum");
-                true
+            }
+            FastAggState::SumIntFloat { keys, vals, map } => {
+                for (&k, &v) in keys[lo..hi].iter().zip(&vals[lo..hi]) {
+                    *map.entry(k).or_insert(0.0) += v;
+                }
+            }
+            FastAggState::SumIntInt { keys, vals, map } => {
+                for (&k, &v) in keys[lo..hi].iter().zip(&vals[lo..hi]) {
+                    let e = map.entry(k).or_insert(0);
+                    *e = e.wrapping_add(v);
+                }
+            }
+            FastAggState::SumStrFloat { keys, vals, map } => {
+                for (s, &v) in keys[lo..hi].iter().zip(&vals[lo..hi]) {
+                    match map.get_mut(s) {
+                        Some(e) => *e += v,
+                        None => {
+                            map.insert(s.clone(), v);
+                        }
+                    }
+                }
+            }
+            FastAggState::SumStrInt { keys, vals, map } => {
+                for (s, &v) in keys[lo..hi].iter().zip(&vals[lo..hi]) {
+                    match map.get_mut(s) {
+                        Some(e) => *e = e.wrapping_add(v),
+                        None => {
+                            map.insert(s.clone(), v);
+                        }
+                    }
+                }
             }
         }
     }
 
-    fn note_idiom(&mut self, tag: &str) {
-        if !self.stats.idioms.iter().any(|i| i == tag) {
-            self.stats.idioms.push(tag.to_string());
+    /// Materialize into an (empty) accumulator-array store.
+    pub(crate) fn finish(self, store: &mut FxHashMap<Tuple, Value>) {
+        match self {
+            FastAggState::CountDense { dict, counts, .. } => {
+                for (k, &n) in counts.iter().enumerate() {
+                    if n != 0 {
+                        let s = dict.decode(k as u32).expect("dict key in range").clone();
+                        store.insert(vec![Value::Str(s)], Value::Int(n));
+                    }
+                }
+            }
+            FastAggState::CountInts { map, .. } => {
+                for (k, n) in map {
+                    store.insert(vec![Value::Int(k)], Value::Int(n));
+                }
+            }
+            FastAggState::CountStrs { map, .. } => {
+                for (s, n) in map {
+                    store.insert(vec![Value::Str(s)], Value::Int(n));
+                }
+            }
+            FastAggState::SumDenseFloat {
+                dict, sums, seen, ..
+            } => {
+                for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                    if was {
+                        let key = dict.decode(k as u32).expect("dict key in range").clone();
+                        store.insert(vec![Value::Str(key)], Value::Float(s));
+                    }
+                }
+            }
+            FastAggState::SumDenseInt {
+                dict, sums, seen, ..
+            } => {
+                for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                    if was {
+                        let key = dict.decode(k as u32).expect("dict key in range").clone();
+                        store.insert(vec![Value::Str(key)], Value::Int(s));
+                    }
+                }
+            }
+            FastAggState::SumIntFloat { map, .. } => {
+                for (k, v) in map {
+                    store.insert(vec![Value::Int(k)], Value::Float(v));
+                }
+            }
+            FastAggState::SumIntInt { map, .. } => {
+                for (k, v) in map {
+                    store.insert(vec![Value::Int(k)], Value::Int(v));
+                }
+            }
+            FastAggState::SumStrFloat { map, .. } => {
+                for (s, v) in map {
+                    store.insert(vec![Value::Str(s)], Value::Float(v));
+                }
+            }
+            FastAggState::SumStrInt { map, .. } => {
+                for (s, v) in map {
+                    store.insert(vec![Value::Str(s)], Value::Int(v));
+                }
+            }
+        }
+    }
+
+    /// The idiom tag this state pushes when it fires.
+    pub(crate) fn idiom(&self) -> &'static str {
+        match self {
+            FastAggState::CountDense { .. }
+            | FastAggState::CountInts { .. }
+            | FastAggState::CountStrs { .. } => "vec.count",
+            _ => "vec.sum",
         }
     }
 }
@@ -1435,6 +1601,20 @@ mod tests {
         assert_eq!(ht.probe(&Value::Int(99)), &[] as &[u32]);
         // Cross-type numeric probe matches the interpreter's Value eq.
         assert_eq!(ht.probe(&Value::Float(3.0)), &[1]);
+    }
+
+    #[test]
+    fn morsel_ranges_cover_exactly_once() {
+        for (lo, hi) in [(0, 0), (0, 1), (0, BATCH), (3, BATCH + 5), (7, 3 * BATCH)] {
+            let windows: Vec<(usize, usize)> = morsel_ranges(lo, hi).collect();
+            let mut expect = lo;
+            for &(s, e) in &windows {
+                assert_eq!(s, expect, "[{lo},{hi})");
+                assert!(e > s && e - s <= BATCH, "[{lo},{hi})");
+                expect = e;
+            }
+            assert_eq!(expect, if lo < hi { hi } else { lo }, "[{lo},{hi})");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! super-chunk of recompute.
 
 use std::collections::VecDeque;
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// A contiguous chunk of iterations `[lo, hi)`.
@@ -53,6 +54,22 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// One representative instance of every scheduling discipline, for
+    /// exhaustive policy sweeps in tests and benches. Parameterized
+    /// variants carry typical values; sweep-specific parameters (chunk
+    /// sizes, super-chunk counts) can still be built directly.
+    pub const ALL: [Policy; 7] = [
+        Policy::StaticBlock,
+        Policy::FixedChunk(64),
+        Policy::Gss,
+        Policy::Trapezoid,
+        Policy::Factoring,
+        Policy::FeedbackGuided,
+        Policy::Hybrid {
+            super_chunks_per_worker: 4,
+        },
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             Policy::StaticBlock => "static",
@@ -240,6 +257,42 @@ impl Scheduler {
     }
 }
 
+/// A [`Scheduler`] shareable across an in-process worker pool: the same
+/// §III-A2 policy machinery the distributed coordinator's leader drives,
+/// behind a mutex so `exec::parallel`'s morsel workers can pull chunks
+/// concurrently. Workers take the lock once per chunk — not per row or
+/// morsel — so contention stays negligible next to chunk execution.
+#[derive(Debug)]
+pub struct SharedScheduler {
+    inner: Mutex<Scheduler>,
+}
+
+impl SharedScheduler {
+    pub fn new(policy: Policy, n: usize, workers: usize) -> Self {
+        SharedScheduler {
+            inner: Mutex::new(Scheduler::new(policy, n, workers)),
+        }
+    }
+
+    /// Next chunk for `worker`, or `None` when the space is exhausted.
+    pub fn next_chunk(&self, worker: usize) -> Option<Chunk> {
+        self.inner.lock().expect("scheduler lock").next_chunk(worker)
+    }
+
+    /// Report a completed chunk (feedback-guided policies use the timing).
+    pub fn report(&self, worker: usize, chunk: Chunk, elapsed: Duration) {
+        self.inner
+            .lock()
+            .expect("scheduler lock")
+            .report(worker, chunk, elapsed);
+    }
+
+    /// Total chunks handed out so far.
+    pub fn chunks_issued(&self) -> usize {
+        self.inner.lock().expect("scheduler lock").chunks_issued
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +404,45 @@ mod tests {
             big.len(),
             small.len()
         );
+    }
+
+    #[test]
+    fn shared_scheduler_covers_exactly_once_under_concurrency() {
+        for policy in Policy::ALL {
+            let n = 10_000;
+            let workers = 4;
+            let s = SharedScheduler::new(policy, n, workers);
+            let s = &s;
+            let covered: Vec<Vec<Chunk>> = std::thread::scope(|scope| {
+                (0..workers)
+                    .map(|w| {
+                        scope.spawn(move || {
+                            let mut got = Vec::new();
+                            while let Some(c) = s.next_chunk(w) {
+                                s.report(w, c, Duration::from_micros(c.len() as u64));
+                                got.push(c);
+                            }
+                            got
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let mut seen = vec![false; n];
+            for c in covered.iter().flatten() {
+                for i in c.lo..c.hi {
+                    assert!(!seen[i], "{policy:?}: iteration {i} issued twice");
+                    seen[i] = true;
+                }
+            }
+            assert!(
+                seen.iter().all(|&b| b),
+                "{policy:?}: some iteration never issued"
+            );
+            assert!(s.chunks_issued() >= workers.min(n));
+        }
     }
 
     #[test]

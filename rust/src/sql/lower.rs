@@ -37,7 +37,25 @@ pub type Catalog = BTreeMap<String, Schema>;
 ///
 /// The produced program reads the catalog relations and fills one result
 /// multiset named `R`.
+///
+/// The parser accepts `ORDER BY`/`LIMIT`, but no lowering shape exists
+/// for them yet — bail loudly rather than silently dropping the clause
+/// (a top-k emission kernel is tracked in ROADMAP.md open items).
+/// `compiler::Engine` strips both clauses before lowering and applies
+/// them to the result multiset after execution instead.
 pub fn lower(sel: &Select, catalog: &Catalog) -> Result<Program> {
+    if let Some((col, _desc)) = &sel.order_by {
+        bail!(
+            "ORDER BY `{col}` is not yet supported in lowering \
+             (a top-k emission kernel is tracked in ROADMAP.md open items)"
+        );
+    }
+    if let Some(n) = sel.limit {
+        bail!(
+            "LIMIT {n} is not yet supported in lowering \
+             (a top-k emission kernel is tracked in ROADMAP.md open items)"
+        );
+    }
     let ctx = LowerCtx::new(sel, catalog)?;
     if sel.is_aggregate() {
         ctx.lower_aggregate(sel)
@@ -806,6 +824,34 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("tables in scope: A, B"), "{err}");
+    }
+
+    #[test]
+    fn order_by_and_limit_bail_instead_of_being_dropped() {
+        let c = catalog();
+        // The parser accepts both clauses...
+        let sel = crate::sql::parser::parse(
+            "SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY url DESC LIMIT 5",
+        )
+        .unwrap();
+        assert!(sel.order_by.is_some() && sel.limit.is_some());
+        // ...but lowering must refuse them by name, not silently ignore.
+        let err = compile_sql("SELECT url FROM access ORDER BY url", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("ORDER BY `url` is not yet supported in lowering"),
+            "{err}"
+        );
+        let err = compile_sql("SELECT url FROM access LIMIT 10", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("LIMIT 10 is not yet supported in lowering"), "{err}");
+        // ORDER BY is reported first when both are present.
+        let err = compile_sql("SELECT url FROM access ORDER BY url LIMIT 3", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ORDER BY"), "{err}");
     }
 
     #[test]

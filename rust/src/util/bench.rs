@@ -59,6 +59,35 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Assemble the machine-readable record [`write_bench_json`] emits. No
+/// serde offline: the fields are flat and the names are plain ASCII
+/// identifiers, so the JSON is built by hand.
+fn bench_json(bench: &str, rows: usize, medians_ns: &[(&str, u128)], speedup: f64) -> String {
+    let results: Vec<String> = medians_ns
+        .iter()
+        .map(|(name, ns)| format!("{{\"name\": \"{name}\", \"median_ns\": {ns}}}"))
+        .collect();
+    format!(
+        "{{\"bench\": \"{bench}\", \"rows\": {rows}, \"results\": [{}], \"speedup\": {speedup:.3}}}\n",
+        results.join(", ")
+    )
+}
+
+/// Write one machine-readable benchmark record to `BENCH_<bench>.json`
+/// in the current directory. CI uploads `BENCH_*.json` as artifacts so
+/// the perf trajectory is tracked PR-over-PR: bench name, row count,
+/// per-variant median nanoseconds, and the bench's headline speedup.
+pub fn write_bench_json(
+    bench: &str,
+    rows: usize,
+    medians_ns: &[(&str, u128)],
+    speedup: f64,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = std::path::PathBuf::from(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, bench_json(bench, rows, medians_ns, speedup))?;
+    Ok(path)
+}
+
 /// A named-row results table, printed like the paper's figures report.
 pub struct BenchTable {
     title: String,
@@ -144,5 +173,22 @@ mod tests {
         let mut n = 0;
         let _ = time_fn(2, 3, || n += 1);
         assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn bench_json_shape_is_stable() {
+        let j = bench_json(
+            "parallel_scan",
+            200_000,
+            &[("compiled-1-thread", 1_500_000), ("compiled-4-threads", 500_000)],
+            3.0,
+        );
+        assert_eq!(
+            j,
+            "{\"bench\": \"parallel_scan\", \"rows\": 200000, \"results\": \
+             [{\"name\": \"compiled-1-thread\", \"median_ns\": 1500000}, \
+             {\"name\": \"compiled-4-threads\", \"median_ns\": 500000}], \
+             \"speedup\": 3.000}\n"
+        );
     }
 }

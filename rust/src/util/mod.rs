@@ -7,7 +7,7 @@ pub mod fxhash;
 pub mod check;
 pub mod rng;
 
-pub use bench::{fmt_duration, time_fn, BenchTable, Stats};
+pub use bench::{fmt_duration, time_fn, write_bench_json, BenchTable, Stats};
 pub use check::forall_seeds;
 pub use fxhash::{FxHashMap, FxHasher};
 pub use rng::{Rng, Zipf};

@@ -237,6 +237,134 @@ fn hash_join_three_tiers_agree_on_random_joins() {
 }
 
 #[test]
+fn morsel_parallel_scans_match_interpreter_across_policies() {
+    // Scan/filter/group-by programs must produce interpreter-identical
+    // bags under the morsel-driven parallel driver for every scheduling
+    // policy and random thread counts. Aggregates stick to integer
+    // accumulation so the bags are exact under any worker merge order
+    // (float folds may reorder across workers by design).
+    forall_seeds(6, |rng| {
+        // More rows than one BATCH (1024) so the morsel driver engages.
+        let rows = 1200 + rng.below(1800) as usize;
+        let keys = 1 + rng.below(24);
+        let mut m = Multiset::new(Schema::new(vec![
+            ("k", DataType::Str),
+            ("n", DataType::Int),
+        ]));
+        for _ in 0..rows {
+            m.push(vec![
+                Value::str(format!("key{}", rng.below(keys))),
+                Value::Int(rng.range(-50, 50)),
+            ]);
+        }
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("t", &m).unwrap();
+        let queries = [
+            "SELECT k, COUNT(k) FROM t GROUP BY k",
+            "SELECT k, SUM(n) FROM t GROUP BY k",
+            "SELECT k, n FROM t WHERE k = 'key0'",
+            "SELECT k FROM t WHERE n > 0",
+            "SELECT k, COUNT(k) FROM t WHERE n > 0 GROUP BY k",
+        ];
+        let policies = [
+            Policy::StaticBlock,
+            Policy::FixedChunk(1 + rng.below(512) as usize),
+            Policy::Gss,
+            Policy::Trapezoid,
+            Policy::Factoring,
+            Policy::FeedbackGuided,
+            Policy::Hybrid {
+                super_chunks_per_worker: 1 + rng.below(4) as usize,
+            },
+        ];
+        for q in queries {
+            let p = forelem::sql::compile_sql(q, &catalog.schemas())
+                .map_err(|e| e.to_string())?;
+            let reference = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+            for policy in policies {
+                let threads = 2 + rng.below(7) as usize;
+                let par =
+                    forelem::exec::run_parallel_with_policy(&p, &catalog, threads, policy)
+                        .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    par.result().unwrap().bag_eq(reference.result().unwrap()),
+                    "`{q}` diverged under {policy:?} (threads={threads})"
+                );
+                prop_assert!(
+                    par.stats.idioms.contains(&"vec.morsel".to_string()),
+                    "`{q}` did not take the morsel path under {policy:?}: {:?}",
+                    par.stats.idioms
+                );
+                let tag = format!("sched.{}", policy.name());
+                prop_assert!(
+                    par.stats.idioms.contains(&tag),
+                    "`{q}` missing `{tag}` under {policy:?}: {:?}",
+                    par.stats.idioms
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ineligible_bodies_stay_on_the_sequential_driver() {
+    // Prints and scalar writes are order-dependent effects the worker
+    // merge cannot reproduce: such bodies must run sequentially (exact
+    // print order and scalar values) and never tag the morsel path.
+    use forelem::ir::{Expr, IndexSet, Loop, Program, Stmt};
+    let mut m = Multiset::new(Schema::new(vec![
+        ("k", DataType::Str),
+        ("n", DataType::Int),
+    ]));
+    let mut rng = Rng::new(77);
+    for _ in 0..2_000 {
+        m.push(vec![
+            Value::str(format!("key{}", rng.below(8))),
+            Value::Int(rng.range(-50, 50)),
+        ]);
+    }
+    let mut catalog = StorageCatalog::new();
+    catalog.insert_multiset("t", &m).unwrap();
+
+    let mut printer = Program::new("printer")
+        .with_relation("t", catalog.schemas()["t"].clone());
+    printer.body = vec![Stmt::Loop(Loop::forelem(
+        "i",
+        IndexSet::all("t"),
+        vec![Stmt::Print {
+            format: "{}".into(),
+            args: vec![Expr::field("i", "k")],
+        }],
+    ))];
+    let reference = forelem::exec::run(&printer, &catalog).unwrap();
+    let par = forelem::exec::run_parallel(&printer, &catalog, 8).unwrap();
+    assert_eq!(par.prints, reference.prints, "print order must be sequential");
+    assert!(
+        !par.stats.idioms.contains(&"vec.morsel".to_string()),
+        "print body must not fan out: {:?}",
+        par.stats.idioms
+    );
+
+    let mut assigner = Program::new("assigner")
+        .with_relation("t", catalog.schemas()["t"].clone())
+        .with_scalar("last", Value::Int(0));
+    assigner.body = vec![Stmt::Loop(Loop::forelem(
+        "i",
+        IndexSet::all("t"),
+        vec![Stmt::assign("last", Expr::field("i", "n"))],
+    ))];
+    let reference = forelem::exec::run(&assigner, &catalog).unwrap();
+    let par = forelem::exec::run_parallel(&assigner, &catalog, 8).unwrap();
+    assert_eq!(par.scalars, reference.scalars, "scalar writes must be sequential");
+    assert!(
+        !par.stats.idioms.contains(&"vec.morsel".to_string()),
+        "scalar-writing body must not fan out: {:?}",
+        par.stats.idioms
+    );
+}
+
+#[test]
 fn sum_aggregate_matches_scalar_fold() {
     forall_seeds(15, |rng| {
         let m = random_multiset(rng, 300);
