@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Diff fresh BENCH_*.json records against the checked-in baselines.
+
+Benches emit absolute medians *and* a headline speedup ratio. Absolute
+nanoseconds are useless across heterogeneous CI runners, so the gate is
+on the ratio, which is machine-independent to first order:
+
+  * fail when a bench's speedup drops more than 30% below its baseline
+    speedup (perf-trajectory regression), or
+  * below the bench's hard floor (``min_speedup``, the acceptance bar
+    stated in the bench's own PASS/FAIL line).
+
+Baselines live in ci/bench_baselines/ and are hand-seeded conservatively;
+refresh them from a CI bench-json artifact when a PR legitimately shifts
+the trajectory.
+"""
+
+import glob
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join("ci", "bench_baselines")
+REGRESSION_FRACTION = 0.30
+
+
+def main() -> int:
+    records = sorted(glob.glob("BENCH_*.json"))
+    if not records:
+        print("no BENCH_*.json records found — run `cargo bench` first")
+        return 1
+    failed = False
+    for path in records:
+        base_path = os.path.join(BASELINE_DIR, os.path.basename(path))
+        if not os.path.exists(base_path):
+            print(f"{path}: no baseline checked in, skipping")
+            continue
+        with open(path) as f:
+            current = json.load(f)
+        with open(base_path) as f:
+            baseline = json.load(f)
+        floor = max(
+            baseline["speedup"] * (1.0 - REGRESSION_FRACTION),
+            baseline.get("min_speedup", 0.0),
+        )
+        ok = current["speedup"] >= floor
+        status = "OK" if ok else "REGRESSION"
+        print(
+            f"{path}: speedup {current['speedup']:.2f}x "
+            f"(baseline {baseline['speedup']:.2f}x, floor {floor:.2f}x) {status}"
+        )
+        if not ok:
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
             processors: 4,
             partition_field: None,
             reformat: ReformatMode::Force,
+            ..Default::default()
         })
     };
     println!("— URL count, parallelized to 4 processors + integer-keyed:\n");

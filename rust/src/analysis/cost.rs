@@ -24,7 +24,22 @@ impl TableStats {
             distinct_keys: distinct_keys.max(1),
         }
     }
+
+    /// Derive the legacy rows+NDV pair from the optimizer's full
+    /// per-column statistics (`storage::ColumnStats`) — the cost
+    /// functions below keep working unchanged while the estimator
+    /// carries min/max/histograms on the side.
+    pub fn from_column(stats: &crate::storage::ColumnStats) -> Self {
+        TableStats::new(stats.rows, stats.ndv.min(stats.rows.max(1)))
+    }
 }
+
+/// Rows a morsel fan-out must cover before parallel workers amortize
+/// their spin-up (thread spawn + scheduler handshake + state merge).
+/// Calibrated to one `exec::BATCH` morsel: below this the whole scan fits
+/// in a single batch and the sequential driver always wins. The
+/// optimizer's fan-out gate (`opt::should_fan_out`) consumes this.
+pub const PARALLEL_SPINUP_ROWS: u64 = 1024;
 
 /// Relative per-row cost constants (calibrated on the exec engine; see
 /// EXPERIMENTS.md §Perf — only *ratios* matter for the decisions).

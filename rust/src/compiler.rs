@@ -38,6 +38,10 @@ pub struct CompileOptions {
     /// Indirect-partitioning field (None → direct blocking).
     pub partition_field: Option<String>,
     pub reformat: ReformatMode,
+    /// Run the cost-based optimizer (`crate::opt`) between lowering and
+    /// the pass pipeline: join build side, predicate order, index
+    /// strategies. On by default; turn off to compare plans.
+    pub optimize: bool,
 }
 
 impl Default for CompileOptions {
@@ -46,6 +50,7 @@ impl Default for CompileOptions {
             processors: 1,
             partition_field: None,
             reformat: ReformatMode::Off,
+            optimize: true,
         }
     }
 }
@@ -67,6 +72,9 @@ pub struct Compiled {
     pub reformat: Option<ReformatPlan>,
     pub distribution: Option<DistributionPlan>,
     pub post: Option<PostProcess>,
+    /// The cost-based optimizer's report (estimates + decisions), when
+    /// `CompileOptions::optimize` was on.
+    pub opt: Option<crate::opt::OptReport>,
 }
 
 /// Apply ORDER BY / LIMIT to a result multiset.
@@ -154,8 +162,10 @@ impl Engine {
             }
         };
 
-        // Reformat decision happens BEFORE materialization so strategy
-        // costs see the final layout.
+        // Reformat decision happens BEFORE the optimizer and
+        // materialization so every strategy cost and cardinality
+        // estimate sees the final physical layout (dictionary-encoded
+        // columns report exact NDV).
         let reformat = match self.options.reformat {
             ReformatMode::Off => None,
             ReformatMode::Auto { expected_runs } => {
@@ -173,6 +183,18 @@ impl Engine {
                 transform::apply_reformat(&plan, &mut program, &mut self.catalog)?;
                 Some(plan)
             }
+        };
+
+        // Cost-based optimization: the query-optimizer half of the
+        // paper's "compiler + query optimization over one IR". It may
+        // swap the join nest (build-side choice), reorder guard
+        // conjuncts and decide index strategies; the classic pipeline
+        // below sees the already-optimized shape (and `Materialize`
+        // skips strategies decided here).
+        let opt = if self.options.optimize {
+            Some(crate::opt::optimize(&mut program, &self.catalog)?)
+        } else {
+            None
         };
 
         // Classic pipeline.
@@ -211,6 +233,7 @@ impl Engine {
             reformat,
             distribution,
             post,
+            opt,
         })
     }
 
@@ -292,9 +315,14 @@ impl Engine {
         Ok((r, m))
     }
 
-    /// Human-readable compilation report.
+    /// Human-readable compilation report: the optimized IR, the pass
+    /// trace, the optimizer's cost section (estimated rows in/out per
+    /// loop and every `opt.*` decision), and — explain-analyze style —
+    /// which execution tier actually fired with its final
+    /// `ExecStats.idioms` tags.
     pub fn explain(&mut self, query: &str) -> Result<String> {
         let compiled = self.compile(query)?;
+        let executed = self.execute(&compiled)?;
         let mut out = String::new();
         out.push_str(&pretty::program(&compiled.program));
         out.push_str("\n-- passes applied: ");
@@ -309,6 +337,31 @@ impl Engine {
                 d.redistribution_count()
             ));
         }
+        if let Some(opt) = &compiled.opt {
+            out.push_str("\n-- optimizer:");
+            for d in &opt.decisions {
+                out.push_str(&format!("\n--   [{}] {}", d.tag, d.detail));
+            }
+            for e in &opt.estimates {
+                out.push_str(&format!(
+                    "\n--   est {}{}: rows in {} -> out {}",
+                    "  ".repeat(e.depth),
+                    e.describe,
+                    e.rows_in,
+                    e.rows_out
+                ));
+            }
+        }
+        let idioms = &executed.stats.idioms;
+        let tier = if idioms.iter().any(|t| t == "group_count" || t == "group_sum") {
+            "idiom-kernel"
+        } else if idioms.iter().any(|t| t == "vectorized") {
+            "vectorized"
+        } else {
+            "interpreter"
+        };
+        out.push_str(&format!("\n-- tier: {tier}"));
+        out.push_str(&format!("\n-- idioms: {}", idioms.join(", ")));
         out.push('\n');
         Ok(out)
     }
@@ -409,6 +462,107 @@ mod tests {
         e2.options.reformat = ReformatMode::Auto { expected_runs: 1000 };
         let _ = e2.sql(Q).unwrap();
         assert!(e2.table("access").unwrap().column(0).dictionary().is_some());
+    }
+}
+
+#[cfg(test)]
+mod optimizer_tests {
+    use super::*;
+    use crate::ir::{DataType, Schema, Value};
+    use crate::util::Rng;
+
+    /// Small `dim` written FIRST: as lowered, the join nest would hash
+    /// the big `fact` table; the optimizer must swap the build side.
+    fn join_engine() -> Engine {
+        let mut dim = Multiset::new(Schema::new(vec![
+            ("id", DataType::Int),
+            ("g", DataType::Str),
+        ]));
+        for i in 0..64i64 {
+            dim.push(vec![Value::Int(i), Value::str(format!("g{}", i % 5))]);
+        }
+        let mut fact = Multiset::new(Schema::new(vec![
+            ("a_id", DataType::Int),
+            ("w", DataType::Int),
+        ]));
+        let mut rng = Rng::new(11);
+        for _ in 0..6000 {
+            fact.push(vec![
+                Value::Int(rng.range(0, 256)),
+                Value::Int(rng.range(0, 9)),
+            ]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("dim", &dim).unwrap();
+        c.insert_multiset("fact", &fact).unwrap();
+        Engine::new(c)
+    }
+
+    const JQ: &str = "SELECT g, COUNT(g) FROM dim JOIN fact ON dim.id = fact.a_id GROUP BY g";
+
+    #[test]
+    fn skewed_join_routes_through_optimized_hash_join() {
+        let mut e = join_engine();
+        let out = e.sql(JQ).unwrap();
+        assert!(
+            out.stats.idioms.contains(&"vec.hash_join".to_string()),
+            "{:?}",
+            out.stats.idioms
+        );
+        assert!(
+            out.stats.idioms.contains(&"opt.join_build_side".to_string()),
+            "{:?}",
+            out.stats.idioms
+        );
+        // The optimizer-off plan produces identical results and no tag.
+        let mut off = join_engine();
+        off.options.optimize = false;
+        let reference = off.sql(JQ).unwrap();
+        assert!(out.result().unwrap().bag_eq(reference.result().unwrap()));
+        assert!(!reference.stats.idioms.iter().any(|t| t.starts_with("opt.")));
+    }
+
+    #[test]
+    fn explain_reports_cost_section_tier_and_idioms() {
+        let mut e = join_engine();
+        let text = e.explain(JQ).unwrap();
+        assert!(text.contains("-- optimizer:"), "{text}");
+        assert!(text.contains("[opt.join_build_side]"), "{text}");
+        assert!(text.contains("est "), "{text}");
+        assert!(text.contains("rows in "), "{text}");
+        assert!(text.contains("-- tier: vectorized"), "{text}");
+        assert!(text.contains("vec.hash_join"), "{text}");
+        assert!(text.contains("-- idioms:"), "{text}");
+    }
+
+    #[test]
+    fn explain_reports_idiom_kernel_tier_for_plain_group_by() {
+        let m = crate::workload::access_log(&crate::workload::AccessLogSpec {
+            rows: 1000,
+            urls: 20,
+            skew: 1.1,
+            seed: 2,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        let mut e = Engine::new(c);
+        let text = e
+            .explain("SELECT url, COUNT(url) FROM access GROUP BY url")
+            .unwrap();
+        assert!(text.contains("-- tier: idiom-kernel"), "{text}");
+        assert!(text.contains("group_count"), "{text}");
+    }
+
+    #[test]
+    fn optimizer_report_is_attached_to_compiled_queries() {
+        let mut e = join_engine();
+        let compiled = e.compile(JQ).unwrap();
+        let report = compiled.opt.expect("optimizer on by default");
+        assert!(report.has("opt.join_build_side"), "{report:?}");
+        assert!(!report.estimates.is_empty());
+        let mut off = join_engine();
+        off.options.optimize = false;
+        assert!(off.compile(JQ).unwrap().opt.is_none());
     }
 }
 

@@ -1046,6 +1046,47 @@ mod tests {
     }
 
     #[test]
+    fn optimizer_swapped_nest_builds_on_the_small_side() {
+        // `dim` written first (small), `fact` second (big): as lowered,
+        // the JoinLoop hashes `fact`; after `opt::optimize` swaps the
+        // nest, the build side must be `dim` and results must not change.
+        let mut c = StorageCatalog::new();
+        let mut dim = Multiset::new(Schema::new(vec![("id", DataType::Int)]));
+        for i in 0..8i64 {
+            dim.push(vec![Value::Int(i)]);
+        }
+        let mut fact = Multiset::new(Schema::new(vec![("a_id", DataType::Int)]));
+        for i in 0..64i64 {
+            fact.push(vec![Value::Int(i % 11)]);
+        }
+        c.insert_multiset("dim", &dim).unwrap();
+        c.insert_multiset("fact", &fact).unwrap();
+        let p0 = compile_sql(
+            "SELECT dim.id FROM dim JOIN fact ON dim.id = fact.a_id",
+            &c.schemas(),
+        )
+        .unwrap();
+        let unopt = compile_program(&p0, &c).expect("join shape");
+        let [CStmt::Join(j0)] = unopt.body.as_slice() else {
+            panic!("expected a compiled join");
+        };
+        assert_eq!(j0.build.len(), 64, "as lowered: builds on fact");
+
+        let mut p1 = p0.clone();
+        crate::opt::optimize(&mut p1, &c).unwrap();
+        let cp = compile_program(&p1, &c).expect("swapped nest still compiles");
+        let [CStmt::Join(j)] = cp.body.as_slice() else {
+            panic!("expected a compiled join after the swap");
+        };
+        assert_eq!(j.build.len(), 8, "optimizer must hash the small side");
+        assert_eq!(j.outer.len(), 64);
+
+        let a = crate::exec::run(&p0, &c).unwrap();
+        let b = crate::exec::run(&p1, &c).unwrap();
+        assert!(a.result().unwrap().bag_eq(b.result().unwrap()));
+    }
+
+    #[test]
     fn three_deep_forelem_nests_fall_back() {
         // Only the two-table Figure-1 shape is compiled; a forelem nest
         // inside the join body keeps the interpreter.

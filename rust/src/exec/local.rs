@@ -32,6 +32,20 @@ pub struct ExecStats {
     pub kernel_calls: usize,
 }
 
+impl ExecStats {
+    /// Merge a program's optimizer decision tags (`Program::opt_tags`,
+    /// dot-namespaced `opt.*`) into the idiom list, deduplicating —
+    /// several dispatch layers (`run_compiled`, `vector::try_run`,
+    /// `run_parallel`) may each merge on the way out.
+    pub fn note_opt_tags(&mut self, tags: &[String]) {
+        for t in tags {
+            if !self.idioms.contains(t) {
+                self.idioms.push(t.clone());
+            }
+        }
+    }
+}
+
 /// The outcome of executing a program.
 #[derive(Debug, Default)]
 pub struct Output {

@@ -35,6 +35,10 @@
 //! Ineligible bodies (scalar writes, prints, accumulator reads, distinct
 //! or partitioned iteration) run sequentially on the master state, so
 //! print order and scalar results stay identical to the interpreter.
+//! Eligible scans and join probes additionally pass the optimizer's
+//! spin-up gate (`opt::should_fan_out`): iteration spaces too small to
+//! amortize worker startup stay sequential and tag
+//! `opt.small_scan_seq` / `opt.small_join_seq`.
 //! Merging per-worker float partials may reorder a floating-point fold
 //! across workers; integer aggregates are exact. A successful fan-out
 //! pushes `"vec.morsel"` plus the active policy (e.g. `"sched.gss"`)
@@ -90,10 +94,12 @@ pub fn run_parallel_with_policy(
     max_threads: usize,
     policy: Policy,
 ) -> Result<Output> {
-    match compile_program(program, catalog) {
-        Some(cp) => run_parallel_compiled_with_policy(&cp, max_threads, policy),
-        None => run_parallel_interp(program, catalog, max_threads),
-    }
+    let mut out = match compile_program(program, catalog) {
+        Some(cp) => run_parallel_compiled_with_policy(&cp, max_threads, policy)?,
+        None => run_parallel_interp(program, catalog, max_threads)?,
+    };
+    out.stats.note_opt_tags(&program.opt_tags);
+    Ok(out)
 }
 
 /// Parallel driver for compiled programs under the default GSS policy.
@@ -258,10 +264,16 @@ pub fn run_parallel_compiled_with_policy(
             }
             CStmt::Scan(sl)
                 if threads > 1
-                    && sl.table.len() > BATCH
                     && scan_parallel_safe(sl)
                     && zero_init_accums(cp, &sl.body) =>
             {
+                // Optimizer gate: tables too small to amortize worker
+                // spin-up stay on the sequential driver (and say so).
+                if !crate::opt::should_fan_out(sl.table.len(), threads) {
+                    master.note_idiom("opt.small_scan_seq");
+                    master.exec_stmts(cp, std::slice::from_ref(s))?;
+                    continue;
+                }
                 // Equality-filter keys are scope-constant: evaluated once
                 // in the master's complete pre-loop state, then fanned
                 // out to the workers as a plain value.
@@ -315,10 +327,15 @@ pub fn run_parallel_compiled_with_policy(
             }
             CStmt::Join(jl)
                 if threads > 1
-                    && jl.outer.len() > BATCH
                     && join_parallel_safe(jl)
                     && zero_init_accums(cp, &jl.body) =>
             {
+                // Same spin-up gate as scans, keyed on the probe side.
+                if !crate::opt::should_fan_out(jl.outer.len(), threads) {
+                    master.note_idiom("opt.small_join_seq");
+                    master.exec_stmts(cp, std::slice::from_ref(s))?;
+                    continue;
+                }
                 // Build once, probe everywhere: the hash table is shared
                 // read-only across the pool.
                 let build = JoinHashTable::build(&jl.build, jl.build_key);

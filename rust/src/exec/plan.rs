@@ -150,13 +150,17 @@ pub fn run_compiled(
     catalog: &StorageCatalog,
     kernels: Option<&dyn KernelExec>,
 ) -> Result<Output> {
-    match recognize(p) {
-        Some(idiom) => run_idiom(&idiom, p, catalog, kernels),
+    let mut out = match recognize(p) {
+        Some(idiom) => run_idiom(&idiom, p, catalog, kernels)?,
         None => match super::vector::try_run(p, catalog)? {
-            Some(out) => Ok(out),
-            None => local::run(p, catalog),
+            Some(out) => out,
+            None => local::run(p, catalog)?,
         },
-    }
+    };
+    // Surface the optimizer's decisions alongside the tier tags so tests
+    // and dashboards see *why* this plan shape executed.
+    out.stats.note_opt_tags(&p.opt_tags);
+    Ok(out)
 }
 
 fn run_idiom(

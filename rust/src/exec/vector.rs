@@ -103,7 +103,13 @@ impl JoinHashTable {
 /// interpreter, preserving observable behaviour exactly.
 pub fn try_run(p: &Program, catalog: &StorageCatalog) -> Result<Option<Output>> {
     match compile_program(p, catalog) {
-        Some(cp) => run_compiled_program(&cp).map(Some),
+        Some(cp) => {
+            let mut out = run_compiled_program(&cp)?;
+            // Direct callers (benches, tests) bypass `plan::run_compiled`;
+            // merge the optimizer's decision tags here too (deduplicated).
+            out.stats.note_opt_tags(&p.opt_tags);
+            Ok(Some(out))
+        }
         None => Ok(None),
     }
 }

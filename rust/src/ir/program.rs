@@ -92,6 +92,12 @@ pub struct Program {
     pub scalars: BTreeMap<String, Value>,
     /// The statement body.
     pub body: Vec<Stmt>,
+    /// Dot-namespaced decision tags (`opt.join_build_side`, ...) recorded
+    /// by the cost-based optimizer (`crate::opt`) when it rewrote or
+    /// annotated this program. Executors merge these into
+    /// `ExecStats.idioms` so tests and dashboards can observe which
+    /// optimizer decisions shaped a run.
+    pub opt_tags: Vec<String>,
 }
 
 impl Program {

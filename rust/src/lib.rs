@@ -12,6 +12,9 @@
 //! * [`mapreduce`] — MapReduce front-end, the IR→MapReduce derivation of
 //!   §IV, and a Hadoop-like disk-spilling baseline executor;
 //! * [`analysis`] — def-use, dependence and cost analyses;
+//! * [`opt`] — the cost-based query optimizer: column statistics,
+//!   cardinality estimation, and plan decisions (join build side,
+//!   predicate order, index strategies, parallel fan-out gating);
 //! * [`transform`] — the re-targeted compiler transformations: loop
 //!   blocking/orthogonalization (data partitioning), interchange, fusion,
 //!   code motion, iteration-space expansion, DCE/CSE/const-prop, index-set
@@ -38,6 +41,7 @@ pub mod distrib;
 pub mod exec;
 pub mod ir;
 pub mod mapreduce;
+pub mod opt;
 pub mod runtime;
 pub mod sched;
 pub mod sql;

@@ -69,6 +69,7 @@ fn print_usage() {
            --processors N       parallelize IR to N procs  (compile/run)\n\
            --partition-field F  indirect partitioning on F\n\
            --reformat M         off | auto | force         (§III-C1)\n\
+           --no-optimize        skip the cost-based optimizer (opt/)\n\
            --workers N          cluster worker count       (cluster/fig2)\n\
            --policy P           static|fixed|gss|trapezoid|factoring|feedback|hybrid\n\
            --fail W:C           inject failure of worker W after C chunks\n\
@@ -180,6 +181,7 @@ fn engine(flags: &BTreeMap<String, String>) -> Result<Engine> {
         processors: opt_usize(flags, "processors", 1)?,
         partition_field: flags.get("partition-field").cloned(),
         reformat: reformat_mode(flags)?,
+        optimize: !flags.contains_key("no-optimize"),
     });
     if flags.contains_key("kernels") {
         e = e.with_kernels(Kernels::load_default().context("load XLA artifacts")?);

@@ -1,0 +1,521 @@
+//! The optimizer's decision pass: consume estimates, rewrite the IR.
+//!
+//! Three executable decisions, each recorded as a [`Decision`] whose
+//! dot-namespaced tag lands in `Program::opt_tags` (and from there in
+//! `ExecStats.idioms`):
+//!
+//! * **`opt.join_build_side`** — for the Figure-1 equi-join nest, choose
+//!   which side the vectorized tier hashes. `exec::compile` always
+//!   builds over the *inner* loop's table, so when the outer (probe)
+//!   relation is estimated smaller the nest is swapped — the body is
+//!   untouched; only the loop order (and therefore the build side)
+//!   changes. Swapping reorders the visit sequence of the matched
+//!   pairs, so it is gated on an order-insensitivity check of the body
+//!   (commutative accumulations and result appends only). Note that a
+//!   float `+=` accumulation is reassociated by the swap — standard
+//!   optimizer behaviour, and every execution tier still agrees on the
+//!   *rewritten* program.
+//! * **`opt.filter_reorder`** — conjunctive guards are reordered
+//!   most-selective-first so the short-circuit `&&` chain rejects rows
+//!   as early as possible. Only pure `field cmp literal` conjuncts move.
+//! * **`opt.strategy.<scan|hash|tree>`** — filtered index sets still
+//!   `Unspecified` get their scan-vs-materialize strategy from the
+//!   existing cost model (`analysis::cost::choose_strategy`), fed by the
+//!   statistics-backed estimator instead of the materialization pass's
+//!   fallback guesses. The later `Materialize` pass leaves decided
+//!   strategies untouched.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::analysis::choose_strategy;
+use crate::ir::{AccumOp, BinOp, Domain, Expr, IndexSet, Loop, LoopKind, Program, Stmt, Strategy};
+use crate::storage::StorageCatalog;
+
+use super::estimate::{conjuncts, expr_pure, reorderable_conjunct, Estimator, LoopEstimate};
+
+/// One optimizer decision.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Dot-namespaced tag (`opt.join_build_side`, ...).
+    pub tag: String,
+    /// Human-readable detail for `Engine::explain`.
+    pub detail: String,
+}
+
+/// Everything the optimizer did to one program.
+#[derive(Debug, Clone, Default)]
+pub struct OptReport {
+    pub decisions: Vec<Decision>,
+    /// Estimated rows in/out per loop, computed on the *optimized*
+    /// program (what actually executes).
+    pub estimates: Vec<LoopEstimate>,
+}
+
+impl OptReport {
+    /// Deduplicated decision tags, in first-decision order.
+    pub fn tags(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for d in &self.decisions {
+            if !out.contains(&d.tag) {
+                out.push(d.tag.clone());
+            }
+        }
+        out
+    }
+
+    /// True when a decision with this tag was recorded.
+    pub fn has(&self, tag: &str) -> bool {
+        self.decisions.iter().any(|d| d.tag == tag)
+    }
+}
+
+/// Run the cost-based optimizer over a lowered program. Rewrites the
+/// program in place (join nest order, guard conjunct order, index-set
+/// strategies), records every decision in the report and in
+/// `Program::opt_tags`, and re-validates the result.
+pub fn optimize(p: &mut Program, catalog: &StorageCatalog) -> Result<OptReport> {
+    let est = Estimator::new(catalog);
+    let mut report = OptReport::default();
+    for s in &mut p.body {
+        choose_join_build_side(s, &est, &mut report);
+    }
+    let mut scopes = BTreeMap::new();
+    for s in &mut p.body {
+        reorder_guards(s, &est, &mut scopes, &mut report);
+    }
+    for s in &mut p.body {
+        choose_strategies(s, 1, &est, &mut report);
+    }
+    report.estimates = est.loop_estimates(p);
+    for tag in report.tags() {
+        if !p.opt_tags.contains(&tag) {
+            p.opt_tags.push(tag);
+        }
+    }
+    crate::ir::validate(p)?;
+    Ok(report)
+}
+
+/// True when executing `body` once per matched pair in *any* order
+/// produces identical observable state: only commutative accumulations
+/// and result appends (bag semantics), guarded by pure conditions.
+fn order_insensitive(body: &[Stmt]) -> bool {
+    body.iter().all(|s| match s {
+        Stmt::ResultUnion { tuple, .. } => tuple.iter().all(expr_pure),
+        Stmt::Accum {
+            indices, op, value, ..
+        } => {
+            matches!(op, AccumOp::Add | AccumOp::Min | AccumOp::Max)
+                && indices.iter().all(expr_pure)
+                && expr_pure(value)
+        }
+        Stmt::If { cond, then, els } => {
+            expr_pure(cond) && order_insensitive(then) && order_insensitive(els)
+        }
+        _ => false,
+    })
+}
+
+/// Detect the Figure-1 nest and pick the hash-join build side by
+/// estimated cardinality, swapping the nest when the written order would
+/// make `exec::compile` hash the larger table.
+fn choose_join_build_side(s: &mut Stmt, est: &Estimator, report: &mut OptReport) {
+    let Stmt::Loop(outer) = s else { return };
+    if outer.kind != LoopKind::Forelem {
+        return;
+    }
+    let Domain::IndexSet(ox) = &outer.domain else {
+        return;
+    };
+    // Only the plain Figure-1 shape: no outer filter (a WHERE equality on
+    // the probe side must stay on the probe side), no distinct, no
+    // partition on either loop.
+    if ox.field_filter.is_some() || ox.distinct.is_some() || ox.partition.is_some() {
+        return;
+    }
+    let [Stmt::Loop(inner)] = outer.body.as_slice() else {
+        return;
+    };
+    if inner.kind != LoopKind::Forelem {
+        return;
+    }
+    let Domain::IndexSet(iix) = &inner.domain else {
+        return;
+    };
+    if iix.distinct.is_some() || iix.partition.is_some() {
+        return;
+    }
+    let Some((inner_field, key)) = &iix.field_filter else {
+        return;
+    };
+    // The inner filter must be keyed directly on an outer-cursor field
+    // (`pB.id[i.b_id]`) for the swap to be expressible.
+    let Expr::Field {
+        var: kvar,
+        field: outer_field,
+    } = key
+    else {
+        return;
+    };
+    if kvar != &outer.var || outer.var == inner.var {
+        return;
+    }
+    if !est.field_exists(&ox.relation, outer_field)
+        || !est.field_exists(&iix.relation, inner_field)
+    {
+        return;
+    }
+    if !order_insensitive(&inner.body) {
+        return;
+    }
+    let probe_rows = est.table_rows(&ox.relation);
+    let build_rows = est.table_rows(&iix.relation);
+    if probe_rows >= build_rows {
+        // The written nest already hashes the smaller (or equal) side.
+        report.decisions.push(Decision {
+            tag: "opt.join_build_side".into(),
+            detail: format!(
+                "build on `{}` ({build_rows} rows), probe `{}` ({probe_rows} rows) — as written",
+                iix.relation, ox.relation
+            ),
+        });
+        return;
+    }
+    // Swap: the (larger) written-second relation becomes the probe side;
+    // the hash table is built over the (smaller) written-first relation.
+    let detail = format!(
+        "build on `{}` ({probe_rows} rows) instead of `{}` ({build_rows} rows) — nest swapped",
+        ox.relation, iix.relation
+    );
+    let new_inner = Loop::forelem(
+        &outer.var,
+        IndexSet::filtered(
+            &ox.relation,
+            outer_field,
+            Expr::field(&inner.var, inner_field),
+        ),
+        inner.body.clone(),
+    );
+    let swapped = Loop::forelem(
+        &inner.var,
+        IndexSet::all(&iix.relation),
+        vec![Stmt::Loop(new_inner)],
+    );
+    report.decisions.push(Decision {
+        tag: "opt.join_build_side".into(),
+        detail,
+    });
+    *s = Stmt::Loop(swapped);
+}
+
+/// Reorder conjunctive guards most-selective-first (short-circuit `&&`
+/// rejects rows at the cheapest conjunct). Only pure `field cmp literal`
+/// conjuncts are moved; anything else leaves the guard untouched.
+fn reorder_guards(
+    s: &mut Stmt,
+    est: &Estimator,
+    scopes: &mut BTreeMap<String, String>,
+    report: &mut OptReport,
+) {
+    match s {
+        Stmt::Loop(l) => {
+            let bound = match &l.domain {
+                Domain::IndexSet(ix) => {
+                    scopes.insert(l.var.clone(), ix.relation.clone());
+                    true
+                }
+                _ => false,
+            };
+            for b in &mut l.body {
+                reorder_guards(b, est, scopes, report);
+            }
+            if bound {
+                scopes.remove(&l.var);
+            }
+        }
+        Stmt::If { cond, then, els } => {
+            reorder_cond(cond, est, scopes, report);
+            for b in then.iter_mut().chain(els.iter_mut()) {
+                reorder_guards(b, est, scopes, report);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn reorder_cond(
+    cond: &mut Expr,
+    est: &Estimator,
+    scopes: &BTreeMap<String, String>,
+    report: &mut OptReport,
+) {
+    let parts: Vec<Expr> = conjuncts(cond).into_iter().cloned().collect();
+    if parts.len() < 2 {
+        return;
+    }
+    if !parts.iter().all(|c| reorderable_conjunct(scopes, c)) {
+        return;
+    }
+    let mut ranked: Vec<(f64, usize)> = parts
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (est.conjunct_selectivity(scopes, c), i))
+        .collect();
+    // Stable: ties keep the written order.
+    ranked.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+    if ranked.iter().map(|&(_, i)| i).eq(0..parts.len()) {
+        return; // already most-selective-first
+    }
+    let mut it = ranked.iter().map(|&(_, i)| parts[i].clone());
+    let first = it.next().expect("len >= 2");
+    *cond = it.fold(first, |acc, c| Expr::bin(BinOp::And, acc, c));
+    report.decisions.push(Decision {
+        tag: "opt.filter_reorder".into(),
+        detail: format!(
+            "{} guard conjuncts reordered most-selective-first",
+            parts.len()
+        ),
+    });
+}
+
+/// Scan-vs-materialize via the existing cost model, with probe counts
+/// from the estimator. Mirrors `transform::Materialize`'s recursion but
+/// records each choice; `Materialize` later skips anything already
+/// decided here.
+fn choose_strategies(s: &mut Stmt, probes: u64, est: &Estimator, report: &mut OptReport) {
+    let Stmt::Loop(l) = s else { return };
+    let mut inner_probes = probes;
+    if let Domain::IndexSet(ix) = &mut l.domain {
+        if let Some(field) = ix.field_filter.as_ref().map(|(f, _)| f.clone()) {
+            let stats = est.table_stats(&ix.relation, &field);
+            if ix.strategy == Strategy::Unspecified {
+                let chosen = choose_strategy(stats, probes, false);
+                ix.strategy = chosen;
+                report.decisions.push(Decision {
+                    tag: format!("opt.strategy.{chosen}"),
+                    detail: format!(
+                        "`{}`.{field}: {chosen} ({} rows / {} keys, ~{probes} probes)",
+                        ix.relation, stats.rows, stats.distinct_keys
+                    ),
+                });
+            }
+            inner_probes = probes.saturating_mul((stats.rows / stats.distinct_keys).max(1));
+        } else if let Some(field) = &ix.distinct {
+            inner_probes =
+                probes.saturating_mul(est.table_stats(&ix.relation, field).distinct_keys.max(1));
+        } else {
+            inner_probes = probes.saturating_mul(est.table_rows(&ix.relation).max(1));
+        }
+    } else if let Domain::Range { .. } = &l.domain {
+        inner_probes = probes.saturating_mul(8);
+    }
+    for b in &mut l.body {
+        choose_strategies(b, inner_probes, est, report);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema, Value};
+    use crate::sql::compile_sql;
+
+    /// `small` (written first) has far fewer rows than `big`.
+    fn join_catalog(small_rows: usize, big_rows: usize) -> StorageCatalog {
+        let mut small = Multiset::new(Schema::new(vec![
+            ("id", DataType::Int),
+            ("g", DataType::Str),
+        ]));
+        for i in 0..small_rows {
+            small.push(vec![
+                Value::Int(i as i64),
+                Value::str(format!("g{}", i % 7)),
+            ]);
+        }
+        let mut big = Multiset::new(Schema::new(vec![
+            ("a_id", DataType::Int),
+            ("w", DataType::Int),
+        ]));
+        for i in 0..big_rows {
+            big.push(vec![
+                Value::Int((i % (small_rows * 4).max(1)) as i64),
+                Value::Int((i % 13) as i64),
+            ]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("small", &small).unwrap();
+        c.insert_multiset("big", &big).unwrap();
+        c
+    }
+
+    fn nest_relations(p: &Program) -> (String, String) {
+        let Stmt::Loop(outer) = &p.body[0] else {
+            panic!("expected loop")
+        };
+        let Domain::IndexSet(ox) = &outer.domain else {
+            panic!("expected index set")
+        };
+        let Stmt::Loop(inner) = &outer.body[0] else {
+            panic!("expected inner loop")
+        };
+        let Domain::IndexSet(iix) = &inner.domain else {
+            panic!("expected index set")
+        };
+        (ox.relation.clone(), iix.relation.clone())
+    }
+
+    #[test]
+    fn skewed_join_swaps_the_build_side() {
+        let c = join_catalog(50, 5000);
+        let mut p = compile_sql(
+            "SELECT g, COUNT(g) FROM small JOIN big ON small.id = big.a_id GROUP BY g",
+            &c.schemas(),
+        )
+        .unwrap();
+        // As lowered: probe = small (outer), build = big (inner) — wrong.
+        assert_eq!(nest_relations(&p), ("small".into(), "big".into()));
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.join_build_side"), "{report:?}");
+        assert!(p.opt_tags.contains(&"opt.join_build_side".to_string()));
+        // After: probe = big, build = small.
+        assert_eq!(nest_relations(&p), ("big".into(), "small".into()));
+        // The swapped program still validates and runs identically.
+        let reference = crate::exec::run(&p, &c).unwrap();
+        assert_eq!(reference.result().unwrap().len(), 7);
+    }
+
+    #[test]
+    fn well_ordered_join_is_kept_and_still_tagged() {
+        let c = join_catalog(50, 5000);
+        let mut p = compile_sql(
+            "SELECT w, COUNT(w) FROM big JOIN small ON big.a_id = small.id GROUP BY w",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert_eq!(nest_relations(&p), ("big".into(), "small".into()));
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.join_build_side"));
+        // Already builds on the small side: unchanged.
+        assert_eq!(nest_relations(&p), ("big".into(), "small".into()));
+    }
+
+    #[test]
+    fn swap_preserves_interpreter_semantics() {
+        let c = join_catalog(30, 3000);
+        for q in [
+            "SELECT small.g, big.w FROM small JOIN big ON small.id = big.a_id",
+            "SELECT g, COUNT(g) FROM small JOIN big ON small.id = big.a_id GROUP BY g",
+            "SELECT g, SUM(w) FROM small JOIN big ON small.id = big.a_id GROUP BY g",
+        ] {
+            let p0 = compile_sql(q, &c.schemas()).unwrap();
+            let mut p1 = p0.clone();
+            let report = optimize(&mut p1, &c).unwrap();
+            assert!(report.has("opt.join_build_side"), "`{q}`");
+            let a = crate::exec::run(&p0, &c).unwrap();
+            let b = crate::exec::run(&p1, &c).unwrap();
+            assert!(
+                a.result().unwrap().bag_eq(b.result().unwrap()),
+                "`{q}` changed results"
+            );
+        }
+    }
+
+    #[test]
+    fn order_sensitive_join_bodies_are_not_swapped() {
+        let c = join_catalog(10, 1000);
+        // A print in the join body is order-sensitive: no swap.
+        let mut p = Program::new("printer")
+            .with_relation("small", c.schemas()["small"].clone())
+            .with_relation("big", c.schemas()["big"].clone());
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("small"),
+            vec![Stmt::Loop(Loop::forelem(
+                "j",
+                IndexSet::filtered("big", "a_id", Expr::field("i", "id")),
+                vec![Stmt::Print {
+                    format: "{}".into(),
+                    args: vec![Expr::field("j", "w")],
+                }],
+            ))],
+        ))];
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(!report.has("opt.join_build_side"));
+        // Strategy decisions may annotate index sets, but the nest order
+        // is untouched.
+        let (o, i) = nest_relations(&p);
+        assert_eq!((o.as_str(), i.as_str()), ("small", "big"));
+    }
+
+    #[test]
+    fn guards_are_reordered_most_selective_first() {
+        let mut t = Multiset::new(Schema::new(vec![
+            ("a", DataType::Int),
+            ("b", DataType::Int),
+        ]));
+        for i in 0..2000i64 {
+            t.push(vec![Value::Int(i), Value::Int(i % 4)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("t", &t).unwrap();
+        // Neither conjunct is an equality, so both stay in the guard
+        // (split_filter only lifts equalities into the index filter).
+        // `a >= 0` keeps every row (selectivity 1.0); `b < 2` keeps about
+        // half — the optimizer must evaluate `b < 2` first.
+        let mut p = compile_sql("SELECT a FROM t WHERE a >= 0 AND b < 2", &c.schemas()).unwrap();
+        let p0 = p.clone();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.filter_reorder"), "{report:?}");
+        assert!(p.opt_tags.contains(&"opt.filter_reorder".to_string()));
+        // The most selective conjunct now leads the chain.
+        let Stmt::Loop(l) = &p.body[0] else { panic!("expected loop") };
+        let [Stmt::If { cond, .. }] = l.body.as_slice() else {
+            panic!("expected guard, got {:?}", l.body)
+        };
+        let parts = conjuncts(cond);
+        let first = format!("{:?}", parts[0]);
+        assert!(first.contains("\"b\""), "first conjunct should test b: {first}");
+        // Semantics preserved.
+        let a = crate::exec::run(&p0, &c).unwrap();
+        let b = crate::exec::run(&p, &c).unwrap();
+        assert!(a.result().unwrap().bag_eq(b.result().unwrap()));
+        assert_eq!(a.result().unwrap().len(), 1000);
+    }
+
+    #[test]
+    fn strategies_are_decided_and_tagged() {
+        let c = join_catalog(100, 8000);
+        let mut p = compile_sql(
+            "SELECT small.g, big.w FROM big JOIN small ON big.a_id = small.id",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        // The inner filtered loop is probed once per big row: hash wins.
+        assert!(
+            report.decisions.iter().any(|d| d.tag.starts_with("opt.strategy.")),
+            "{report:?}"
+        );
+        assert!(p.opt_tags.iter().any(|t| t.starts_with("opt.strategy.")));
+    }
+
+    #[test]
+    fn estimates_cover_the_optimized_loops() {
+        let c = join_catalog(50, 5000);
+        let mut p = compile_sql(
+            "SELECT g, COUNT(g) FROM small JOIN big ON small.id = big.a_id GROUP BY g",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        // Join nest (2 loops) + distinct emit loop.
+        assert!(report.estimates.len() >= 3, "{:?}", report.estimates);
+        assert!(report.estimates[0].rows_in > 0);
+    }
+}

@@ -1,0 +1,378 @@
+//! Cardinality and selectivity estimation over the IR.
+//!
+//! The estimator answers, for the decision pass ([`super::decide`]) and
+//! for `Engine::explain`, the classic Selinger questions: how many rows
+//! does a loop see, how many survive its filters and guards, how many
+//! matches does a join key produce per probe. It reads the per-column
+//! [`ColumnStats`](crate::storage::ColumnStats) the storage catalog
+//! caches and degrades gracefully — anything it cannot analyze falls
+//! back to [`DEFAULT_SELECTIVITY`], never to an error, because a wrong
+//! estimate only costs performance while a refused compile costs a
+//! query.
+//!
+//! This module *extends* `analysis::cost::TableStats` (via
+//! [`TableStats::from_column`]) instead of replacing it: the existing
+//! scan/hash/tree cost functions keep their rows+NDV inputs, and the
+//! richer min/max/histogram data feeds the new selectivity math here.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::analysis::TableStats;
+use crate::ir::{BinOp, Domain, Expr, Program, Stmt};
+use crate::storage::{ColumnStats, StorageCatalog};
+
+/// Selectivity assumed for predicates the estimator cannot analyze
+/// (System R's classic 1/3 guess).
+pub const DEFAULT_SELECTIVITY: f64 = 0.33;
+
+/// Flatten a conjunction (`a && b && c`) into its conjuncts; a non-`And`
+/// expression is its own single conjunct.
+pub fn conjuncts(e: &Expr) -> Vec<&Expr> {
+    fn go<'e>(e: &'e Expr, out: &mut Vec<&'e Expr>) {
+        if let Expr::Binary {
+            op: BinOp::And,
+            lhs,
+            rhs,
+        } = e
+        {
+            go(lhs, out);
+            go(rhs, out);
+        } else {
+            out.push(e);
+        }
+    }
+    let mut v = Vec::new();
+    go(e, &mut v);
+    v
+}
+
+/// Per-loop cardinality estimate, reported by `Engine::explain`.
+#[derive(Debug, Clone)]
+pub struct LoopEstimate {
+    /// Nesting depth (0 = top level).
+    pub depth: usize,
+    /// Rendered loop header, e.g. `forelem i ∈ pA`.
+    pub describe: String,
+    /// Estimated iterations entering the loop body (across all entries
+    /// of the enclosing nest).
+    pub rows_in: u64,
+    /// Estimated iterations surviving an immediate guard, if any.
+    pub rows_out: u64,
+}
+
+/// Statistics-backed estimator over one storage catalog.
+pub struct Estimator<'a> {
+    catalog: &'a StorageCatalog,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(catalog: &'a StorageCatalog) -> Self {
+        Estimator { catalog }
+    }
+
+    /// Rows of a relation (0 when unknown — callers treat missing tables
+    /// as "do not optimize").
+    pub fn table_rows(&self, rel: &str) -> u64 {
+        self.catalog.get(rel).map(|t| t.len() as u64).unwrap_or(0)
+    }
+
+    /// True when `rel.field` resolves against the stored schema.
+    pub fn field_exists(&self, rel: &str, field: &str) -> bool {
+        self.catalog
+            .get(rel)
+            .ok()
+            .and_then(|t| t.schema.field_id(field))
+            .is_some()
+    }
+
+    fn field_stats(&self, rel: &str, field: &str) -> Option<Arc<ColumnStats>> {
+        let t = self.catalog.get(rel).ok()?;
+        let fid = t.schema.field_id(field)?;
+        self.catalog.column_stats(rel, fid).ok()
+    }
+
+    /// rows + NDV for the legacy cost functions.
+    pub fn table_stats(&self, rel: &str, field: &str) -> TableStats {
+        match self.field_stats(rel, field) {
+            Some(cs) => TableStats::from_column(&cs),
+            None => TableStats::new(self.table_rows(rel).max(1), 32),
+        }
+    }
+
+    /// Selectivity of an equality filter on `rel.field` (1/NDV).
+    pub fn eq_selectivity(&self, rel: &str, field: &str) -> f64 {
+        match self.field_stats(rel, field) {
+            Some(cs) => cs.eq_selectivity(),
+            None => DEFAULT_SELECTIVITY,
+        }
+    }
+
+    /// Selectivity of one guard conjunct under `scopes` (cursor var →
+    /// relation). Analyzes `field cmp literal` in either orientation:
+    /// equality via 1/NDV, ranges via the column histogram.
+    pub fn conjunct_selectivity(&self, scopes: &BTreeMap<String, String>, e: &Expr) -> f64 {
+        let Expr::Binary { op, lhs, rhs } = e else {
+            return DEFAULT_SELECTIVITY;
+        };
+        if !op.is_comparison() {
+            return DEFAULT_SELECTIVITY;
+        }
+        let (var, field, lit, op) = match (lhs.as_ref(), rhs.as_ref()) {
+            (Expr::Field { var, field }, Expr::Const(v)) => (var, field, v, *op),
+            (Expr::Const(v), Expr::Field { var, field }) => (var, field, v, flip(*op)),
+            _ => return DEFAULT_SELECTIVITY,
+        };
+        let Some(rel) = scopes.get(var) else {
+            return DEFAULT_SELECTIVITY;
+        };
+        let Some(cs) = self.field_stats(rel, field) else {
+            return DEFAULT_SELECTIVITY;
+        };
+        let eq = cs.eq_selectivity();
+        match op {
+            BinOp::Eq => eq,
+            BinOp::Ne => (1.0 - eq).max(0.0),
+            BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge => {
+                let (Some(x), Some(h)) = (lit.as_float(), &cs.histogram) else {
+                    return DEFAULT_SELECTIVITY;
+                };
+                let below = h.fraction_below(x);
+                match op {
+                    BinOp::Lt => below,
+                    BinOp::Le => (below + eq).min(1.0),
+                    BinOp::Gt => (1.0 - below - eq).clamp(0.0, 1.0),
+                    BinOp::Ge => (1.0 - below).clamp(0.0, 1.0),
+                    _ => unreachable!(),
+                }
+            }
+            _ => DEFAULT_SELECTIVITY,
+        }
+    }
+
+    /// Combined selectivity of a conjunction (independence assumption).
+    pub fn guard_selectivity(&self, scopes: &BTreeMap<String, String>, cond: &Expr) -> f64 {
+        conjuncts(cond)
+            .into_iter()
+            .map(|c| self.conjunct_selectivity(scopes, c))
+            .product()
+    }
+
+    /// Estimated rows in/out for every loop of the program (pre-order).
+    pub fn loop_estimates(&self, p: &Program) -> Vec<LoopEstimate> {
+        let mut out = Vec::new();
+        let mut scopes = BTreeMap::new();
+        for s in &p.body {
+            self.walk(s, 1.0, 0, &mut scopes, &mut out);
+        }
+        out
+    }
+
+    fn walk(
+        &self,
+        s: &Stmt,
+        entries: f64,
+        depth: usize,
+        scopes: &mut BTreeMap<String, String>,
+        out: &mut Vec<LoopEstimate>,
+    ) {
+        match s {
+            Stmt::Loop(l) => {
+                let (per_entry, relation) = match &l.domain {
+                    Domain::IndexSet(ix) => {
+                        let total = self.table_rows(&ix.relation) as f64;
+                        let per = match (&ix.field_filter, &ix.distinct) {
+                            (Some((field, _)), _) => {
+                                total * self.eq_selectivity(&ix.relation, field)
+                            }
+                            (None, Some(field)) => {
+                                self.table_stats(&ix.relation, field).distinct_keys as f64
+                            }
+                            (None, None) => total,
+                        };
+                        (per, Some(ix.relation.clone()))
+                    }
+                    // Range bounds are expressions (often params); assume
+                    // a modest fan-out like the materialization pass.
+                    Domain::Range { .. } => (8.0, None),
+                    Domain::ValuePartition { relation, field, .. } => (
+                        (self.table_stats(relation, field).distinct_keys as f64 / 8.0).max(1.0),
+                        Some(relation.clone()),
+                    ),
+                    Domain::DistinctValues { relation, field } => (
+                        self.table_stats(relation, field).distinct_keys as f64,
+                        Some(relation.clone()),
+                    ),
+                };
+                if let Some(rel) = &relation {
+                    scopes.insert(l.var.clone(), rel.clone());
+                }
+                let rows_in = entries * per_entry;
+                let guard_sel = match l.body.as_slice() {
+                    [Stmt::If { cond, els, .. }] if els.is_empty() => {
+                        self.guard_selectivity(scopes, cond)
+                    }
+                    _ => 1.0,
+                };
+                let rows_out = rows_in * guard_sel;
+                let domain = match &l.domain {
+                    Domain::IndexSet(ix) => ix.to_string(),
+                    Domain::Range { lo, hi } => format!("{lo}..{hi}"),
+                    Domain::ValuePartition { relation, field, .. } => {
+                        format!("partition({relation}.{field})")
+                    }
+                    Domain::DistinctValues { relation, field } => {
+                        format!("distinct({relation}.{field})")
+                    }
+                };
+                out.push(LoopEstimate {
+                    depth,
+                    describe: format!("{} {} ∈ {}", l.kind, l.var, domain),
+                    rows_in: rows_in.round() as u64,
+                    rows_out: rows_out.round() as u64,
+                });
+                for b in &l.body {
+                    self.walk(b, rows_in, depth + 1, scopes, out);
+                }
+                scopes.remove(&l.var);
+            }
+            Stmt::If { then, els, .. } => {
+                for b in then.iter().chain(els) {
+                    self.walk(b, entries, depth, scopes, out);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn flip(op: BinOp) -> BinOp {
+    match op {
+        BinOp::Lt => BinOp::Gt,
+        BinOp::Le => BinOp::Ge,
+        BinOp::Gt => BinOp::Lt,
+        BinOp::Ge => BinOp::Le,
+        other => other,
+    }
+}
+
+/// True when the expression reads no accumulator state (directly or via
+/// a cross-partition sum): its value depends only on cursors, scalars
+/// and constants, so re-evaluating it in a different visit order is
+/// safe.
+pub fn expr_pure(e: &Expr) -> bool {
+    let mut pure = true;
+    e.walk(&mut |x| {
+        if matches!(x, Expr::ArrayRef { .. } | Expr::SumOverParts { .. }) {
+            pure = false;
+        }
+    });
+    pure
+}
+
+/// True when `lit` is compared against a field — the only conjunct shape
+/// the reorderer moves (pure, total for type-correct programs).
+pub fn reorderable_conjunct(scopes: &BTreeMap<String, String>, e: &Expr) -> bool {
+    let Expr::Binary { op, lhs, rhs } = e else {
+        return false;
+    };
+    if !op.is_comparison() {
+        return false;
+    }
+    match (lhs.as_ref(), rhs.as_ref()) {
+        (Expr::Field { var, .. }, Expr::Const(_)) | (Expr::Const(_), Expr::Field { var, .. }) => {
+            scopes.contains_key(var)
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataType, Multiset, Schema, Value};
+    use crate::sql::compile_sql;
+
+    fn catalog() -> StorageCatalog {
+        let mut t = Multiset::new(Schema::new(vec![
+            ("k", DataType::Str),
+            ("n", DataType::Int),
+        ]));
+        for i in 0..1000i64 {
+            t.push(vec![Value::str(format!("k{}", i % 20)), Value::Int(i)]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("t", &t).unwrap();
+        c
+    }
+
+    #[test]
+    fn eq_selectivity_is_one_over_ndv() {
+        let c = catalog();
+        let est = Estimator::new(&c);
+        let sel = est.eq_selectivity("t", "k");
+        assert!((sel - 1.0 / 20.0).abs() < 1e-9, "got {sel}");
+        assert_eq!(est.table_rows("t"), 1000);
+        assert_eq!(est.table_rows("missing"), 0);
+    }
+
+    #[test]
+    fn range_conjuncts_use_the_histogram() {
+        let c = catalog();
+        let est = Estimator::new(&c);
+        let mut scopes = BTreeMap::new();
+        scopes.insert("i".to_string(), "t".to_string());
+        // n is uniform over 0..1000: `n < 250` ≈ 0.25.
+        let pred = Expr::bin(BinOp::Lt, Expr::field("i", "n"), Expr::int(250));
+        let sel = est.conjunct_selectivity(&scopes, &pred);
+        assert!((sel - 0.25).abs() < 0.05, "got {sel}");
+        // Flipped orientation: `250 > n` is the same predicate.
+        let flipped = Expr::bin(BinOp::Gt, Expr::int(250), Expr::field("i", "n"));
+        let fsel = est.conjunct_selectivity(&scopes, &flipped);
+        assert!((sel - fsel).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unanalyzable_conjuncts_fall_back_to_the_default() {
+        let c = catalog();
+        let est = Estimator::new(&c);
+        let scopes = BTreeMap::new();
+        // Unknown cursor var.
+        let pred = Expr::bin(BinOp::Eq, Expr::field("z", "k"), Expr::str("k0"));
+        assert_eq!(est.conjunct_selectivity(&scopes, &pred), DEFAULT_SELECTIVITY);
+        // Non-comparison.
+        let arith = Expr::add(Expr::int(1), Expr::int(2));
+        assert_eq!(est.conjunct_selectivity(&scopes, &arith), DEFAULT_SELECTIVITY);
+    }
+
+    #[test]
+    fn loop_estimates_report_filters_and_guards() {
+        let c = catalog();
+        let est = Estimator::new(&c);
+        let q = "SELECT k FROM t WHERE k = 'k0' AND n < 250";
+        let p = compile_sql(q, &c.schemas()).unwrap();
+        let es = est.loop_estimates(&p);
+        assert_eq!(es.len(), 1, "{es:?}");
+        // Index filter k = 'k0': 1000/20 = 50 rows in; guard n < 250
+        // keeps about a quarter.
+        assert!((40..=60).contains(&es[0].rows_in), "{es:?}");
+        assert!(es[0].rows_out < es[0].rows_in, "{es:?}");
+    }
+
+    #[test]
+    fn conjuncts_flattens_nested_ands() {
+        let e = Expr::bin(
+            BinOp::And,
+            Expr::bin(BinOp::And, Expr::var("a"), Expr::var("b")),
+            Expr::var("c"),
+        );
+        assert_eq!(conjuncts(&e).len(), 3);
+        assert_eq!(conjuncts(&Expr::var("a")).len(), 1);
+    }
+
+    #[test]
+    fn purity_rejects_accumulator_reads() {
+        assert!(expr_pure(&Expr::field("i", "k")));
+        assert!(!expr_pure(&Expr::array("count", vec![Expr::field("i", "k")])));
+    }
+}

@@ -1,0 +1,63 @@
+//! The cost-based query optimizer (the paper's "integration of compiler
+//! optimization and query optimization" over one IR).
+//!
+//! Runs between SQL/MapReduce lowering and the execution tiers. Three
+//! layers:
+//!
+//! * **statistics** — per-column [`ColumnStats`](crate::storage::ColumnStats)
+//!   (rows, NDV, min/max, null count, equi-width histograms) collected
+//!   and cached by the storage catalog;
+//! * **estimation** — [`estimate::Estimator`], a cardinality/selectivity
+//!   estimator over `forelem` filters, guards and join keys that extends
+//!   `analysis::cost::TableStats` rather than replacing it;
+//! * **planning** — [`decide::optimize`], the decision pass that rewrites
+//!   and annotates the program: hash-join build side by estimated
+//!   cardinality (swapping the Figure-1 nest when the written order
+//!   would hash the larger table), conjunctive guards reordered
+//!   most-selective-first, scan-vs-materialize strategies via the
+//!   existing cost model, and the morsel fan-out gate below.
+//!
+//! Every decision pushes a dot-namespaced `opt.<decision>` tag into
+//! `Program::opt_tags`; executors merge those into `ExecStats.idioms`
+//! (registry in `docs/ARCHITECTURE.md`). `Engine::explain` renders the
+//! full [`decide::OptReport`] — estimated rows in/out per loop plus every
+//! decision — alongside the tier that actually fired.
+
+pub mod decide;
+pub mod estimate;
+
+pub use decide::{optimize, Decision, OptReport};
+pub use estimate::{Estimator, LoopEstimate, DEFAULT_SELECTIVITY};
+
+use crate::analysis::cost::PARALLEL_SPINUP_ROWS;
+
+/// The morsel fan-out gate: parallel workers only pay off once the
+/// iteration space amortizes thread spin-up and state merging
+/// ([`PARALLEL_SPINUP_ROWS`], one `exec::BATCH` morsel). `exec::parallel`
+/// consults this for every eligible scan and join probe; a rejected
+/// fan-out runs sequentially on the master state and tags
+/// `opt.small_scan_seq` / `opt.small_join_seq`.
+pub fn should_fan_out(rows: usize, threads: usize) -> bool {
+    threads > 1 && rows as u64 > PARALLEL_SPINUP_ROWS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_out_gate_needs_threads_and_rows() {
+        assert!(!should_fan_out(1_000_000, 1));
+        assert!(!should_fan_out(0, 8));
+        assert!(!should_fan_out(PARALLEL_SPINUP_ROWS as usize, 8));
+        assert!(should_fan_out(PARALLEL_SPINUP_ROWS as usize + 1, 2));
+    }
+
+    #[test]
+    fn spinup_constant_tracks_the_morsel_batch_size() {
+        // The gate is documented as "one BATCH morsel"; if BATCH is ever
+        // retuned (e.g. for SIMD width), recalibrate the spin-up constant
+        // together with it instead of letting the two drift silently.
+        assert_eq!(PARALLEL_SPINUP_ROWS, crate::exec::BATCH as u64);
+    }
+}

@@ -20,6 +20,13 @@
 //! per distinct group-key value of the owning table — groups with no
 //! matching rows surface with the accumulator's init value, matching the
 //! reference interpreter on the same IR.
+//!
+//! Join nest order is a *contract*, not a plan choice: lowering always
+//! emits the FROM table as the outer loop and the JOIN table as the
+//! filtered inner loop (which `exec::compile` hashes). Picking the
+//! cheaper orientation is the cost-based optimizer's job —
+//! `opt::optimize` swaps the nest when statistics say the written-first
+//! table is the smaller build side (`opt.join_build_side`).
 
 use std::collections::BTreeMap;
 
@@ -858,5 +865,43 @@ mod tests {
     fn wildcard_select_expands_schema() {
         let p = compile_sql("SELECT * FROM Grades", &catalog()).unwrap();
         assert_eq!(p.results["R"].len(), 3);
+    }
+
+    #[test]
+    fn join_nest_order_is_the_optimizer_contract() {
+        // `opt::optimize` swaps the Figure-1 nest by matching exactly
+        // this shape: FROM table outer, JOIN table inner, inner index
+        // set filtered on a plain field of the outer cursor. Pin it.
+        use crate::ir::Domain;
+        for q in [
+            "SELECT A.field FROM A JOIN B ON A.b_id = B.id",
+            "SELECT A.field, COUNT(A.field) FROM A JOIN B ON A.b_id = B.id GROUP BY A.field",
+        ] {
+            let p = compile_sql(q, &catalog()).unwrap();
+            let Stmt::Loop(outer) = &p.body[0] else {
+                panic!("`{q}`: first statement must be the join nest")
+            };
+            let Domain::IndexSet(ox) = &outer.domain else {
+                panic!("`{q}`: outer domain must be an index set")
+            };
+            assert_eq!(ox.relation, "A", "`{q}`: FROM table is the outer loop");
+            assert!(ox.field_filter.is_none());
+            let [Stmt::Loop(inner)] = outer.body.as_slice() else {
+                panic!("`{q}`: outer body must be exactly the inner loop")
+            };
+            let Domain::IndexSet(iix) = &inner.domain else {
+                panic!("`{q}`: inner domain must be an index set")
+            };
+            assert_eq!(iix.relation, "B", "`{q}`: JOIN table is the inner loop");
+            let Some((field, key)) = &iix.field_filter else {
+                panic!("`{q}`: inner loop must be key-filtered")
+            };
+            assert_eq!(field, "id");
+            assert_eq!(
+                key,
+                &Expr::field(&outer.var, "b_id"),
+                "`{q}`: inner filter keys on a plain outer-cursor field"
+            );
+        }
     }
 }

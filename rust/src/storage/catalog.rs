@@ -1,22 +1,40 @@
 //! The storage catalog: named tables + statistics.
 //!
 //! This is what the execution engine resolves `forelem (i; i ∈ pA)`
-//! against, and where the cost model gets its table statistics.
+//! against, and where the cost model and the cost-based optimizer
+//! (`crate::opt`) get their table and column statistics. Per-column
+//! [`ColumnStats`] are collected lazily and cached per `(table, field)`;
+//! replacing a table (reformat, import) invalidates its cached entries.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::analysis::TableStats;
 use crate::ir::{Multiset, Schema};
 
 use super::column::Table;
+use super::stats::ColumnStats;
 
 /// A catalog of named tables.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct StorageCatalog {
     tables: BTreeMap<String, Arc<Table>>,
+    /// Lazily collected per-(table, field) column statistics. Interior
+    /// mutability keeps stats collection behind the same shared `&self`
+    /// the executors hold; the mutex is uncontended on the hot path
+    /// (stats are read at *compile* time, not per row).
+    stats_cache: Mutex<BTreeMap<(String, usize), Arc<ColumnStats>>>,
+}
+
+impl Clone for StorageCatalog {
+    fn clone(&self) -> Self {
+        StorageCatalog {
+            tables: self.tables.clone(),
+            stats_cache: Mutex::new(self.stats_cache.lock().unwrap().clone()),
+        }
+    }
 }
 
 impl StorageCatalog {
@@ -25,6 +43,7 @@ impl StorageCatalog {
     }
 
     pub fn insert(&mut self, name: &str, table: Table) {
+        self.invalidate_stats(name);
         self.tables.insert(name.to_string(), Arc::new(table));
     }
 
@@ -47,9 +66,18 @@ impl StorageCatalog {
         self.tables.keys()
     }
 
-    /// Replace a table (used by the reformat pass).
+    /// Replace a table (used by the reformat pass). Cached statistics for
+    /// the old layout are dropped.
     pub fn replace(&mut self, name: &str, table: Table) {
+        self.invalidate_stats(name);
         self.tables.insert(name.to_string(), Arc::new(table));
+    }
+
+    fn invalidate_stats(&mut self, name: &str) {
+        self.stats_cache
+            .get_mut()
+            .unwrap()
+            .retain(|(t, _), _| t != name);
     }
 
     /// The schema catalog view the SQL front-end needs.
@@ -60,33 +88,38 @@ impl StorageCatalog {
             .collect()
     }
 
+    /// Full statistics for one column, collected on first use and cached
+    /// until the table is replaced. This is what the optimizer's
+    /// estimator consumes; `stats` below derives the legacy rows+NDV pair
+    /// from it.
+    pub fn column_stats(&self, name: &str, field: usize) -> Result<Arc<ColumnStats>> {
+        let t = self.get(name)?.clone();
+        if field >= t.schema.len() {
+            bail!(
+                "table `{name}` has {} fields, no field {field}",
+                t.schema.len()
+            );
+        }
+        let key = (name.to_string(), field);
+        if let Some(s) = self.stats_cache.lock().unwrap().get(&key) {
+            return Ok(s.clone());
+        }
+        // Collect outside the lock; a racing duplicate collection is
+        // harmless (last write wins, both are correct).
+        let stats = Arc::new(ColumnStats::collect(&t, field));
+        self.stats_cache.lock().unwrap().insert(key, stats.clone());
+        Ok(stats)
+    }
+
     /// Statistics for the cost model: rows + distinct count of a field
     /// (exact for dictionary-encoded fields — the dictionary *is* the
-    /// distinct set; sampled otherwise).
+    /// distinct set; singleton-scaled stride sample otherwise, see
+    /// `storage::stats`).
     pub fn stats(&self, name: &str, field: Option<usize>) -> Result<TableStats> {
         let t = self.get(name)?;
         let rows = t.len() as u64;
         let distinct = match field {
-            Some(f) => {
-                if let Some(dict) = t.column(f).dictionary() {
-                    dict.len() as u64
-                } else {
-                    // Sample up to 4096 rows for a cardinality estimate.
-                    let sample = t.len().min(4096);
-                    if sample == 0 {
-                        1
-                    } else {
-                        let mut seen = std::collections::HashSet::new();
-                        let stride = (t.len() / sample).max(1);
-                        for row in (0..t.len()).step_by(stride) {
-                            seen.insert(t.value(row, f));
-                        }
-                        // Scale up the sampled cardinality.
-                        ((seen.len() as f64) * (t.len() as f64 / (sample as f64))).max(1.0)
-                            as u64
-                    }
-                }
-            }
+            Some(f) => self.column_stats(name, f)?.ndv,
             None => 1,
         };
         Ok(TableStats::new(rows, distinct.min(rows.max(1))))
@@ -134,8 +167,8 @@ mod tests {
         let c = catalog_with_access(1000, 50);
         let s = c.stats("access", Some(0)).unwrap();
         assert_eq!(s.rows, 1000);
-        // Sampled estimate must be in a sane band.
-        assert!(s.distinct_keys >= 10 && s.distinct_keys <= 200, "{}", s.distinct_keys);
+        // Small columns are scanned fully: the count is exact.
+        assert_eq!(s.distinct_keys, 50);
     }
 
     #[test]
@@ -143,5 +176,37 @@ mod tests {
         let c = catalog_with_access(5, 2);
         let schemas = c.schemas();
         assert_eq!(schemas["access"].field(0).name, "url");
+    }
+
+    #[test]
+    fn column_stats_are_cached_and_invalidated_on_replace() {
+        let mut c = catalog_with_access(1000, 50);
+        let first = c.column_stats("access", 0).unwrap();
+        let second = c.column_stats("access", 0).unwrap();
+        assert!(Arc::ptr_eq(&first, &second), "second read must hit the cache");
+        // Replacing the table drops the cached entry.
+        let mut t = (**c.get("access").unwrap()).clone();
+        t.dict_encode_field(0).unwrap();
+        c.replace("access", t);
+        let third = c.column_stats("access", 0).unwrap();
+        assert!(!Arc::ptr_eq(&first, &third));
+        assert!(third.ndv_exact);
+        assert_eq!(third.ndv, 50);
+    }
+
+    #[test]
+    fn column_stats_rejects_out_of_range_fields() {
+        let c = catalog_with_access(10, 3);
+        assert!(c.column_stats("access", 7).is_err());
+        assert!(c.column_stats("nope", 0).is_err());
+    }
+
+    #[test]
+    fn clone_carries_the_cache_independently() {
+        let c = catalog_with_access(100, 5);
+        let _ = c.column_stats("access", 0).unwrap();
+        let c2 = c.clone();
+        let s = c2.column_stats("access", 0).unwrap();
+        assert_eq!(s.ndv, 5);
     }
 }

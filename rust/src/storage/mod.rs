@@ -8,9 +8,11 @@ pub mod compressed;
 pub mod dict;
 pub mod import;
 pub mod row;
+pub mod stats;
 
 pub use catalog::StorageCatalog;
 pub use column::{Column, Table};
+pub use stats::{ColumnStats, Histogram};
 pub use compressed::CompressedInts;
 pub use dict::Dictionary;
 pub use import::{import_csv_with_plan, read_csv, ImportPlan};

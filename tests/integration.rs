@@ -53,6 +53,7 @@ fn five_engines_agree_on_url_count() {
         processors: 6,
         partition_field: None,
         reformat: ReformatMode::Off,
+        ..Default::default()
     });
     let c2 = par.compile(URL_Q).unwrap();
     let par_out = forelem::exec::run(&c2.program, &catalog).unwrap();
@@ -85,6 +86,7 @@ fn reformat_plus_parallel_plus_failure_still_exact() {
         processors: 4,
         partition_field: None,
         reformat: ReformatMode::Force,
+        ..Default::default()
     });
     let reference = {
         let mut plain = Engine::new(access_catalog(30_000));
@@ -118,6 +120,7 @@ fn weblink_graph_through_indirect_partitioning() {
         processors: 4,
         partition_field: Some("target".into()),
         reformat: ReformatMode::Off,
+        ..Default::default()
     });
     let compiled = par.compile(q).unwrap();
     let text = pretty::program(&compiled.program);
@@ -192,6 +195,7 @@ fn xla_kernels_integrate_when_artifacts_exist() {
             processors: 1,
             partition_field: None,
             reformat: ReformatMode::Force,
+            ..Default::default()
         })
         .with_kernels(kernels);
     let reference = {
@@ -230,4 +234,72 @@ fn hadoop_and_coordinator_agree_on_sum_jobs() {
         let hv = hs[&k.to_string()];
         assert!((hv - v).abs() < 1e-6, "key {k}: {hv} vs {v}");
     }
+}
+
+#[test]
+fn optimizer_chooses_the_build_side_end_to_end() {
+    // The acceptance shape: a skewed equi-join whose small table is
+    // written where the lowered nest would NOT hash it. Through the full
+    // `Engine::sql` pipeline the optimizer must pick the small build
+    // side (`opt.join_build_side` tagged), route through `vec.hash_join`,
+    // and produce interpreter-identical output.
+    use forelem::ir::{DataType, Schema};
+    use forelem::util::Rng;
+
+    let mut dim = Multiset::new(Schema::new(vec![
+        ("id", DataType::Int),
+        ("g", DataType::Str),
+    ]));
+    for i in 0..200i64 {
+        dim.push(vec![Value::Int(i), Value::str(format!("g{}", i % 11))]);
+    }
+    let mut fact = Multiset::new(Schema::new(vec![
+        ("a_id", DataType::Int),
+        ("w", DataType::Int),
+    ]));
+    let mut rng = Rng::new(31);
+    for _ in 0..30_000 {
+        fact.push(vec![
+            Value::Int(rng.range(0, 800)),
+            Value::Int(rng.range(0, 50)),
+        ]);
+    }
+    let mut catalog = StorageCatalog::new();
+    catalog.insert_multiset("dim", &dim).unwrap();
+    catalog.insert_multiset("fact", &fact).unwrap();
+    let q = "SELECT g, COUNT(g) FROM dim JOIN fact ON dim.id = fact.a_id GROUP BY g";
+
+    let mut on = Engine::new(catalog.clone());
+    let optimized = on.sql(q).unwrap();
+    assert!(
+        optimized.stats.idioms.contains(&"vec.hash_join".to_string()),
+        "{:?}",
+        optimized.stats.idioms
+    );
+    assert!(
+        optimized
+            .stats
+            .idioms
+            .contains(&"opt.join_build_side".to_string()),
+        "{:?}",
+        optimized.stats.idioms
+    );
+
+    let mut off = Engine::new(catalog.clone()).with_options(CompileOptions {
+        optimize: false,
+        ..Default::default()
+    });
+    let unoptimized = off.sql(q).unwrap();
+    assert_eq!(
+        pairs_of(optimized.result().unwrap()),
+        pairs_of(unoptimized.result().unwrap())
+    );
+
+    // And against the raw interpreter on the optimized program.
+    let compiled = on.compile(q).unwrap();
+    let interp = forelem::exec::run(&compiled.program, &on.catalog).unwrap();
+    assert_eq!(
+        pairs_of(optimized.result().unwrap()),
+        pairs_of(interp.result().unwrap())
+    );
 }

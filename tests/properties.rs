@@ -70,6 +70,7 @@ fn group_by_pipeline_agrees_across_all_configurations() {
             processors,
             partition_field: if rng.below(2) == 1 { Some("k".into()) } else { None },
             reformat,
+            optimize: rng.below(2) == 1,
         });
         let compiled = e.compile(q).map_err(|e| e.to_string())?;
         let out = forelem::exec::run(&compiled.program, &e.catalog).map_err(|e| e.to_string())?;
@@ -232,6 +233,107 @@ fn hash_join_three_tiers_agree_on_random_joins() {
             par.result().unwrap().bag_eq(reference.result().unwrap()),
             "run_parallel diverged on the join aggregate (threads={threads})"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn optimizer_on_off_and_interpreter_agree_on_random_programs() {
+    // For random data, the cost-based optimizer must be invisible in the
+    // results: optimizer-on vs optimizer-off vs the reference interpreter
+    // are bag_eq-identical across scan / filter / join / group-by shapes
+    // — including the swapped-build-side join path (the small table is
+    // always written FIRST here, so `opt.join_build_side` must swap the
+    // nest). Join aggregates stick to COUNT / integer SUM: the swap
+    // reassociates float folds by design.
+    forall_seeds(12, |rng| {
+        let srows = 1 + rng.below(60) as usize;
+        let brows = 600 + rng.below(900) as usize;
+        let keys = 1 + rng.below(80) as i64;
+        let mut small = Multiset::new(Schema::new(vec![
+            ("id", DataType::Int),
+            ("g", DataType::Str),
+            ("w", DataType::Float),
+        ]));
+        for _ in 0..srows {
+            small.push(vec![
+                Value::Int(rng.range(0, keys)),
+                Value::str(format!("g{}", rng.below(9))),
+                Value::Float((rng.f64() - 0.5) * 10.0),
+            ]);
+        }
+        let mut big = Multiset::new(Schema::new(vec![
+            ("a_id", DataType::Int),
+            ("n", DataType::Int),
+        ]));
+        for _ in 0..brows {
+            big.push(vec![
+                Value::Int(rng.range(0, keys)),
+                Value::Int(rng.range(-20, 20)),
+            ]);
+        }
+        let scan = random_multiset(rng, 300);
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("small", &small).unwrap();
+        catalog.insert_multiset("big", &big).unwrap();
+        catalog.insert_multiset("t", &scan).unwrap();
+
+        let queries = [
+            // Scan / filter / group-by shapes (exercise strategy and
+            // filter-reorder decisions).
+            ("SELECT k, COUNT(k) FROM t GROUP BY k", false),
+            ("SELECT k FROM t WHERE n > 0 AND x < 10.0", false),
+            ("SELECT k, COUNT(k) FROM t WHERE n > 0 AND x < 10.0 GROUP BY k", false),
+            // Join shapes: small written first → the optimizer must swap.
+            ("SELECT small.g, big.n FROM small JOIN big ON small.id = big.a_id", true),
+            ("SELECT g, COUNT(g) FROM small JOIN big ON small.id = big.a_id GROUP BY g", true),
+            ("SELECT g, SUM(n) FROM small JOIN big ON small.id = big.a_id GROUP BY g", true),
+        ];
+        for (q, is_join) in queries {
+            let p0 = forelem::sql::compile_sql(q, &catalog.schemas())
+                .map_err(|e| e.to_string())?;
+            let reference = forelem::exec::run(&p0, &catalog).map_err(|e| e.to_string())?;
+            let mut p1 = p0.clone();
+            let report =
+                forelem::opt::optimize(&mut p1, &catalog).map_err(|e| e.to_string())?;
+            if is_join {
+                prop_assert!(
+                    report.has("opt.join_build_side"),
+                    "`{q}` should decide a build side: {report:?}"
+                );
+            }
+            // Interpreter on the optimized program.
+            let interp_opt = forelem::exec::run(&p1, &catalog).map_err(|e| e.to_string())?;
+            prop_assert!(
+                interp_opt.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: interpreter(optimized) diverged"
+            );
+            // Tier dispatch on optimized and unoptimized programs.
+            let on = forelem::exec::run_compiled(&p1, &catalog, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                on.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: run_compiled(optimized) diverged"
+            );
+            let off = forelem::exec::run_compiled(&p0, &catalog, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                off.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: run_compiled(unoptimized) diverged"
+            );
+            if is_join {
+                prop_assert!(
+                    on.stats.idioms.contains(&"vec.hash_join".to_string()),
+                    "`{q}`: swapped join must stay on the hash-join kernel: {:?}",
+                    on.stats.idioms
+                );
+                prop_assert!(
+                    on.stats.idioms.contains(&"opt.join_build_side".to_string()),
+                    "`{q}`: decision tag must surface in ExecStats: {:?}",
+                    on.stats.idioms
+                );
+            }
+        }
         Ok(())
     });
 }
