@@ -1,0 +1,143 @@
+//! Fused top-k heap kernel vs the strip-and-post-sort baseline.
+//!
+//! Before this kernel existed, `ORDER BY count DESC LIMIT k` never
+//! reached the IR: the Engine stripped both clauses, materialized the
+//! full aggregate, sorted it, and truncated. The bounded-heap `TopK`
+//! accumulator (`vec.topk`) replaces that with an O(n log k) streaming
+//! selection that retains only `k` rows.
+//!
+//! The bench aggregates a zipf-skewed URL table once (the §IV URL-count
+//! workload), then times the two emission strategies over the resulting
+//! (url, count) rows:
+//!
+//! * **strip-and-post-sort** — materialize all n aggregate rows, sort by
+//!   count descending, truncate to k (exactly the deleted
+//!   `Engine::apply_post` path);
+//! * **fused topk heap** — stream the same rows through `TopK::bounded`.
+//!
+//! Acceptance bar: the fused kernel beats the baseline ≥ 2×; a PASS/FAIL
+//! line is printed and the headline speedup lands in `BENCH_topk.json`
+//! for the CI baseline diff (`ci/check_bench.py` fails on > 30%
+//! regression or below `min_speedup`).
+//!
+//! Row count scales via BENCH_ROWS (number of URL-table rows; the
+//! aggregate emits one row per distinct URL that appears).
+
+use forelem::exec::{self, TopK};
+use forelem::ir::Tuple;
+use forelem::sql::compile_sql;
+use forelem::storage::StorageCatalog;
+use forelem::util::{fmt_duration, time_fn, write_bench_json};
+use forelem::workload::{access_log, AccessLogSpec};
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let k = 10usize;
+    // As many URLs as rows: the aggregate is wide (hundreds of thousands
+    // of groups), which is where bounding the emission pays.
+    let spec = AccessLogSpec {
+        rows,
+        urls: rows,
+        skew: 1.1,
+        seed: 23,
+    };
+    let m = access_log(&spec);
+    let mut catalog = StorageCatalog::new();
+    catalog.insert_multiset("access", &m).unwrap();
+
+    // Sanity: the ordered query is ONE program end-to-end and fires the
+    // fused kernel on the vectorized tier.
+    let ordered = compile_sql(
+        "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 10",
+        &catalog.schemas(),
+    )
+    .unwrap();
+    let out = exec::run_compiled(&ordered, &catalog, None).unwrap();
+    assert_eq!(out.result().unwrap().len(), k);
+    assert!(
+        out.stats.idioms.contains(&"vec.topk".to_string()),
+        "{:?}",
+        out.stats.idioms
+    );
+
+    // The aggregate rows both emission strategies consume.
+    let plain = compile_sql(
+        "SELECT url, COUNT(url) AS n FROM access GROUP BY url",
+        &catalog.schemas(),
+    )
+    .unwrap();
+    let agg: Vec<Tuple> = exec::run_compiled(&plain, &catalog, None)
+        .unwrap()
+        .result()
+        .unwrap()
+        .rows()
+        .to_vec();
+    println!(
+        "# Top-k emission: {rows} log rows -> {} aggregate rows, k = {k}",
+        agg.len()
+    );
+
+    let baseline = || {
+        // The deleted Engine path: materialize everything, sort, truncate.
+        let mut v = agg.clone();
+        v.sort_by(|a, b| {
+            let ord = a[1].cmp(&b[1]);
+            ord.reverse()
+        });
+        v.truncate(k);
+        v
+    };
+    let fused = || {
+        let mut tk = TopK::bounded(Some(1), true, k);
+        for row in &agg {
+            tk.push(row.clone());
+        }
+        tk.finish()
+    };
+
+    // The two strategies must select the same count prefix (ties are a
+    // set; the count sequence is unique).
+    let want: Vec<_> = baseline().iter().map(|r| r[1].clone()).collect();
+    let got: Vec<_> = fused().iter().map(|r| r[1].clone()).collect();
+    assert_eq!(want, got, "emission strategies disagree on the top-k counts");
+
+    let nrows = agg.len() as f64 / 1e6;
+    let baseline_t = time_fn(1, 5, baseline);
+    let fused_t = time_fn(1, 5, fused);
+    let throughput = |d: std::time::Duration| nrows / d.as_secs_f64();
+    println!(
+        "strip-and-post-sort (materialize+sort)  {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(baseline_t.median()),
+        throughput(baseline_t.median())
+    );
+    println!(
+        "fused topk heap (vec.topk, O(n log k))  {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(fused_t.median()),
+        throughput(fused_t.median())
+    );
+
+    let speedup = baseline_t.median().as_secs_f64() / fused_t.median().as_secs_f64();
+    println!(
+        "fused heap speedup over strip-and-post-sort: {speedup:.1}x — {}",
+        if speedup >= 2.0 {
+            "PASS (>= 2x)"
+        } else {
+            "FAIL (< 2x acceptance bar)"
+        }
+    );
+
+    let path = write_bench_json(
+        "topk",
+        rows,
+        &[
+            ("strip-and-post-sort", baseline_t.median().as_nanos()),
+            ("fused-topk-heap", fused_t.median().as_nanos()),
+        ],
+        speedup,
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
+}

@@ -55,42 +55,15 @@ impl Default for CompileOptions {
     }
 }
 
-/// Result post-processing carried outside the (order-free) IR:
-/// `ORDER BY` + `LIMIT` applied to the result multiset after execution.
-#[derive(Debug, Clone)]
-pub struct PostProcess {
-    /// Field id within the result schema.
-    pub sort_field: usize,
-    pub descending: bool,
-    pub limit: Option<usize>,
-}
-
 /// A compiled query with full provenance.
 pub struct Compiled {
     pub program: Program,
     pub trace: Trace,
     pub reformat: Option<ReformatPlan>,
     pub distribution: Option<DistributionPlan>,
-    pub post: Option<PostProcess>,
     /// The cost-based optimizer's report (estimates + decisions), when
     /// `CompileOptions::optimize` was on.
     pub opt: Option<crate::opt::OptReport>,
-}
-
-/// Apply ORDER BY / LIMIT to a result multiset.
-pub fn apply_post(m: &mut Multiset, post: &PostProcess) {
-    let f = post.sort_field;
-    m.rows_mut().sort_by(|a, b| {
-        let ord = a[f].cmp(&b[f]);
-        if post.descending {
-            ord.reverse()
-        } else {
-            ord
-        }
-    });
-    if let Some(k) = post.limit {
-        m.rows_mut().truncate(k);
-    }
 }
 
 /// The embedder API.
@@ -124,43 +97,10 @@ impl Engine {
     /// stored tables when reformatting is enabled.
     pub fn compile(&mut self, query: &str) -> Result<Compiled> {
         let select = sql::parse(query)?;
-        // The Engine takes ownership of ORDER BY / LIMIT (applied to the
-        // result multiset after execution), so they are stripped before
-        // lowering — `sql::lower` rejects the clauses it cannot express,
-        // protecting bare `compile_sql` users from silently unordered
-        // results.
-        let mut stripped = select.clone();
-        stripped.order_by = None;
-        stripped.limit = None;
-        let mut program = sql::lower(&stripped, &self.catalog.schemas())?;
-
-        // ORDER BY / LIMIT live outside the order-free IR: resolve the
-        // sort column against the result schema now, apply after
-        // execution (a tree-index-backed ordered emit in spirit).
-        let post = match (&select.order_by, select.limit) {
-            (None, None) => None,
-            (order, limit) => {
-                let schema = program
-                    .results
-                    .values()
-                    .next()
-                    .context("query has no result to order/limit")?;
-                let (sort_field, descending) = match order {
-                    Some((name, desc)) => (
-                        schema
-                            .field_id(name)
-                            .with_context(|| format!("ORDER BY unknown column `{name}`"))?,
-                        *desc,
-                    ),
-                    None => (0, false),
-                };
-                Some(PostProcess {
-                    sort_field,
-                    descending,
-                    limit,
-                })
-            }
-        };
+        // ORDER BY / LIMIT lower INTO the IR as an ordered/bounded
+        // emission contract (`EmitOrder` on the emit loop) — the whole
+        // query, top-k included, is one program every tier executes.
+        let mut program = sql::lower(&select, &self.catalog.schemas())?;
 
         // Reformat decision happens BEFORE the optimizer and
         // materialization so every strategy cost and cardinality
@@ -232,7 +172,6 @@ impl Engine {
             trace,
             reformat,
             distribution,
-            post,
             opt,
         })
     }
@@ -245,19 +184,16 @@ impl Engine {
     }
 
     pub fn execute(&self, compiled: &Compiled) -> Result<Output> {
-        let mut out = exec::run_compiled(
+        // No post-processing: ORDER BY/LIMIT are part of the program (the
+        // emit loop's `EmitOrder` contract), executed by whichever tier
+        // fires — `vec.topk` on the vectorized tier.
+        exec::run_compiled(
             &compiled.program,
             &self.catalog,
             self.kernels
                 .as_ref()
                 .map(|k| k as &dyn crate::exec::plan::KernelExec),
-        )?;
-        if let Some(post) = &compiled.post {
-            for m in out.results.values_mut() {
-                apply_post(m, post);
-            }
-        }
-        Ok(out)
+        )
     }
 
     /// Compile + execute a recognized aggregate on the simulated cluster.
@@ -309,8 +245,10 @@ impl Engine {
         let r = crate::coordinator::run_job(cluster, &job)?;
         let schema = compiled.program.results[&result].clone();
         let mut m = r.to_multiset(schema);
-        if let Some(post) = &compiled.post {
-            apply_post(&mut m, post);
+        // The coordinator computes the aggregate map off-IR; honour the
+        // program's ordered/bounded emission contract on the way out.
+        if let Some(emit) = compiled.program.emit_bound() {
+            emit.apply_rows(m.rows_mut());
         }
         Ok((r, m))
     }
@@ -657,5 +595,93 @@ mod order_limit_tests {
             .unwrap_err()
             .to_string()
             .contains("unknown column"));
+    }
+
+    #[test]
+    fn top_k_compiles_to_one_program_and_fires_the_topk_kernel() {
+        // The acceptance workload: a single IR program (no Engine-side
+        // clause stripping), the `vec.topk` bounded-heap kernel on the
+        // vectorized tier, and the optimizer's heap decision.
+        let mut e = engine();
+        let q = "SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY count DESC LIMIT 5";
+        let compiled = e.compile(q).unwrap();
+        let emit = compiled.program.emit_bound().expect("ORDER BY/LIMIT in the IR");
+        assert_eq!(emit.key, Some(1));
+        assert!(emit.descending);
+        assert_eq!(emit.limit, Some(5));
+        assert_eq!(emit.strategy, crate::ir::TopKStrategy::Heap);
+        let text = pretty::program(&compiled.program);
+        assert!(text.contains("topk(#1 desc, k=5)"), "{text}");
+
+        let out = e.execute(&compiled).unwrap();
+        assert_eq!(out.result().unwrap().len(), 5);
+        for tag in ["vectorized", "vec.topk", "opt.topk_heap"] {
+            assert!(
+                out.stats.idioms.contains(&tag.to_string()),
+                "missing {tag}: {:?}",
+                out.stats.idioms
+            );
+        }
+    }
+
+    #[test]
+    fn explain_shows_the_topk_decision_and_kernel() {
+        let mut e = engine();
+        let text = e
+            .explain("SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY count DESC LIMIT 5")
+            .unwrap();
+        assert!(text.contains("[opt.topk_heap]"), "{text}");
+        assert!(text.contains("topk(#1 desc, k=5)"), "{text}");
+        assert!(text.contains("-- tier: vectorized"), "{text}");
+        assert!(text.contains("vec.topk"), "{text}");
+        // No LIMIT → the optimizer picks the full sort.
+        let text = e
+            .explain("SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY url ASC")
+            .unwrap();
+        assert!(text.contains("[opt.topk_sort]"), "{text}");
+    }
+
+    #[test]
+    fn top_k_matches_the_post_sorted_full_aggregate() {
+        // The lowered top-k emission must equal sorting the full
+        // aggregate and truncating — the exact contract the deleted
+        // Engine post-sort used to provide.
+        let mut e = engine();
+        let top = e
+            .sql("SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 7")
+            .unwrap();
+        let full = e
+            .sql("SELECT url, COUNT(url) AS n FROM access GROUP BY url")
+            .unwrap();
+        let mut rows = full.result().unwrap().rows().to_vec();
+        rows.sort_by(|a, b| b[1].cmp(&a[1]));
+        rows.truncate(7);
+        // Counts agree position-by-position; URLs agree as a set per
+        // count (ties broken by emission order in both paths).
+        let got: Vec<i64> = top
+            .result()
+            .unwrap()
+            .rows()
+            .iter()
+            .map(|r| r[1].as_int().unwrap())
+            .collect();
+        let want: Vec<i64> = rows.iter().map(|r| r[1].as_int().unwrap()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_top_k_matches_sequential() {
+        let mut seq = engine();
+        let q = "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 5";
+        let reference = seq.sql(q).unwrap();
+        let mut par = engine();
+        par.options.processors = 4;
+        let compiled = par.compile(q).unwrap();
+        let out = exec::run_parallel(&compiled.program, &par.catalog, 4).unwrap();
+        assert_eq!(
+            out.result().unwrap().rows(),
+            reference.result().unwrap().rows(),
+            "parallel top-k must equal the sequential emission row-for-row"
+        );
     }
 }

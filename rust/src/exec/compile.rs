@@ -29,8 +29,8 @@
 use std::sync::Arc;
 
 use crate::ir::{
-    AccumOp, BinOp, Domain, Expr, Loop, LoopKind, Program, Schema, SlotMap, Stmt, Strategy, UnOp,
-    Value,
+    AccumOp, BinOp, Domain, EmitOrder, Expr, Loop, LoopKind, Program, Schema, SlotMap, Stmt,
+    Strategy, TopKStrategy, UnOp, Value,
 };
 use crate::storage::{StorageCatalog, Table};
 
@@ -102,6 +102,34 @@ pub enum CStmt {
     Join(JoinLoop),
 }
 
+/// Compiled form of the IR's ordered/bounded emission contract
+/// ([`EmitOrder`]): the loop's appended result rows are re-emitted
+/// sorted by tuple position `key` and bounded to `limit`.
+#[derive(Debug, Clone)]
+pub struct EmitSpec {
+    /// Result tuple position to sort by (`None` = bare `LIMIT`).
+    pub key: Option<usize>,
+    pub descending: bool,
+    pub limit: Option<usize>,
+    /// True when the bounded-heap `vec.topk` kernel executes this
+    /// emission (O(n log k), memory O(k)); false materializes + sorts.
+    /// Resolved from the optimizer's [`TopKStrategy`] decision: a
+    /// bounded emission defaults to the heap unless `opt.topk_sort`
+    /// said otherwise.
+    pub heap: bool,
+}
+
+impl EmitSpec {
+    fn from_ir(e: &EmitOrder) -> EmitSpec {
+        EmitSpec {
+            key: e.key,
+            descending: e.descending,
+            limit: e.limit,
+            heap: e.limit.is_some() && e.strategy != TopKStrategy::Sort,
+        }
+    }
+}
+
 /// A compiled `forelem` loop over an index set: the unit the vectorized
 /// executor drives in column batches.
 #[derive(Debug, Clone)]
@@ -124,6 +152,10 @@ pub struct ScanLoop {
     /// fast path only fires when its target array is empty at loop entry
     /// (so float fold order matches the interpreter exactly).
     pub fast: Option<FastAgg>,
+    /// Ordered/bounded emission contract for this loop's result rows
+    /// (`ORDER BY`/`LIMIT`): appends are intercepted into a `TopK`
+    /// accumulator and re-emitted sorted/bounded at loop exit.
+    pub emit: Option<EmitSpec>,
 }
 
 /// Recognized single-statement batch aggregations.
@@ -185,6 +217,9 @@ pub struct JoinLoop {
     /// Fused per-match aggregation (join + GROUP BY shapes). Subject to
     /// the same empty-array entry guard as [`ScanLoop::fast`].
     pub fast: Option<JoinFastAgg>,
+    /// Ordered/bounded emission contract covering the whole nest's
+    /// appended rows, as in [`ScanLoop::emit`].
+    pub emit: Option<EmitSpec>,
 }
 
 /// Which side of a compiled join a fused-aggregation column lives on.
@@ -266,13 +301,18 @@ pub fn body_parallel_safe(body: &[CStmt]) -> bool {
 
 /// True when a compiled scan can execute as morsel-driven parallel
 /// batches: no distinct iteration (the distinct index probe is a
-/// whole-table concern) and no explicit partition restriction (the
-/// program is already managing its own distribution), with a
-/// [`body_parallel_safe`] body. The equality-filter key needs no check:
-/// it is scope-constant and evaluated once in the master's complete
-/// pre-loop state, then shared with the workers as a plain value.
+/// whole-table concern), no explicit partition restriction (the
+/// program is already managing its own distribution), and no emission
+/// contract (ordered/bounded emission has its own top-k fan-out, see
+/// [`emit_parallel_safe`]), with a [`body_parallel_safe`] body. The
+/// equality-filter key needs no check: it is scope-constant and
+/// evaluated once in the master's complete pre-loop state, then shared
+/// with the workers as a plain value.
 pub fn scan_parallel_safe(sl: &ScanLoop) -> bool {
-    sl.distinct.is_none() && sl.partition.is_none() && body_parallel_safe(&sl.body)
+    sl.distinct.is_none()
+        && sl.partition.is_none()
+        && sl.emit.is_none()
+        && body_parallel_safe(&sl.body)
 }
 
 /// Join analogue of [`scan_parallel_safe`]: the probe key and outer
@@ -280,12 +320,31 @@ pub fn scan_parallel_safe(sl: &ScanLoop) -> bool {
 /// so both must also be free of accumulator reads.
 pub fn join_parallel_safe(jl: &JoinLoop) -> bool {
     jl.partition.is_none()
+        && jl.emit.is_none()
         && expr_parallel_safe(&jl.probe_key)
         && match &jl.outer_filter {
             Some((_, p)) => expr_parallel_safe(p),
             None => true,
         }
         && body_parallel_safe(&jl.body)
+}
+
+/// True when an ordered/bounded emit scan can fan out on the morsel pool
+/// with per-worker bounded heaps and a k-way merge: the body's only
+/// effect is appending result rows (reads of scalars, cursor fields and
+/// accumulator arrays are fine — the master's state is complete before
+/// the emit loop starts and is snapshotted read-only into each worker).
+/// Scalar writes, accumulator writes, prints and nested loops stay on
+/// the sequential driver.
+pub fn emit_parallel_safe(sl: &ScanLoop) -> bool {
+    fn body_ok(body: &[CStmt]) -> bool {
+        body.iter().all(|s| match s {
+            CStmt::Result { .. } => true,
+            CStmt::If { then, els, .. } => body_ok(then) && body_ok(els),
+            _ => false,
+        })
+    }
+    matches!(&sl.emit, Some(e) if e.heap) && sl.partition.is_none() && body_ok(&sl.body)
 }
 
 /// Compile a program against a catalog. Returns `None` when the program
@@ -437,6 +496,12 @@ impl<'a> Compiler<'a> {
     }
 
     fn compile_loop(&mut self, l: &Loop) -> Option<CStmt> {
+        // Ordered/bounded emission is supported on forelem scans and the
+        // compiled join nest; a range loop carrying one falls back to the
+        // interpreter's reference semantics.
+        if l.emit.is_some() && !matches!(&l.domain, Domain::IndexSet(_)) {
+            return None;
+        }
         match &l.domain {
             Domain::Range { lo, hi } => {
                 let lo = self.expr_prog(lo)?;
@@ -510,7 +575,7 @@ impl<'a> Compiler<'a> {
                 self.no_fresh_binds -= 1;
                 self.cursors.pop();
                 let body = body?;
-                let fast = if filter.is_none() && distinct.is_none() {
+                let fast = if filter.is_none() && distinct.is_none() && l.emit.is_none() {
                     self.detect_fast(l, &table)
                 } else {
                     None
@@ -523,6 +588,7 @@ impl<'a> Compiler<'a> {
                     partition,
                     body,
                     fast,
+                    emit: l.emit.as_ref().map(EmitSpec::from_ir),
                 }))
             }
             // Indirect (value) partitioning and distinct-value domains
@@ -548,6 +614,12 @@ impl<'a> Compiler<'a> {
         };
         let (ifield, ikey) = iix.field_filter.as_ref()?;
         if ox.distinct.is_some() || iix.distinct.is_some() || iix.partition.is_some() {
+            return None;
+        }
+        // An emission contract on the inner loop would bound per outer
+        // row, a shape lowering never produces — leave it for the
+        // interpreter.
+        if inner.emit.is_some() {
             return None;
         }
         let outer_table = self.catalog.get(&ox.relation).ok()?.clone();
@@ -606,6 +678,7 @@ impl<'a> Compiler<'a> {
             probe_field,
             body,
             fast,
+            emit: outer.emit.as_ref().map(EmitSpec::from_ir),
         }))
     }
 
@@ -1293,6 +1366,63 @@ mod tests {
             panic!("expected scan loop");
         };
         assert!(!scan_parallel_safe(s));
+    }
+
+    #[test]
+    fn order_by_limit_compiles_to_an_emit_spec() {
+        let c = catalog();
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY count DESC LIMIT 5",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).expect("topk group-by is supported");
+        let CStmt::Scan(emit) = &cp.body[1] else {
+            panic!("expected the emit scan");
+        };
+        let spec = emit.emit.as_ref().expect("emit spec attached");
+        assert_eq!(spec.key, Some(1));
+        assert!(spec.descending);
+        assert_eq!(spec.limit, Some(5));
+        // Undecided bounded emissions default to the heap kernel.
+        assert!(spec.heap);
+        // The emission contract keeps the loop off the plain morsel scan
+        // path (it has its own top-k fan-out)...
+        assert!(!scan_parallel_safe(emit));
+        // ...and the Result-only body is eligible for that fan-out.
+        assert!(emit_parallel_safe(emit));
+
+        // An optimizer-decided Sort strategy turns the heap off.
+        let mut sorted = p.clone();
+        let Stmt::Loop(l) = &mut sorted.body[1] else {
+            panic!("expected loop");
+        };
+        l.emit.as_mut().unwrap().strategy = crate::ir::TopKStrategy::Sort;
+        let cp = compile_program(&sorted, &c).unwrap();
+        let CStmt::Scan(emit) = &cp.body[1] else {
+            panic!("expected the emit scan");
+        };
+        assert!(!emit.emit.as_ref().unwrap().heap);
+        assert!(!emit_parallel_safe(emit));
+    }
+
+    #[test]
+    fn ordered_join_nest_carries_the_emit_spec() {
+        let c = join_catalog();
+        let p = compile_sql(
+            "SELECT A.b_id, B.v FROM A JOIN B ON A.b_id = B.id ORDER BY v DESC LIMIT 3",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).expect("ordered join is supported");
+        let [CStmt::Join(j)] = cp.body.as_slice() else {
+            panic!("expected a compiled join");
+        };
+        let spec = j.emit.as_ref().expect("emit spec on the nest");
+        assert_eq!(spec.key, Some(1));
+        assert_eq!(spec.limit, Some(3));
+        // Emission order pins the probe sequence: no morsel fan-out.
+        assert!(!join_parallel_safe(j));
     }
 
     #[test]

@@ -183,6 +183,30 @@ impl<'a> Interp<'a> {
     }
 
     fn exec_loop(&mut self, l: &Loop) -> Result<()> {
+        // Ordered/bounded emission (the IR form of ORDER BY/LIMIT): run
+        // the loop normally, then stable-sort + truncate the rows it
+        // appended to each result. This is the reference semantics the
+        // vectorized `vec.topk` bounded-heap kernel and the parallel
+        // k-way merge must reproduce exactly, ties included.
+        let Some(emit) = &l.emit else {
+            return self.exec_loop_domain(l);
+        };
+        let marks: Vec<(String, usize)> = self
+            .results
+            .iter()
+            .map(|(name, m)| (name.clone(), m.len()))
+            .collect();
+        self.exec_loop_domain(l)?;
+        for (name, mark) in marks {
+            let rows = self.results.get_mut(&name).expect("result still declared");
+            let mut tail = rows.rows_mut().split_off(mark);
+            emit.apply_rows(&mut tail);
+            rows.rows_mut().extend(tail);
+        }
+        Ok(())
+    }
+
+    fn exec_loop_domain(&mut self, l: &Loop) -> Result<()> {
         match &l.domain {
             Domain::IndexSet(ix) => {
                 let table = self.catalog.get(&ix.relation)?.clone();
@@ -423,6 +447,48 @@ mod tests {
     }
 
     #[test]
+    fn top_k_emission_is_the_stable_sort_prefix() {
+        use crate::ir::EmitOrder;
+        let catalog = access_catalog();
+        let mut p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url",
+            &catalog.schemas(),
+        )
+        .unwrap();
+        // Annotate the emit loop: ORDER BY count DESC LIMIT 2.
+        let Stmt::Loop(emit) = &mut p.body[1] else {
+            panic!("expected emit loop")
+        };
+        emit.emit = Some(EmitOrder::top_k(1, true, 2));
+        let out = run(&p, &catalog).unwrap();
+        let r = out.result().unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.rows()[0], vec![Value::str("/a"), Value::Int(3)]);
+        assert_eq!(r.rows()[1], vec![Value::str("/b"), Value::Int(2)]);
+    }
+
+    #[test]
+    fn bare_limit_keeps_the_first_rows_in_emission_order() {
+        use crate::ir::EmitOrder;
+        let catalog = access_catalog();
+        let mut p = compile_sql("SELECT url FROM access", &catalog.schemas()).unwrap();
+        let Stmt::Loop(scan) = &mut p.body[0] else {
+            panic!("expected scan loop")
+        };
+        scan.emit = Some(EmitOrder::first_k(3));
+        let out = run(&p, &catalog).unwrap();
+        let r = out.result().unwrap();
+        assert_eq!(
+            r.rows(),
+            &[
+                vec![Value::str("/a")],
+                vec![Value::str("/b")],
+                vec![Value::str("/a")],
+            ]
+        );
+    }
+
+    #[test]
     fn join_all_strategies_agree() {
         let mut c = StorageCatalog::new();
         let a = Multiset::with_rows(
@@ -577,6 +643,7 @@ mod tests {
                         part: Expr::var("k"),
                         parts: Expr::var("N"),
                     },
+                    emit: None,
                     body: vec![Stmt::Loop(Loop::forelem(
                         "i",
                         IndexSet::filtered("access", "url", Expr::var("l"))

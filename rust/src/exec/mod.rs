@@ -8,7 +8,9 @@
 //! 2. [`vector`]  — the vectorized batch executor: programs lowered by
 //!    [`compile`] to slot-resolved register form and driven over column
 //!    batches (no per-row name resolution); equi-joins run here as
-//!    build+probe hash joins (`"vec.hash_join"`);
+//!    build+probe hash joins (`"vec.hash_join"`), and ordered/bounded
+//!    emissions (`ORDER BY`/`LIMIT` lowered into the IR) as the fused
+//!    bounded-heap top-k kernel (`"vec.topk"`, O(n log k));
 //! 3. [`local`]   — the sequential reference interpreter (semantic
 //!    oracle); every other tier must produce `bag_eq` results with it.
 //!
@@ -39,5 +41,5 @@ pub use local::{block_bounds, partition_values, run, ExecStats, Output};
 pub use parallel::{run_parallel, run_parallel_with_policy};
 pub use plan::{recognize, run_compiled, Idiom};
 pub use vector::{
-    morsel_ranges, run_compiled_program, try_run as run_vectorized, JoinHashTable, BATCH,
+    morsel_ranges, run_compiled_program, try_run as run_vectorized, JoinHashTable, TopK, BATCH,
 };

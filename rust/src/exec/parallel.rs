@@ -48,6 +48,7 @@
 //! interpreter-based fan-out at the bottom of this module.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -57,11 +58,13 @@ use crate::sched::{Chunk, Policy, SharedScheduler};
 use crate::storage::StorageCatalog;
 
 use super::compile::{
-    compile_program, join_parallel_safe, scan_parallel_safe, CStmt, CompiledProgram,
+    compile_program, emit_parallel_safe, join_parallel_safe, scan_parallel_safe, CStmt,
+    CompiledProgram, ScanLoop,
 };
 use super::eval::ArrayStore;
+use super::index::DistinctIndex;
 use super::local::{ExecStats, Interp, Output};
-use super::vector::{FastAggState, JoinHashTable, VecState, BATCH};
+use super::vector::{EmitChunk, FastAggState, JoinHashTable, TopKSet, VecState, BATCH};
 
 /// Default scheduling policy for the in-process pool (§III-A2's guided
 /// self-scheduling: large chunks early, small chunks to balance the tail).
@@ -262,6 +265,18 @@ pub fn run_parallel_compiled_with_policy(
                 master.note_idiom("vec.morsel");
                 master.note_idiom(&format!("sched.{}", policy.name()));
             }
+            // Ordered/bounded emission (the group-by emit half, or an
+            // annotated plain scan): workers run disjoint morsels of the
+            // domain — distinct firsts for group-bys — into per-worker
+            // bounded heaps seeded with a read-only snapshot of the
+            // master's complete accumulator state, then the master
+            // k-way-merges the heaps. Sequence numbers are global row
+            // positions, so the merged emission equals the sequential
+            // `vec.topk` output row-for-row, ties included. This is the
+            // bounded case of morsel-driven distinct emission.
+            CStmt::Scan(sl) if threads > 1 && emit_parallel_safe(sl) => {
+                emit_topk_fanout(cp, sl, &mut master, threads, policy)?;
+            }
             CStmt::Scan(sl)
                 if threads > 1
                     && scan_parallel_safe(sl)
@@ -380,6 +395,152 @@ pub fn run_parallel_compiled_with_policy(
     Ok(master.finish(cp))
 }
 
+/// Morsel-driven fan-out of an ordered/bounded emit scan — the parallel
+/// half of the group-by emit loop (and of annotated plain scans). The
+/// master's complete accumulator state is shared read-only (one `Arc`,
+/// no per-worker copies); workers pull morsels of the emission domain
+/// (distinct firsts for group-bys, table rows otherwise) and keep
+/// per-worker bounded [`TopK`](super::vector::TopK) heaps keyed by
+/// global iteration index; the master k-way-merges the heaps, which
+/// reproduces the sequential emission exactly (a globally-top-k row is
+/// top-k within its chunk, and the global sequence numbers make the
+/// merge deterministic).
+fn emit_topk_fanout(
+    cp: &CompiledProgram,
+    sl: &ScanLoop,
+    master: &mut VecState,
+    threads: usize,
+    policy: Policy,
+) -> Result<()> {
+    let spec = sl.emit.clone().expect("emit_parallel_safe implies emit");
+    // The distinct domain (group-by emit) iterates one representative
+    // row per distinct value; plain annotated scans iterate table rows.
+    let firsts: Option<Vec<u32>> = sl
+        .distinct
+        .map(|field| DistinctIndex::build(&sl.table, field).firsts);
+    if firsts.is_some() {
+        master.stats.index_builds += 1;
+    }
+    let n_items = firsts.as_ref().map_or(sl.table.len(), |f| f.len());
+    // Equality-filter keys are scope-constant: evaluate once on the
+    // master's complete pre-loop state. Distinct iteration ignores the
+    // filter (interpreter contract: the distinct branch takes
+    // precedence), so the key is only evaluated for plain scans.
+    let filter = match (&sl.filter, sl.distinct) {
+        (Some((fid, prog)), None) => Some((*fid, master.eval_value(cp, prog)?)),
+        _ => None,
+    };
+    if !crate::opt::should_fan_out(n_items, threads) {
+        // Too few emitted rows to amortize worker spin-up: run on the
+        // master — through the same chunk driver, reusing the distinct
+        // index already built for the gate.
+        master.note_idiom("opt.small_scan_seq");
+        master.begin_topk(TopKSet::new(spec.clone(), cp.result_schemas.len()));
+        let r = match &firsts {
+            Some(fs) => master.emit_scan_chunk(
+                cp,
+                sl,
+                filter.as_ref(),
+                EmitChunk::Firsts { firsts: fs, base: 0 },
+            ),
+            None => {
+                master.emit_scan_chunk(cp, sl, filter.as_ref(), EmitChunk::Rows {
+                    lo: 0,
+                    hi: n_items,
+                })
+            }
+        };
+        let frame = master.take_topk().expect("frame installed above");
+        r?;
+        if frame.heap_mode() {
+            master.note_idiom("vec.topk");
+        }
+        for (slot, rows) in frame.finish() {
+            for row in rows {
+                master.results[slot].push(row);
+            }
+        }
+        return Ok(());
+    }
+    let filter = &filter;
+    let firsts = &firsts;
+    let units = n_items.div_ceil(BATCH);
+    let workers = threads.min(units);
+    // Workers read the master's complete accumulator state (the emit
+    // body reads the accumulators the preceding loops filled, and the
+    // master has executed everything before this statement). The store
+    // is moved into an `Arc` and shared read-only — no per-worker
+    // copies — then restored onto the master once the pool has joined.
+    let shared = Arc::new(std::mem::take(&mut master.arrays));
+    let spec_ref = &spec;
+    let collected: Mutex<Vec<TopKSet>> = Mutex::new(Vec::new());
+    let states = {
+        let shared = &shared;
+        let collected = &collected;
+        morsel_dispatch(
+            MorselJob {
+                cp,
+                scalars: &master.scalars,
+                units,
+                workers,
+                policy,
+            },
+            |st| {
+                st.set_shared_arrays(shared.clone());
+                st.begin_topk(TopKSet::new(spec_ref.clone(), cp.result_schemas.len()));
+            },
+            |st, _ctx, c| {
+                let (lo, hi) = (c.lo * BATCH, (c.hi * BATCH).min(n_items));
+                match firsts {
+                    Some(fs) => st.emit_scan_chunk(
+                        cp,
+                        sl,
+                        filter.as_ref(),
+                        EmitChunk::Firsts {
+                            firsts: &fs[lo..hi],
+                            base: lo,
+                        },
+                    ),
+                    None => {
+                        st.emit_scan_chunk(cp, sl, filter.as_ref(), EmitChunk::Rows { lo, hi })
+                    }
+                }
+            },
+            |st, _ctx| {
+                if let Some(frame) = st.take_topk() {
+                    collected.lock().expect("no poisoned lock").push(frame);
+                }
+                Ok(())
+            },
+        )
+    };
+    // No `absorb` here: workers never touch accumulators or results (the
+    // frames in `collected` carry the retained rows); only the traversal
+    // stats come back. Dropping the worker states releases their `Arc`
+    // handles, so the store can be restored onto the master without a
+    // copy — on the error path too, before propagating.
+    let stats_only: Result<()> = states.map(|sts| {
+        for st in sts {
+            master.stats.rows_visited += st.stats.rows_visited;
+        }
+    });
+    master.arrays = Arc::try_unwrap(shared).unwrap_or_else(|a| (*a).clone());
+    stats_only?;
+    let mut merged = TopKSet::new(spec, cp.result_schemas.len());
+    for frame in collected.lock().expect("no poisoned lock").drain(..) {
+        merged.merge(frame);
+    }
+    for (slot, rows) in merged.finish() {
+        for row in rows {
+            master.results[slot].push(row);
+        }
+    }
+    master.note_idiom("vec.topk");
+    master.note_idiom("vec.morsel");
+    master.note_idiom(&format!("sched.{}", policy.name()));
+    Ok(())
+}
+
 /// Interpreter-based fallback for programs the vectorized tier does not
 /// support (value partitions, distinct-value domains, ...). Each worker
 /// runs a private `Interp` over a static share of the iterations.
@@ -392,7 +553,10 @@ pub(crate) fn run_parallel_interp(
     let mut master = Interp::new(program, catalog);
     for s in &program.body {
         match s {
-            Stmt::Loop(l) if l.kind == LoopKind::Forall => {
+            // An ordered/bounded emission must stay whole — the unordered
+            // worker merge would drop the contract — so annotated foralls
+            // run sequentially on the master (which sorts/bounds them).
+            Stmt::Loop(l) if l.kind == LoopKind::Forall && l.emit.is_none() => {
                 if let Domain::Range { lo, hi } = &l.domain {
                     // Evaluate bounds in the master environment.
                     let lo = super::eval::eval(lo, &master.env, &master.arrays, program)?
@@ -835,6 +999,90 @@ mod tests {
         let par = run_parallel(&p, &c, 8).unwrap();
         assert_eq!(par.scalars, seq.scalars);
         assert!(!par.stats.idioms.contains(&"vec.morsel".to_string()));
+    }
+
+    /// Group-by with enough distinct groups (> one BATCH) that the
+    /// top-k emit fan-out engages.
+    fn topk_setup() -> (Program, StorageCatalog) {
+        use crate::ir::{DataType, Multiset, Schema, Value};
+        let mut m = Multiset::new(Schema::new(vec![("k", DataType::Str)]));
+        for i in 0..3000usize {
+            for _ in 0..(1 + i % 7) {
+                m.push(vec![Value::str(format!("key{i:04}"))]);
+            }
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("t", &m).unwrap();
+        let p = compile_sql(
+            "SELECT k, COUNT(k) AS n FROM t GROUP BY k ORDER BY n DESC LIMIT 25",
+            &c.schemas(),
+        )
+        .unwrap();
+        (p, c)
+    }
+
+    #[test]
+    fn parallel_topk_emission_matches_sequential_rows_exactly() {
+        // The emit half of the group-by fans out: per-worker bounded
+        // heaps + k-way merge must reproduce the interpreter's stable
+        // sort prefix row-for-row (ties bound to emission order), under
+        // every scheduling policy and several thread counts.
+        let (p, c) = topk_setup();
+        let reference = super::super::local::run(&p, &c).unwrap();
+        assert_eq!(reference.result().unwrap().len(), 25);
+        let cp = compile_program(&p, &c).unwrap();
+        for policy in Policy::ALL {
+            for threads in [2, 4, 8] {
+                let par = run_parallel_compiled_with_policy(&cp, threads, policy).unwrap();
+                assert_eq!(
+                    par.result().unwrap().rows(),
+                    reference.result().unwrap().rows(),
+                    "{policy:?} threads={threads}"
+                );
+                for tag in ["vec.topk", "vec.morsel"] {
+                    assert!(
+                        par.stats.idioms.contains(&tag.to_string()),
+                        "{policy:?}: missing {tag}: {:?}",
+                        par.stats.idioms
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_topk_emission_stays_sequential_and_matches() {
+        // Few groups: the spin-up gate keeps the emit loop on the master
+        // (and says so), still row-identical to the interpreter.
+        use crate::ir::{DataType, Multiset, Schema, Value};
+        let mut m = Multiset::new(Schema::new(vec![("k", DataType::Str)]));
+        for i in 0..5000usize {
+            m.push(vec![Value::str(format!("key{}", i % 40))]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("t", &m).unwrap();
+        let p = compile_sql(
+            "SELECT k, COUNT(k) AS n FROM t GROUP BY k ORDER BY n DESC LIMIT 5",
+            &c.schemas(),
+        )
+        .unwrap();
+        let reference = super::super::local::run(&p, &c).unwrap();
+        let par = run_parallel(&p, &c, 8).unwrap();
+        assert_eq!(
+            par.result().unwrap().rows(),
+            reference.result().unwrap().rows()
+        );
+        assert!(
+            par.stats.idioms.contains(&"opt.small_scan_seq".to_string()),
+            "{:?}",
+            par.stats.idioms
+        );
+        // The sequential emission still runs the bounded-heap kernel.
+        assert!(
+            par.stats.idioms.contains(&"vec.topk".to_string()),
+            "{:?}",
+            par.stats.idioms
+        );
     }
 
     #[test]

@@ -48,7 +48,20 @@ pub trait KernelExec: Sync {
     fn group_sum(&self, keys: &[i64], vals: &[f64], num_keys: usize) -> Result<Vec<f64>>;
 }
 
-/// Try to recognize the program as one of the compiled idioms.
+/// True when any loop in the program carries an ordered/bounded emission
+/// contract (`ORDER BY`/`LIMIT`). Such programs skip the idiom tier: the
+/// plain group-by kernels emit unordered, while the vectorized tier runs
+/// the emission as its fused `vec.topk` bounded-heap kernel. (The
+/// distributed path still uses [`recognize`] for shape matching and
+/// applies the contract to the merged result — see
+/// `Engine::sql_distributed`.)
+pub fn has_emit_bound(p: &Program) -> bool {
+    p.emit_bound().is_some()
+}
+
+/// Try to recognize the program as one of the compiled idioms. Emission
+/// contracts are ignored here — shape only; dispatchers that cannot
+/// honour the contract must check [`has_emit_bound`].
 pub fn recognize(p: &Program) -> Option<Idiom> {
     let loops: Vec<&crate::ir::Loop> = p
         .body
@@ -151,8 +164,8 @@ pub fn run_compiled(
     kernels: Option<&dyn KernelExec>,
 ) -> Result<Output> {
     let mut out = match recognize(p) {
-        Some(idiom) => run_idiom(&idiom, p, catalog, kernels)?,
-        None => match super::vector::try_run(p, catalog)? {
+        Some(idiom) if !has_emit_bound(p) => run_idiom(&idiom, p, catalog, kernels)?,
+        _ => match super::vector::try_run(p, catalog)? {
             Some(out) => out,
             None => local::run(p, catalog)?,
         },

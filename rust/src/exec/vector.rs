@@ -25,7 +25,7 @@
 //! only fire from a zero accumulator, and join probes visit matches in
 //! the interpreter's nested-loop order).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -35,8 +35,8 @@ use crate::storage::{Column, Dictionary, StorageCatalog, Table};
 use crate::util::FxHashMap;
 
 use super::compile::{
-    compile_program, CStmt, CompiledProgram, ExprProg, FastAgg, JoinFastAgg, JoinLoop, JoinSide,
-    Op, ScanLoop,
+    compile_program, CStmt, CompiledProgram, EmitSpec, ExprProg, FastAgg, JoinFastAgg, JoinLoop,
+    JoinSide, Op, ScanLoop,
 };
 use super::eval::{apply_accum, value_binop};
 use super::index::DistinctIndex;
@@ -98,6 +98,277 @@ impl JoinHashTable {
     }
 }
 
+/// One buffered emission row: its sort key (if the emission orders), the
+/// direction, its emission sequence number, and the row itself.
+///
+/// `Ord` is the *emission order*: key first (direction-adjusted), then
+/// sequence — so `Less` means "emitted earlier" (better), a max-heap's
+/// root is the worst retained row, and `into_sorted_vec` yields rows in
+/// final emission order.
+#[derive(Debug, Clone)]
+struct TopKEntry {
+    sort: Option<Value>,
+    descending: bool,
+    seq: u64,
+    row: Tuple,
+}
+
+impl PartialEq for TopKEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for TopKEntry {}
+impl PartialOrd for TopKEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TopKEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        let key = match (&self.sort, &other.sort) {
+            (Some(a), Some(b)) => {
+                let c = a.cmp(b);
+                if self.descending {
+                    c.reverse()
+                } else {
+                    c
+                }
+            }
+            _ => std::cmp::Ordering::Equal,
+        };
+        key.then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The fused top-k kernel behind the `vec.topk` idiom tag: a bounded-heap
+/// accumulator for ordered/bounded emissions (`ORDER BY`/`LIMIT` lowered
+/// into the IR's [`EmitOrder`](crate::ir::EmitOrder)).
+///
+/// In bounded mode the heap retains only the current `k` best rows —
+/// O(n log k) time, O(k) memory over `n` emitted rows — and
+/// [`finish`](TopK::finish) returns them in emission order. Tie-breaking
+/// is by emission sequence, which makes the kept set and its order
+/// *exactly* the first `k` rows of the reference interpreter's stable
+/// sort: every tier agrees row-for-row, ties included. The morsel driver
+/// runs one `TopK` per worker over disjoint chunks and k-way-merges them,
+/// which preserves the same contract because a globally-top-k row is
+/// top-k within its chunk.
+///
+/// # Examples
+///
+/// ```
+/// use forelem::exec::TopK;
+/// use forelem::ir::Value;
+///
+/// // ORDER BY #1 DESC LIMIT 2 over (url, count) rows.
+/// let mut tk = TopK::bounded(Some(1), true, 2);
+/// for (url, n) in [("/a", 3), ("/b", 9), ("/c", 5)] {
+///     tk.push(vec![Value::str(url), Value::Int(n)]);
+/// }
+/// let rows = tk.finish();
+/// assert_eq!(rows.len(), 2);
+/// assert_eq!(rows[0][1], Value::Int(9));
+/// assert_eq!(rows[1][1], Value::Int(5));
+/// ```
+#[derive(Debug)]
+pub struct TopK {
+    key: Option<usize>,
+    descending: bool,
+    limit: Option<usize>,
+    /// Bounded-heap mode: evict the worst entry once `limit` is reached.
+    heap: bool,
+    entries: BinaryHeap<TopKEntry>,
+    seq: u64,
+}
+
+impl TopK {
+    /// Bounded-heap accumulator: keep the top `k` rows ordered by tuple
+    /// position `key` (or the first `k` in emission order when `key` is
+    /// `None` — a bare `LIMIT`).
+    pub fn bounded(key: Option<usize>, descending: bool, k: usize) -> TopK {
+        TopK {
+            key,
+            descending,
+            limit: Some(k),
+            heap: true,
+            entries: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Materializing accumulator: buffer everything, sort at
+    /// [`finish`](TopK::finish), truncate to `limit` if set — the
+    /// `opt.topk_sort` strategy.
+    pub fn sorting(key: Option<usize>, descending: bool, limit: Option<usize>) -> TopK {
+        TopK {
+            key,
+            descending,
+            limit,
+            heap: false,
+            entries: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    fn from_spec(spec: &EmitSpec) -> TopK {
+        if spec.heap {
+            TopK::bounded(spec.key, spec.descending, spec.limit.expect("heap implies limit"))
+        } else {
+            TopK::sorting(spec.key, spec.descending, spec.limit)
+        }
+    }
+
+    /// True when this accumulator runs the bounded-heap kernel.
+    pub fn is_bounded(&self) -> bool {
+        self.heap
+    }
+
+    /// Number of currently retained rows.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no rows are retained.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append one emitted row (sequence assigned automatically, in call
+    /// order).
+    pub fn push(&mut self, row: Tuple) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.push_at(seq, row);
+    }
+
+    /// Append one emitted row with an explicit emission-sequence number —
+    /// the parallel drivers pass the row's global iteration index so
+    /// per-worker heaps merge into exactly the sequential order.
+    pub fn push_at(&mut self, seq: u64, row: Tuple) {
+        self.seq = self.seq.max(seq + 1);
+        let entry = TopKEntry {
+            sort: self.key.map(|f| row[f].clone()),
+            descending: self.descending,
+            seq,
+            row,
+        };
+        self.push_entry(entry);
+    }
+
+    fn push_entry(&mut self, entry: TopKEntry) {
+        if self.heap {
+            let k = self.limit.expect("heap implies limit");
+            if self.entries.len() < k {
+                self.entries.push(entry);
+            } else if let Some(worst) = self.entries.peek() {
+                if entry < *worst {
+                    self.entries.pop();
+                    self.entries.push(entry);
+                }
+            }
+        } else {
+            self.entries.push(entry);
+        }
+    }
+
+    /// Absorb another accumulator's retained rows (the `absorb`-style
+    /// k-way merge of the morsel driver), preserving their sequence
+    /// numbers. Both accumulators must order by the same key and
+    /// direction — merging mismatched orderings would interleave
+    /// entries under two different comparators.
+    pub fn merge(&mut self, other: TopK) {
+        debug_assert!(
+            self.key == other.key && self.descending == other.descending,
+            "merging top-k accumulators with different orderings"
+        );
+        for entry in other.entries.into_iter() {
+            self.seq = self.seq.max(entry.seq + 1);
+            self.push_entry(entry);
+        }
+    }
+
+    /// The retained rows in final emission order (best first), truncated
+    /// to `limit` — identical to stable-sorting every pushed row by the
+    /// key and taking the prefix.
+    pub fn finish(self) -> Vec<Tuple> {
+        let mut entries = self.entries.into_sorted_vec();
+        if let Some(k) = self.limit {
+            entries.truncate(k);
+        }
+        entries.into_iter().map(|e| e.row).collect()
+    }
+}
+
+/// Per-result-slot [`TopK`] accumulators for one emit loop in flight.
+/// While installed on a [`VecState`], result appends are intercepted
+/// into the matching accumulator instead of the result multiset.
+#[derive(Debug)]
+pub(crate) struct TopKSet {
+    spec: EmitSpec,
+    per_result: Vec<Option<TopK>>,
+    /// When set, pushes use `(group << 16) | intra` as the sequence —
+    /// the parallel drivers set the group to the row's global iteration
+    /// index so worker-local heaps merge into sequential order.
+    seq_group: Option<u64>,
+    intra: u64,
+}
+
+impl TopKSet {
+    pub(crate) fn new(spec: EmitSpec, n_results: usize) -> TopKSet {
+        TopKSet {
+            spec,
+            per_result: (0..n_results).map(|_| None).collect(),
+            seq_group: None,
+            intra: 0,
+        }
+    }
+
+    /// True when the bounded-heap kernel executes this emission.
+    pub(crate) fn heap_mode(&self) -> bool {
+        self.spec.heap
+    }
+
+    /// Set the global emission-sequence group for subsequent pushes
+    /// (parallel drivers: one group per source row).
+    pub(crate) fn set_seq_group(&mut self, group: u64) {
+        self.seq_group = Some(group);
+        self.intra = 0;
+    }
+
+    pub(crate) fn push(&mut self, result: usize, row: Tuple) {
+        let spec = &self.spec;
+        let tk = self.per_result[result].get_or_insert_with(|| TopK::from_spec(spec));
+        match self.seq_group {
+            Some(g) => {
+                let seq = (g << 16) | self.intra.min(0xffff);
+                self.intra += 1;
+                tk.push_at(seq, row);
+            }
+            None => tk.push(row),
+        }
+    }
+
+    pub(crate) fn merge(&mut self, other: TopKSet) {
+        for (dst, src) in self.per_result.iter_mut().zip(other.per_result) {
+            match (dst.as_mut(), src) {
+                (Some(d), Some(s)) => d.merge(s),
+                (None, Some(s)) => *dst = Some(s),
+                _ => {}
+            }
+        }
+    }
+
+    /// Drain into `(result slot, rows in emission order)` pairs.
+    pub(crate) fn finish(self) -> Vec<(usize, Vec<Tuple>)> {
+        self.per_result
+            .into_iter()
+            .enumerate()
+            .filter_map(|(slot, tk)| tk.map(|tk| (slot, tk.finish())))
+            .collect()
+    }
+}
+
 /// Execute a program on the vectorized tier if its shape is supported.
 /// `Ok(None)` means "not this tier" — callers fall back to the
 /// interpreter, preserving observable behaviour exactly.
@@ -131,6 +402,18 @@ pub struct VecState {
     pub(crate) prints: Vec<String>,
     pub(crate) stats: ExecStats,
     regs: Vec<Value>,
+    /// Emit interception: while an ordered/bounded emit loop runs, its
+    /// per-result [`TopK`] accumulators live here and result appends are
+    /// routed into them instead of `results`. Not touched by `absorb`
+    /// (never in flight across a worker merge).
+    topk: Option<TopKSet>,
+    /// Read-only accumulator override: when set, expression evaluation
+    /// reads arrays from this shared store instead of `arrays`. The
+    /// parallel emit fan-out hands every worker one `Arc` of the
+    /// master's complete store — no per-worker copies. Writes (`Accum`,
+    /// fused kernels) still target the private `arrays`; the emit
+    /// eligibility analysis guarantees none happen while this is set.
+    shared_arrays: Option<Arc<Vec<FxHashMap<Tuple, Value>>>>,
 }
 
 struct CursorState {
@@ -157,6 +440,32 @@ impl VecState {
             prints: Vec::new(),
             stats: ExecStats::default(),
             regs: vec![Value::Null; cp.n_regs],
+            topk: None,
+            shared_arrays: None,
+        }
+    }
+
+    /// Install a shared read-only accumulator store for expression reads
+    /// (parallel emit workers; see the `shared_arrays` field docs).
+    pub(crate) fn set_shared_arrays(&mut self, arrays: Arc<Vec<FxHashMap<Tuple, Value>>>) {
+        self.shared_arrays = Some(arrays);
+    }
+
+    /// Install an emit-interception frame (parallel emit workers).
+    pub(crate) fn begin_topk(&mut self, frame: TopKSet) {
+        self.topk = Some(frame);
+    }
+
+    /// Remove and return the active emit-interception frame.
+    pub(crate) fn take_topk(&mut self) -> Option<TopKSet> {
+        self.topk.take()
+    }
+
+    /// Append a result row, honouring an active emit-interception frame.
+    fn append_row(&mut self, result: usize, row: Tuple) {
+        match self.topk.as_mut() {
+            Some(tk) => tk.push(result, row),
+            None => self.results[result].push(row),
         }
     }
 
@@ -215,13 +524,17 @@ impl VecState {
         if self.regs.len() < prog.n_regs {
             self.regs.resize(prog.n_regs, Value::Null);
         }
+        let arrays: &[FxHashMap<Tuple, Value>] = match &self.shared_arrays {
+            Some(shared) => shared.as_slice(),
+            None => &self.arrays,
+        };
         eval_ops(
             &prog.ops,
             prog.out,
             &mut self.regs,
             &mut self.scalars,
             &self.cursors,
-            &self.arrays,
+            arrays,
             &cp.array_inits,
         )
     }
@@ -263,7 +576,7 @@ impl VecState {
                     .iter()
                     .map(|e| self.eval_value(cp, e))
                     .collect::<Result<_>>()?;
-                self.results[*result].push(row);
+                self.append_row(*result, row);
                 Ok(())
             }
             CStmt::If { cond, then, els } => {
@@ -307,9 +620,44 @@ impl VecState {
         }
     }
 
-    /// Execute a compiled join: build the hash table over the inner side,
-    /// then probe it from the outer cursor.
+    /// Run `f` with an emit-interception frame for `spec` installed, then
+    /// re-emit the retained rows (sorted/bounded) through the normal
+    /// append path — which routes into an enclosing frame if one is
+    /// active, so nested emissions compose like the interpreter's.
+    fn with_emit_frame(
+        &mut self,
+        cp: &CompiledProgram,
+        spec: &EmitSpec,
+        f: impl FnOnce(&mut Self) -> Result<()>,
+    ) -> Result<()> {
+        let prev = self.topk.take();
+        self.topk = Some(TopKSet::new(spec.clone(), cp.result_schemas.len()));
+        let r = f(self);
+        let frame = self.topk.take().expect("emit frame still installed");
+        self.topk = prev;
+        r?;
+        if frame.heap_mode() {
+            self.note_idiom("vec.topk");
+        }
+        for (slot, rows) in frame.finish() {
+            for row in rows {
+                self.append_row(slot, row);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a compiled join: honour any emission contract, build the
+    /// hash table over the inner side, then probe it from the outer
+    /// cursor.
     fn exec_join(&mut self, cp: &CompiledProgram, jl: &JoinLoop) -> Result<()> {
+        match jl.emit.clone() {
+            Some(spec) => self.with_emit_frame(cp, &spec, |st| st.exec_join_domain(cp, jl)),
+            None => self.exec_join_domain(cp, jl),
+        }
+    }
+
+    fn exec_join_domain(&mut self, cp: &CompiledProgram, jl: &JoinLoop) -> Result<()> {
         let len = jl.outer.len();
         let (lo, hi) = match &jl.partition {
             Some((part, parts)) => {
@@ -704,6 +1052,13 @@ impl VecState {
     }
 
     fn exec_scan(&mut self, cp: &CompiledProgram, sl: &ScanLoop) -> Result<()> {
+        match sl.emit.clone() {
+            Some(spec) => self.with_emit_frame(cp, &spec, |st| st.exec_scan_domain(cp, sl)),
+            None => self.exec_scan_domain(cp, sl),
+        }
+    }
+
+    fn exec_scan_domain(&mut self, cp: &CompiledProgram, sl: &ScanLoop) -> Result<()> {
         let len = sl.table.len();
         let (lo, hi) = match &sl.partition {
             Some((part, parts)) => {
@@ -801,6 +1156,53 @@ impl VecState {
         Ok(())
     }
 
+    /// Run an ordered/bounded emit scan's body over one morsel, pushing
+    /// appended rows into the active [`TopKSet`] with each row's
+    /// *global* iteration index as the emission-sequence group — so the
+    /// per-worker heaps of `exec::parallel`'s top-k fan-out merge into
+    /// exactly the sequential emission order, ties included. Requires a
+    /// frame installed via [`VecState::begin_topk`]. Callers must pass
+    /// `filter: None` with [`EmitChunk::Firsts`]: distinct iteration
+    /// ignores the equality filter everywhere else (the interpreter's
+    /// distinct branch takes precedence over the filter).
+    pub(crate) fn emit_scan_chunk(
+        &mut self,
+        cp: &CompiledProgram,
+        sl: &ScanLoop,
+        filter: Option<&(usize, Value)>,
+        chunk: EmitChunk<'_>,
+    ) -> Result<()> {
+        debug_assert!(self.topk.is_some(), "emit frame must be installed");
+        self.cursors[sl.cursor].table = Some(sl.table.clone());
+        let fcol = filter.map(|(fid, key)| (sl.table.column(*fid), key));
+        let run_row = |st: &mut Self, global_idx: usize, row: usize| -> Result<()> {
+            st.stats.rows_visited += 1;
+            if let Some((col, key)) = &fcol {
+                if col.value(row) != **key {
+                    return Ok(());
+                }
+            }
+            if let Some(tk) = st.topk.as_mut() {
+                tk.set_seq_group(global_idx as u64);
+            }
+            st.cursors[sl.cursor].row = row;
+            st.exec_stmts(cp, &sl.body)
+        };
+        match chunk {
+            EmitChunk::Rows { lo, hi } => {
+                for row in lo..hi {
+                    run_row(self, row, row)?;
+                }
+            }
+            EmitChunk::Firsts { firsts, base } => {
+                for (i, &row) in firsts.iter().enumerate() {
+                    run_row(self, base + i, row as usize)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Fused whole-loop aggregation. Returns `false` (caller runs the
     /// generic per-row body) when the target array already holds entries
     /// — continuing an existing float fold batch-wise would change
@@ -824,6 +1226,16 @@ impl VecState {
             self.stats.idioms.push(tag.to_string());
         }
     }
+}
+
+/// One morsel of an ordered/bounded emit scan (see
+/// [`VecState::emit_scan_chunk`]).
+pub(crate) enum EmitChunk<'a> {
+    /// Plain table rows `[lo, hi)`; the global sequence is the row id.
+    Rows { lo: usize, hi: usize },
+    /// A slice of the distinct-firsts row list starting at position
+    /// `base` of the whole list; the global sequence is the position.
+    Firsts { firsts: &'a [u32], base: usize },
 }
 
 /// Incremental state for one fused [`FastAgg`]: disjoint row ranges are
@@ -1460,6 +1872,7 @@ mod tests {
                 parts: Expr::int(2),
             },
             body: vec![],
+            emit: None,
         })];
         assert!(try_run(&p, &c).unwrap().is_none());
     }
@@ -1607,6 +2020,145 @@ mod tests {
         assert_eq!(ht.probe(&Value::Int(99)), &[] as &[u32]);
         // Cross-type numeric probe matches the interpreter's Value eq.
         assert_eq!(ht.probe(&Value::Float(3.0)), &[1]);
+    }
+
+    #[test]
+    fn topk_bounded_heap_equals_stable_sort_prefix() {
+        // Random rows, random k: TopK::bounded must retain exactly the
+        // stable-sort prefix — same rows, same order, ties included.
+        let mut rng = crate::util::Rng::new(42);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200) as usize;
+            let k = rng.below(20) as usize;
+            let desc = rng.below(2) == 1;
+            let rows: Vec<Tuple> = (0..n)
+                .map(|i| vec![Value::Int(i as i64), Value::Int(rng.range(0, 8))])
+                .collect();
+            let mut heap = TopK::bounded(Some(1), desc, k);
+            let mut sort = TopK::sorting(Some(1), desc, Some(k));
+            for row in &rows {
+                heap.push(row.clone());
+                sort.push(row.clone());
+            }
+            let mut want = rows.clone();
+            want.sort_by(|a, b| {
+                let ord = a[1].cmp(&b[1]);
+                if desc {
+                    ord.reverse()
+                } else {
+                    ord
+                }
+            });
+            want.truncate(k);
+            assert_eq!(heap.finish(), want, "desc={desc} k={k} n={n}");
+            assert_eq!(sort.finish(), want, "sorting variant, desc={desc} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn topk_merge_equals_single_accumulator() {
+        // Chunked per-worker heaps merged k-way must equal one heap fed
+        // sequentially — the parallel emit fan-out's correctness core.
+        let mut rng = crate::util::Rng::new(7);
+        let rows: Vec<Tuple> = (0..300)
+            .map(|i| vec![Value::Int(i), Value::Int(rng.range(0, 10))])
+            .collect();
+        let mut single = TopK::bounded(Some(1), true, 12);
+        for (i, row) in rows.iter().enumerate() {
+            single.push_at(i as u64, row.clone());
+        }
+        let mut merged = TopK::bounded(Some(1), true, 12);
+        for (ci, part) in rows.chunks(64).enumerate() {
+            let mut w = TopK::bounded(Some(1), true, 12);
+            for (j, row) in part.iter().enumerate() {
+                w.push_at((ci * 64 + j) as u64, row.clone());
+            }
+            merged.merge(w);
+        }
+        assert_eq!(merged.finish(), single.finish());
+    }
+
+    #[test]
+    fn topk_group_by_matches_interpreter_rows_exactly() {
+        // Ties included: 64 urls over 3000 rows guarantees tied counts
+        // are common; the emitted prefix must be row-identical to the
+        // interpreter's stable sort.
+        for dict in [false, true] {
+            let c = catalog(3000, dict);
+            for q in [
+                "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 9",
+                "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n ASC LIMIT 4",
+                "SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY url ASC",
+                "SELECT url FROM access LIMIT 17",
+                "SELECT url FROM access ORDER BY url DESC LIMIT 3",
+            ] {
+                let p = compile_sql(q, &c.schemas()).unwrap();
+                let reference = local::run(&p, &c).unwrap();
+                let out = try_run(&p, &c).unwrap().expect("vectorized tier fires");
+                assert_eq!(
+                    out.result().unwrap().rows(),
+                    reference.result().unwrap().rows(),
+                    "dict={dict} `{q}`: emission must match the interpreter row-for-row"
+                );
+            }
+            // The bounded forms fire the vec.topk kernel.
+            let p = compile_sql(
+                "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 9",
+                &c.schemas(),
+            )
+            .unwrap();
+            let out = try_run(&p, &c).unwrap().unwrap();
+            assert!(
+                out.stats.idioms.contains(&"vec.topk".to_string()),
+                "dict={dict}: {:?}",
+                out.stats.idioms
+            );
+        }
+    }
+
+    #[test]
+    fn topk_ordered_join_matches_interpreter_rows_exactly() {
+        let c = join_catalog(400, 30, false);
+        for q in [
+            "SELECT A.g, B.v FROM A JOIN B ON A.b_id = B.id ORDER BY v DESC LIMIT 6",
+            "SELECT A.g, B.tag FROM A JOIN B ON A.b_id = B.id LIMIT 11",
+        ] {
+            let p = compile_sql(q, &c.schemas()).unwrap();
+            let reference = local::run(&p, &c).unwrap();
+            let out = try_run(&p, &c).unwrap().expect("vectorized join fires");
+            assert_eq!(
+                out.result().unwrap().rows(),
+                reference.result().unwrap().rows(),
+                "`{q}`"
+            );
+            assert!(out.stats.idioms.contains(&"vec.hash_join".to_string()));
+            assert!(out.stats.idioms.contains(&"vec.topk".to_string()));
+        }
+    }
+
+    #[test]
+    fn topk_limit_zero_and_oversized_k_are_fine() {
+        let c = catalog(500, false);
+        for q in [
+            "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 0",
+            // k far above the group count: everything, sorted.
+            "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 500",
+        ] {
+            let p = compile_sql(q, &c.schemas()).unwrap();
+            let reference = local::run(&p, &c).unwrap();
+            let out = try_run(&p, &c).unwrap().unwrap();
+            assert_eq!(
+                out.result().unwrap().rows(),
+                reference.result().unwrap().rows(),
+                "`{q}`"
+            );
+        }
+        let p = compile_sql(
+            "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n DESC LIMIT 0",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert_eq!(try_run(&p, &c).unwrap().unwrap().result().unwrap().len(), 0);
     }
 
     #[test]

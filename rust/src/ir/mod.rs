@@ -20,6 +20,6 @@ pub use index_set::{IndexSet, Partition, Strategy};
 pub use multiset::Multiset;
 pub use program::{ArrayDecl, Program, SlotMap};
 pub use schema::{Field, FieldId, Schema};
-pub use stmt::{AccumOp, Domain, Loop, LoopKind, Stmt};
+pub use stmt::{AccumOp, Domain, EmitOrder, Loop, LoopKind, Stmt, TopKStrategy};
 pub use validate::validate;
 pub use value::{DataType, Tuple, Value};

@@ -45,6 +45,10 @@ pub fn stmt(s: &Stmt, indent: usize, out: &mut String) {
                     format!("{k} ({} ∈ distinct({relation}.{field}))", l.var)
                 }
             };
+            let header = match &l.emit {
+                Some(e) => format!("{header} {e}"),
+                None => header,
+            };
             let _ = writeln!(out, "{pad}{header} {{");
             for b in &l.body {
                 stmt(b, indent + 1, out);
@@ -131,6 +135,24 @@ mod tests {
             vec![Expr::field("i", "url"), Expr::array("count", vec![Expr::field("i", "url")])],
         );
         assert_eq!(stmt_string(&s).trim(), "R = R ∪ (i.url, count[i.url]);");
+    }
+
+    #[test]
+    fn renders_topk_emit_annotation() {
+        use crate::ir::stmt::EmitOrder;
+        let s = Stmt::Loop(
+            Loop::forelem(
+                "i",
+                IndexSet::distinct_of("Access", "url"),
+                vec![Stmt::result_union("R", vec![Expr::field("i", "url")])],
+            )
+            .with_emit(EmitOrder::top_k(1, true, 5)),
+        );
+        let text = stmt_string(&s);
+        assert!(
+            text.contains("forelem (i; i ∈ pAccess.distinct(url)) topk(#1 desc, k=5) {"),
+            "{text}"
+        );
     }
 
     #[test]

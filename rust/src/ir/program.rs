@@ -176,6 +176,36 @@ impl Program {
         out
     }
 
+    /// The first ordered/bounded emission contract (`ORDER BY`/`LIMIT`)
+    /// in the body, if any — lowered SQL attaches at most one. Callers
+    /// that materialize results outside the executors (the distributed
+    /// coordinator's aggregate jobs) use this to honour the same
+    /// contract on their externally-produced multiset.
+    pub fn emit_bound(&self) -> Option<&super::stmt::EmitOrder> {
+        fn find(body: &[Stmt]) -> Option<&super::stmt::EmitOrder> {
+            for s in body {
+                match s {
+                    Stmt::Loop(l) => {
+                        if let Some(e) = &l.emit {
+                            return Some(e);
+                        }
+                        if let Some(e) = find(&l.body) {
+                            return Some(e);
+                        }
+                    }
+                    Stmt::If { then, els, .. } => {
+                        if let Some(e) = find(then).or_else(|| find(els)) {
+                            return Some(e);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            None
+        }
+        find(&self.body)
+    }
+
     /// Slot-resolution metadata for this program's declarations.
     pub fn slot_map(&self) -> SlotMap {
         SlotMap {

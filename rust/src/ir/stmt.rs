@@ -4,6 +4,7 @@ use std::fmt;
 
 use super::expr::Expr;
 use super::index_set::IndexSet;
+use super::value::Tuple;
 
 /// Loop flavours (§II–III).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -48,6 +49,159 @@ pub enum Domain {
     DistinctValues { relation: String, field: String },
 }
 
+/// How an ordered/bounded emission executes — decided late by the
+/// cost-based optimizer (`opt::optimize`), exactly like
+/// [`Strategy`](super::index_set::Strategy) on index sets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TopKStrategy {
+    /// Not yet decided (the state SQL lowering leaves emit loops in).
+    /// Executors treat a bounded, undecided emission as [`Heap`].
+    #[default]
+    Unspecified,
+    /// Bounded-heap emission, O(n log k): only the current top `k` rows
+    /// are retained (the vectorized tier's `vec.topk` kernel).
+    Heap,
+    /// Materialize every emitted row, sort, then truncate — chosen when
+    /// there is no `LIMIT`, or when `k` covers the whole domain anyway.
+    Sort,
+}
+
+impl fmt::Display for TopKStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            TopKStrategy::Unspecified => "?",
+            TopKStrategy::Heap => "heap",
+            TopKStrategy::Sort => "sort",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Ordered/bounded emission: the IR form of `ORDER BY` / `LIMIT` (§IV).
+///
+/// The IR is order-free — multisets have no row order — so ordering is
+/// not a property of data but of *emission*: a loop annotated with an
+/// `EmitOrder` appends its result rows sorted by tuple position
+/// [`key`](EmitOrder::key) (and/or bounded to the first
+/// [`limit`](EmitOrder::limit) rows). SQL lowering produces it for
+/// `ORDER BY`/`LIMIT`; the reference semantics are
+/// [`apply_rows`](EmitOrder::apply_rows) (stable sort, then truncate) and
+/// every execution tier — including the `vec.topk` bounded-heap kernel —
+/// must emit the exact same rows in the exact same order.
+///
+/// # Examples
+///
+/// ```
+/// use forelem::ir::{EmitOrder, Value};
+///
+/// // ORDER BY column #1 DESC LIMIT 2 over (name, count) tuples.
+/// let emit = EmitOrder::top_k(1, true, 2);
+/// let mut rows = vec![
+///     vec![Value::str("/a"), Value::Int(3)],
+///     vec![Value::str("/b"), Value::Int(9)],
+///     vec![Value::str("/c"), Value::Int(5)],
+/// ];
+/// emit.apply_rows(&mut rows);
+/// assert_eq!(rows.len(), 2);
+/// assert_eq!(rows[0][1], Value::Int(9));
+/// assert_eq!(rows[1][1], Value::Int(5));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmitOrder {
+    /// Position within the emitted result tuple to sort by; `None` means
+    /// "no ordering" (a bare `LIMIT`, which keeps the first rows in
+    /// emission order).
+    pub key: Option<usize>,
+    /// Sort descending (`ORDER BY ... DESC`).
+    pub descending: bool,
+    /// Keep only the top `limit` rows; `None` means emit everything
+    /// (a bare `ORDER BY`).
+    pub limit: Option<usize>,
+    /// Heap-vs-sort execution choice, decided by the optimizer
+    /// (`opt.topk_heap` / `opt.topk_sort`).
+    pub strategy: TopKStrategy,
+}
+
+impl EmitOrder {
+    /// `ORDER BY #key [DESC] LIMIT k`.
+    pub fn top_k(key: usize, descending: bool, k: usize) -> Self {
+        EmitOrder {
+            key: Some(key),
+            descending,
+            limit: Some(k),
+            strategy: TopKStrategy::Unspecified,
+        }
+    }
+
+    /// `ORDER BY #key [DESC]` without a bound.
+    pub fn ordered(key: usize, descending: bool) -> Self {
+        EmitOrder {
+            key: Some(key),
+            descending,
+            limit: None,
+            strategy: TopKStrategy::Unspecified,
+        }
+    }
+
+    /// Bare `LIMIT k`: the first `k` rows in emission order.
+    pub fn first_k(k: usize) -> Self {
+        EmitOrder {
+            key: None,
+            descending: false,
+            limit: Some(k),
+            strategy: TopKStrategy::Unspecified,
+        }
+    }
+
+    /// Comparison the emission contract sorts by: the key column
+    /// (respecting direction); ties keep emission order (stable).
+    pub fn cmp_rows(&self, a: &Tuple, b: &Tuple) -> std::cmp::Ordering {
+        match self.key {
+            Some(f) => {
+                let ord = a[f].cmp(&b[f]);
+                if self.descending {
+                    ord.reverse()
+                } else {
+                    ord
+                }
+            }
+            None => std::cmp::Ordering::Equal,
+        }
+    }
+
+    /// The reference semantics: stable-sort `rows` by the key (when one
+    /// is set) and truncate to `limit`. Every tier's emission — including
+    /// the bounded-heap `vec.topk` kernel and the parallel k-way merge —
+    /// must equal this exactly, ties included.
+    pub fn apply_rows(&self, rows: &mut Vec<Tuple>) {
+        if self.key.is_some() {
+            rows.sort_by(|a, b| self.cmp_rows(a, b));
+        }
+        if let Some(k) = self.limit {
+            rows.truncate(k);
+        }
+    }
+}
+
+impl fmt::Display for EmitOrder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "topk(")?;
+        let mut sep = "";
+        if let Some(k) = self.key {
+            write!(f, "#{k} {}", if self.descending { "desc" } else { "asc" })?;
+            sep = ", ";
+        }
+        if let Some(k) = self.limit {
+            write!(f, "{sep}k={k}")?;
+        }
+        write!(f, ")")?;
+        if self.strategy != TopKStrategy::Unspecified {
+            write!(f, " /*{}*/", self.strategy)?;
+        }
+        Ok(())
+    }
+}
+
 /// A loop node.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Loop {
@@ -55,6 +209,10 @@ pub struct Loop {
     pub var: String,
     pub domain: Domain,
     pub body: Vec<Stmt>,
+    /// Ordered/bounded emission contract for the result rows this loop
+    /// appends (the IR form of `ORDER BY`/`LIMIT`). `None` for ordinary
+    /// loops.
+    pub emit: Option<EmitOrder>,
 }
 
 impl Loop {
@@ -64,6 +222,7 @@ impl Loop {
             var: var.to_string(),
             domain: Domain::IndexSet(ix),
             body,
+            emit: None,
         }
     }
 
@@ -73,6 +232,7 @@ impl Loop {
             var: var.to_string(),
             domain: Domain::Range { lo, hi },
             body,
+            emit: None,
         }
     }
 
@@ -82,7 +242,14 @@ impl Loop {
             var: var.to_string(),
             domain: Domain::Range { lo, hi },
             body,
+            emit: None,
         }
+    }
+
+    /// Attach an ordered/bounded emission contract.
+    pub fn with_emit(mut self, emit: EmitOrder) -> Self {
+        self.emit = Some(emit);
+        self
     }
 
     /// The index set, if this is a forelem-style loop.
@@ -350,6 +517,43 @@ mod tests {
             }
         });
         assert_eq!(fields, vec!["url".to_string()]);
+    }
+
+    #[test]
+    fn emit_order_apply_matches_stable_sort_semantics() {
+        use super::super::value::Value;
+        // Descending by #1, ties (9) keep emission order: "/b" before "/d".
+        let rows = vec![
+            vec![Value::str("/a"), Value::Int(3)],
+            vec![Value::str("/b"), Value::Int(9)],
+            vec![Value::str("/c"), Value::Int(5)],
+            vec![Value::str("/d"), Value::Int(9)],
+        ];
+        let mut top3 = rows.clone();
+        EmitOrder::top_k(1, true, 3).apply_rows(&mut top3);
+        assert_eq!(top3.len(), 3);
+        assert_eq!(top3[0][0], Value::str("/b"));
+        assert_eq!(top3[1][0], Value::str("/d"));
+        assert_eq!(top3[2][0], Value::str("/c"));
+        // Bare LIMIT keeps the first rows in emission order.
+        let mut first2 = rows.clone();
+        EmitOrder::first_k(2).apply_rows(&mut first2);
+        assert_eq!(first2, rows[..2].to_vec());
+        // Bare ORDER BY sorts everything, ascending.
+        let mut all = rows.clone();
+        EmitOrder::ordered(1, false).apply_rows(&mut all);
+        assert_eq!(all.len(), 4);
+        assert_eq!(all[0][1], Value::Int(3));
+    }
+
+    #[test]
+    fn emit_order_display_forms() {
+        assert_eq!(EmitOrder::top_k(1, true, 5).to_string(), "topk(#1 desc, k=5)");
+        assert_eq!(EmitOrder::ordered(0, false).to_string(), "topk(#0 asc)");
+        assert_eq!(EmitOrder::first_k(7).to_string(), "topk(k=7)");
+        let mut e = EmitOrder::top_k(1, true, 5);
+        e.strategy = TopKStrategy::Heap;
+        assert_eq!(e.to_string(), "topk(#1 desc, k=5) /*heap*/");
     }
 
     #[test]

@@ -134,12 +134,48 @@ fn check_loop(p: &Program, l: &Loop, scope: &mut HashSet<String>) -> Result<()> 
             }
         }
     }
+    if let Some(e) = &l.emit {
+        check_emit(l, e)?;
+    }
     let added = scope.insert(l.var.clone());
     for s in &l.body {
         check_stmt(p, s, scope)?;
     }
     if added {
         scope.remove(&l.var);
+    }
+    Ok(())
+}
+
+/// An ordered/bounded emission must actually order or bound something,
+/// and its sort key must be a valid position of every result tuple the
+/// loop appends. (The schema width equals the tuple width — checked by
+/// `check_stmt` — so the tuple check covers both.)
+fn check_emit(l: &Loop, e: &super::stmt::EmitOrder) -> Result<()> {
+    if e.key.is_none() && e.limit.is_none() {
+        bail!("emit annotation on loop `{}` orders nothing and bounds nothing", l.var);
+    }
+    if let Some(f) = e.key {
+        let mut err = None;
+        for s in &l.body {
+            s.walk(&mut |sub| {
+                if err.is_some() {
+                    return;
+                }
+                if let Stmt::ResultUnion { result, tuple } = sub {
+                    if f >= tuple.len() {
+                        err = Some(format!(
+                            "emit sort key #{f} out of range for result `{result}` \
+                             ({}-field tuple)",
+                            tuple.len()
+                        ));
+                    }
+                }
+            });
+        }
+        if let Some(m) = err {
+            bail!("{m}");
+        }
     }
     Ok(())
 }
@@ -268,6 +304,51 @@ mod tests {
             vec![Stmt::result_union("R", vec![Expr::field("i", "x")])],
         ))]);
         assert!(validate(&p).unwrap_err().to_string().contains("undeclared result"));
+    }
+
+    #[test]
+    fn emit_annotations_are_checked() {
+        use crate::ir::stmt::EmitOrder;
+        let result = || {
+            base().with_result(
+                "R",
+                Schema::new(vec![("x", DataType::Int), ("n", DataType::Int)]),
+            )
+        };
+        let emit_loop = |e: EmitOrder| {
+            Stmt::Loop(
+                Loop::forelem(
+                    "i",
+                    IndexSet::all("A"),
+                    vec![Stmt::result_union(
+                        "R",
+                        vec![
+                            Expr::field("i", "x"),
+                            Expr::array("count", vec![Expr::field("i", "x")]),
+                        ],
+                    )],
+                )
+                .with_emit(e),
+            )
+        };
+        // Valid top-k emission.
+        validate(&result().with_body(vec![emit_loop(EmitOrder::top_k(1, true, 5))])).unwrap();
+        // Sort key out of tuple range.
+        let err = validate(&result().with_body(vec![emit_loop(EmitOrder::ordered(2, false))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // Annotation that neither orders nor bounds.
+        let empty = EmitOrder {
+            key: None,
+            descending: false,
+            limit: None,
+            strategy: Default::default(),
+        };
+        let err = validate(&result().with_body(vec![emit_loop(empty)]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("orders nothing"), "{err}");
     }
 
     #[test]

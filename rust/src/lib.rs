@@ -14,7 +14,8 @@
 //! * [`analysis`] — def-use, dependence and cost analyses;
 //! * [`opt`] — the cost-based query optimizer: column statistics,
 //!   cardinality estimation, and plan decisions (join build side,
-//!   predicate order, index strategies, parallel fan-out gating);
+//!   predicate order, index strategies, top-k heap-vs-sort, parallel
+//!   fan-out gating);
 //! * [`transform`] — the re-targeted compiler transformations: loop
 //!   blocking/orthogonalization (data partitioning), interchange, fusion,
 //!   code motion, iteration-space expansion, DCE/CSE/const-prop, index-set
@@ -53,7 +54,8 @@ pub mod workload;
 pub mod prelude {
     //! Convenient glob import for examples and tests.
     pub use crate::ir::{
-        validate, AccumOp, ArrayDecl, BinOp, DataType, Domain, Expr, Field, FieldId, IndexSet,
-        Loop, LoopKind, Multiset, Program, Schema, Stmt, Strategy, Tuple, UnOp, Value,
+        validate, AccumOp, ArrayDecl, BinOp, DataType, Domain, EmitOrder, Expr, Field, FieldId,
+        IndexSet, Loop, LoopKind, Multiset, Program, Schema, Stmt, Strategy, TopKStrategy, Tuple,
+        UnOp, Value,
     };
 }

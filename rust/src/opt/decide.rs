@@ -1,6 +1,6 @@
 //! The optimizer's decision pass: consume estimates, rewrite the IR.
 //!
-//! Three executable decisions, each recorded as a [`Decision`] whose
+//! Four executable decisions, each recorded as a [`Decision`] whose
 //! dot-namespaced tag lands in `Program::opt_tags` (and from there in
 //! `ExecStats.idioms`):
 //!
@@ -24,13 +24,21 @@
 //!   statistics-backed estimator instead of the materialization pass's
 //!   fallback guesses. The later `Materialize` pass leaves decided
 //!   strategies untouched.
+//! * **`opt.topk_heap` / `opt.topk_sort`** — ordered/bounded emissions
+//!   (`ORDER BY`/`LIMIT` lowered to `EmitOrder`) pick the vectorized
+//!   tier's bounded-heap `vec.topk` kernel when `k` is below the
+//!   estimated emitted-row count (NDV of the distinct field for
+//!   group-by emit loops), and the materialize+sort strategy otherwise
+//!   (no `LIMIT`, or `k` covers the whole domain).
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::analysis::choose_strategy;
-use crate::ir::{AccumOp, BinOp, Domain, Expr, IndexSet, Loop, LoopKind, Program, Stmt, Strategy};
+use crate::ir::{
+    AccumOp, BinOp, Domain, Expr, IndexSet, Loop, LoopKind, Program, Stmt, Strategy, TopKStrategy,
+};
 use crate::storage::StorageCatalog;
 
 use super::estimate::{conjuncts, expr_pure, reorderable_conjunct, Estimator, LoopEstimate};
@@ -73,8 +81,33 @@ impl OptReport {
 
 /// Run the cost-based optimizer over a lowered program. Rewrites the
 /// program in place (join nest order, guard conjunct order, index-set
-/// strategies), records every decision in the report and in
-/// `Program::opt_tags`, and re-validates the result.
+/// strategies, top-k emission strategy), records every decision in the
+/// report and in `Program::opt_tags`, and re-validates the result.
+///
+/// # Examples
+///
+/// The top-k decision on the paper's URL-count workload: `LIMIT 3` over
+/// ~10 groups picks the bounded heap.
+///
+/// ```
+/// use forelem::ir::{DataType, Multiset, Schema, TopKStrategy, Value};
+/// use forelem::storage::StorageCatalog;
+///
+/// let mut t = Multiset::new(Schema::new(vec![("k", DataType::Str)]));
+/// for i in 0..100i64 {
+///     t.push(vec![Value::str(format!("k{}", i % 10))]);
+/// }
+/// let mut c = StorageCatalog::new();
+/// c.insert_multiset("t", &t).unwrap();
+/// let mut p = forelem::sql::compile_sql(
+///     "SELECT k, COUNT(k) FROM t GROUP BY k ORDER BY count DESC LIMIT 3",
+///     &c.schemas(),
+/// )
+/// .unwrap();
+/// let report = forelem::opt::optimize(&mut p, &c).unwrap();
+/// assert!(report.has("opt.topk_heap"));
+/// assert_eq!(p.emit_bound().unwrap().strategy, TopKStrategy::Heap);
+/// ```
 pub fn optimize(p: &mut Program, catalog: &StorageCatalog) -> Result<OptReport> {
     let est = Estimator::new(catalog);
     let mut report = OptReport::default();
@@ -87,6 +120,9 @@ pub fn optimize(p: &mut Program, catalog: &StorageCatalog) -> Result<OptReport> 
     }
     for s in &mut p.body {
         choose_strategies(s, 1, &est, &mut report);
+    }
+    for s in &mut p.body {
+        choose_topk_strategy(s, &est, &mut report);
     }
     report.estimates = est.loop_estimates(p);
     for tag in report.tags() {
@@ -131,8 +167,13 @@ fn choose_join_build_side(s: &mut Stmt, est: &Estimator, report: &mut OptReport)
     };
     // Only the plain Figure-1 shape: no outer filter (a WHERE equality on
     // the probe side must stay on the probe side), no distinct, no
-    // partition on either loop.
+    // partition on either loop. An ordered/bounded emission pins the
+    // nest too: the emit contract's tie-breaking observes the emission
+    // sequence a swap would reorder.
     if ox.field_filter.is_some() || ox.distinct.is_some() || ox.partition.is_some() {
+        return;
+    }
+    if outer.emit.is_some() {
         return;
     }
     let [Stmt::Loop(inner)] = outer.body.as_slice() else {
@@ -281,6 +322,54 @@ fn reorder_cond(
             "{} guard conjuncts reordered most-selective-first",
             parts.len()
         ),
+    });
+}
+
+/// Heap-vs-sort for ordered/bounded emissions (`ORDER BY`/`LIMIT`
+/// lowered to `EmitOrder`): a bounded emission whose `k` is smaller than
+/// the estimated emitted-row count runs the vectorized tier's bounded
+/// heap (`vec.topk`, O(n log k)); an unbounded ORDER BY — or a LIMIT
+/// that covers the whole domain anyway — materializes and sorts. The
+/// emitted-row count comes from the same column statistics the other
+/// decisions use: NDV of the distinct field for group-by emit loops,
+/// table row count for plain scans and join probes.
+fn choose_topk_strategy(s: &mut Stmt, est: &Estimator, report: &mut OptReport) {
+    let Stmt::Loop(l) = s else { return };
+    for b in &mut l.body {
+        choose_topk_strategy(b, est, report);
+    }
+    let Some(e) = &mut l.emit else { return };
+    if e.strategy != TopKStrategy::Unspecified {
+        return;
+    }
+    let est_out = match &l.domain {
+        Domain::IndexSet(ix) => match &ix.distinct {
+            Some(field) => est.table_stats(&ix.relation, field).distinct_keys,
+            None => est.table_rows(&ix.relation),
+        },
+        _ => 0,
+    };
+    let (strategy, tag, detail) = match e.limit {
+        None => (
+            TopKStrategy::Sort,
+            "opt.topk_sort",
+            format!("ordered emission of ~{est_out} rows — full sort (no LIMIT)"),
+        ),
+        Some(k) if est_out > 0 && k as u64 >= est_out => (
+            TopKStrategy::Sort,
+            "opt.topk_sort",
+            format!("LIMIT {k} covers ~{est_out} emitted rows — full sort"),
+        ),
+        Some(k) => (
+            TopKStrategy::Heap,
+            "opt.topk_heap",
+            format!("top-{k} of ~{est_out} emitted rows — bounded heap, O(n log k)"),
+        ),
+    };
+    e.strategy = strategy;
+    report.decisions.push(Decision {
+        tag: tag.into(),
+        detail,
     });
 }
 
@@ -503,6 +592,71 @@ mod tests {
             "{report:?}"
         );
         assert!(p.opt_tags.iter().any(|t| t.starts_with("opt.strategy.")));
+    }
+
+    #[test]
+    fn topk_strategy_heap_vs_sort_follows_the_group_estimate() {
+        use crate::ir::TopKStrategy;
+        let c = join_catalog(50, 5000);
+        let emit_strategy = |p: &Program| {
+            let Stmt::Loop(l) = &p.body[1] else {
+                panic!("expected emit loop")
+            };
+            l.emit.as_ref().expect("emit annotation").strategy
+        };
+        // `small.g` has 7 distinct groups: k=3 < 7 → bounded heap.
+        let mut p = compile_sql(
+            "SELECT g, COUNT(g) FROM small GROUP BY g ORDER BY count DESC LIMIT 3",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.topk_heap"), "{report:?}");
+        assert_eq!(emit_strategy(&p), TopKStrategy::Heap);
+        assert!(p.opt_tags.contains(&"opt.topk_heap".to_string()));
+
+        // k covering the whole domain → sort.
+        let mut p = compile_sql(
+            "SELECT g, COUNT(g) FROM small GROUP BY g ORDER BY count DESC LIMIT 500",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.topk_sort"), "{report:?}");
+        assert_eq!(emit_strategy(&p), TopKStrategy::Sort);
+
+        // No LIMIT → sort.
+        let mut p = compile_sql(
+            "SELECT g, COUNT(g) FROM small GROUP BY g ORDER BY g ASC",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.topk_sort"), "{report:?}");
+        assert_eq!(emit_strategy(&p), TopKStrategy::Sort);
+
+        // No ORDER BY/LIMIT → no top-k decision at all.
+        let mut p = compile_sql("SELECT g, COUNT(g) FROM small GROUP BY g", &c.schemas()).unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(!report.has("opt.topk_heap") && !report.has("opt.topk_sort"));
+    }
+
+    #[test]
+    fn ordered_join_nests_are_not_swapped() {
+        // The emission contract's tie-breaking observes probe order:
+        // the build-side swap must leave annotated nests alone.
+        let c = join_catalog(50, 5000);
+        let mut p = compile_sql(
+            "SELECT small.g, big.w FROM small JOIN big ON small.id = big.a_id \
+             ORDER BY w DESC LIMIT 4",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(!report.has("opt.join_build_side"), "{report:?}");
+        assert_eq!(nest_relations(&p), ("small".into(), "big".into()));
+        // The top-k decision still fires.
+        assert!(report.has("opt.topk_heap"), "{report:?}");
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //!   cardinality (swapping the Figure-1 nest when the written order
 //!   would hash the larger table), conjunctive guards reordered
 //!   most-selective-first, scan-vs-materialize strategies via the
-//!   existing cost model, and the morsel fan-out gate below.
+//!   existing cost model, heap-vs-sort for ordered/bounded (`topk`)
+//!   emissions, and the morsel fan-out gate below.
 //!
 //! Every decision pushes a dot-namespaced `opt.<decision>` tag into
 //! `Program::opt_tags`; executors merge those into `ExecStats.idioms`

@@ -16,6 +16,15 @@
 //!   vectorized tier executes the nest as a build+probe hash join with
 //!   fused `vec.count`/`vec.sum` kernels (see `exec::compile`).
 //!
+//! `ORDER BY` / `LIMIT` lower into the IR as an **ordered/bounded
+//! emission** ([`EmitOrder`] on the loop that appends the result rows):
+//! the sort column resolves to a position in the result schema, and the
+//! clause becomes a `topk`-annotated emit loop — the §IV URL-count query
+//! ends in `forelem (i; i ∈ paccess.distinct(url)) topk(#1 desc, k=5)`.
+//! The optimizer decides heap-vs-sort execution (`opt.topk_heap` /
+//! `opt.topk_sort`) and the vectorized tier runs bounded emissions as the
+//! fused O(n log k) `vec.topk` kernel.
+//!
 //! Like the plain group-by shape, an aggregate over a join emits one row
 //! per distinct group-key value of the owning table — groups with no
 //! matching rows surface with the accumulator's init value, matching the
@@ -34,7 +43,7 @@ use anyhow::{bail, Context, Result};
 
 use super::ast::{Aggregate, ColumnRef, JoinClause, Select, SelectItem, SqlBinOp, SqlExpr};
 use crate::ir::{
-    ArrayDecl, BinOp, DataType, Expr, IndexSet, Loop, Program, Schema, Stmt,
+    ArrayDecl, BinOp, DataType, EmitOrder, Expr, IndexSet, Loop, Program, Schema, Stmt,
 };
 
 /// The relation catalog lowering resolves column references against.
@@ -43,26 +52,10 @@ pub type Catalog = BTreeMap<String, Schema>;
 /// Lower a parsed SELECT into a forelem program.
 ///
 /// The produced program reads the catalog relations and fills one result
-/// multiset named `R`.
-///
-/// The parser accepts `ORDER BY`/`LIMIT`, but no lowering shape exists
-/// for them yet — bail loudly rather than silently dropping the clause
-/// (a top-k emission kernel is tracked in ROADMAP.md open items).
-/// `compiler::Engine` strips both clauses before lowering and applies
-/// them to the result multiset after execution instead.
+/// multiset named `R`. `ORDER BY`/`LIMIT` lower into an [`EmitOrder`]
+/// annotation on the loop that appends the result rows — the whole query,
+/// top-k included, is one IR program.
 pub fn lower(sel: &Select, catalog: &Catalog) -> Result<Program> {
-    if let Some((col, _desc)) = &sel.order_by {
-        bail!(
-            "ORDER BY `{col}` is not yet supported in lowering \
-             (a top-k emission kernel is tracked in ROADMAP.md open items)"
-        );
-    }
-    if let Some(n) = sel.limit {
-        bail!(
-            "LIMIT {n} is not yet supported in lowering \
-             (a top-k emission kernel is tracked in ROADMAP.md open items)"
-        );
-    }
     let ctx = LowerCtx::new(sel, catalog)?;
     if sel.is_aggregate() {
         ctx.lower_aggregate(sel)
@@ -71,6 +64,40 @@ pub fn lower(sel: &Select, catalog: &Catalog) -> Result<Program> {
     } else {
         ctx.lower_select_project(sel)
     }
+}
+
+/// Resolve `ORDER BY`/`LIMIT` against the result schema's output names
+/// (aliases included) into the IR's ordered/bounded emission contract.
+/// `None` when the query has neither clause.
+fn emit_order(sel: &Select, result_fields: &[(String, DataType)]) -> Result<Option<EmitOrder>> {
+    let key = match &sel.order_by {
+        Some((name, desc)) => {
+            let id = result_fields
+                .iter()
+                .position(|(n, _)| n == name)
+                .with_context(|| {
+                    format!(
+                        "ORDER BY unknown column `{name}` (result columns: {})",
+                        result_fields
+                            .iter()
+                            .map(|(n, _)| n.clone())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                })?;
+            Some((id, *desc))
+        }
+        None => None,
+    };
+    Ok(match (key, sel.limit) {
+        (None, None) => None,
+        (key, limit) => Some(EmitOrder {
+            key: key.map(|(id, _)| id),
+            descending: key.map(|(_, d)| d).unwrap_or(false),
+            limit,
+            strategy: Default::default(),
+        }),
+    })
 }
 
 /// Convenience: parse + lower in one step.
@@ -400,13 +427,16 @@ impl<'a> LowerCtx<'a> {
         };
         // Loop 2: iterate distinct group keys of the owning table, emit
         // result rows (the emit cursor reuses the group key's cursor var).
+        // ORDER BY/LIMIT annotate this loop: the paper's URL-count query
+        // ends in a `topk`-bounded emission over the distinct domain.
         let ix2 = IndexSet::distinct_of(&gtable, &gfield);
         let body2 = vec![Stmt::result_union("R", union_tuple)];
+        let mut loop2 = Loop::forelem(&gvar, ix2, body2);
+        if let Some(e) = emit_order(sel, &result_fields)? {
+            loop2 = loop2.with_emit(e);
+        }
 
-        program.body = vec![
-            Stmt::Loop(loop1),
-            Stmt::Loop(Loop::forelem(&gvar, ix2, body2)),
-        ];
+        program.body = vec![Stmt::Loop(loop1), Stmt::Loop(loop2)];
         crate::ir::validate(&program)?;
         Ok(program)
     }
@@ -555,11 +585,17 @@ impl<'a> LowerCtx<'a> {
             .with_relation(&itable, self.schema(&itable).clone())
             .with_relation(&jtable, self.schema(&jtable).clone())
             .with_result("R", result_schema);
-        program.body = vec![Stmt::Loop(Loop::forelem(
+        // ORDER BY/LIMIT annotate the outer loop: the emission bound
+        // covers the whole nest's appended rows.
+        let mut nest = Loop::forelem(
             &ivar,
             outer_ix,
             vec![Stmt::Loop(Loop::forelem(&jvar, inner_ix, inner_body))],
-        ))];
+        );
+        if let Some(e) = emit_order(sel, &fields)? {
+            nest = nest.with_emit(e);
+        }
+        program.body = vec![Stmt::Loop(nest)];
         crate::ir::validate(&program)?;
         Ok(program)
     }
@@ -602,7 +638,11 @@ impl<'a> LowerCtx<'a> {
         let mut program = Program::new(&format!("select_{itable}"))
             .with_relation(&itable, self.schema(&itable).clone())
             .with_result("R", result_schema);
-        program.body = vec![Stmt::Loop(Loop::forelem(&ivar, ix, body))];
+        let mut scan = Loop::forelem(&ivar, ix, body);
+        if let Some(e) = emit_order(sel, &fields)? {
+            scan = scan.with_emit(e);
+        }
+        program.body = vec![Stmt::Loop(scan)];
         crate::ir::validate(&program)?;
         Ok(program)
     }
@@ -834,31 +874,70 @@ mod tests {
     }
 
     #[test]
-    fn order_by_and_limit_bail_instead_of_being_dropped() {
+    fn order_by_limit_lowers_to_topk_annotated_emit_loop() {
+        use crate::ir::EmitOrder;
         let c = catalog();
-        // The parser accepts both clauses...
-        let sel = crate::sql::parser::parse(
-            "SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY url DESC LIMIT 5",
+        // The paper's flagship form: group-by ending in a bounded emit.
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access GROUP BY url ORDER BY count DESC LIMIT 5",
+            &c,
         )
         .unwrap();
-        assert!(sel.order_by.is_some() && sel.limit.is_some());
-        // ...but lowering must refuse them by name, not silently ignore.
-        let err = compile_sql("SELECT url FROM access ORDER BY url", &c)
-            .unwrap_err()
-            .to_string();
+        let Stmt::Loop(emit) = &p.body[1] else {
+            panic!("expected the distinct emit loop")
+        };
+        assert_eq!(emit.emit, Some(EmitOrder::top_k(1, true, 5)));
+        let text = pretty::program(&p);
         assert!(
-            err.contains("ORDER BY `url` is not yet supported in lowering"),
-            "{err}"
+            text.contains("i ∈ paccess.distinct(url)) topk(#1 desc, k=5)"),
+            "{text}"
         );
-        let err = compile_sql("SELECT url FROM access LIMIT 10", &c)
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("LIMIT 10 is not yet supported in lowering"), "{err}");
-        // ORDER BY is reported first when both are present.
-        let err = compile_sql("SELECT url FROM access ORDER BY url LIMIT 3", &c)
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("ORDER BY"), "{err}");
+
+        // Alias resolution: ORDER BY the aliased aggregate column.
+        let p = compile_sql(
+            "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY n ASC",
+            &c,
+        )
+        .unwrap();
+        let Stmt::Loop(emit) = &p.body[1] else {
+            panic!("expected the distinct emit loop")
+        };
+        assert_eq!(emit.emit, Some(EmitOrder::ordered(1, false)));
+
+        // Select-project: the single scan loop carries the annotation.
+        let p = compile_sql("SELECT url FROM access LIMIT 10", &c).unwrap();
+        let Stmt::Loop(scan) = &p.body[0] else {
+            panic!("expected scan loop")
+        };
+        assert_eq!(scan.emit, Some(EmitOrder::first_k(10)));
+
+        // Join: the outer loop of the nest carries the annotation.
+        let p = compile_sql(
+            "SELECT A.field, B.field FROM A JOIN B ON A.b_id = B.id ORDER BY field DESC LIMIT 2",
+            &c,
+        )
+        .unwrap();
+        let Stmt::Loop(outer) = &p.body[0] else {
+            panic!("expected join nest")
+        };
+        assert_eq!(outer.emit, Some(EmitOrder::top_k(0, true, 2)));
+        let [Stmt::Loop(inner)] = outer.body.as_slice() else {
+            panic!("outer body must be the inner loop")
+        };
+        assert!(inner.emit.is_none());
+    }
+
+    #[test]
+    fn order_by_unknown_column_names_result_columns() {
+        let c = catalog();
+        let err = compile_sql(
+            "SELECT url, COUNT(url) AS n FROM access GROUP BY url ORDER BY nope",
+            &c,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("ORDER BY unknown column `nope`"), "{err}");
+        assert!(err.contains("result columns: url, n"), "{err}");
     }
 
     #[test]

@@ -66,6 +66,12 @@ fn candidate(s: &Stmt) -> bool {
     if ix.field_filter.is_some() || ix.distinct.is_some() || ix.partition.is_some() {
         return false;
     }
+    // Ordered/bounded emissions must stay whole: blocking would apply the
+    // bound per partition instead of globally (the parallel driver has a
+    // dedicated top-k fan-out with a k-way merge instead).
+    if l.emit.is_some() {
+        return false;
+    }
     is_parallelizable_with_scalars(l)
 }
 
@@ -171,6 +177,7 @@ pub fn parallelize_direct(p: &mut Program, idx: usize, n: usize) -> Result<()> {
             hi: Expr::var("N"),
         },
         body: vec![Stmt::Loop(inner)],
+        emit: None,
     };
     p.body[idx] = Stmt::Loop(forall);
 

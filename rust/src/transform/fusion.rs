@@ -67,6 +67,12 @@ fn find_fusable_pair(body: &[Stmt]) -> Option<(usize, usize)> {
             if !can_fuse(a, b) {
                 continue;
             }
+            // Ordered/bounded emissions apply per loop; merging two
+            // bodies under one annotation would change which rows the
+            // bound keeps.
+            if a.emit.is_some() || b.emit.is_some() {
+                continue;
+            }
             // j must commute with every statement strictly between i and j.
             for between in &body[i + 1..j] {
                 if !can_reorder(between, &body[j]) {

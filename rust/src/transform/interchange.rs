@@ -51,6 +51,11 @@ fn should_swap(outer: &Loop) -> bool {
     if outer.kind != LoopKind::Forelem {
         return false;
     }
+    // An ordered/bounded emission pins the nest: interchange reorders the
+    // emission sequence, which the emit contract's tie-breaking observes.
+    if outer.emit.is_some() {
+        return false;
+    }
     let Domain::IndexSet(oix) = &outer.domain else {
         return false;
     };
@@ -60,7 +65,7 @@ fn should_swap(outer: &Loop) -> bool {
     let [Stmt::Loop(inner)] = outer.body.as_slice() else {
         return false;
     };
-    if inner.kind != LoopKind::Forelem {
+    if inner.kind != LoopKind::Forelem || inner.emit.is_some() {
         return false;
     }
     let Domain::IndexSet(iix) = &inner.domain else {
@@ -96,6 +101,7 @@ fn swap_nest(outer: &mut Loop) {
         var: outer.var.clone(),
         domain: outer.domain.clone(),
         body: inner.body, // B moves under the (old) outer header
+        emit: None,       // should_swap rejects annotated nests
     };
     outer.kind = inner.kind;
     outer.var = inner.var;

@@ -65,6 +65,11 @@ fn eligible(s: &Stmt, field: &str) -> bool {
     if ix.field_filter.is_some() || ix.distinct.is_some() || ix.partition.is_some() {
         return false;
     }
+    // An ordered/bounded emission contract would be broken by per-value
+    // blocking (the bound would apply per partition, not globally).
+    if l.emit.is_some() {
+        return false;
+    }
     // The partitioning field must exist — validated against the relation
     // schema by the caller via Program::relations.
     let _ = field;
@@ -119,6 +124,7 @@ pub fn parallelize_indirect(p: &mut Program, idx: usize, field: &str, n: usize) 
             parts: Expr::var("N"),
         },
         body: vec![Stmt::Loop(inner)],
+        emit: None,
     };
     let forall = Loop {
         kind: LoopKind::Forall,
@@ -128,6 +134,7 @@ pub fn parallelize_indirect(p: &mut Program, idx: usize, field: &str, n: usize) 
             hi: Expr::var("N"),
         },
         body: vec![Stmt::Loop(value_loop)],
+        emit: None,
     };
     p.body[idx] = Stmt::Loop(forall);
 

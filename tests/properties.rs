@@ -467,6 +467,123 @@ fn ineligible_bodies_stay_on_the_sequential_driver() {
 }
 
 #[test]
+fn top_k_emission_agrees_across_tiers_policies_and_threads() {
+    // ORDER BY count LIMIT k lowered into the IR: the vectorized
+    // `vec.topk` bounded-heap kernel, the tier dispatch, and the morsel
+    // driver's per-worker-heap + k-way merge must all equal the reference
+    // interpreter's full-sort prefix — row-identical here (tie-breaking
+    // is pinned to emission order in every tier), and additionally
+    // checked against a sort-the-full-aggregate oracle with ties handled
+    // as a set.
+    forall_seeds(8, |rng| {
+        let keys = 1 + rng.below(48) as u64;
+        let rows = 200 + rng.below(3000) as usize;
+        let mut m = Multiset::new(Schema::new(vec![("k", DataType::Str)]));
+        for _ in 0..rows {
+            m.push(vec![Value::str(format!("key{}", rng.below(keys)))]);
+        }
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("t", &m).unwrap();
+        let k = rng.below(12) as usize;
+        let desc = rng.below(2) == 1;
+        let dir = if desc { "DESC" } else { "ASC" };
+        let q = format!("SELECT k, COUNT(k) AS c FROM t GROUP BY k ORDER BY c {dir} LIMIT {k}");
+        let p = forelem::sql::compile_sql(&q, &catalog.schemas()).map_err(|e| e.to_string())?;
+        let reference = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+        let ref_rows = reference.result().unwrap().rows();
+
+        // Oracle: full aggregate, sorted by count, truncated; the count
+        // sequence must match exactly and each emitted key must carry
+        // its true count (ties as a set: any tied key is acceptable).
+        let full_q = "SELECT k, COUNT(k) AS c FROM t GROUP BY k";
+        let full = forelem::exec::run(
+            &forelem::sql::compile_sql(full_q, &catalog.schemas()).unwrap(),
+            &catalog,
+        )
+        .map_err(|e| e.to_string())?;
+        let mut counts: Vec<i64> = full
+            .result()
+            .unwrap()
+            .rows()
+            .iter()
+            .map(|r| r[1].as_int().unwrap())
+            .collect();
+        counts.sort_unstable();
+        if desc {
+            counts.reverse();
+        }
+        counts.truncate(k);
+        let got_counts: Vec<i64> = ref_rows.iter().map(|r| r[1].as_int().unwrap()).collect();
+        prop_assert!(
+            got_counts == counts,
+            "`{q}`: prefix counts {got_counts:?} != oracle {counts:?}"
+        );
+        let true_count: std::collections::HashMap<String, i64> = full
+            .result()
+            .unwrap()
+            .rows()
+            .iter()
+            .map(|r| (r[0].to_string(), r[1].as_int().unwrap()))
+            .collect();
+        for r in ref_rows {
+            prop_assert!(
+                true_count[&r[0].to_string()] == r[1].as_int().unwrap(),
+                "`{q}`: emitted key carries a wrong count"
+            );
+        }
+
+        // Vectorized tier: row-identical, and the topk kernel fires.
+        let vec_out = forelem::exec::run_vectorized(&p, &catalog)
+            .map_err(|e| e.to_string())?
+            .ok_or_else(|| format!("vectorized tier skipped `{q}`"))?;
+        prop_assert!(
+            vec_out.result().unwrap().rows() == ref_rows,
+            "`{q}`: vectorized emission diverged"
+        );
+        prop_assert!(
+            vec_out.stats.idioms.contains(&"vec.topk".to_string()),
+            "`{q}`: missing vec.topk tag: {:?}",
+            vec_out.stats.idioms
+        );
+
+        // Tier dispatch (must skip the unordered idiom kernels).
+        let dispatched =
+            forelem::exec::run_compiled(&p, &catalog, None).map_err(|e| e.to_string())?;
+        prop_assert!(
+            dispatched.result().unwrap().rows() == ref_rows,
+            "`{q}`: run_compiled diverged"
+        );
+
+        // Optimizer on: the topk strategy decision surfaces in the tags.
+        let mut opt_p = p.clone();
+        forelem::opt::optimize(&mut opt_p, &catalog).map_err(|e| e.to_string())?;
+        let opt_out =
+            forelem::exec::run_compiled(&opt_p, &catalog, None).map_err(|e| e.to_string())?;
+        prop_assert!(
+            opt_out.result().unwrap().rows() == ref_rows,
+            "`{q}`: optimized plan diverged"
+        );
+        prop_assert!(
+            opt_out.stats.idioms.iter().any(|t| t.starts_with("opt.topk_")),
+            "`{q}`: missing opt.topk_* tag: {:?}",
+            opt_out.stats.idioms
+        );
+
+        // Morsel driver: every policy × random threads, row-identical.
+        for policy in Policy::ALL {
+            let threads = 2 + rng.below(7) as usize;
+            let par = forelem::exec::run_parallel_with_policy(&p, &catalog, threads, policy)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                par.result().unwrap().rows() == ref_rows,
+                "`{q}` diverged under {policy:?} (threads={threads})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn sum_aggregate_matches_scalar_fold() {
     forall_seeds(15, |rng| {
         let m = random_multiset(rng, 300);
