@@ -1,0 +1,180 @@
+//! Compressed-domain execution vs decode-up-front.
+//!
+//! The vectorized tier runs equality filters and fused aggregations
+//! directly on compressed storage: string filters resolve once against
+//! the dictionary and compare u32 codes (`vec.dict_filter`), filters
+//! over RLE integer columns compare once per run and emit whole runs
+//! (`vec.rle_filter`), and fused group-by aggregations multiply by run
+//! length with one accumulator probe per run (`vec.rle_agg`). The
+//! alternative strategy — what `opt.compressed_scan` decides against —
+//! is to decode the compressed columns back to flat values up front and
+//! run the same queries over the raw layout.
+//!
+//! The bench builds one table (dict-encoded url column, RLE status-code
+//! column, plain int payload), runs a dict filter + an RLE filter + a
+//! fused RLE group-by on the vectorized tier, and times the
+//! compressed-domain path against decode-up-front (decode included in
+//! the timing: that is the cost the in-place kernels avoid).
+//!
+//! Acceptance bar: compressed-domain beats decode-up-front ≥ 2×; a
+//! PASS/FAIL line is printed and the headline speedup lands in
+//! `BENCH_compressed_scan.json` for the CI baseline diff
+//! (`ci/check_bench.py`).
+//!
+//! Row count scales via BENCH_ROWS.
+
+use forelem::exec;
+use forelem::ir::{DataType, Multiset, Schema, Value};
+use forelem::sql::compile_sql;
+use forelem::storage::{Column, StorageCatalog, Table};
+use forelem::util::{fmt_duration, time_fn, write_bench_json};
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    // Enough distinct urls that the dict filter is selective, and runs
+    // long enough that the RLE layout clears the compressor's 2x bar.
+    let urls = 4096usize;
+    let run = 512usize;
+    let codes = 1009i64;
+
+    let mut m = Multiset::new(Schema::new(vec![
+        ("url", DataType::Str),
+        ("code", DataType::Int),
+        ("n", DataType::Int),
+    ]));
+    for i in 0..rows {
+        m.push(vec![
+            Value::str(format!("/u{}", i % urls)),
+            Value::Int((i / run) as i64 % codes),
+            Value::Int((i % 13) as i64),
+        ]);
+    }
+    let mut t = Table::from_multiset(&m).unwrap();
+    t.dict_encode_field(0).unwrap();
+    assert!(t.compress_int_field(1).unwrap(), "code column must compress");
+    let mut packed = StorageCatalog::new();
+    packed.insert("t", t);
+    let packed_t = packed.get("t").unwrap().clone();
+    println!(
+        "# Compressed scan: {rows} rows — url {}, code {}",
+        packed_t.column(0).scheme(),
+        packed_t.column(1).scheme()
+    );
+
+    let queries = [
+        "SELECT n FROM t WHERE url = '/u3'",
+        "SELECT n FROM t WHERE code = 300",
+        "SELECT code, SUM(n) FROM t GROUP BY code",
+    ];
+    let programs: Vec<_> = queries
+        .iter()
+        .map(|q| compile_sql(q, &packed.schemas()).unwrap())
+        .collect();
+
+    // Sanity: the compressed-domain kernels actually fire in place.
+    let tags = ["vec.dict_filter", "vec.rle_filter", "vec.rle_agg"];
+    for (p, tag) in programs.iter().zip(tags) {
+        let out = exec::run_vectorized(p, &packed)
+            .unwrap()
+            .expect("vectorized tier must take these shapes");
+        assert!(
+            out.stats.idioms.contains(&tag.to_string()),
+            "missing {tag}: {:?}",
+            out.stats.idioms
+        );
+    }
+
+    // Decode-up-front: materialize raw columns (dict keys back to
+    // strings, RLE back to a flat i64 vector) before executing.
+    let decode = |t: &Table| -> Table {
+        let columns = t
+            .columns
+            .iter()
+            .map(|c| match c {
+                Column::DictStrs { keys, dict } => Column::Strs(
+                    keys.iter()
+                        .map(|&k| dict.decode(k).expect("key in range").clone())
+                        .collect(),
+                ),
+                Column::CompressedInts(ci) => Column::Ints(ci.decompress()),
+                other => other.clone(),
+            })
+            .collect();
+        Table::new(t.schema.clone(), columns).unwrap()
+    };
+
+    let run_all = |catalog: &StorageCatalog| -> usize {
+        programs
+            .iter()
+            .map(|p| {
+                exec::run_vectorized(p, catalog)
+                    .unwrap()
+                    .expect("vectorized tier must take these shapes")
+                    .result()
+                    .unwrap()
+                    .len()
+            })
+            .sum()
+    };
+
+    // Both strategies must agree bag-for-bag on every query.
+    {
+        let mut c = StorageCatalog::new();
+        c.insert("t", decode(&packed_t));
+        for (p, q) in programs.iter().zip(queries) {
+            let a = exec::run_vectorized(p, &packed).unwrap().unwrap();
+            let b = exec::run_vectorized(p, &c).unwrap().unwrap();
+            assert!(
+                a.result().unwrap().bag_eq(b.result().unwrap()),
+                "`{q}`: compressed-domain and decoded results disagree"
+            );
+        }
+    }
+
+    let compressed = || run_all(&packed);
+    let decoded = || {
+        let mut c = StorageCatalog::new();
+        c.insert("t", decode(&packed_t));
+        run_all(&c)
+    };
+
+    let nrows = rows as f64 / 1e6;
+    let decoded_t = time_fn(1, 5, decoded);
+    let compressed_t = time_fn(1, 5, compressed);
+    let throughput = |d: std::time::Duration| nrows / d.as_secs_f64();
+    println!(
+        "decode-up-front (materialize raw, then scan)  {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(decoded_t.median()),
+        throughput(decoded_t.median())
+    );
+    println!(
+        "compressed-domain (dict codes + RLE runs)     {:>10}  {:>8.2} Mrows/s",
+        fmt_duration(compressed_t.median()),
+        throughput(compressed_t.median())
+    );
+
+    let speedup = decoded_t.median().as_secs_f64() / compressed_t.median().as_secs_f64();
+    println!(
+        "compressed-domain speedup over decode-up-front: {speedup:.1}x — {}",
+        if speedup >= 2.0 {
+            "PASS (>= 2x)"
+        } else {
+            "FAIL (< 2x acceptance bar)"
+        }
+    );
+
+    let path = write_bench_json(
+        "compressed_scan",
+        rows,
+        &[
+            ("decode-up-front", decoded_t.median().as_nanos()),
+            ("compressed-domain", compressed_t.median().as_nanos()),
+        ],
+        speedup,
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
+}

@@ -255,9 +255,10 @@ impl Engine {
 
     /// Human-readable compilation report: the optimized IR, the pass
     /// trace, the optimizer's cost section (estimated rows in/out per
-    /// loop and every `opt.*` decision), and — explain-analyze style —
-    /// which execution tier actually fired with its final
-    /// `ExecStats.idioms` tags.
+    /// loop and every `opt.*` decision), the physical storage scheme of
+    /// every referenced column (`int` / `dict[...]` / `rle[...]` /
+    /// `range`), and — explain-analyze style — which execution tier
+    /// actually fired with its final `ExecStats.idioms` tags.
     pub fn explain(&mut self, query: &str) -> Result<String> {
         let compiled = self.compile(query)?;
         let executed = self.execute(&compiled)?;
@@ -288,6 +289,20 @@ impl Engine {
                     e.rows_in,
                     e.rows_out
                 ));
+            }
+        }
+        // Physical storage scheme per column, from the live catalog (the
+        // import path and the reformat pass both re-encode columns).
+        for rel in compiled.program.relations.keys() {
+            if let Ok(t) = self.catalog.get(rel) {
+                let schemes: Vec<String> = t
+                    .schema
+                    .fields()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, f)| format!("{}:{}", f.name, t.column(i).scheme()))
+                    .collect();
+                out.push_str(&format!("\n-- storage: `{rel}` {}", schemes.join(" ")));
             }
         }
         let idioms = &executed.stats.idioms;
@@ -489,6 +504,40 @@ mod optimizer_tests {
             .unwrap();
         assert!(text.contains("-- tier: idiom-kernel"), "{text}");
         assert!(text.contains("group_count"), "{text}");
+    }
+
+    #[test]
+    fn explain_shows_per_column_storage_schemes() {
+        let mut e = join_engine();
+        let text = e.explain(JQ).unwrap();
+        assert!(text.contains("-- storage: `dim`"), "{text}");
+        assert!(text.contains("-- storage: `fact`"), "{text}");
+        assert!(text.contains("a_id:int"), "{text}");
+        assert!(text.contains("g:str"), "{text}");
+    }
+
+    #[test]
+    fn compressed_storage_flows_through_explain_and_idioms() {
+        use crate::storage::Table;
+        let mut m = Multiset::new(Schema::new(vec![
+            ("code", DataType::Int),
+            ("n", DataType::Int),
+        ]));
+        for i in 0..4000i64 {
+            m.push(vec![Value::Int(i / 100), Value::Int(i % 13)]);
+        }
+        let mut t = Table::from_multiset(&m).unwrap();
+        assert!(t.compress_int_field(0).unwrap());
+        let mut c = StorageCatalog::new();
+        c.insert("logs", t);
+        let mut e = Engine::new(c);
+        let text = e.explain("SELECT n FROM logs WHERE code = 7").unwrap();
+        assert!(
+            text.contains("-- storage: `logs` code:rle[40 runs] n:int"),
+            "{text}"
+        );
+        assert!(text.contains("[opt.compressed_scan]"), "{text}");
+        assert!(text.contains("vec.rle_filter"), "{text}");
     }
 
     #[test]

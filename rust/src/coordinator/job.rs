@@ -134,6 +134,28 @@ fn dense_width(table: &Table, key_field: usize) -> Option<usize> {
                 None
             }
         }
+        Column::CompressedInts(c) => {
+            // Same density test as plain integers, but min/max come from
+            // the run values (or the range endpoints) — never a decode.
+            let (min, max) = match c.runs() {
+                Some(runs) if runs.is_empty() => (0, 0),
+                Some(runs) => runs
+                    .iter()
+                    .fold((i64::MAX, i64::MIN), |(lo, hi), &(v, _)| {
+                        (lo.min(v), hi.max(v))
+                    }),
+                None if c.is_empty() => (0, 0),
+                None => {
+                    let (a, b) = (c.get(0), c.get(c.len() - 1));
+                    (a.min(b), a.max(b))
+                }
+            };
+            if min >= 0 && (max as usize) < c.len().max(1024) * 4 {
+                Some(max as usize + 1)
+            } else {
+                None
+            }
+        }
         _ => None,
     }
 }
@@ -261,6 +283,13 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
                         count_batch_i64_f64(&keys[mlo..mhi], &mut acc);
                     }
                 }
+                (AggOp::Count, Column::CompressedInts(c)) => {
+                    // Run-domain count: one accumulator add per run,
+                    // weighted by run length — rows are never iterated.
+                    for (k, rlo, rhi) in c.run_windows(lo, hi) {
+                        acc[k as usize] += (rhi - rlo) as f64;
+                    }
+                }
                 (AggOp::Sum, kcol) => {
                     let vf = job.val_field.expect("sum job needs val_field");
                     // Aligned [lo, hi) window of values: borrowed when the
@@ -287,6 +316,16 @@ pub fn process_chunk(job: &AggJob, lo: usize, hi: usize) -> Partial {
                             for (mlo, mhi) in morsel_ranges(lo, hi) {
                                 let w = &window[mlo - lo..mhi - lo];
                                 sum_batch_i64(&keys[mlo..mhi], w, &mut acc);
+                            }
+                        }
+                        Column::CompressedInts(c) => {
+                            // One accumulator-slot resolution per run of
+                            // the key column; value adds stay per-row.
+                            for (k, rlo, rhi) in c.run_windows(lo, hi) {
+                                let a = &mut acc[k as usize];
+                                for &v in &window[rlo - lo..rhi - lo] {
+                                    *a += v;
+                                }
                             }
                         }
                         _ => {
@@ -368,6 +407,8 @@ fn process_join_chunk(job: &AggJob, probe: &JoinProbe, lo: usize, hi: usize) -> 
                 let k = match kcol {
                     Column::DictStrs { keys, .. } => keys[r] as usize,
                     Column::Ints(keys) => keys[r] as usize,
+                    // O(log runs) via the prefix-sum index.
+                    Column::CompressedInts(c) => c.get(r) as usize,
                     _ => t.value(r, job.key_field).as_int().unwrap_or(0) as usize,
                 };
                 acc[k] += weight(r, n);
@@ -517,6 +558,51 @@ mod tests {
         pairs.sort_by(|x, y| x.0.cmp(&y.0));
         // key 0: (1.5 + 0.5) * 2 matches; key 1: 2.0 * 1 match.
         assert_eq!(pairs, vec![(Value::Int(0), 4.0), (Value::Int(1), 2.0)]);
+    }
+
+    #[test]
+    fn compressed_key_chunks_run_in_run_domain() {
+        use crate::storage::CompressedInts;
+        // 40 runs of 5 rows: key = run index, val = row index. Chunk
+        // boundaries are deliberately not run-aligned so the run-window
+        // clipping is exercised.
+        let keys: Vec<i64> = (0..200).map(|i| (i / 5) as i64).collect();
+        let c = CompressedInts::compress(&keys).expect("run-length data compresses");
+        assert!(matches!(c, CompressedInts::Rle { .. }));
+        let schema = Schema::new(vec![("k", DataType::Int), ("v", DataType::Float)]);
+        let t = Arc::new(
+            Table::new(
+                schema,
+                vec![
+                    Column::CompressedInts(c),
+                    Column::Floats((0..200).map(|i| i as f64).collect()),
+                ],
+            )
+            .unwrap(),
+        );
+        for job in [AggJob::count(t.clone(), 0), AggJob::sum(t.clone(), 0, 1)] {
+            assert!(job.num_keys.is_some(), "compressed int keys are dense");
+            let mut whole = Acc::for_job(&job);
+            whole.merge(process_chunk(&job, 0, 200));
+            let mut chunked = Acc::for_job(&job);
+            chunked.merge(process_chunk(&job, 0, 7));
+            chunked.merge(process_chunk(&job, 7, 123));
+            chunked.merge(process_chunk(&job, 123, 200));
+            let mut a = whole.into_pairs(&job);
+            let mut b = chunked.into_pairs(&job);
+            a.sort_by(|x, y| x.0.cmp(&y.0));
+            b.sort_by(|x, y| x.0.cmp(&y.0));
+            assert_eq!(a, b);
+            assert_eq!(a.len(), 40);
+            for (key, x) in &a {
+                let k = key.as_int().unwrap();
+                let want = match job.op {
+                    AggOp::Count => 5.0,
+                    AggOp::Sum => (5 * k..5 * k + 5).map(|i| i as f64).sum(),
+                };
+                assert_eq!(*x, want, "key {k}");
+            }
+        }
     }
 
     #[test]

@@ -796,7 +796,7 @@ impl<'a> Compiler<'a> {
         let key_field = table.schema.field_id(field)?;
         if !matches!(
             table.column(key_field),
-            Column::Ints(_) | Column::DictStrs { .. } | Column::Strs(_)
+            Column::Ints(_) | Column::DictStrs { .. } | Column::Strs(_) | Column::CompressedInts(_)
         ) {
             return None;
         }

@@ -327,9 +327,13 @@ pub fn run_parallel_compiled_with_policy(
                     |st, fast| {
                         if let Some(fa) = fast {
                             let tag = fa.idiom();
+                            let extra = fa.extra_idiom();
                             let array = sl.fast.expect("ctx implies fast").array();
                             fa.finish(&mut st.arrays[array]);
                             st.note_idiom(tag);
+                            if let Some(extra) = extra {
+                                st.note_idiom(extra);
+                            }
                         }
                         Ok(())
                     },

@@ -31,7 +31,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::ir::{AccumOp, BinOp, Program, Tuple, UnOp, Value};
-use crate::storage::{Column, Dictionary, StorageCatalog, Table};
+use crate::storage::{Column, CompressedInts, Dictionary, StorageCatalog, Table};
 use crate::util::FxHashMap;
 
 use super::compile::{
@@ -54,6 +54,97 @@ pub fn morsel_ranges(lo: usize, hi: usize) -> impl Iterator<Item = (usize, usize
     (lo..hi)
         .step_by(BATCH)
         .map(move |base| (base, (base + BATCH).min(hi)))
+}
+
+/// An equality filter resolved into its column's *physical* domain, once
+/// per scan: string keys become dictionary codes (one
+/// [`Dictionary::lookup`], so the per-row loops compare `u32` codes and
+/// never strings), integer keys over flat columns compare raw `i64`
+/// slices, and compressed columns are solved per run / arithmetically in
+/// [`CompressedInts::find_eq_in`]. Only pairings the typed kernels cannot
+/// express exactly (e.g. cross-type numeric keys, which `Value` equality
+/// admits) fall back to the boxed comparison, so the match set is always
+/// identical to the interpreter's.
+pub(crate) enum EqFilter<'a> {
+    /// Flat `i64` slice equality (autovectorization-friendly tight loop).
+    Ints(&'a [i64], i64),
+    /// Dictionary-code equality over the `u32` key column.
+    Dict(&'a [u32], u32),
+    /// Run-domain equality: whole-run emission for RLE, closed-form for
+    /// enumerated ranges.
+    Compressed(&'a CompressedInts, i64),
+    /// Statically unsatisfiable (the filter string is absent from the
+    /// column's dictionary): no row can match.
+    Never,
+    /// Boxed `Value` comparison — the reference semantics.
+    Boxed(&'a Column, &'a Value),
+}
+
+impl<'a> EqFilter<'a> {
+    pub(crate) fn new(col: &'a Column, key: &'a Value) -> EqFilter<'a> {
+        match (col, key) {
+            (Column::Ints(vals), Value::Int(k)) => EqFilter::Ints(vals, *k),
+            (Column::DictStrs { keys, dict }, Value::Str(s)) => match dict.lookup(s) {
+                Some(code) => EqFilter::Dict(keys, code),
+                None => EqFilter::Never,
+            },
+            (Column::CompressedInts(c), Value::Int(k)) => EqFilter::Compressed(c, *k),
+            _ => EqFilter::Boxed(col, key),
+        }
+    }
+
+    /// Append the row ids in `[lo, hi)` whose column value matches onto
+    /// `sel` (in ascending row order).
+    pub(crate) fn select(&self, lo: usize, hi: usize, sel: &mut Vec<usize>) {
+        match self {
+            EqFilter::Ints(vals, k) => {
+                for (i, &v) in vals[lo..hi].iter().enumerate() {
+                    if v == *k {
+                        sel.push(lo + i);
+                    }
+                }
+            }
+            EqFilter::Dict(keys, code) => {
+                for (i, &c) in keys[lo..hi].iter().enumerate() {
+                    if c == *code {
+                        sel.push(lo + i);
+                    }
+                }
+            }
+            EqFilter::Compressed(c, k) => c.find_eq_in(*k, lo, hi, sel),
+            EqFilter::Never => {}
+            EqFilter::Boxed(col, key) => {
+                for row in lo..hi {
+                    if col.value(row) == **key {
+                        sel.push(row);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-row residual test, for the ordered-emission paths that must
+    /// walk the global row sequence anyway. O(log runs) on compressed
+    /// columns via the prefix-sum index.
+    pub(crate) fn matches(&self, row: usize) -> bool {
+        match self {
+            EqFilter::Ints(vals, k) => vals[row] == *k,
+            EqFilter::Dict(keys, code) => keys[row] == *code,
+            EqFilter::Compressed(c, k) => c.get(row) == *k,
+            EqFilter::Never => false,
+            EqFilter::Boxed(col, key) => col.value(row) == **key,
+        }
+    }
+
+    /// The idiom tag this filter pushes when it drives a scan, if it is
+    /// one of the compressed-domain kernels.
+    pub(crate) fn idiom(&self) -> Option<&'static str> {
+        match self {
+            EqFilter::Dict(..) | EqFilter::Never => Some("vec.dict_filter"),
+            EqFilter::Compressed(..) => Some("vec.rle_filter"),
+            _ => None,
+        }
+    }
 }
 
 /// Hash table over the build side of a compiled join: key value → row ids
@@ -705,19 +796,18 @@ impl VecState {
             Some((fid, prog)) => Some((*fid, self.eval_value(cp, prog)?)),
             None => None,
         };
+        let efilt = filter
+            .as_ref()
+            .map(|(fid, key)| EqFilter::new(jl.outer.column(*fid), key));
+        if let Some(tag) = efilt.as_ref().and_then(|f| f.idiom()) {
+            self.note_idiom(tag);
+        }
         let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
         for (base, end) in morsel_ranges(lo, hi) {
             self.stats.rows_visited += (end - base) as u64;
             sel.clear();
-            match &filter {
-                Some((fid, key)) => {
-                    let col = jl.outer.column(*fid);
-                    for row in base..end {
-                        if col.value(row) == *key {
-                            sel.push(row);
-                        }
-                    }
-                }
+            match &efilt {
+                Some(f) => f.select(base, end, &mut sel),
                 None => sel.extend(base..end),
             }
             for &row in &sel {
@@ -1125,18 +1215,18 @@ impl VecState {
         self.cursors[sl.cursor].table = Some(sl.table.clone());
 
         if let Some((fid, key)) = filter {
-            // Equality-filtered scan: build a selection vector per batch
-            // and run the body over matches.
-            let col = sl.table.column(*fid);
+            // Equality-filtered scan: resolve the key into the column's
+            // physical domain once, then build a selection vector per
+            // batch and run the body over matches.
+            let f = EqFilter::new(sl.table.column(*fid), key);
+            if let Some(tag) = f.idiom() {
+                self.note_idiom(tag);
+            }
             let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
             for (base, end) in morsel_ranges(lo, hi) {
                 self.stats.rows_visited += (end - base) as u64;
                 sel.clear();
-                for row in base..end {
-                    if col.value(row) == *key {
-                        sel.push(row);
-                    }
-                }
+                f.select(base, end, &mut sel);
                 for &row in &sel {
                     self.stats.rows_visited += 1;
                     self.cursors[sl.cursor].row = row;
@@ -1174,11 +1264,14 @@ impl VecState {
     ) -> Result<()> {
         debug_assert!(self.topk.is_some(), "emit frame must be installed");
         self.cursors[sl.cursor].table = Some(sl.table.clone());
-        let fcol = filter.map(|(fid, key)| (sl.table.column(*fid), key));
+        let filt = filter.map(|(fid, key)| EqFilter::new(sl.table.column(*fid), key));
+        if let Some(tag) = filt.as_ref().and_then(|f| f.idiom()) {
+            self.note_idiom(tag);
+        }
         let run_row = |st: &mut Self, global_idx: usize, row: usize| -> Result<()> {
             st.stats.rows_visited += 1;
-            if let Some((col, key)) = &fcol {
-                if col.value(row) != **key {
+            if let Some(f) = &filt {
+                if !f.matches(row) {
                     return Ok(());
                 }
             }
@@ -1216,8 +1309,12 @@ impl VecState {
         };
         st.update(lo, hi);
         let tag = st.idiom();
+        let extra = st.extra_idiom();
         st.finish(&mut self.arrays[fast.array()]);
         self.note_idiom(tag);
+        if let Some(extra) = extra {
+            self.note_idiom(extra);
+        }
         true
     }
 
@@ -1294,6 +1391,27 @@ pub(crate) enum FastAggState<'a> {
         vals: &'a [i64],
         map: FxHashMap<Arc<str>, i64>,
     },
+    /// Run-domain count over a compressed integer key column: one map
+    /// update per run, adding the run length — never iterating rows.
+    CountRle {
+        col: &'a CompressedInts,
+        map: FxHashMap<i64, i64>,
+    },
+    /// Run-domain float sum: one map probe per run of the key column;
+    /// the value adds stay per-row in row order so float rounding is
+    /// identical to the interpreter's fold.
+    SumRleFloat {
+        col: &'a CompressedInts,
+        vals: &'a [f64],
+        map: FxHashMap<i64, f64>,
+    },
+    /// Run-domain integer sum: the run's values are pre-folded (wrapping
+    /// addition is associative) and added with one map probe per run.
+    SumRleInt {
+        col: &'a CompressedInts,
+        vals: &'a [i64],
+        map: FxHashMap<i64, i64>,
+    },
 }
 
 impl<'a> FastAggState<'a> {
@@ -1313,6 +1431,10 @@ impl<'a> FastAggState<'a> {
                 }),
                 Column::Strs(keys) => Some(FastAggState::CountStrs {
                     keys,
+                    map: FxHashMap::default(),
+                }),
+                Column::CompressedInts(col) => Some(FastAggState::CountRle {
+                    col,
                     map: FxHashMap::default(),
                 }),
                 _ => None,
@@ -1360,6 +1482,20 @@ impl<'a> FastAggState<'a> {
                     vals,
                     map: FxHashMap::default(),
                 }),
+                (Column::CompressedInts(col), Column::Floats(vals)) => {
+                    Some(FastAggState::SumRleFloat {
+                        col,
+                        vals,
+                        map: FxHashMap::default(),
+                    })
+                }
+                (Column::CompressedInts(col), Column::Ints(vals)) => {
+                    Some(FastAggState::SumRleInt {
+                        col,
+                        vals,
+                        map: FxHashMap::default(),
+                    })
+                }
                 _ => None,
             },
         }
@@ -1441,6 +1577,26 @@ impl<'a> FastAggState<'a> {
                     }
                 }
             }
+            FastAggState::CountRle { col, map } => {
+                for (k, rlo, rhi) in col.run_windows(lo, hi) {
+                    *map.entry(k).or_insert(0) += (rhi - rlo) as i64;
+                }
+            }
+            FastAggState::SumRleFloat { col, vals, map } => {
+                for (k, rlo, rhi) in col.run_windows(lo, hi) {
+                    let e = map.entry(k).or_insert(0.0);
+                    for &v in &vals[rlo..rhi] {
+                        *e += v;
+                    }
+                }
+            }
+            FastAggState::SumRleInt { col, vals, map } => {
+                for (k, rlo, rhi) in col.run_windows(lo, hi) {
+                    let run = vals[rlo..rhi].iter().fold(0i64, |a, &v| a.wrapping_add(v));
+                    let e = map.entry(k).or_insert(0);
+                    *e = e.wrapping_add(run);
+                }
+            }
         }
     }
 
@@ -1505,6 +1661,21 @@ impl<'a> FastAggState<'a> {
                     store.insert(vec![Value::Str(s)], Value::Int(v));
                 }
             }
+            FastAggState::CountRle { map, .. } => {
+                for (k, n) in map {
+                    store.insert(vec![Value::Int(k)], Value::Int(n));
+                }
+            }
+            FastAggState::SumRleFloat { map, .. } => {
+                for (k, v) in map {
+                    store.insert(vec![Value::Int(k)], Value::Float(v));
+                }
+            }
+            FastAggState::SumRleInt { map, .. } => {
+                for (k, v) in map {
+                    store.insert(vec![Value::Int(k)], Value::Int(v));
+                }
+            }
         }
     }
 
@@ -1513,8 +1684,21 @@ impl<'a> FastAggState<'a> {
         match self {
             FastAggState::CountDense { .. }
             | FastAggState::CountInts { .. }
-            | FastAggState::CountStrs { .. } => "vec.count",
+            | FastAggState::CountStrs { .. }
+            | FastAggState::CountRle { .. } => "vec.count",
             _ => "vec.sum",
+        }
+    }
+
+    /// Additional tag for the run-domain states: kernels that fold whole
+    /// RLE runs (count × run length, one map probe per run) also push
+    /// `vec.rle_agg` so run-domain routing stays assertable.
+    pub(crate) fn extra_idiom(&self) -> Option<&'static str> {
+        match self {
+            FastAggState::CountRle { .. }
+            | FastAggState::SumRleFloat { .. }
+            | FastAggState::SumRleInt { .. } => Some("vec.rle_agg"),
+            _ => None,
         }
     }
 }

@@ -1,6 +1,6 @@
 //! The optimizer's decision pass: consume estimates, rewrite the IR.
 //!
-//! Four executable decisions, each recorded as a [`Decision`] whose
+//! Five executable decisions, each recorded as a [`Decision`] whose
 //! dot-namespaced tag lands in `Program::opt_tags` (and from there in
 //! `ExecStats.idioms`):
 //!
@@ -30,6 +30,17 @@
 //!   estimated emitted-row count (NDV of the distinct field for
 //!   group-by emit loops), and the materialize+sort strategy otherwise
 //!   (no `LIMIT`, or `k` covers the whole domain).
+//! * **`opt.compressed_scan`** — a filtered scan or fused aggregation
+//!   whose key column is stored compressed (RLE/range integers) or
+//!   dictionary-encoded executes in the compressed domain: equality
+//!   filters compare codes or whole runs, fused aggregations multiply by
+//!   run lengths (`vec.dict_filter` / `vec.rle_filter` / `vec.rle_agg`).
+//!   The choice is statistics-driven: run-domain kernels win when
+//!   [`ColumnStats::run_count`] is materially below the row count (each
+//!   run costs one comparison/accumulator probe instead of one per row);
+//!   a degenerate layout with runs ≈ rows gets no tag — decoding up
+//!   front would do as well, and the typed per-run kernels are never
+//!   worse, so no program rewrite is needed either way.
 
 use std::collections::BTreeMap;
 
@@ -39,7 +50,7 @@ use crate::analysis::choose_strategy;
 use crate::ir::{
     AccumOp, BinOp, Domain, Expr, IndexSet, Loop, LoopKind, Program, Stmt, Strategy, TopKStrategy,
 };
-use crate::storage::StorageCatalog;
+use crate::storage::{Column, StorageCatalog};
 
 use super::estimate::{conjuncts, expr_pure, reorderable_conjunct, Estimator, LoopEstimate};
 
@@ -123,6 +134,9 @@ pub fn optimize(p: &mut Program, catalog: &StorageCatalog) -> Result<OptReport> 
     }
     for s in &mut p.body {
         choose_topk_strategy(s, &est, &mut report);
+    }
+    for s in &p.body {
+        choose_compressed_scan(s, catalog, &mut report);
     }
     report.estimates = est.loop_estimates(p);
     for tag in report.tags() {
@@ -409,6 +423,86 @@ fn choose_strategies(s: &mut Stmt, probes: u64, est: &Estimator, report: &mut Op
     }
 }
 
+/// Code-domain vs decode-up-front for scans over compressed columns.
+/// Inspects the two positions where the vectorized tier has compressed
+/// kernels — the index-set equality filter's field and the key field of
+/// a fused-aggregation body — and records `opt.compressed_scan` when
+/// column statistics say the compressed layout pays off in place:
+/// dictionary codes always do (one `Dictionary::lookup`, then u32
+/// compares), enumerated ranges solve filters arithmetically, and RLE
+/// wins whenever runs are materially fewer than rows. This pass only
+/// records the choice — the kernels themselves are never worse than the
+/// decoded path, so no rewrite is needed when the stats say "decode".
+fn choose_compressed_scan(s: &Stmt, catalog: &StorageCatalog, report: &mut OptReport) {
+    let Stmt::Loop(l) = s else { return };
+    for b in &l.body {
+        choose_compressed_scan(b, catalog, report);
+    }
+    let Domain::IndexSet(ix) = &l.domain else {
+        return;
+    };
+    let Ok(table) = catalog.get(&ix.relation) else {
+        return;
+    };
+    // Fields in a kernel position: the equality filter's field, plus the
+    // key of a single-accumulation (fused group-by) body.
+    let mut fields: Vec<&String> = Vec::new();
+    if let Some((f, _)) = &ix.field_filter {
+        fields.push(f);
+    }
+    if let [Stmt::Accum { indices, op, .. }] = l.body.as_slice() {
+        if let (AccumOp::Add, [Expr::Field { var, field }]) = (op, indices.as_slice()) {
+            if var == &l.var && !fields.contains(&field) {
+                fields.push(field);
+            }
+        }
+    }
+    for field in fields {
+        let Some(fid) = table.schema.field_id(field) else {
+            continue;
+        };
+        match table.column(fid) {
+            Column::CompressedInts(c) => {
+                let Ok(cs) = catalog.column_stats(&ix.relation, fid) else {
+                    continue;
+                };
+                let runs = cs.run_count.unwrap_or(cs.rows);
+                // Enumerated ranges are closed-form either way; RLE must
+                // clear a 2x run advantage to beat decoding up front.
+                if c.runs().is_some() && runs.saturating_mul(2) > cs.rows.max(1) {
+                    continue;
+                }
+                report.decisions.push(Decision {
+                    tag: "opt.compressed_scan".into(),
+                    detail: format!(
+                        "`{}`.{field}: code-domain {} — {runs} runs / {} rows, ndv {}",
+                        ix.relation,
+                        c.scheme(),
+                        cs.rows,
+                        cs.ndv
+                    ),
+                });
+            }
+            Column::DictStrs { dict, .. } => {
+                // Only the filter position: a string equality resolved
+                // once against the dictionary, then compared as u32.
+                if ix.field_filter.as_ref().is_some_and(|(f, _)| f == field) {
+                    report.decisions.push(Decision {
+                        tag: "opt.compressed_scan".into(),
+                        detail: format!(
+                            "`{}`.{field}: dict-code filter — {} keys / {} rows",
+                            ix.relation,
+                            dict.len(),
+                            table.len()
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -657,6 +751,78 @@ mod tests {
         assert_eq!(nest_relations(&p), ("small".into(), "big".into()));
         // The top-k decision still fires.
         assert!(report.has("opt.topk_heap"), "{report:?}");
+    }
+
+    /// `logs(code rle-int, url dict-str, n int)` with compressed storage.
+    fn compressed_catalog() -> StorageCatalog {
+        use crate::storage::Table;
+        let mut m = Multiset::new(Schema::new(vec![
+            ("code", DataType::Int),
+            ("url", DataType::Str),
+            ("n", DataType::Int),
+        ]));
+        for i in 0..4000i64 {
+            m.push(vec![
+                Value::Int(i / 100),
+                Value::str(format!("/u{}", i % 7)),
+                Value::Int(i % 13),
+            ]);
+        }
+        let mut t = Table::from_multiset(&m).unwrap();
+        assert!(t.compress_int_field(0).unwrap());
+        t.dict_encode_field(1).unwrap();
+        let mut c = StorageCatalog::new();
+        c.insert("logs", t);
+        c
+    }
+
+    #[test]
+    fn compressed_scans_are_tagged_from_column_stats() {
+        let c = compressed_catalog();
+        // Equality filter on the RLE column: run-domain filter.
+        let mut p = compile_sql("SELECT n FROM logs WHERE code = 7", &c.schemas()).unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.compressed_scan"), "{report:?}");
+        assert!(p.opt_tags.contains(&"opt.compressed_scan".to_string()));
+        let d = report
+            .decisions
+            .iter()
+            .find(|d| d.tag == "opt.compressed_scan")
+            .unwrap();
+        assert!(d.detail.contains("40 runs / 4000 rows"), "{}", d.detail);
+
+        // Fused group-by over the RLE key: run-domain aggregation.
+        let mut p = compile_sql(
+            "SELECT code, COUNT(code) FROM logs GROUP BY code",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.compressed_scan"), "{report:?}");
+
+        // String equality on the dict column: one lookup, u32 compares.
+        let mut p = compile_sql("SELECT n FROM logs WHERE url = '/u3'", &c.schemas()).unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.compressed_scan"), "{report:?}");
+        let d = report
+            .decisions
+            .iter()
+            .find(|d| d.tag == "opt.compressed_scan")
+            .unwrap();
+        assert!(d.detail.contains("dict-code filter"), "{}", d.detail);
+    }
+
+    #[test]
+    fn raw_columns_get_no_compressed_scan_tag() {
+        let c = join_catalog(50, 5000);
+        for q in [
+            "SELECT w FROM big WHERE a_id = 3",
+            "SELECT w, COUNT(w) FROM big GROUP BY w",
+        ] {
+            let mut p = compile_sql(q, &c.schemas()).unwrap();
+            let report = optimize(&mut p, &c).unwrap();
+            assert!(!report.has("opt.compressed_scan"), "`{q}`: {report:?}");
+        }
     }
 
     #[test]

@@ -108,6 +108,19 @@ impl Column {
         }
     }
 
+    /// Human-readable physical scheme of this column, for `explain`
+    /// output: `"int"`, `"dict[N keys]"`, `"rle[N runs]"`, `"range"`, ...
+    pub fn scheme(&self) -> String {
+        match self {
+            Column::Ints(_) => "int".into(),
+            Column::Floats(_) => "float".into(),
+            Column::Strs(_) => "str".into(),
+            Column::Bools(_) => "bool".into(),
+            Column::DictStrs { dict, .. } => format!("dict[{} keys]", dict.len()),
+            Column::CompressedInts(c) => c.scheme(),
+        }
+    }
+
     /// Approximate heap bytes (reformat cost model + §Perf accounting).
     pub fn heap_bytes(&self) -> usize {
         match self {
@@ -255,6 +268,28 @@ impl Table {
         Ok(dict)
     }
 
+    /// Try to compress one integer field in place (the §III-C1 compressed
+    /// column scheme). Returns `true` when `CompressedInts::compress`
+    /// accepted the column — it declines layouts with < 2x space saving,
+    /// in which case the column is left as plain ints.
+    pub fn compress_int_field(&mut self, field: usize) -> Result<bool> {
+        let col = &self.columns[field];
+        let Column::Ints(values) = col else {
+            bail!(
+                "field {} is {:?}, not a plain integer column",
+                field,
+                col.dtype()
+            );
+        };
+        match CompressedInts::compress(values) {
+            Some(c) => {
+                self.columns[field] = Column::CompressedInts(c);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Drop all fields except `keep` (dead-field elimination).
     pub fn project(&self, keep: &[usize]) -> Table {
         Table {
@@ -309,6 +344,36 @@ mod tests {
     fn dict_encoding_requires_string_column() {
         let mut t = access();
         assert!(t.dict_encode_field(1).is_err());
+    }
+
+    #[test]
+    fn compress_int_field_swaps_scheme_when_profitable() {
+        let schema = Schema::new(vec![("k", DataType::Int)]);
+        let m = Multiset::with_rows(
+            schema.clone(),
+            (0..64i64).map(|i| vec![Value::Int(i / 16)]).collect(),
+        );
+        let mut t = Table::from_multiset(&m).unwrap();
+        assert!(t.compress_int_field(0).unwrap());
+        assert_eq!(t.column(0).scheme(), "rle[4 runs]");
+        assert_eq!(t.value(63, 0), Value::Int(3));
+
+        // Incompressible layouts are left as plain ints.
+        let m = Multiset::with_rows(
+            schema,
+            vec![
+                vec![Value::Int(200)],
+                vec![Value::Int(404)],
+                vec![Value::Int(200)],
+            ],
+        );
+        let mut t = Table::from_multiset(&m).unwrap();
+        assert!(!t.compress_int_field(0).unwrap());
+        assert_eq!(t.column(0).scheme(), "int");
+
+        // Non-integer columns are rejected outright.
+        let mut t = access();
+        assert!(t.compress_int_field(0).is_err());
     }
 
     #[test]

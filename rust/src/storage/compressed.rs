@@ -6,14 +6,37 @@
 //! * `Range`  — the column is exactly `start, start+step, ...` (the
 //!   paper's enumerated-range case): stored as three integers;
 //! * `Rle`    — run-length encoding for low-cardinality columns.
+//!
+//! The executor operates on these representations directly: equality
+//! filters compare once per run ([`CompressedInts::find_eq_in`]), fused
+//! aggregations walk [`CompressedInts::run_windows`] and multiply by run
+//! length, and residual per-row paths use the prefix-sum `starts` index
+//! for O(log runs) random access instead of a linear run scan.
 
 /// A compressed integer column.
 #[derive(Debug, Clone)]
 pub enum CompressedInts {
     /// `start + i*step` for i in 0..len.
     Range { start: i64, step: i64, len: usize },
-    /// Run-length encoded (value, run-length) pairs.
-    Rle { runs: Vec<(i64, u32)>, len: usize },
+    /// Run-length encoded (value, run-length) pairs. `starts[i]` is the
+    /// first row covered by run `i` (a prefix sum over run lengths), so
+    /// row -> run resolution is a binary search.
+    Rle {
+        runs: Vec<(i64, u32)>,
+        starts: Vec<u32>,
+        len: usize,
+    },
+}
+
+/// Prefix-sum the run lengths: `starts[i]` = first row of run `i`.
+fn run_starts(runs: &[(i64, u32)]) -> Vec<u32> {
+    let mut starts = Vec::with_capacity(runs.len());
+    let mut acc = 0u32;
+    for &(_, n) in runs {
+        starts.push(acc);
+        acc += n;
+    }
+    starts
 }
 
 impl CompressedInts {
@@ -57,12 +80,19 @@ impl CompressedInts {
         }
         // 12 bytes/run vs 8 bytes/value: require at least 2x saving.
         if runs.len() * 12 * 2 <= values.len() * 8 {
-            return Some(CompressedInts::Rle {
-                runs,
-                len: values.len(),
-            });
+            return Some(CompressedInts::from_runs(runs));
         }
         None
+    }
+
+    /// Build an RLE column directly from (value, run-length) pairs,
+    /// computing the prefix-sum index. Adjacent runs may share a value;
+    /// zero-length runs are dropped.
+    pub fn from_runs(runs: Vec<(i64, u32)>) -> CompressedInts {
+        let runs: Vec<(i64, u32)> = runs.into_iter().filter(|&(_, n)| n > 0).collect();
+        let len = runs.iter().map(|&(_, n)| n as usize).sum();
+        let starts = run_starts(&runs);
+        CompressedInts::Rle { runs, starts, len }
     }
 
     pub fn len(&self) -> usize {
@@ -76,20 +106,95 @@ impl CompressedInts {
         self.len() == 0
     }
 
-    /// Random access (O(1) for range, O(runs) for RLE — the executor
-    /// decompresses up-front for hot loops instead).
+    /// Number of runs: 1 for a constant `Range`, `len` for a stepping
+    /// `Range` (every row differs), run count for `Rle`. Drives the
+    /// optimizer's code-domain vs decode-up-front choice.
+    pub fn num_runs(&self) -> usize {
+        match self {
+            CompressedInts::Range { step: 0, len, .. } => 1.min(*len),
+            CompressedInts::Range { len, .. } => *len,
+            CompressedInts::Rle { runs, .. } => runs.len(),
+        }
+    }
+
+    /// The raw (value, run-length) pairs for `Rle` columns.
+    pub fn runs(&self) -> Option<&[(i64, u32)]> {
+        match self {
+            CompressedInts::Range { .. } => None,
+            CompressedInts::Rle { runs, .. } => Some(runs),
+        }
+    }
+
+    /// Random access: O(1) for `Range`, O(log runs) for `Rle` via a
+    /// binary search on the prefix-sum `starts` index.
     pub fn get(&self, row: usize) -> i64 {
         match self {
             CompressedInts::Range { start, step, .. } => start + row as i64 * step,
-            CompressedInts::Rle { runs, .. } => {
-                let mut remaining = row;
-                for &(v, n) in runs {
-                    if remaining < n as usize {
-                        return v;
-                    }
-                    remaining -= n as usize;
+            CompressedInts::Rle { runs, starts, len } => {
+                assert!(row < *len, "row {row} out of range");
+                let ix = starts.partition_point(|&s| s as usize <= row) - 1;
+                runs[ix].0
+            }
+        }
+    }
+
+    /// Iterate the runs overlapping `[lo, hi)` as `(value, run_lo,
+    /// run_hi)` with the run bounds clipped to the window. This is the
+    /// primitive every run-domain kernel builds on: per-run filter
+    /// comparison, count-times-run-length aggregation, and O(runs)
+    /// statistics streaming — and it accepts arbitrary sub-ranges so
+    /// morsel workers can call it on their own `[lo, hi)` slices.
+    pub fn run_windows(&self, lo: usize, hi: usize) -> RunWindows<'_> {
+        let hi = hi.min(self.len());
+        let lo = lo.min(hi);
+        let ix = match self {
+            CompressedInts::Range { .. } => 0,
+            CompressedInts::Rle { starts, .. } => {
+                if lo >= hi {
+                    0
+                } else {
+                    starts.partition_point(|&s| s as usize <= lo) - 1
                 }
-                panic!("row {row} out of range");
+            }
+        };
+        RunWindows {
+            col: self,
+            ix,
+            pos: lo,
+            hi,
+        }
+    }
+
+    /// Append the row ids in `[lo, hi)` whose value equals `key` onto
+    /// `sel`. `Range` columns solve arithmetically (at most one matching
+    /// row unless the step is zero); `Rle` columns compare once per run
+    /// and emit whole runs.
+    pub fn find_eq_in(&self, key: i64, lo: usize, hi: usize, sel: &mut Vec<usize>) {
+        let hi = hi.min(self.len());
+        if lo >= hi {
+            return;
+        }
+        match self {
+            CompressedInts::Range { start, step: 0, .. } => {
+                if *start == key {
+                    sel.extend(lo..hi);
+                }
+            }
+            CompressedInts::Range { start, step, .. } => {
+                let delta = key - *start;
+                if delta % *step == 0 {
+                    let row = delta / *step;
+                    if row >= 0 && (row as usize) >= lo && (row as usize) < hi {
+                        sel.push(row as usize);
+                    }
+                }
+            }
+            CompressedInts::Rle { .. } => {
+                for (v, rlo, rhi) in self.run_windows(lo, hi) {
+                    if v == key {
+                        sel.extend(rlo..rhi);
+                    }
+                }
             }
         }
     }
@@ -100,7 +205,7 @@ impl CompressedInts {
             CompressedInts::Range { start, step, len } => {
                 (0..*len).map(|i| start + i as i64 * step).collect()
             }
-            CompressedInts::Rle { runs, len } => {
+            CompressedInts::Rle { runs, len, .. } => {
                 let mut out = Vec::with_capacity(*len);
                 for &(v, n) in runs {
                     out.extend(std::iter::repeat(v).take(n as usize));
@@ -113,7 +218,56 @@ impl CompressedInts {
     pub fn heap_bytes(&self) -> usize {
         match self {
             CompressedInts::Range { .. } => 24,
-            CompressedInts::Rle { runs, .. } => runs.len() * 12,
+            // 12 bytes per (value, len) pair + 4 per prefix-sum entry.
+            CompressedInts::Rle { runs, .. } => runs.len() * 16,
+        }
+    }
+
+    /// One-word description of the scheme, for `Engine::explain`.
+    pub fn scheme(&self) -> String {
+        match self {
+            CompressedInts::Range { .. } => "range".to_string(),
+            CompressedInts::Rle { runs, .. } => format!("rle[{} runs]", runs.len()),
+        }
+    }
+}
+
+/// Iterator over `(value, lo, hi)` run windows; see
+/// [`CompressedInts::run_windows`].
+pub struct RunWindows<'a> {
+    col: &'a CompressedInts,
+    ix: usize,
+    pos: usize,
+    hi: usize,
+}
+
+impl Iterator for RunWindows<'_> {
+    type Item = (i64, usize, usize);
+
+    fn next(&mut self) -> Option<(i64, usize, usize)> {
+        if self.pos >= self.hi {
+            return None;
+        }
+        match self.col {
+            CompressedInts::Range { start, step: 0, .. } => {
+                let item = (*start, self.pos, self.hi);
+                self.pos = self.hi;
+                Some(item)
+            }
+            CompressedInts::Range { start, step, .. } => {
+                // Every row is its own run.
+                let item = (*start + self.pos as i64 * *step, self.pos, self.pos + 1);
+                self.pos += 1;
+                Some(item)
+            }
+            CompressedInts::Rle { runs, starts, .. } => {
+                let (v, n) = runs[self.ix];
+                let run_end = starts[self.ix] as usize + n as usize;
+                let item = (v, self.pos, run_end.min(self.hi));
+                self.pos = run_end;
+                self.ix += 1;
+                Some(item)
+            }
         }
     }
 }
@@ -156,5 +310,107 @@ mod tests {
         assert_eq!(CompressedInts::compress(&[]).unwrap().len(), 0);
         let one = CompressedInts::compress(&[42]).unwrap();
         assert_eq!(one.decompress(), vec![42]);
+    }
+
+    #[test]
+    fn indexed_get_agrees_with_linear_decode() {
+        let runs: Vec<(i64, u32)> = (0..200).map(|i| (i % 13, 1 + (i % 7) as u32)).collect();
+        let c = CompressedInts::from_runs(runs);
+        let flat = c.decompress();
+        assert_eq!(flat.len(), c.len());
+        for (row, &v) in flat.iter().enumerate() {
+            assert_eq!(c.get(row), v, "row {row}");
+        }
+    }
+
+    #[test]
+    fn run_windows_clip_to_the_requested_range() {
+        let c = CompressedInts::from_runs(vec![(5, 10), (6, 10), (5, 10)]);
+        // Window straddles all three runs, cutting the first and last.
+        let w: Vec<_> = c.run_windows(3, 27).collect();
+        assert_eq!(w, vec![(5, 3, 10), (6, 10, 20), (5, 20, 27)]);
+        // Window inside one run.
+        assert_eq!(c.run_windows(11, 14).collect::<Vec<_>>(), vec![(6, 11, 14)]);
+        // Empty and out-of-range windows yield nothing.
+        assert_eq!(c.run_windows(7, 7).count(), 0);
+        assert_eq!(c.run_windows(30, 40).count(), 0);
+        // Full coverage reconstructs the column.
+        let mut flat = Vec::new();
+        for (v, lo, hi) in c.run_windows(0, c.len()) {
+            flat.extend(std::iter::repeat(v).take(hi - lo));
+        }
+        assert_eq!(flat, c.decompress());
+    }
+
+    #[test]
+    fn run_windows_over_range_columns() {
+        let c = CompressedInts::Range {
+            start: 4,
+            step: 2,
+            len: 5,
+        };
+        let w: Vec<_> = c.run_windows(1, 4).collect();
+        assert_eq!(w, vec![(6, 1, 2), (8, 2, 3), (10, 3, 4)]);
+        let k = CompressedInts::Range {
+            start: 9,
+            step: 0,
+            len: 5,
+        };
+        assert_eq!(k.run_windows(1, 4).collect::<Vec<_>>(), vec![(9, 1, 4)]);
+    }
+
+    #[test]
+    fn find_eq_emits_whole_runs_and_solves_ranges() {
+        let c = CompressedInts::from_runs(vec![(5, 4), (6, 4), (5, 4)]);
+        let mut sel = Vec::new();
+        c.find_eq_in(5, 0, 12, &mut sel);
+        assert_eq!(sel, vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        sel.clear();
+        c.find_eq_in(5, 2, 10, &mut sel);
+        assert_eq!(sel, vec![2, 3, 8, 9]);
+        sel.clear();
+        c.find_eq_in(7, 0, 12, &mut sel);
+        assert!(sel.is_empty());
+
+        let r = CompressedInts::Range {
+            start: 10,
+            step: 3,
+            len: 100,
+        };
+        sel.clear();
+        r.find_eq_in(10 + 3 * 40, 0, 100, &mut sel);
+        assert_eq!(sel, vec![40]);
+        sel.clear();
+        r.find_eq_in(11, 0, 100, &mut sel); // not on the lattice
+        assert!(sel.is_empty());
+        sel.clear();
+        r.find_eq_in(10 + 3 * 40, 41, 100, &mut sel); // outside the window
+        assert!(sel.is_empty());
+
+        let k = CompressedInts::Range {
+            start: 8,
+            step: 0,
+            len: 6,
+        };
+        sel.clear();
+        k.find_eq_in(8, 2, 5, &mut sel);
+        assert_eq!(sel, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn num_runs_reflects_the_scheme() {
+        assert_eq!(CompressedInts::from_runs(vec![(1, 3), (2, 3)]).num_runs(), 2);
+        let stepping = CompressedInts::Range {
+            start: 0,
+            step: 1,
+            len: 50,
+        };
+        assert_eq!(stepping.num_runs(), 50);
+        let constant = CompressedInts::Range {
+            start: 7,
+            step: 0,
+            len: 50,
+        };
+        assert_eq!(constant.num_runs(), 1);
     }
 }

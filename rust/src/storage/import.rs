@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 use crate::ir::{DataType, Multiset, Schema, Value};
 
 use super::column::{Column, Table};
+use super::compressed::CompressedInts;
 use super::dict::Dictionary;
 
 /// Parse CSV (no quoting — the synthetic workloads don't need it) into a
@@ -64,6 +65,11 @@ pub struct ImportPlan {
 
 /// The generated "data load code": stream CSV directly into the optimized
 /// physical layout, in one pass, without materializing the raw form.
+/// Freshly imported integer columns additionally try
+/// [`CompressedInts::compress`] — sorted ids become ranges, low-churn
+/// status codes become RLE, and anything without a ≥ 2x saving stays a
+/// plain `Vec<i64>` — so downstream scans can run in the compressed
+/// domain (`Engine::explain` shows the chosen scheme per column).
 pub fn import_csv_with_plan(r: impl BufRead, schema: &Schema, plan: &ImportPlan) -> Result<Table> {
     let keep: Vec<usize> = plan
         .keep
@@ -127,7 +133,10 @@ pub fn import_csv_with_plan(r: impl BufRead, schema: &Schema, plan: &ImportPlan)
     let columns = builders
         .into_iter()
         .map(|b| match b {
-            Builder::Ints(v) => Column::Ints(v),
+            Builder::Ints(v) => match CompressedInts::compress(&v) {
+                Some(c) => Column::CompressedInts(c),
+                None => Column::Ints(v),
+            },
             Builder::Floats(v) => Column::Floats(v),
             Builder::Strs(v) => Column::Strs(v),
             Builder::Bools(v) => Column::Bools(v),
@@ -190,5 +199,22 @@ mod tests {
             import_csv_with_plan(Cursor::new(CSV), &schema(), &ImportPlan::default()).unwrap();
         assert_eq!(t.schema.len(), 3);
         assert_eq!(t.value(0, 0), Value::str("/a"));
+        // [200, 404, 200] has no ≥2x-saving layout: it stays plain ints.
+        assert_eq!(t.column(1).scheme(), "int");
+    }
+
+    #[test]
+    fn import_compresses_runny_int_columns() {
+        let mut csv = String::new();
+        for i in 0..64 {
+            csv.push_str(&format!("/u{},{},0.5\n", i % 3, if i < 48 { 200 } else { 404 }));
+        }
+        let t =
+            import_csv_with_plan(Cursor::new(csv), &schema(), &ImportPlan::default()).unwrap();
+        // Two long runs of status codes: imported straight into RLE.
+        assert_eq!(t.column(1).scheme(), "rle[2 runs]");
+        assert_eq!(t.value(0, 1), Value::Int(200));
+        assert_eq!(t.value(63, 1), Value::Int(404));
+        assert_eq!(t.len(), 64);
     }
 }

@@ -10,7 +10,9 @@
 //! `(table, field)` and invalidates it when the table is replaced.
 //!
 //! NDV is **exact** for dictionary-encoded columns (the dictionary *is*
-//! the distinct set) and for columns small enough to scan fully;
+//! the distinct set), for RLE-compressed columns (the run values are
+//! streamed in the run domain, never row-expanded), for enumerated
+//! ranges (closed form), and for columns small enough to scan fully;
 //! otherwise it is estimated from a deterministic stride sample with a
 //! singleton-based (GEE-flavoured) scale-up: only values seen exactly
 //! once in the sample are evidence of unseen distinct mass, so heavily
@@ -49,6 +51,11 @@ pub struct ColumnStats {
     pub max: Option<Value>,
     /// Equi-width histogram, numeric columns only.
     pub histogram: Option<Histogram>,
+    /// For compressed integer columns, the number of runs (RLE run
+    /// count; 1 for a constant range, `rows` for a stepping range).
+    /// `None` for uncompressed columns. The optimizer compares this to
+    /// `rows` when choosing code-domain vs decode-up-front execution.
+    pub run_count: Option<u64>,
 }
 
 /// A small equi-width histogram over a numeric column.
@@ -73,13 +80,24 @@ impl Histogram {
     /// column copy, so collection over compressed or integer columns
     /// allocates only the 16-bucket count vector.
     fn build_from(values: impl Iterator<Item = f64> + Clone) -> Option<Histogram> {
+        Histogram::build_weighted(values.map(|v| (v, 1)))
+    }
+
+    /// Weighted variant of [`Histogram::build_from`]: each `(value,
+    /// weight)` item counts as `weight` rows. RLE columns stream their
+    /// `(run value, run length)` pairs through this, so a histogram over
+    /// an n-row column costs O(runs), not O(n).
+    fn build_weighted(values: impl Iterator<Item = (f64, u64)> + Clone) -> Option<Histogram> {
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
         let mut total = 0u64;
-        for v in values.clone() {
+        for (v, w) in values.clone() {
+            if w == 0 {
+                continue;
+            }
             lo = lo.min(v);
             hi = hi.max(v);
-            total += 1;
+            total += w;
         }
         if total == 0 || !lo.is_finite() || !hi.is_finite() || lo >= hi {
             // Degenerate (empty, constant or non-finite) columns: NDV and
@@ -88,9 +106,9 @@ impl Histogram {
         }
         let mut counts = vec![0u64; HISTOGRAM_BUCKETS];
         let width = (hi - lo) / HISTOGRAM_BUCKETS as f64;
-        for v in values {
+        for (v, w) in values {
             let idx = (((v - lo) / width) as usize).min(HISTOGRAM_BUCKETS - 1);
-            counts[idx] += 1;
+            counts[idx] += w;
         }
         Some(Histogram {
             lo,
@@ -135,27 +153,66 @@ impl ColumnStats {
                     min: vals.iter().min().map(|&v| Value::Int(v)),
                     max: vals.iter().max().map(|&v| Value::Int(v)),
                     histogram: Histogram::build_from(vals.iter().map(|&v| v as f64)),
+                    run_count: None,
                 }
             }
-            Column::CompressedInts(c) => {
-                // Streamed through `get` — no full decompression copy.
-                let (ndv, ndv_exact) = sampled_ndv(c.len(), |i| c.get(i));
-                let minmax = (0..c.len())
-                    .map(|i| c.get(i))
-                    .fold(None, |acc: Option<(i64, i64)>, v| match acc {
-                        None => Some((v, v)),
-                        Some((lo, hi)) => Some((lo.min(v), hi.max(v))),
-                    });
-                ColumnStats {
-                    rows,
-                    ndv,
-                    ndv_exact,
-                    null_count: 0,
-                    min: minmax.map(|(lo, _)| Value::Int(lo)),
-                    max: minmax.map(|(_, hi)| Value::Int(hi)),
-                    histogram: Histogram::build_from((0..c.len()).map(|i| c.get(i) as f64)),
+            Column::CompressedInts(c) => match c.runs() {
+                // RLE: stream the (value, run-length) pairs directly —
+                // exact NDV, min/max, and a weighted histogram all in
+                // O(runs). The previous implementation called `get(i)`
+                // per row, and `get` was itself a linear run scan, so
+                // collection was accidentally O(n·runs).
+                Some(runs) => {
+                    let mut seen: HashMap<i64, ()> = HashMap::new();
+                    let mut minmax: Option<(i64, i64)> = None;
+                    for &(v, _) in runs {
+                        seen.insert(v, ());
+                        minmax = Some(match minmax {
+                            None => (v, v),
+                            Some((lo, hi)) => (lo.min(v), hi.max(v)),
+                        });
+                    }
+                    ColumnStats {
+                        rows,
+                        ndv: (seen.len() as u64).max(1),
+                        ndv_exact: true,
+                        null_count: 0,
+                        min: minmax.map(|(lo, _)| Value::Int(lo)),
+                        max: minmax.map(|(_, hi)| Value::Int(hi)),
+                        histogram: Histogram::build_weighted(
+                            runs.iter().map(|&(v, n)| (v as f64, n as u64)),
+                        ),
+                        run_count: Some(runs.len() as u64),
+                    }
                 }
-            }
+                // Enumerated range: min/max and NDV are closed-form
+                // (every row distinct unless the step is zero); the
+                // histogram streams the arithmetic sequence, each value
+                // an O(1) reconstruction.
+                None => {
+                    let (min, max, ndv) = if c.is_empty() {
+                        (None, None, 1)
+                    } else {
+                        let (first, last) = (c.get(0), c.get(c.len() - 1));
+                        let ndv = if first == last { 1 } else { c.len() as u64 };
+                        (
+                            Some(Value::Int(first.min(last))),
+                            Some(Value::Int(first.max(last))),
+                            ndv,
+                        )
+                    };
+                    ColumnStats {
+                        rows,
+                        ndv,
+                        ndv_exact: true,
+                        null_count: 0,
+                        min,
+                        max,
+                        histogram: Histogram::build_from((0..c.len()).map(|i| c.get(i) as f64)),
+                        run_count: Some(c.num_runs() as u64),
+                    }
+                }
+            },
             Column::Floats(vals) => {
                 let (ndv, ndv_exact) = sampled_ndv(vals.len(), |i| vals[i].to_bits());
                 let mut min = f64::INFINITY;
@@ -172,6 +229,7 @@ impl ColumnStats {
                     min: (!vals.is_empty()).then_some(Value::Float(min)),
                     max: (!vals.is_empty()).then_some(Value::Float(max)),
                     histogram: Histogram::build(vals),
+                    run_count: None,
                 }
             }
             Column::Strs(vals) => {
@@ -184,6 +242,7 @@ impl ColumnStats {
                     min: vals.iter().min().map(|s| Value::Str(s.clone())),
                     max: vals.iter().max().map(|s| Value::Str(s.clone())),
                     histogram: None,
+                    run_count: None,
                 }
             }
             Column::DictStrs { keys, dict } => {
@@ -203,6 +262,7 @@ impl ColumnStats {
                         .then(|| strings.iter().max().map(|s| Value::Str(s.clone())))
                         .flatten(),
                     histogram: None,
+                    run_count: None,
                 }
             }
             Column::Bools(vals) => {
@@ -218,6 +278,7 @@ impl ColumnStats {
                     min: vals.iter().min().map(|&b| Value::Bool(b)),
                     max: vals.iter().max().map(|&b| Value::Bool(b)),
                     histogram: None,
+                    run_count: None,
                 }
             }
         }
@@ -372,10 +433,37 @@ mod tests {
         assert_eq!(s.rows, 6000);
         assert_eq!(s.min, Some(Value::Int(0)));
         assert_eq!(s.max, Some(Value::Int(39)));
-        // 6000 rows > sample cap: stride-2 sample sees every 150-row run
-        // ~75 times, so no singleton scale-up fires and NDV is exact.
+        // Run-domain streaming makes NDV exact (one distinct value per
+        // run value), regardless of the row-sampling cap.
         assert_eq!(s.ndv, 40);
-        assert!(s.histogram.is_some());
+        assert!(s.ndv_exact);
+        assert_eq!(s.run_count, Some(40));
+        let h = s.histogram.as_ref().expect("weighted histogram over runs");
+        assert_eq!(h.total, 6000, "histogram weights must sum to the row count");
+    }
+
+    #[test]
+    fn many_run_rle_stats_stream_in_run_domain() {
+        use super::super::compressed::CompressedInts;
+        // 300_000 runs of 3 rows each (900_000 rows). Before the prefix-sum
+        // index and run streaming, collection called `get(i)` per row and
+        // each `get` was a linear run scan: O(n·runs) ≈ 10^11 steps, i.e.
+        // this test would hang. Run streaming finishes in O(runs).
+        let runs: Vec<(i64, u32)> = (0..300_000).map(|i| ((i % 1000) as i64, 3)).collect();
+        let c = CompressedInts::from_runs(runs);
+        let t = Table::new(
+            Schema::new(vec![("n", DataType::Int)]),
+            vec![Column::CompressedInts(c)],
+        )
+        .unwrap();
+        let s = ColumnStats::collect(&t, 0);
+        assert_eq!(s.rows, 900_000);
+        assert_eq!(s.ndv, 1000);
+        assert!(s.ndv_exact);
+        assert_eq!(s.run_count, Some(300_000));
+        assert_eq!(s.min, Some(Value::Int(0)));
+        assert_eq!(s.max, Some(Value::Int(999)));
+        assert_eq!(s.histogram.unwrap().total, 900_000);
     }
 
     #[test]

@@ -726,6 +726,118 @@ fn transform_pipeline_never_invalidates_programs() {
 }
 
 #[test]
+fn compressed_and_raw_storage_agree_across_tiers_and_policies() {
+    // Build the same logical table twice — raw columns vs compressed
+    // storage (dict-encoded strings + RLE integers) — and require every
+    // execution tier and every scheduling policy to reproduce the raw
+    // interpreter's bags exactly, with the compressed-domain kernels
+    // actually firing and the optimizer recording the code-domain choice.
+    forall_seeds(6, |rng| {
+        let rows = 1200 + rng.below(2400) as usize;
+        // Runs of >= 8 rows keep the RLE layout profitable for any size.
+        let run = 8 + rng.below(200) as usize;
+        let keys = 1 + rng.below(12) as u64;
+        let mut m = Multiset::new(Schema::new(vec![
+            ("k", DataType::Str),
+            ("code", DataType::Int),
+            ("n", DataType::Int),
+        ]));
+        for i in 0..rows {
+            m.push(vec![
+                Value::str(format!("key{}", rng.below(keys))),
+                Value::Int((i / run) as i64 % 7),
+                Value::Int(rng.range(-50, 50)),
+            ]);
+        }
+        let mut raw = StorageCatalog::new();
+        raw.insert_multiset("t", &m).unwrap();
+        let mut t = forelem::storage::Table::from_multiset(&m).unwrap();
+        t.dict_encode_field(0).map_err(|e| e.to_string())?;
+        let packed_code = t.compress_int_field(1).map_err(|e| e.to_string())?;
+        prop_assert!(packed_code, "runny code column should compress (rows={rows}, run={run})");
+        let mut packed = StorageCatalog::new();
+        packed.insert("t", t);
+
+        let queries = [
+            ("SELECT k, n FROM t WHERE k = 'key0'", "vec.dict_filter"),
+            ("SELECT n FROM t WHERE code = 3", "vec.rle_filter"),
+            ("SELECT code, COUNT(code) FROM t GROUP BY code", "vec.rle_agg"),
+            ("SELECT code, SUM(n) FROM t GROUP BY code", "vec.rle_agg"),
+        ];
+        for (q, tag) in queries {
+            // Schemas are storage-transparent: one program serves both.
+            let p = forelem::sql::compile_sql(q, &raw.schemas()).map_err(|e| e.to_string())?;
+            let reference = forelem::exec::run(&p, &raw).map_err(|e| e.to_string())?;
+
+            let interp = forelem::exec::run(&p, &packed).map_err(|e| e.to_string())?;
+            prop_assert!(
+                interp.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: interpreter diverged on compressed storage"
+            );
+            let dispatched = forelem::exec::run_compiled(&p, &packed, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                dispatched.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: run_compiled diverged on compressed storage"
+            );
+            let out = forelem::exec::run_vectorized(&p, &packed)
+                .map_err(|e| e.to_string())?
+                .ok_or_else(|| format!("vectorized tier skipped `{q}`"))?;
+            prop_assert!(
+                out.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: vectorized diverged on compressed storage"
+            );
+            prop_assert!(
+                out.stats.idioms.contains(&tag.to_string()),
+                "`{q}` missing `{tag}` on compressed storage: {:?}",
+                out.stats.idioms
+            );
+
+            // Every scheduling policy over the morsel driver.
+            for policy in Policy::ALL {
+                let threads = 2 + rng.below(7) as usize;
+                let par =
+                    forelem::exec::run_parallel_with_policy(&p, &packed, threads, policy)
+                        .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    par.result().unwrap().bag_eq(reference.result().unwrap()),
+                    "`{q}` diverged under {policy:?} (threads={threads}) on compressed storage"
+                );
+            }
+
+            // The optimizer records the code-domain choice — only where
+            // the storage is actually compressed.
+            let mut p1 = p.clone();
+            let report =
+                forelem::opt::optimize(&mut p1, &packed).map_err(|e| e.to_string())?;
+            prop_assert!(
+                report.has("opt.compressed_scan"),
+                "`{q}`: expected opt.compressed_scan on compressed storage: {report:?}"
+            );
+            let opt_out = forelem::exec::run_compiled(&p1, &packed, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                opt_out.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: optimized plan diverged on compressed storage"
+            );
+            prop_assert!(
+                opt_out.stats.idioms.contains(&"opt.compressed_scan".to_string()),
+                "`{q}`: decision tag must surface in ExecStats: {:?}",
+                opt_out.stats.idioms
+            );
+            let mut p2 = p.clone();
+            let raw_report =
+                forelem::opt::optimize(&mut p2, &raw).map_err(|e| e.to_string())?;
+            prop_assert!(
+                !raw_report.has("opt.compressed_scan"),
+                "`{q}`: raw storage must not claim the code domain: {raw_report:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn hadoop_sim_equals_interpreter_for_random_tables() {
     forall_seeds(10, |rng| {
         let m = random_multiset(rng, 300);
