@@ -100,7 +100,15 @@ impl Engine {
         // ORDER BY / LIMIT lower INTO the IR as an ordered/bounded
         // emission contract (`EmitOrder` on the emit loop) — the whole
         // query, top-k included, is one program every tier executes.
-        let mut program = sql::lower(&select, &self.catalog.schemas())?;
+        // Lowering consults live column NDV so WHERE splitting lifts the
+        // most selective equality conjunct into the index-set filter.
+        let catalog = &self.catalog;
+        let ndv = |rel: &str, field: &str| -> Option<u64> {
+            let t = catalog.get(rel).ok()?;
+            let fid = t.schema.field_id(field)?;
+            catalog.column_stats(rel, fid).ok().map(|cs| cs.ndv)
+        };
+        let mut program = sql::lower_with_stats(&select, &self.catalog.schemas(), &ndv)?;
 
         // Reformat decision happens BEFORE the optimizer and
         // materialization so every strategy cost and cardinality

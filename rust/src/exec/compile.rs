@@ -15,8 +15,12 @@
 //! { ... } }`, the exact form `sql::lower` emits for equi-joins) becomes a
 //! [`JoinLoop`] — a build+probe hash join the vectorized executor drives
 //! with the same selection-vector and slot-resolved-register machinery as
-//! plain scans. Single-statement aggregation bodies over the matched
-//! pairs (join + GROUP BY) carry a fused [`JoinFastAgg`] kernel tag.
+//! plain scans. Deeper filtered levels (the N-way star/snowflake chains
+//! `sql::lower` emits for 3+-table joins, possibly reordered by the
+//! optimizer) are absorbed as [`JoinLevel`]s: one hash table per joined
+//! table, probed level by level per matched row. Single-statement
+//! aggregation bodies over the matched pairs of a two-table join
+//! (join + GROUP BY) carry a fused [`JoinFastAgg`] kernel tag.
 //!
 //! Compilation is *total or nothing*: [`compile_program`] returns `None`
 //! for any program shape outside the supported tier (data loops nested
@@ -29,8 +33,8 @@
 use std::sync::Arc;
 
 use crate::ir::{
-    AccumOp, BinOp, Domain, EmitOrder, Expr, Loop, LoopKind, Program, Schema, SlotMap, Stmt,
-    Strategy, TopKStrategy, UnOp, Value,
+    AccumOp, BinOp, Domain, EmitOrder, Expr, IndexSet, Loop, LoopKind, Program, Schema, SlotMap,
+    Stmt, Strategy, TopKStrategy, UnOp, Value,
 };
 use crate::storage::{StorageCatalog, Table};
 
@@ -180,6 +184,24 @@ impl FastAgg {
     }
 }
 
+/// One level of a compiled join chain below the first build side: a
+/// further filtered `forelem` whose key expression may reference any
+/// enclosing cursor (star keys load from the probe cursor, snowflake
+/// keys from an earlier build cursor). Each level's table is hashed
+/// once per nest entry and probed per matched row of the level above.
+#[derive(Debug, Clone)]
+pub struct JoinLevel {
+    /// Table this level builds a hash table over.
+    pub build: Arc<Table>,
+    /// Cursor slot this level's loop variable binds.
+    pub cursor: usize,
+    /// Field of `build` the hash table is keyed on.
+    pub build_key: usize,
+    /// Probe key, evaluated per matched row of the enclosing levels with
+    /// all enclosing cursors (but not this one) in scope.
+    pub probe_key: ExprProg,
+}
+
 /// A compiled equi-join: the Figure-1 nested-`forelem`-with-filtered-inner
 /// shape, executed as build + probe instead of nested scans. The inner
 /// (build) table is hashed once on [`JoinLoop::build_key`]; the outer
@@ -188,6 +210,12 @@ impl FastAgg {
 /// order, so the (outer-major, inner-in-table-order) match sequence is
 /// exactly the interpreter's nested-loop order — results, prints and
 /// float fold order all stay identical.
+///
+/// N-way chains (the `sql::lower` star/snowflake nest, possibly reordered
+/// by the optimizer's `opt.join_order` pass) extend the two-table shape
+/// with [`JoinLoop::deeper`]: every level hashes its table once, and each
+/// match at level *k* probes level *k+1*, so the whole chain pipelines
+/// without materializing intermediate join results.
 #[derive(Debug, Clone)]
 pub struct JoinLoop {
     /// Probe (outer) side table.
@@ -212,7 +240,10 @@ pub struct JoinLoop {
     /// id — executors then read the probe column directly instead of
     /// running the register program per row.
     pub probe_field: Option<usize>,
-    /// Per-match body, with both cursors in scope.
+    /// Join levels below the first build side, outermost first. Empty for
+    /// the plain two-table join.
+    pub deeper: Vec<JoinLevel>,
+    /// Per-match body, with every chain cursor in scope.
     pub body: Vec<CStmt>,
     /// Fused per-match aggregation (join + GROUP BY shapes). Subject to
     /// the same empty-array entry guard as [`ScanLoop::fast`].
@@ -315,13 +346,14 @@ pub fn scan_parallel_safe(sl: &ScanLoop) -> bool {
         && body_parallel_safe(&sl.body)
 }
 
-/// Join analogue of [`scan_parallel_safe`]: the probe key and outer
-/// filter are evaluated *inside* workers (per probe row / per fan-out),
-/// so both must also be free of accumulator reads.
+/// Join analogue of [`scan_parallel_safe`]: the probe keys (at every
+/// chain level) and the outer filter are evaluated *inside* workers (per
+/// probe row / per fan-out), so all must be free of accumulator reads.
 pub fn join_parallel_safe(jl: &JoinLoop) -> bool {
     jl.partition.is_none()
         && jl.emit.is_none()
         && expr_parallel_safe(&jl.probe_key)
+        && jl.deeper.iter().all(|lvl| expr_parallel_safe(&lvl.probe_key))
         && match &jl.outer_filter {
             Some((_, p)) => expr_parallel_safe(p),
             None => true,
@@ -526,7 +558,8 @@ impl<'a> Compiler<'a> {
             Domain::IndexSet(ix) => {
                 // The Figure-1 join shape — an outer scan whose whole body
                 // is one inner forelem filtered on a key from the outer
-                // cursor — compiles to a build+probe hash join.
+                // cursor, possibly wrapping further filtered levels —
+                // compiles to a build+probe hash join chain.
                 if self.cursors.is_empty() {
                     if let [Stmt::Loop(inner)] = l.body.as_slice() {
                         if let Some(join) = self.try_compile_join(l, ix, inner) {
@@ -603,11 +636,13 @@ impl<'a> Compiler<'a> {
     /// forelem (i; i ∈ pA) { forelem (j; j ∈ pB.id[i.b_id]) { BODY } }
     /// ```
     ///
-    /// into a [`JoinLoop`]. Returns `None` for shapes outside the
-    /// supported form (outer distinct, inner distinct/partition, missing
-    /// inner filter); the caller then falls through to the generic paths,
-    /// which reject nested data loops and leave the program on the
-    /// interpreter tier.
+    /// into a [`JoinLoop`], greedily absorbing further filtered `forelem`
+    /// levels (`forelem (j2; j2 ∈ pC.id[…])` wrapping the body) as
+    /// [`JoinLevel`]s — the N-way star/snowflake chain. Returns `None`
+    /// for shapes outside the supported form (outer distinct, inner
+    /// distinct/partition, missing inner filter); the caller then falls
+    /// through to the generic paths, which reject nested data loops and
+    /// leave the program on the interpreter tier.
     fn try_compile_join(&mut self, outer: &Loop, ox: &IndexSet, inner: &Loop) -> Option<CStmt> {
         let Domain::IndexSet(iix) = &inner.domain else {
             return None;
@@ -648,20 +683,65 @@ impl<'a> Compiler<'a> {
         self.n_cursors += 1;
         self.cursors
             .push((inner.var.clone(), build.clone(), build_cursor));
+        // Deeper chain levels: while the current body is exactly one more
+        // filtered forelem (no distinct/partition/emit), absorb it as a
+        // further build side. Each level's probe key compiles with all
+        // enclosing cursors in scope, so star keys (outer cursor) and
+        // snowflake keys (an earlier build cursor) both resolve. Anything
+        // else stops the descent; an unsupported nested data loop then
+        // fails in `stmts` below and the whole nest falls back to the
+        // interpreter, exactly as before.
+        let mut deeper: Vec<JoinLevel> = Vec::new();
+        let mut cur = inner;
+        loop {
+            let [Stmt::Loop(next)] = cur.body.as_slice() else {
+                break;
+            };
+            let Domain::IndexSet(nix) = &next.domain else {
+                break;
+            };
+            let Some((nfield, nkey)) = nix.field_filter.as_ref() else {
+                break;
+            };
+            if nix.distinct.is_some() || nix.partition.is_some() || next.emit.is_some() {
+                break;
+            }
+            let Some(tbl) = self.catalog.get(&nix.relation).ok().cloned() else {
+                break;
+            };
+            let Some(level_key) = tbl.schema.field_id(nfield) else {
+                break;
+            };
+            let Some(level_probe) = self.expr_prog(nkey) else {
+                break;
+            };
+            let cursor = self.n_cursors;
+            self.n_cursors += 1;
+            self.cursors.push((next.var.clone(), tbl.clone(), cursor));
+            deeper.push(JoinLevel {
+                build: tbl,
+                cursor,
+                build_key: level_key,
+                probe_key: level_probe,
+            });
+            cur = next;
+        }
         self.no_fresh_binds += 1;
-        let body = self.stmts(&inner.body);
+        let body = self.stmts(&cur.body);
         self.no_fresh_binds -= 1;
-        self.cursors.pop();
-        self.cursors.pop();
+        for _ in 0..2 + deeper.len() {
+            self.cursors.pop();
+        }
         let probe_key = probe_key?;
         let body = body?;
         let probe_field = match probe_key.ops.as_slice() {
             [Op::LoadField { cursor, field, .. }] if *cursor == outer_cursor => Some(*field),
             _ => None,
         };
-        // Fused aggregation only without an outer filter (mirroring
-        // `detect_fast`) and with a direct probe column.
-        let fast = if ox.field_filter.is_none() && probe_field.is_some() {
+        // Fused aggregation only for the two-table shape, without an
+        // outer filter (mirroring `detect_fast`) and with a direct probe
+        // column.
+        let fast = if deeper.is_empty() && ox.field_filter.is_none() && probe_field.is_some() {
             self.detect_join_fast(outer, inner, &outer_table, &build)
         } else {
             None
@@ -676,6 +756,7 @@ impl<'a> Compiler<'a> {
             build_key,
             probe_key,
             probe_field,
+            deeper,
             body,
             fast,
             emit: outer.emit.as_ref().map(EmitSpec::from_ir),
@@ -1160,9 +1241,10 @@ mod tests {
     }
 
     #[test]
-    fn three_deep_forelem_nests_fall_back() {
-        // Only the two-table Figure-1 shape is compiled; a forelem nest
-        // inside the join body keeps the interpreter.
+    fn three_deep_forelem_nests_compile_as_a_chain() {
+        // A filtered forelem inside the join body is one more chain
+        // level: the nest compiles with a `deeper` build side whose probe
+        // key references the level-1 build cursor (snowflake shape).
         let c = join_catalog();
         let mut p = Program::new("deep")
             .with_relation("A", c.schemas()["A"].clone())
@@ -1177,6 +1259,40 @@ mod tests {
                 vec![Stmt::Loop(Loop::forelem(
                     "k",
                     IndexSet::filtered("A", "b_id", Expr::field("j", "id")),
+                    vec![Stmt::result_union("R", vec![Expr::field("k", "g")])],
+                ))],
+            ))],
+        ))];
+        let cp = compile_program(&p, &c).expect("3-deep chain is supported");
+        let [CStmt::Join(j)] = cp.body.as_slice() else {
+            panic!("expected a compiled join chain, got {:?}", cp.body);
+        };
+        assert_eq!(j.deeper.len(), 1);
+        assert_eq!(j.deeper[0].cursor, 2);
+        assert_eq!(j.deeper[0].build.len(), 3, "level 2 hashes A");
+        assert_eq!(j.deeper[0].build_key, 0, "keyed on b_id");
+        assert!(j.fast.is_none(), "fused kernels stay two-table only");
+        assert_eq!(cp.n_cursors, 3);
+    }
+
+    #[test]
+    fn chain_with_inner_distinct_falls_back() {
+        // A distinct iteration below the join nest is outside the chain
+        // shape; the whole program keeps the interpreter.
+        let c = join_catalog();
+        let mut p = Program::new("deep_distinct")
+            .with_relation("A", c.schemas()["A"].clone())
+            .with_relation("B", c.schemas()["B"].clone())
+            .with_result("R", Schema::new(vec![("g", DataType::Str)]));
+        p.body = vec![Stmt::Loop(Loop::forelem(
+            "i",
+            IndexSet::all("A"),
+            vec![Stmt::Loop(Loop::forelem(
+                "j",
+                IndexSet::filtered("B", "id", Expr::field("i", "b_id")),
+                vec![Stmt::Loop(Loop::forelem(
+                    "k",
+                    IndexSet::distinct_of("A", "g"),
                     vec![Stmt::result_union("R", vec![Expr::field("k", "g")])],
                 ))],
             ))],

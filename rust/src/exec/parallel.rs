@@ -355,11 +355,18 @@ pub fn run_parallel_compiled_with_policy(
                     master.exec_stmts(cp, std::slice::from_ref(s))?;
                     continue;
                 }
-                // Build once, probe everywhere: the hash table is shared
-                // read-only across the pool.
+                // Build once, probe everywhere: every level's hash table
+                // is built by the master and shared read-only across the
+                // pool — workers never rebuild a chain level.
                 let build = JoinHashTable::build(&jl.build, jl.build_key);
-                master.stats.index_builds += 1;
+                let deeper: Vec<JoinHashTable> = jl
+                    .deeper
+                    .iter()
+                    .map(|lvl| JoinHashTable::build(&lvl.build, lvl.build_key))
+                    .collect();
+                master.stats.index_builds += 1 + deeper.len();
                 let build = &build;
+                let deeper = &deeper[..];
                 let len = jl.outer.len();
                 let units = len.div_ceil(BATCH);
                 let workers = threads.min(units);
@@ -383,7 +390,7 @@ pub fn run_parallel_compiled_with_policy(
                     },
                     |_st| (),
                     |st, _ctx, c| {
-                        st.probe_join(cp, jl, build, c.lo * BATCH, (c.hi * BATCH).min(len))
+                        st.probe_join(cp, jl, build, deeper, c.lo * BATCH, (c.hi * BATCH).min(len))
                     },
                     |_st, _ctx| Ok(()),
                 )?;

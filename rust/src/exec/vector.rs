@@ -16,8 +16,10 @@
 //! outer cursor in [`BATCH`]-row batches (selection vectors handle any
 //! outer equality filter). Matched pairs run the slot-resolved body, or —
 //! for the join + GROUP BY shapes — the fused per-match `vec.count` /
-//! `vec.sum` kernels. `"vec.hash_join"` is pushed into
-//! [`ExecStats::idioms`] whenever the join kernel fires.
+//! `vec.sum` kernels. N-way chains hash every joined table once and
+//! probe level by level per match, pipelining the whole star/snowflake
+//! nest without intermediate materialization. `"vec.hash_join"` is
+//! pushed into [`ExecStats::idioms`] whenever the join kernel fires.
 //!
 //! Semantics contract: for every supported program the output is
 //! `bag_eq`-identical to `local::run`, including scalar results, print
@@ -769,17 +771,28 @@ impl VecState {
         };
         let build = JoinHashTable::build(&jl.build, jl.build_key);
         self.stats.index_builds += 1;
-        self.probe_join(cp, jl, &build, lo, hi)
+        // One hash table per deeper chain level, each built exactly once
+        // for the whole nest — the pipelined N-way join never rebuilds or
+        // materializes intermediates.
+        let deeper: Vec<JoinHashTable> = jl
+            .deeper
+            .iter()
+            .map(|lvl| JoinHashTable::build(&lvl.build, lvl.build_key))
+            .collect();
+        self.stats.index_builds += deeper.len();
+        self.probe_join(cp, jl, &build, &deeper, lo, hi)
     }
 
-    /// Probe rows `[lo, hi)` of the outer table against an already-built
-    /// hash table. `exec::parallel` calls this directly with stolen row
-    /// ranges, sharing one build across the worker pool.
+    /// Probe rows `[lo, hi)` of the outer table against already-built
+    /// hash tables (one for the first build side, one per deeper chain
+    /// level). `exec::parallel` calls this directly with stolen row
+    /// ranges, sharing the builds across the worker pool.
     pub(crate) fn probe_join(
         &mut self,
         cp: &CompiledProgram,
         jl: &JoinLoop,
         build: &JoinHashTable,
+        deeper: &[JoinHashTable],
         lo: usize,
         hi: usize,
     ) -> Result<()> {
@@ -791,6 +804,9 @@ impl VecState {
         }
         self.cursors[jl.outer_cursor].table = Some(jl.outer.clone());
         self.cursors[jl.build_cursor].table = Some(jl.build.clone());
+        for lvl in &jl.deeper {
+            self.cursors[lvl.cursor].table = Some(lvl.build.clone());
+        }
         // Outer equality filter: the key is scope-constant, evaluated once.
         let filter = match &jl.outer_filter {
             Some((fid, prog)) => Some((*fid, self.eval_value(cp, prog)?)),
@@ -819,9 +835,38 @@ impl VecState {
                 for &irow in build.probe(&key) {
                     self.stats.rows_visited += 1;
                     self.cursors[jl.build_cursor].row = irow as usize;
-                    self.exec_stmts(cp, &jl.body)?;
+                    if jl.deeper.is_empty() {
+                        self.exec_stmts(cp, &jl.body)?;
+                    } else {
+                        self.probe_deeper(cp, jl, deeper, 0)?;
+                    }
                 }
             }
+        }
+        Ok(())
+    }
+
+    /// Probe chain level `depth` for the current match of the enclosing
+    /// levels (all enclosing cursors are positioned), recursing until the
+    /// innermost body runs once per full-chain match. Match order per
+    /// level is table order, so the whole chain visits matches in exactly
+    /// the interpreter's nested-loop order.
+    fn probe_deeper(
+        &mut self,
+        cp: &CompiledProgram,
+        jl: &JoinLoop,
+        deeper: &[JoinHashTable],
+        depth: usize,
+    ) -> Result<()> {
+        if depth == jl.deeper.len() {
+            return self.exec_stmts(cp, &jl.body);
+        }
+        let lvl = &jl.deeper[depth];
+        let key = self.eval_value(cp, &lvl.probe_key)?;
+        for &row in deeper[depth].probe(&key) {
+            self.stats.rows_visited += 1;
+            self.cursors[lvl.cursor].row = row as usize;
+            self.probe_deeper(cp, jl, deeper, depth + 1)?;
         }
         Ok(())
     }

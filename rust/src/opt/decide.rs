@@ -1,10 +1,20 @@
 //! The optimizer's decision pass: consume estimates, rewrite the IR.
 //!
-//! Five executable decisions, each recorded as a [`Decision`] whose
+//! Six executable decisions, each recorded as a [`Decision`] whose
 //! dot-namespaced tag lands in `Program::opt_tags` (and from there in
 //! `ExecStats.idioms`):
 //!
-//! * **`opt.join_build_side`** — for the Figure-1 equi-join nest, choose
+//! * **`opt.join_order`** — for a 3+-deep equi-join chain (star or
+//!   snowflake), run a Selinger-style bottom-up DP over the connected
+//!   left-deep orders of the join tree: `|R ⋈ S| = |R|·|S| /
+//!   max(V(R,a), V(S,b))` with NDVs from `ColumnStats`, cost = Σ
+//!   intermediate cardinalities + 2× each build side's rows (the
+//!   vectorized tier hashes every non-outer level once). The chain is
+//!   rewritten to the cheapest order; the decision is recorded even when
+//!   the written order already wins, so plans are assertable either way.
+//!   Gated on the same order-insensitivity check as the build-side swap
+//!   (reordering revisits the matched tuples in a different sequence).
+//! * **`opt.join_build_side`** — for the two-table Figure-1 nest, choose
 //!   which side the vectorized tier hashes. `exec::compile` always
 //!   builds over the *inner* loop's table, so when the outer (probe)
 //!   relation is estimated smaller the nest is swapped — the body is
@@ -123,6 +133,9 @@ pub fn optimize(p: &mut Program, catalog: &StorageCatalog) -> Result<OptReport> 
     let est = Estimator::new(catalog);
     let mut report = OptReport::default();
     for s in &mut p.body {
+        choose_join_order(s, &est, &mut report);
+    }
+    for s in &mut p.body {
         choose_join_build_side(s, &est, &mut report);
     }
     let mut scopes = BTreeMap::new();
@@ -166,6 +179,237 @@ fn order_insensitive(body: &[Stmt]) -> bool {
         }
         _ => false,
     })
+}
+
+/// A matched 3+-deep equi-join chain: one cursor/relation per nest
+/// level (written order) plus the tree edge that keys each non-outer
+/// level on an enclosing level's cursor.
+struct JoinChain {
+    /// (cursor var, relation) per level, outermost first.
+    nodes: Vec<(String, String)>,
+    /// `edges[k]` describes level `k + 1`: (key field on that level,
+    /// index of the parent level, field on the parent).
+    edges: Vec<(String, usize, String)>,
+    /// The innermost loop's (order-insensitive) body.
+    innermost: Vec<Stmt>,
+}
+
+/// Match the N-way generalization of the Figure-1 nest: a forelem chain
+/// where every level's body is exactly the next loop, every non-outer
+/// level is key-filtered on an *enclosing* cursor's plain field (star or
+/// snowflake), nothing is annotated (no distinct/partition/emit/outer
+/// filter), and the innermost body is order-insensitive. Two-deep nests
+/// return `None` — they belong to `choose_join_build_side`.
+fn match_join_chain(outer: &Loop) -> Option<JoinChain> {
+    if outer.kind != LoopKind::Forelem || outer.emit.is_some() {
+        return None;
+    }
+    let Domain::IndexSet(ox) = &outer.domain else {
+        return None;
+    };
+    if ox.field_filter.is_some() || ox.distinct.is_some() || ox.partition.is_some() {
+        return None;
+    }
+    let mut nodes = vec![(outer.var.clone(), ox.relation.clone())];
+    let mut edges = Vec::new();
+    let mut cur: &Loop = outer;
+    loop {
+        let [Stmt::Loop(inner)] = cur.body.as_slice() else {
+            break;
+        };
+        if inner.kind != LoopKind::Forelem || inner.emit.is_some() {
+            return None;
+        }
+        let Domain::IndexSet(ix) = &inner.domain else {
+            return None;
+        };
+        if ix.distinct.is_some() || ix.partition.is_some() {
+            return None;
+        }
+        let Some((field, key)) = &ix.field_filter else {
+            return None;
+        };
+        let Expr::Field {
+            var: pvar,
+            field: pfield,
+        } = key
+        else {
+            return None;
+        };
+        let parent = nodes.iter().position(|(v, _)| v == pvar)?;
+        if nodes.iter().any(|(v, _)| v == &inner.var)
+            || nodes.iter().any(|(_, r)| r == &ix.relation)
+        {
+            return None;
+        }
+        nodes.push((inner.var.clone(), ix.relation.clone()));
+        edges.push((field.clone(), parent, pfield.clone()));
+        cur = inner;
+    }
+    if nodes.len() < 3 || !order_insensitive(&cur.body) {
+        return None;
+    }
+    Some(JoinChain {
+        nodes,
+        edges,
+        innermost: cur.body.clone(),
+    })
+}
+
+/// Selinger-style bottom-up join-order search over a matched chain:
+/// enumerate the connected left-deep orders of the join tree by dynamic
+/// programming over subsets, cost each with the classic
+/// `|R ⋈ S| = |R|·|S| / max(V(R,a), V(S,b))` cardinality model, and
+/// rewrite the nest to the cheapest order. The decision is recorded even
+/// when the written order wins, so every multi-join plan is assertable.
+fn choose_join_order(s: &mut Stmt, est: &Estimator, report: &mut OptReport) {
+    let Stmt::Loop(outer) = s else { return };
+    let Some(chain) = match_join_chain(outer) else {
+        return;
+    };
+    let n = chain.nodes.len();
+    if n > 12 {
+        return; // 2^n subsets — far beyond any lowered query anyway
+    }
+    // Statistics gate: every relation sized, every join field resolvable
+    // (missing tables report 0 rows — "do not optimize").
+    let rows: Vec<f64> = chain
+        .nodes
+        .iter()
+        .map(|(_, r)| est.table_rows(r) as f64)
+        .collect();
+    if rows.iter().any(|&r| r == 0.0) {
+        return;
+    }
+    for (k, (cfield, p, pfield)) in chain.edges.iter().enumerate() {
+        if !est.field_exists(&chain.nodes[k + 1].1, cfield)
+            || !est.field_exists(&chain.nodes[*p].1, pfield)
+        {
+            return;
+        }
+    }
+    // Undirected adjacency of the join tree:
+    // adj[i] = (neighbor, key field on i, key field on the neighbor).
+    let mut adj: Vec<Vec<(usize, String, String)>> = vec![Vec::new(); n];
+    for (k, (cfield, p, pfield)) in chain.edges.iter().enumerate() {
+        adj[k + 1].push((*p, cfield.clone(), pfield.clone()));
+        adj[*p].push((k + 1, pfield.clone(), cfield.clone()));
+    }
+    let ndv = |i: usize, field: &str| {
+        est.table_stats(&chain.nodes[i].1, field).distinct_keys.max(1) as f64
+    };
+    // Cost of one left-deep order: Σ intermediate cardinalities + 2× each
+    // build side's rows (every non-outer level is hashed once).
+    let order_cost = |order: &[usize]| -> f64 {
+        let mut placed = 1u32 << order[0];
+        let mut card = rows[order[0]];
+        let mut cost = card;
+        for &t in &order[1..] {
+            let (o, tf, of) = edge_into(&adj, placed, t).expect("connected join tree");
+            card *= rows[t] / ndv(t, tf).max(ndv(o, of));
+            cost += card + 2.0 * rows[t];
+            placed |= 1 << t;
+        }
+        cost
+    };
+    // DP over connected subsets; masks grow numerically as bits are
+    // added, so increasing mask order is a valid bottom-up schedule.
+    let mut dp: BTreeMap<u32, (f64, f64, Vec<usize>)> = BTreeMap::new();
+    for i in 0..n {
+        dp.insert(1 << i, (rows[i], rows[i], vec![i]));
+    }
+    for mask in 1u32..(1 << n) {
+        let Some((cost, card, order)) = dp.get(&mask).cloned() else {
+            continue;
+        };
+        for t in 0..n {
+            if mask & (1 << t) != 0 {
+                continue;
+            }
+            let Some((o, tf, of)) = edge_into(&adj, mask, t) else {
+                continue;
+            };
+            let new_card = card * rows[t] / ndv(t, tf).max(ndv(o, of));
+            let new_cost = cost + new_card + 2.0 * rows[t];
+            let key = mask | (1 << t);
+            let better = match dp.get(&key) {
+                Some((c, _, _)) => new_cost < *c,
+                None => true,
+            };
+            if better {
+                let mut ord = order.clone();
+                ord.push(t);
+                dp.insert(key, (new_cost, new_card, ord));
+            }
+        }
+    }
+    let full = (1u32 << n) - 1;
+    let Some((best_cost, _, best_order)) = dp.get(&full).cloned() else {
+        return; // unreachable for a lowered (connected) chain
+    };
+    let names = |order: &[usize]| {
+        order
+            .iter()
+            .map(|&i| chain.nodes[i].1.as_str())
+            .collect::<Vec<_>>()
+            .join(" ⋈ ")
+    };
+    let written: Vec<usize> = (0..n).collect();
+    if best_order == written {
+        report.decisions.push(Decision {
+            tag: "opt.join_order".into(),
+            detail: format!(
+                "{} — as written (est cost {:.0})",
+                names(&written),
+                best_cost
+            ),
+        });
+        return;
+    }
+    let detail = format!(
+        "{} — reordered from {} (est cost {:.0} vs {:.0})",
+        names(&best_order),
+        names(&written),
+        best_cost,
+        order_cost(&written)
+    );
+    // Rebuild the nest in the chosen order: each non-outer level keys on
+    // its unique tree edge into the already-placed prefix.
+    let mut body = chain.innermost.clone();
+    for (pos, &t) in best_order.iter().enumerate().skip(1).rev() {
+        let placed: u32 = best_order[..pos].iter().fold(0, |m, &i| m | (1 << i));
+        let (o, tf, of) = edge_into(&adj, placed, t).expect("connected join tree");
+        let ix = IndexSet::filtered(
+            &chain.nodes[t].1,
+            tf,
+            Expr::field(&chain.nodes[o].0, of),
+        );
+        body = vec![Stmt::Loop(Loop::forelem(&chain.nodes[t].0, ix, body))];
+    }
+    let first = best_order[0];
+    let new_outer = Loop::forelem(
+        &chain.nodes[first].0,
+        IndexSet::all(&chain.nodes[first].1),
+        body,
+    );
+    report.decisions.push(Decision {
+        tag: "opt.join_order".into(),
+        detail,
+    });
+    *s = Stmt::Loop(new_outer);
+}
+
+/// The unique edge (tree property) through which table `t` touches the
+/// `placed` set: (placed neighbor, key field on `t`, field on neighbor).
+fn edge_into(
+    adj: &[Vec<(usize, String, String)>],
+    placed: u32,
+    t: usize,
+) -> Option<(usize, &str, &str)> {
+    adj[t]
+        .iter()
+        .find(|(o, _, _)| placed & (1 << *o) != 0)
+        .map(|(o, tf, of)| (*o, tf.as_str(), of.as_str()))
 }
 
 /// Detect the Figure-1 nest and pick the hash-join build side by
@@ -823,6 +1067,184 @@ mod tests {
             let report = optimize(&mut p, &c).unwrap();
             assert!(!report.has("opt.compressed_scan"), "`{q}`: {report:?}");
         }
+    }
+
+    /// Star fixtures: `fact` (20k rows, two dimension keys over 1000
+    /// distinct values each), `dimd` tiny and *selective* (20 ids — 98%
+    /// of fact rows match nothing), `dime` large (1000 ids × 2 rows).
+    fn star_catalog() -> StorageCatalog {
+        let mut fact = Multiset::new(Schema::new(vec![
+            ("d_id", DataType::Int),
+            ("e_id", DataType::Int),
+            ("v", DataType::Int),
+        ]));
+        for i in 0..20_000i64 {
+            fact.push(vec![
+                Value::Int(i % 1000),
+                Value::Int((i * 7) % 1000),
+                Value::Int(i % 5),
+            ]);
+        }
+        let mut dimd = Multiset::new(Schema::new(vec![
+            ("id", DataType::Int),
+            ("tag", DataType::Str),
+        ]));
+        for i in 0..20i64 {
+            dimd.push(vec![Value::Int(i), Value::str(format!("t{}", i % 3))]);
+        }
+        let mut dime = Multiset::new(Schema::new(vec![
+            ("id", DataType::Int),
+            ("name", DataType::Str),
+        ]));
+        for i in 0..2000i64 {
+            dime.push(vec![Value::Int(i % 1000), Value::str(format!("e{}", i % 11))]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("fact", &fact).unwrap();
+        c.insert_multiset("dimd", &dimd).unwrap();
+        c.insert_multiset("dime", &dime).unwrap();
+        c
+    }
+
+    /// Relations down a join chain, outermost first.
+    fn chain_relations(p: &Program) -> Vec<String> {
+        let Stmt::Loop(outer) = &p.body[0] else {
+            panic!("expected join nest")
+        };
+        let mut out = Vec::new();
+        let mut cur = outer;
+        loop {
+            let Domain::IndexSet(ix) = &cur.domain else {
+                panic!("expected index set")
+            };
+            out.push(ix.relation.clone());
+            match cur.body.as_slice() {
+                [Stmt::Loop(inner)] => cur = inner,
+                _ => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn selinger_dp_reorders_a_three_table_star() {
+        let c = star_catalog();
+        // Written badly: the big unselective dimension joins first.
+        let p0 = compile_sql(
+            "SELECT tag, COUNT(tag) FROM fact \
+             JOIN dime ON fact.e_id = dime.id \
+             JOIN dimd ON fact.d_id = dimd.id GROUP BY tag",
+            &c.schemas(),
+        )
+        .unwrap();
+        assert_eq!(
+            chain_relations(&p0),
+            vec!["fact", "dime", "dimd"],
+            "lowering preserves written order"
+        );
+        let mut p1 = p0.clone();
+        let report = optimize(&mut p1, &c).unwrap();
+        assert!(report.has("opt.join_order"), "{report:?}");
+        assert!(p1.opt_tags.contains(&"opt.join_order".to_string()));
+        // The selective dimension now probes first, pruning the stream.
+        assert_eq!(chain_relations(&p1), vec!["fact", "dimd", "dime"]);
+        let d = report
+            .decisions
+            .iter()
+            .find(|d| d.tag == "opt.join_order")
+            .unwrap();
+        assert!(d.detail.contains("reordered from"), "{}", d.detail);
+        // The two-table swap stays out of deeper chains.
+        assert!(!report.has("opt.join_build_side"), "{report:?}");
+        // Semantics preserved against the reference interpreter.
+        let a = crate::exec::run(&p0, &c).unwrap();
+        let b = crate::exec::run(&p1, &c).unwrap();
+        assert!(a.result().unwrap().bag_eq(b.result().unwrap()));
+    }
+
+    #[test]
+    fn well_written_star_is_kept_and_still_tagged() {
+        let c = star_catalog();
+        let mut p = compile_sql(
+            "SELECT tag, COUNT(tag) FROM fact \
+             JOIN dimd ON fact.d_id = dimd.id \
+             JOIN dime ON fact.e_id = dime.id GROUP BY tag",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(report.has("opt.join_order"), "{report:?}");
+        assert_eq!(chain_relations(&p), vec!["fact", "dimd", "dime"]);
+        let d = report
+            .decisions
+            .iter()
+            .find(|d| d.tag == "opt.join_order")
+            .unwrap();
+        assert!(d.detail.contains("as written"), "{}", d.detail);
+    }
+
+    #[test]
+    fn snowflake_reorder_keeps_edge_orientation_and_semantics() {
+        // dimg hangs off dimd (snowflake): reordering must re-orient each
+        // level's key filter along its unique tree edge.
+        let mut c = star_catalog();
+        let mut dimg = Multiset::new(Schema::new(vec![
+            ("id", DataType::Int),
+            ("label", DataType::Str),
+        ]));
+        for i in 0..3i64 {
+            dimg.push(vec![Value::Int(i), Value::str(format!("g{i}"))]);
+        }
+        c.insert_multiset("dimg", &dimg).unwrap();
+        let p0 = compile_sql(
+            "SELECT label, COUNT(label) FROM fact \
+             JOIN dime ON fact.e_id = dime.id \
+             JOIN dimd ON fact.d_id = dimd.id \
+             JOIN dimg ON dimd.id = dimg.id GROUP BY label",
+            &c.schemas(),
+        )
+        .unwrap();
+        let mut p1 = p0.clone();
+        let report = optimize(&mut p1, &c).unwrap();
+        assert!(report.has("opt.join_order"), "{report:?}");
+        let order = chain_relations(&p1);
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], "fact", "{order:?}");
+        // dimg can only enter after its tree neighbor dimd.
+        let dpos = order.iter().position(|r| r == "dimd").unwrap();
+        let gpos = order.iter().position(|r| r == "dimg").unwrap();
+        assert!(dpos < gpos, "{order:?}");
+        let a = crate::exec::run(&p0, &c).unwrap();
+        let b = crate::exec::run(&p1, &c).unwrap();
+        assert!(a.result().unwrap().bag_eq(b.result().unwrap()));
+    }
+
+    #[test]
+    fn ordered_or_filtered_chains_are_not_reordered() {
+        let c = star_catalog();
+        // An ORDER BY/LIMIT emission pins the nest (tie-breaking observes
+        // emission order), exactly like the two-table swap.
+        let mut p = compile_sql(
+            "SELECT fact.v, dimd.tag, dime.name FROM fact \
+             JOIN dime ON fact.e_id = dime.id \
+             JOIN dimd ON fact.d_id = dimd.id ORDER BY v DESC LIMIT 3",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(!report.has("opt.join_order"), "{report:?}");
+        assert_eq!(chain_relations(&p), vec!["fact", "dime", "dimd"]);
+        // A WHERE equality lifted onto the outer index set pins it too.
+        let mut p = compile_sql(
+            "SELECT tag, COUNT(tag) FROM fact \
+             JOIN dime ON fact.e_id = dime.id \
+             JOIN dimd ON fact.d_id = dimd.id \
+             WHERE fact.v = 3 GROUP BY tag",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        assert!(!report.has("opt.join_order"), "{report:?}");
     }
 
     #[test]

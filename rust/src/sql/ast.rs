@@ -1,6 +1,6 @@
 //! SQL abstract syntax tree (the subset the paper's examples need, §IV):
-//! single-table and two-table-join SELECTs with WHERE, GROUP BY and
-//! aggregates.
+//! single-table and N-way equi-join SELECTs (star/snowflake chains) with
+//! WHERE, GROUP BY and aggregates.
 
 use crate::ir::value::Value;
 
@@ -96,7 +96,10 @@ pub struct Select {
     pub items: Vec<SelectItem>,
     pub table: String,
     pub alias: Option<String>,
-    pub join: Option<JoinClause>,
+    /// Equi-join chain, in written order. Each clause joins one new table
+    /// against a table already in scope (the FROM table or an earlier
+    /// join) — star and snowflake shapes.
+    pub joins: Vec<JoinClause>,
     pub filter: Option<SqlExpr>,
     pub group_by: Vec<ColumnRef>,
     /// `ORDER BY col [ASC|DESC]` — (column-or-alias name, descending).

@@ -8,13 +8,18 @@
 //! * group-by aggregation → counting loop + distinct-iteration loop
 //!   (exactly the §IV URL-count IR);
 //! * equi-join → nested `forelem` with a filtered inner index set
-//!   (exactly Figure 1's top spec);
+//!   (exactly Figure 1's top spec). N-way equi-join chains (star and
+//!   snowflake shapes) generalize the figure: each `JOIN t ON ...`
+//!   clause becomes one more filtered `forelem` level keyed on an
+//!   enclosing cursor's field — the FROM table for a star, an earlier
+//!   join's cursor for a snowflake;
 //! * select-project → single loop with filter (the §III-B grades query);
-//! * aggregate over a join → the Figure-1 nest accumulating into
-//!   per-group arrays, followed by the distinct-iteration emit loop. The
-//!   group key and aggregate arguments may come from either table; the
-//!   vectorized tier executes the nest as a build+probe hash join with
-//!   fused `vec.count`/`vec.sum` kernels (see `exec::compile`).
+//! * aggregate over a join → the join nest accumulating into per-group
+//!   arrays, followed by the distinct-iteration emit loop. The group key
+//!   and aggregate arguments may come from any joined table; the
+//!   vectorized tier executes the nest as a pipelined multi-level
+//!   build+probe hash join with fused `vec.count`/`vec.sum` kernels
+//!   (see `exec::compile`).
 //!
 //! `ORDER BY` / `LIMIT` lower into the IR as an **ordered/bounded
 //! emission** ([`EmitOrder`] on the loop that appends the result rows):
@@ -31,17 +36,18 @@
 //! reference interpreter on the same IR.
 //!
 //! Join nest order is a *contract*, not a plan choice: lowering always
-//! emits the FROM table as the outer loop and the JOIN table as the
-//! filtered inner loop (which `exec::compile` hashes). Picking the
-//! cheaper orientation is the cost-based optimizer's job —
-//! `opt::optimize` swaps the nest when statistics say the written-first
-//! table is the smaller build side (`opt.join_build_side`).
+//! emits the FROM table as the outer loop and each JOIN as one more
+//! filtered inner loop in written order (which `exec::compile` hashes).
+//! Picking the cheaper order is the cost-based optimizer's job —
+//! `opt::optimize` swaps a two-table nest when statistics say the
+//! written-first table is the smaller build side (`opt.join_build_side`)
+//! and runs a Selinger-style DP over deeper chains (`opt.join_order`).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use super::ast::{Aggregate, ColumnRef, JoinClause, Select, SelectItem, SqlBinOp, SqlExpr};
+use super::ast::{Aggregate, ColumnRef, Select, SelectItem, SqlBinOp, SqlExpr};
 use crate::ir::{
     ArrayDecl, BinOp, DataType, EmitOrder, Expr, IndexSet, Loop, Program, Schema, Stmt,
 };
@@ -56,10 +62,24 @@ pub type Catalog = BTreeMap<String, Schema>;
 /// annotation on the loop that appends the result rows — the whole query,
 /// top-k included, is one IR program.
 pub fn lower(sel: &Select, catalog: &Catalog) -> Result<Program> {
-    let ctx = LowerCtx::new(sel, catalog)?;
+    lower_with_stats(sel, catalog, &|_, _| None)
+}
+
+/// [`lower`] with column statistics: `ndv(table, column)` returns the
+/// number of distinct values when known. Lowering uses it to lift the
+/// *most selective* liftable equality conjunct into the index-set filter
+/// (equality selectivity ≈ 1/NDV, so the highest-NDV column prunes the
+/// scan hardest). With no statistics, written order decides — identical
+/// to [`lower`].
+pub fn lower_with_stats(
+    sel: &Select,
+    catalog: &Catalog,
+    ndv: &dyn Fn(&str, &str) -> Option<u64>,
+) -> Result<Program> {
+    let ctx = LowerCtx::new(sel, catalog, ndv)?;
     if sel.is_aggregate() {
         ctx.lower_aggregate(sel)
-    } else if sel.join.is_some() {
+    } else if !sel.joins.is_empty() {
         ctx.lower_join(sel)
     } else {
         ctx.lower_select_project(sel)
@@ -108,15 +128,36 @@ pub fn compile_sql(input: &str, catalog: &Catalog) -> Result<Program> {
 
 struct LowerCtx<'a> {
     catalog: &'a Catalog,
-    /// (cursor var, table name) for the main table and optional join table.
+    /// (cursor var, table name) for the FROM table.
     main: (String, String),
-    joined: Option<(String, String)>,
+    /// (cursor var, table name) per JOIN clause, in written order. Cursor
+    /// vars are `j`, `j2`, `j3`, …
+    joins: Vec<(String, String)>,
     /// alias → table.
     aliases: BTreeMap<String, String>,
+    /// Column statistics: `ndv(table, column)` when known.
+    ndv: &'a dyn Fn(&str, &str) -> Option<u64>,
+}
+
+/// One lowered JOIN level:
+/// `forelem (var; var ∈ p{table}.{field}[{parent_var}.{parent_field}])`.
+struct JoinEdge {
+    var: String,
+    table: String,
+    /// Key field on the newly joined (inner) table.
+    field: String,
+    /// Enclosing cursor the level's filter keys on — the FROM cursor for
+    /// a star edge, an earlier join's cursor for a snowflake edge.
+    parent_var: String,
+    parent_field: String,
 }
 
 impl<'a> LowerCtx<'a> {
-    fn new(sel: &Select, catalog: &'a Catalog) -> Result<Self> {
+    fn new(
+        sel: &Select,
+        catalog: &'a Catalog,
+        ndv: &'a dyn Fn(&str, &str) -> Option<u64>,
+    ) -> Result<Self> {
         if !catalog.contains_key(&sel.table) {
             bail!(
                 "unknown table `{}` (known tables: {})",
@@ -129,28 +170,42 @@ impl<'a> LowerCtx<'a> {
         if let Some(a) = &sel.alias {
             aliases.insert(a.clone(), sel.table.clone());
         }
-        let joined = match &sel.join {
-            Some(j) => {
-                if !catalog.contains_key(&j.table) {
-                    bail!(
-                        "unknown join table `{}` (known tables: {})",
-                        j.table,
-                        known_tables(catalog)
-                    );
-                }
-                aliases.insert(j.table.clone(), j.table.clone());
-                if let Some(a) = &j.alias {
-                    aliases.insert(a.clone(), j.table.clone());
-                }
-                Some(("j".to_string(), j.table.clone()))
+        let mut joins: Vec<(String, String)> = Vec::new();
+        for (k, j) in sel.joins.iter().enumerate() {
+            if !catalog.contains_key(&j.table) {
+                bail!(
+                    "unknown join table `{}` (known tables: {})",
+                    j.table,
+                    known_tables(catalog)
+                );
             }
-            None => None,
-        };
+            if j.table == sel.table || joins.iter().any(|(_, t)| t == &j.table) {
+                bail!(
+                    "duplicate table `{}` in the join chain (self-joins are not supported)",
+                    j.table
+                );
+            }
+            aliases.insert(j.table.clone(), j.table.clone());
+            if let Some(a) = &j.alias {
+                if let Some(prev) = aliases.insert(a.clone(), j.table.clone()) {
+                    if prev != j.table {
+                        bail!("alias `{a}` is already bound to table `{prev}`");
+                    }
+                }
+            }
+            let var = if k == 0 {
+                "j".to_string()
+            } else {
+                format!("j{}", k + 1)
+            };
+            joins.push((var, j.table.clone()));
+        }
         Ok(LowerCtx {
             catalog,
             main: ("i".to_string(), sel.table.clone()),
-            joined,
+            joins,
             aliases,
+            ndv,
         })
     }
 
@@ -158,12 +213,10 @@ impl<'a> LowerCtx<'a> {
         &self.catalog[table]
     }
 
-    /// Tables this query's columns can resolve against (FROM + JOIN).
+    /// Tables this query's columns can resolve against (FROM + JOINs).
     fn tables_in_scope(&self) -> String {
         let mut names = vec![self.main.1.clone()];
-        if let Some((_, jtable)) = &self.joined {
-            names.push(jtable.clone());
-        }
+        names.extend(self.joins.iter().map(|(_, t)| t.clone()));
         names.join(", ")
     }
 
@@ -192,12 +245,13 @@ impl<'a> LowerCtx<'a> {
             }
             return Ok((var, table.clone(), c.column.clone()));
         }
-        // Unqualified: search the main table, then the join table.
+        // Unqualified: search the main table, then the join tables in
+        // written order.
         let (mvar, mtable) = &self.main;
         if self.schema(mtable).field_id(&c.column).is_some() {
             return Ok((mvar.clone(), mtable.clone(), c.column.clone()));
         }
-        if let Some((jvar, jtable)) = &self.joined {
+        for (jvar, jtable) in &self.joins {
             if self.schema(jtable).field_id(&c.column).is_some() {
                 return Ok((jvar.clone(), jtable.clone(), c.column.clone()));
             }
@@ -213,7 +267,7 @@ impl<'a> LowerCtx<'a> {
         if table == self.main.1 {
             return Ok(self.main.clone());
         }
-        if let Some(j) = &self.joined {
+        for j in &self.joins {
             if table == j.1 {
                 return Ok(j.clone());
             }
@@ -270,44 +324,59 @@ impl<'a> LowerCtx<'a> {
 
     /// Split a WHERE conjunction into (single equality usable as an index
     /// set filter on the main table, remaining residual predicate).
+    ///
+    /// When several conjuncts are liftable, the *most selective* one wins:
+    /// equality selectivity is ≈ 1/NDV, so the highest-NDV column prunes
+    /// the scan hardest. Unknown NDV scores 0 and ties keep written order,
+    /// so without statistics this reduces to "first liftable conjunct".
     fn split_filter(&self, filter: &SqlExpr) -> (Option<(String, Expr)>, Option<SqlExpr>) {
         // Only top-level conjuncts are candidates.
         let mut conjuncts = Vec::new();
         collect_conjuncts(filter, &mut conjuncts);
-        let mut index_filter = None;
-        let mut residual: Vec<SqlExpr> = Vec::new();
-        for c in conjuncts {
-            if index_filter.is_none() {
-                if let SqlExpr::Binary {
-                    op: SqlBinOp::Eq,
-                    lhs,
-                    rhs,
-                } = &c
-                {
-                    // column = literal (either side) on the MAIN table.
-                    let col_lit = match (lhs.as_ref(), rhs.as_ref()) {
-                        (SqlExpr::Column(col), SqlExpr::Literal(v))
-                        | (SqlExpr::Literal(v), SqlExpr::Column(col)) => Some((col, v)),
-                        _ => None,
-                    };
-                    if let Some((col, v)) = col_lit {
-                        if let Ok((var, table, field)) = self.resolve(col) {
-                            if var == self.main.0 && table == self.main.1 {
-                                index_filter = Some((field, Expr::Const(v.clone())));
-                                continue;
-                            }
-                        }
-                    }
+        let mut lift: Option<(usize, String, Expr)> = None;
+        let mut lift_score = 0u64;
+        for (i, c) in conjuncts.iter().enumerate() {
+            if let Some((field, value)) = self.liftable_eq(c) {
+                let score = (self.ndv)(&self.main.1, &field).unwrap_or(0);
+                if lift.is_none() || score > lift_score {
+                    lift = Some((i, field, value));
+                    lift_score = score;
                 }
             }
-            residual.push(c);
         }
-        let residual = residual.into_iter().reduce(|a, b| SqlExpr::Binary {
-            op: SqlBinOp::And,
-            lhs: Box::new(a),
-            rhs: Box::new(b),
-        });
+        let lift_idx = lift.as_ref().map(|(i, _, _)| *i);
+        let index_filter = lift.map(|(_, f, v)| (f, v));
+        let residual = conjuncts
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| Some(*i) != lift_idx)
+            .map(|(_, c)| c)
+            .reduce(|a, b| SqlExpr::Binary {
+                op: SqlBinOp::And,
+                lhs: Box::new(a),
+                rhs: Box::new(b),
+            });
         (index_filter, residual)
+    }
+
+    /// `column = literal` (either side) on the MAIN table → (field, const).
+    fn liftable_eq(&self, c: &SqlExpr) -> Option<(String, Expr)> {
+        let SqlExpr::Binary {
+            op: SqlBinOp::Eq,
+            lhs,
+            rhs,
+        } = c
+        else {
+            return None;
+        };
+        let (col, v) = match (lhs.as_ref(), rhs.as_ref()) {
+            (SqlExpr::Column(col), SqlExpr::Literal(v))
+            | (SqlExpr::Literal(v), SqlExpr::Column(col)) => (col, v),
+            _ => return None,
+        };
+        let (var, table, field) = self.resolve(col).ok()?;
+        (var == self.main.0 && table == self.main.1)
+            .then(|| (field, Expr::Const(v.clone())))
     }
 
     /// Wrap `body` in the residual-predicate If, if any.
@@ -349,10 +418,8 @@ impl<'a> LowerCtx<'a> {
         let (ivar, itable) = self.main.clone();
         let mut program = Program::new(&format!("groupby_{}", gtable));
         program = program.with_relation(&itable, self.schema(&itable).clone());
-        if let Some((_, jtable)) = &self.joined {
-            if jtable != &itable {
-                program = program.with_relation(jtable, self.schema(jtable).clone());
-            }
+        for (_, jtable) in &self.joins {
+            program = program.with_relation(jtable, self.schema(jtable).clone());
         }
 
         // One accumulator array per aggregate item + the result schema.
@@ -403,27 +470,18 @@ impl<'a> LowerCtx<'a> {
         program = program.with_result("R", result_schema);
 
         // Loop 1: accumulate — a plain scan of the FROM table, or the
-        // Figure-1 join nest when a JOIN is present.
+        // join nest (Figure 1, generalized to N levels) when JOINs are
+        // present.
         let outer_ix = match &index_filter {
             Some((f, v)) => IndexSet::filtered(&itable, f, v.clone()),
             None => IndexSet::all(&itable),
         };
         let accum_body = self.guard(&residual, accum_stmts)?;
-        let loop1 = match &self.joined {
-            Some((jvar, jtable)) => {
-                let (outer_field, inner_field) = self.join_on_fields(sel)?;
-                let inner_ix = IndexSet::filtered(
-                    jtable,
-                    &inner_field,
-                    Expr::field(&ivar, &outer_field),
-                );
-                Loop::forelem(
-                    &ivar,
-                    outer_ix,
-                    vec![Stmt::Loop(Loop::forelem(jvar, inner_ix, accum_body))],
-                )
-            }
-            None => Loop::forelem(&ivar, outer_ix, accum_body),
+        let loop1 = if self.joins.is_empty() {
+            Loop::forelem(&ivar, outer_ix, accum_body)
+        } else {
+            let edges = self.join_edges(sel)?;
+            self.join_nest(&ivar, outer_ix, &edges, accum_body)
         };
         // Loop 2: iterate distinct group keys of the owning table, emit
         // result rows (the emit cursor reuses the group key's cursor var).
@@ -441,21 +499,84 @@ impl<'a> LowerCtx<'a> {
         Ok(program)
     }
 
-    /// Orient the JOIN's ON clause: returns (main-table field, join-table
-    /// field) regardless of which side each was written on.
-    fn join_on_fields(&self, sel: &Select) -> Result<(String, String)> {
-        let join: &JoinClause = sel.join.as_ref().context("no JOIN clause")?;
-        let (ivar, _) = &self.main;
-        let (jvar, _) = self.joined.as_ref().context("no JOIN clause")?;
-        let (lvar, _, lfield) = self.resolve(&join.left)?;
-        let (rvar, _, rfield) = self.resolve(&join.right)?;
-        if &lvar == ivar && &rvar == jvar {
-            Ok((lfield, rfield))
-        } else if &lvar == jvar && &rvar == ivar {
-            Ok((rfield, lfield))
-        } else {
-            bail!("JOIN ON must relate the two FROM tables")
+    /// Orient each JOIN's ON clause into a [`JoinEdge`], validating that
+    /// the clauses form a connected, acyclic join graph: every ON must
+    /// relate the clause's *new* table to exactly one table already in
+    /// scope (the FROM table or an earlier join). An ON that never
+    /// mentions the new table leaves it disconnected; one that mentions
+    /// only the new table is a cycle-forming self-edge; one that reaches
+    /// forward joins against a table not yet in scope. All three are
+    /// rejected with a message naming the offending table.
+    fn join_edges(&self, sel: &Select) -> Result<Vec<JoinEdge>> {
+        let mut edges: Vec<JoinEdge> = Vec::new();
+        for (k, clause) in sel.joins.iter().enumerate() {
+            let (var, table) = self.joins[k].clone();
+            let placed: Vec<&str> = std::iter::once(self.main.0.as_str())
+                .chain(self.joins[..k].iter().map(|(v, _)| v.as_str()))
+                .collect();
+            let (lvar, ltable, lfield) = self.resolve(&clause.left)?;
+            let (rvar, rtable, rfield) = self.resolve(&clause.right)?;
+            let (field, parent_var, parent_table, parent_field) = if lvar == var && rvar == var
+            {
+                bail!(
+                    "JOIN `{table}` ON clause references only `{table}`: a self-edge makes \
+                     the join graph cyclic (each JOIN must link its new table to one \
+                     already-joined table)"
+                );
+            } else if lvar == var {
+                (lfield, rvar, rtable, rfield)
+            } else if rvar == var {
+                (rfield, lvar, ltable, lfield)
+            } else {
+                bail!(
+                    "JOIN `{table}` ON clause does not reference `{table}`: the join graph \
+                     would leave `{table}` disconnected (each JOIN must link its new table \
+                     to one already-joined table)"
+                );
+            };
+            if !placed.contains(&parent_var.as_str()) {
+                let scope = std::iter::once(self.main.1.as_str())
+                    .chain(self.joins[..k].iter().map(|(_, t)| t.as_str()))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                bail!(
+                    "JOIN `{table}` ON clause references `{parent_table}` before it is \
+                     joined (tables in scope so far: {scope})"
+                );
+            }
+            edges.push(JoinEdge {
+                var,
+                table,
+                field,
+                parent_var,
+                parent_field,
+            });
         }
+        Ok(edges)
+    }
+
+    /// Fold the join chain into the nested-forelem shape: the FROM table
+    /// is the outer loop and each JOIN becomes one more filtered level
+    /// keyed on its parent's cursor, in written order (innermost = last
+    /// JOIN). The optimizer reorders this nest when statistics justify it
+    /// (`opt.join_order` for 3+ tables, `opt.join_build_side` for two).
+    fn join_nest(
+        &self,
+        ivar: &str,
+        outer_ix: IndexSet,
+        edges: &[JoinEdge],
+        innermost: Vec<Stmt>,
+    ) -> Loop {
+        let mut body = innermost;
+        for e in edges.iter().rev() {
+            let ix = IndexSet::filtered(
+                &e.table,
+                &e.field,
+                Expr::field(&e.parent_var, &e.parent_field),
+            );
+            body = vec![Stmt::Loop(Loop::forelem(&e.var, ix, body))];
+        }
+        Loop::forelem(ivar, outer_ix, body)
     }
 
     /// Build the accumulation statement(s) + read-back expression for one
@@ -538,11 +659,11 @@ impl<'a> LowerCtx<'a> {
         }
     }
 
-    /// Equi-join → nested forelem with filtered inner index set (Figure 1).
+    /// Equi-join → nested forelem with filtered inner index sets
+    /// (Figure 1, one level per JOIN clause).
     fn lower_join(&self, sel: &Select) -> Result<Program> {
         let (ivar, itable) = self.main.clone();
-        let (jvar, jtable) = self.joined.clone().unwrap();
-        let (outer_field, inner_field) = self.join_on_fields(sel)?;
+        let edges = self.join_edges(sel)?;
 
         let (index_filter, residual) = match &sel.filter {
             Some(f) => self.split_filter(f),
@@ -555,7 +676,9 @@ impl<'a> LowerCtx<'a> {
         for item in &sel.items {
             match item {
                 SelectItem::Wildcard => {
-                    for (var, table) in [(&ivar, &itable), (&jvar, &jtable)] {
+                    let cursors = std::iter::once((&ivar, &itable))
+                        .chain(self.joins.iter().map(|(v, t)| (v, t)));
+                    for (var, table) in cursors {
                         for f in self.schema(table).fields() {
                             fields.push((format!("{table}.{}", f.name), f.dtype));
                             tuple.push(Expr::field(var, &f.name));
@@ -573,25 +696,25 @@ impl<'a> LowerCtx<'a> {
         let result_schema =
             Schema::new(fields.iter().map(|(n, t)| (n.as_str(), *t)).collect());
 
-        let inner_ix =
-            IndexSet::filtered(&jtable, &inner_field, Expr::field(&ivar, &outer_field));
-        let inner_body = self.guard(&residual, vec![Stmt::result_union("R", tuple)])?;
+        let innermost = self.guard(&residual, vec![Stmt::result_union("R", tuple)])?;
         let outer_ix = match &index_filter {
             Some((f, v)) => IndexSet::filtered(&itable, f, v.clone()),
             None => IndexSet::all(&itable),
         };
 
-        let mut program = Program::new(&format!("join_{itable}_{jtable}"))
+        let name = std::iter::once(itable.as_str())
+            .chain(self.joins.iter().map(|(_, t)| t.as_str()))
+            .collect::<Vec<_>>()
+            .join("_");
+        let mut program = Program::new(&format!("join_{name}"))
             .with_relation(&itable, self.schema(&itable).clone())
-            .with_relation(&jtable, self.schema(&jtable).clone())
             .with_result("R", result_schema);
+        for (_, jtable) in &self.joins {
+            program = program.with_relation(jtable, self.schema(jtable).clone());
+        }
         // ORDER BY/LIMIT annotate the outer loop: the emission bound
         // covers the whole nest's appended rows.
-        let mut nest = Loop::forelem(
-            &ivar,
-            outer_ix,
-            vec![Stmt::Loop(Loop::forelem(&jvar, inner_ix, inner_body))],
-        );
+        let mut nest = self.join_nest(&ivar, outer_ix, &edges, innermost);
         if let Some(e) = emit_order(sel, &fields)? {
             nest = nest.with_emit(e);
         }
@@ -721,6 +844,32 @@ mod tests {
             "B".into(),
             Schema::new(vec![("id", DataType::Int), ("field", DataType::Str)]),
         );
+        // Star/snowflake fixtures: fact F with two dimension keys, dims
+        // D and E, and G one hop off D (the snowflake arm).
+        c.insert(
+            "F".into(),
+            Schema::new(vec![
+                ("d_id", DataType::Int),
+                ("e_id", DataType::Int),
+                ("v", DataType::Int),
+            ]),
+        );
+        c.insert(
+            "D".into(),
+            Schema::new(vec![
+                ("id", DataType::Int),
+                ("g_id", DataType::Int),
+                ("tag", DataType::Str),
+            ]),
+        );
+        c.insert(
+            "E".into(),
+            Schema::new(vec![("id", DataType::Int), ("name", DataType::Str)]),
+        );
+        c.insert(
+            "G".into(),
+            Schema::new(vec![("id", DataType::Int), ("name", DataType::Str)]),
+        );
         c
     }
 
@@ -826,6 +975,119 @@ mod tests {
         assert!(text.contains("agg1[j.field] += i.b_id;"), "{text}");
         // Emit loop binds the join table's cursor var.
         assert!(text.contains("forelem (j; j ∈ pB.distinct(field))"), "{text}");
+    }
+
+    #[test]
+    fn three_table_star_lowers_to_nested_forelem() {
+        let p = compile_sql(
+            "SELECT F.v, D.tag, E.name FROM F JOIN D ON F.d_id = D.id JOIN E ON F.e_id = E.id",
+            &catalog(),
+        )
+        .unwrap();
+        let text = pretty::program(&p);
+        // Written order: fact outer, each dimension one filtered level
+        // deeper, both keyed on the fact cursor (star shape).
+        assert!(text.contains("forelem (i; i ∈ pF)"), "{text}");
+        assert!(text.contains("forelem (j; j ∈ pD.id[i.d_id])"), "{text}");
+        assert!(text.contains("forelem (j2; j2 ∈ pE.id[i.e_id])"), "{text}");
+        assert!(text.contains("R = R ∪ (i.v, j.tag, j2.name);"), "{text}");
+        assert_eq!(p.relations.len(), 3);
+    }
+
+    #[test]
+    fn snowflake_aggregate_keys_inner_level_on_join_cursor() {
+        let p = compile_sql(
+            "SELECT G.name, COUNT(G.name) FROM F JOIN D ON F.d_id = D.id \
+             JOIN G ON D.g_id = G.id GROUP BY G.name",
+            &catalog(),
+        )
+        .unwrap();
+        let text = pretty::program(&p);
+        // The snowflake arm keys on the *join* cursor, not the FROM cursor.
+        assert!(text.contains("forelem (j; j ∈ pD.id[i.d_id])"), "{text}");
+        assert!(text.contains("forelem (j2; j2 ∈ pG.id[j.g_id])"), "{text}");
+        assert!(text.contains("agg1[j2.name]++;"), "{text}");
+        // Emit loop binds the owning table's cursor.
+        assert!(text.contains("forelem (j2; j2 ∈ pG.distinct(name))"), "{text}");
+    }
+
+    #[test]
+    fn four_table_chain_lowers_with_written_order_cursors() {
+        let p = compile_sql(
+            "SELECT F.v FROM F JOIN D ON F.d_id = D.id JOIN E ON F.e_id = E.id \
+             JOIN G ON D.g_id = G.id",
+            &catalog(),
+        )
+        .unwrap();
+        let text = pretty::program(&p);
+        assert!(text.contains("forelem (j; j ∈ pD.id[i.d_id])"), "{text}");
+        assert!(text.contains("forelem (j2; j2 ∈ pE.id[i.e_id])"), "{text}");
+        assert!(text.contains("forelem (j3; j3 ∈ pG.id[j.g_id])"), "{text}");
+    }
+
+    #[test]
+    fn disconnected_and_cyclic_join_graphs_are_rejected() {
+        let c = catalog();
+        // ON never mentions the new table → it would stay disconnected.
+        let err = compile_sql(
+            "SELECT F.v FROM F JOIN D ON F.d_id = D.id JOIN E ON F.d_id = D.id",
+            &c,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("leave `E` disconnected"), "{err}");
+        // ON mentions only the new table → a cycle-forming self-edge.
+        let err = compile_sql(
+            "SELECT F.v FROM F JOIN D ON F.d_id = D.id JOIN E ON E.id = E.id",
+            &c,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("self-edge makes the join graph cyclic"), "{err}");
+        // ON reaches forward to a table joined later.
+        let err = compile_sql(
+            "SELECT F.v FROM F JOIN D ON D.g_id = G.id JOIN G ON F.d_id = G.id",
+            &c,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("references `G` before it is joined"),
+            "{err}"
+        );
+        assert!(err.contains("tables in scope so far: F"), "{err}");
+        // Repeated table → self-join, unsupported.
+        let err = compile_sql("SELECT F.v FROM F JOIN F ON F.d_id = F.e_id", &c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate table `F`"), "{err}");
+    }
+
+    #[test]
+    fn split_filter_lifts_most_selective_equality_by_ndv() {
+        let c = catalog();
+        let sel = crate::sql::parser::parse(
+            "SELECT grade FROM Grades WHERE weight = 2.0 AND studentID = 25",
+        )
+        .unwrap();
+        // Without statistics, written order decides: the first liftable
+        // equality (`weight`) becomes the index-set filter.
+        let text = pretty::program(&lower(&sel, &c).unwrap());
+        assert!(text.contains("i ∈ pGrades.weight["), "{text}");
+        assert!(text.contains("i.studentID"), "{text}");
+        // With NDV statistics saying studentID is far more selective
+        // (1000 distinct students vs 2 distinct weights), the lift flips:
+        // studentID filters the index set, weight stays residual.
+        let ndv = |table: &str, col: &str| -> Option<u64> {
+            match (table, col) {
+                ("Grades", "studentID") => Some(1000),
+                ("Grades", "weight") => Some(2),
+                _ => None,
+            }
+        };
+        let text = pretty::program(&lower_with_stats(&sel, &c, &ndv).unwrap());
+        assert!(text.contains("i ∈ pGrades.studentID[25]"), "{text}");
+        assert!(text.contains("i.weight"), "{text}");
     }
 
     #[test]

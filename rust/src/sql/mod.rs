@@ -8,5 +8,5 @@ pub mod parser;
 pub mod token;
 
 pub use ast::{Aggregate, ColumnRef, JoinClause, Select, SelectItem, SqlBinOp, SqlExpr};
-pub use lower::{compile_sql, lower, Catalog};
+pub use lower::{compile_sql, lower, lower_with_stats, Catalog};
 pub use parser::parse;

@@ -70,7 +70,8 @@ impl Parser {
         let table = self.ident()?;
         let alias = self.maybe_alias()?;
 
-        let join = if self.eat_if(&Token::Inner) || matches!(self.peek(), Token::Join) {
+        let mut joins = Vec::new();
+        while self.eat_if(&Token::Inner) || matches!(self.peek(), Token::Join) {
             self.eat_if(&Token::Join);
             let jtable = self.ident()?;
             let jalias = self.maybe_alias()?;
@@ -78,15 +79,13 @@ impl Parser {
             let left = self.column_ref()?;
             self.expect(Token::Eq)?;
             let right = self.column_ref()?;
-            Some(JoinClause {
+            joins.push(JoinClause {
                 table: jtable,
                 alias: jalias,
                 left,
                 right,
-            })
-        } else {
-            None
-        };
+            });
+        }
 
         let filter = if self.eat_if(&Token::Where) {
             Some(self.expr()?)
@@ -129,7 +128,7 @@ impl Parser {
             items,
             table,
             alias,
-            join,
+            joins,
             filter,
             group_by,
             order_by,
@@ -331,10 +330,30 @@ mod tests {
     #[test]
     fn parses_join_on() {
         let s = parse("SELECT A.field, B.field FROM A JOIN B ON A.b_id = B.id").unwrap();
-        let j = s.join.unwrap();
+        assert_eq!(s.joins.len(), 1);
+        let j = &s.joins[0];
         assert_eq!(j.table, "B");
         assert_eq!(j.left, ColumnRef::qualified("A", "b_id"));
         assert_eq!(j.right, ColumnRef::qualified("B", "id"));
+    }
+
+    #[test]
+    fn parses_multi_join_chain_in_written_order() {
+        let s = parse(
+            "SELECT f.x FROM fact f \
+             JOIN dim1 ON f.d1 = dim1.id \
+             INNER JOIN dim2 d2 ON f.d2 = d2.id \
+             JOIN dim3 ON d2.d3 = dim3.id",
+        )
+        .unwrap();
+        assert_eq!(s.table, "fact");
+        assert_eq!(s.alias.as_deref(), Some("f"));
+        let tables: Vec<&str> = s.joins.iter().map(|j| j.table.as_str()).collect();
+        assert_eq!(tables, ["dim1", "dim2", "dim3"]);
+        assert_eq!(s.joins[1].alias.as_deref(), Some("d2"));
+        // Snowflake edge: dim3 hangs off dim2, not the fact table.
+        assert_eq!(s.joins[2].left, ColumnRef::qualified("d2", "d3"));
+        assert_eq!(s.joins[2].right, ColumnRef::qualified("dim3", "id"));
     }
 
     #[test]

@@ -9,6 +9,10 @@
 use crate::ir::{DataType, Multiset, Schema, Value};
 use crate::util::{Rng, Zipf};
 
+pub mod retail;
+
+pub use retail::{register_retail, RetailSpec};
+
 /// Parameters for the URL access-count workload (§IV example 1).
 #[derive(Debug, Clone)]
 pub struct AccessLogSpec {

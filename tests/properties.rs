@@ -237,6 +237,163 @@ fn hash_join_three_tiers_agree_on_random_joins() {
     });
 }
 
+/// Random star/snowflake fixtures for the N-way chain property: a fact
+/// `F(d_id, e_id, n)` with two star arms `D(id, g_id, tag)` and
+/// `E(id, name)`, plus a snowflake hop `G(id, label)` off `D`. Key
+/// ranges are narrow so matches (with multiplicities) are common, and
+/// dangling fact keys exist too.
+fn random_star_tables(rng: &mut Rng) -> [(&'static str, Multiset); 4] {
+    let frows = 1200 + rng.below(1200) as usize;
+    let dkeys = 1 + rng.below(48) as i64;
+    let ekeys = 1 + rng.below(24) as i64;
+    let gkeys = 1 + rng.below(12) as i64;
+    let mut f = Multiset::new(Schema::new(vec![
+        ("d_id", DataType::Int),
+        ("e_id", DataType::Int),
+        ("n", DataType::Int),
+    ]));
+    for _ in 0..frows {
+        f.push(vec![
+            Value::Int(rng.range(0, dkeys * 2)),
+            Value::Int(rng.range(0, ekeys * 2)),
+            Value::Int(rng.range(-20, 20)),
+        ]);
+    }
+    let mut d = Multiset::new(Schema::new(vec![
+        ("id", DataType::Int),
+        ("g_id", DataType::Int),
+        ("tag", DataType::Str),
+    ]));
+    for _ in 0..1 + rng.below(60) {
+        d.push(vec![
+            Value::Int(rng.range(0, dkeys)),
+            Value::Int(rng.range(0, gkeys)),
+            Value::str(format!("t{}", rng.below(6))),
+        ]);
+    }
+    let mut e = Multiset::new(Schema::new(vec![
+        ("id", DataType::Int),
+        ("name", DataType::Str),
+    ]));
+    for _ in 0..1 + rng.below(30) {
+        e.push(vec![
+            Value::Int(rng.range(0, ekeys)),
+            Value::str(format!("e{}", rng.below(5))),
+        ]);
+    }
+    let mut g = Multiset::new(Schema::new(vec![
+        ("id", DataType::Int),
+        ("label", DataType::Str),
+    ]));
+    for _ in 0..1 + rng.below(15) {
+        g.push(vec![
+            Value::Int(rng.range(0, gkeys)),
+            Value::str(format!("g{}", rng.below(4))),
+        ]);
+    }
+    [("F", f), ("D", d), ("E", e), ("G", g)]
+}
+
+#[test]
+fn n_way_join_chains_agree_across_tiers_orders_and_policies() {
+    // Star and snowflake chains of 3-4 tables: the reference interpreter,
+    // the tier dispatch, and the vectorized multi-level hash join must
+    // agree bag-for-bag — before AND after the Selinger join-order DP —
+    // and the optimized plan must carry both the `vec.hash_join` kernel
+    // tag and the `opt.join_order` decision. Aggregates stick to COUNT /
+    // integer SUM (a reorder reassociates float folds by design), and the
+    // morsel driver is held to the same bags for every scheduling policy.
+    forall_seeds(8, |rng| {
+        let mut catalog = StorageCatalog::new();
+        for (name, m) in random_star_tables(rng) {
+            catalog.insert_multiset(name, &m).unwrap();
+        }
+        let queries = [
+            // Star, fact-first: projection and aggregates.
+            "SELECT D.tag, E.name FROM F JOIN D ON F.d_id = D.id JOIN E ON F.e_id = E.id",
+            "SELECT tag, COUNT(tag) FROM F JOIN D ON F.d_id = D.id \
+             JOIN E ON F.e_id = E.id GROUP BY tag",
+            // Snowflake: G keys on D's cursor, not the fact.
+            "SELECT label, COUNT(label) FROM F JOIN D ON F.d_id = D.id \
+             JOIN G ON D.g_id = G.id GROUP BY label",
+            // Four tables, star + snowflake arms combined.
+            "SELECT tag, SUM(n) FROM F JOIN D ON F.d_id = D.id \
+             JOIN E ON F.e_id = E.id JOIN G ON D.g_id = G.id GROUP BY tag",
+            // Dimension-first: the written order hashes the fact, the DP
+            // usually flips it — results must not move either way.
+            "SELECT tag, COUNT(tag) FROM D JOIN F ON D.id = F.d_id \
+             JOIN E ON F.e_id = E.id GROUP BY tag",
+        ];
+        for q in queries {
+            let p0 = forelem::sql::compile_sql(q, &catalog.schemas())
+                .map_err(|e| e.to_string())?;
+            let reference = forelem::exec::run(&p0, &catalog).map_err(|e| e.to_string())?;
+            let off = forelem::exec::run_compiled(&p0, &catalog, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                off.result().unwrap().bag_eq(reference.result().unwrap()),
+                "run_compiled diverged from interpreter for `{q}`"
+            );
+            let vec_out = forelem::exec::run_vectorized(&p0, &catalog)
+                .map_err(|e| e.to_string())?
+                .ok_or_else(|| format!("vectorized tier skipped chain `{q}`"))?;
+            prop_assert!(
+                vec_out.result().unwrap().bag_eq(reference.result().unwrap()),
+                "vectorized diverged from interpreter for `{q}`"
+            );
+            prop_assert!(
+                vec_out.stats.idioms.contains(&"vec.hash_join".to_string()),
+                "`{q}` missing vec.hash_join: {:?}",
+                vec_out.stats.idioms
+            );
+
+            // Optimized: the DP always records its decision on a chain
+            // (as written or reordered), and semantics must not move.
+            let mut p1 = p0.clone();
+            let report =
+                forelem::opt::optimize(&mut p1, &catalog).map_err(|e| e.to_string())?;
+            prop_assert!(
+                report.has("opt.join_order"),
+                "`{q}` should decide a join order: {report:?}"
+            );
+            let interp_opt = forelem::exec::run(&p1, &catalog).map_err(|e| e.to_string())?;
+            prop_assert!(
+                interp_opt.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: interpreter(optimized) diverged"
+            );
+            let on = forelem::exec::run_compiled(&p1, &catalog, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                on.result().unwrap().bag_eq(reference.result().unwrap()),
+                "`{q}`: run_compiled(optimized) diverged"
+            );
+            for tag in ["vec.hash_join", "opt.join_order"] {
+                prop_assert!(
+                    on.stats.idioms.contains(&tag.to_string()),
+                    "`{q}` missing `{tag}` on the optimized plan: {:?}",
+                    on.stats.idioms
+                );
+            }
+
+            // Morsel driver: every policy, random threads, both orders.
+            for policy in Policy::ALL {
+                let threads = 2 + rng.below(7) as usize;
+                for p in [&p0, &p1] {
+                    let par = forelem::exec::run_parallel_with_policy(
+                        p, &catalog, threads, policy,
+                    )
+                    .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        par.result().unwrap().bag_eq(reference.result().unwrap()),
+                        "`{q}` diverged under {policy:?} (threads={threads})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn optimizer_on_off_and_interpreter_agree_on_random_programs() {
     // For random data, the cost-based optimizer must be invisible in the

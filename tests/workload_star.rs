@@ -1,0 +1,409 @@
+//! BigBench-style retail star-schema workload: N-way equi-joins (star and
+//! snowflake) over `workload::retail`, proven two ways per query — the
+//! *result* against a hand-computed oracle (and the optimizer-off
+//! reference), and the *plan* against golden `Engine::explain` text: the
+//! Selinger `opt.join_order` decision (as-written or reordered), the
+//! executing tier, and the kernels that fired.
+//!
+//! The fixtures guarantee referential integrity (every dimension id
+//! appears in the fact), so grouped join results match plain SQL and the
+//! suite needs no special zero-group handling.
+
+use std::collections::BTreeMap;
+
+use forelem::compiler::{CompileOptions, Engine};
+use forelem::exec::Output;
+use forelem::ir::Multiset;
+use forelem::sched::Policy;
+use forelem::storage::StorageCatalog;
+use forelem::workload::retail::{self, RetailSpec};
+
+fn catalog() -> StorageCatalog {
+    let mut c = StorageCatalog::new();
+    retail::register_retail(&mut c, &RetailSpec::default()).unwrap();
+    c
+}
+
+fn engine() -> Engine {
+    Engine::new(catalog())
+}
+
+fn engine_optimizer_off() -> Engine {
+    Engine::new(catalog()).with_options(CompileOptions {
+        optimize: false,
+        ..CompileOptions::default()
+    })
+}
+
+/// Dense-pk lookup: `dim.rows()[id]` IS the row with `id` (asserted by
+/// the generator's own tests).
+fn dim_field(dim: &Multiset, id: i64, field: usize) -> String {
+    dim.rows()[id as usize][field].as_str().unwrap().to_string()
+}
+
+/// Hand-computed grouped aggregate over the generated fact: every sale
+/// matches exactly one row per dimension (referential integrity), so the
+/// star join's group totals are a single pass over `sales`.
+/// `key(customer_id, product_id, store_id)` names the group;
+/// `val(quantity, revenue)` is the per-row contribution (1 for COUNT).
+fn fact_oracle(
+    key: impl Fn(i64, i64, i64) -> String,
+    val: impl Fn(i64, i64) -> i64,
+) -> BTreeMap<String, i64> {
+    let spec = RetailSpec::default();
+    let sales = retail::sales(&spec);
+    let mut want: BTreeMap<String, i64> = BTreeMap::new();
+    for r in sales.rows() {
+        let (c, p, s) = (
+            r[0].as_int().unwrap(),
+            r[1].as_int().unwrap(),
+            r[2].as_int().unwrap(),
+        );
+        *want.entry(key(c, p, s)).or_default() += val(r[3].as_int().unwrap(), r[4].as_int().unwrap());
+    }
+    want
+}
+
+fn grouped(out: &Output) -> BTreeMap<String, i64> {
+    out.result()
+        .unwrap()
+        .rows()
+        .iter()
+        .map(|r| (r[0].as_str().unwrap().to_string(), r[1].as_int().unwrap()))
+        .collect()
+}
+
+fn assert_tags(out: &Output, tags: &[&str]) {
+    for t in tags {
+        assert!(
+            out.stats.idioms.contains(&t.to_string()),
+            "missing `{t}`: {:?}",
+            out.stats.idioms
+        );
+    }
+}
+
+/// Q1 — three-way star, fact written first: the DP must conclude the
+/// written order is already optimal and say so in the plan.
+#[test]
+fn q1_count_by_segment_star_as_written() {
+    let q = "SELECT segment, COUNT(segment) FROM sales \
+             JOIN customers ON sales.customer_id = customers.id \
+             JOIN stores ON sales.store_id = stores.id \
+             GROUP BY segment";
+    let spec = RetailSpec::default();
+    let customers = retail::customers(&spec);
+    let want = fact_oracle(|c, _, _| dim_field(&customers, c, 1), |_, _| 1);
+
+    let out = engine().sql(q).unwrap();
+    assert_eq!(grouped(&out), want);
+    assert_eq!(want.len(), 3, "three customer segments");
+    assert_tags(&out, &["vectorized", "vec.hash_join", "opt.join_order"]);
+
+    let text = engine().explain(q).unwrap();
+    assert!(
+        text.contains("[opt.join_order] sales ⋈ customers ⋈ stores — as written"),
+        "{text}"
+    );
+    assert!(text.contains("-- tier: vectorized"), "{text}");
+    assert!(text.contains("vec.hash_join"), "{text}");
+}
+
+/// Q2 — the same star written dimension-first: the DP must move the fact
+/// to the front and record the rewrite, without changing the result.
+#[test]
+fn q2_dimension_first_star_is_reordered() {
+    let q = "SELECT segment, COUNT(segment) FROM customers \
+             JOIN sales ON customers.id = sales.customer_id \
+             JOIN stores ON sales.store_id = stores.id \
+             GROUP BY segment";
+    let spec = RetailSpec::default();
+    let customers = retail::customers(&spec);
+    let want = fact_oracle(|c, _, _| dim_field(&customers, c, 1), |_, _| 1);
+
+    let out = engine().sql(q).unwrap();
+    assert_eq!(grouped(&out), want);
+    assert_tags(&out, &["vectorized", "vec.hash_join", "opt.join_order"]);
+
+    let text = engine().explain(q).unwrap();
+    assert!(
+        text.contains(
+            "[opt.join_order] sales ⋈ customers ⋈ stores — reordered from \
+             customers ⋈ sales ⋈ stores"
+        ),
+        "{text}"
+    );
+
+    // Optimizer off: same bag, no opt.* tags, and no plan section.
+    let off = engine_optimizer_off().sql(q).unwrap();
+    assert_eq!(grouped(&off), want);
+    assert!(
+        !off.stats.idioms.iter().any(|t| t.starts_with("opt.")),
+        "{:?}",
+        off.stats.idioms
+    );
+    let off_text = engine_optimizer_off().explain(q).unwrap();
+    assert!(!off_text.contains("[opt.join_order]"), "{off_text}");
+}
+
+/// Q3 — non-aggregate three-way projection: one output row per sale
+/// (referential integrity), bag-identical with the optimizer off.
+#[test]
+fn q3_projection_emits_one_row_per_sale() {
+    let q = "SELECT customers.segment, products.price, sales.quantity FROM sales \
+             JOIN customers ON sales.customer_id = customers.id \
+             JOIN products ON sales.product_id = products.id";
+    let out = engine().sql(q).unwrap();
+    let rows = out.result().unwrap();
+    assert_eq!(rows.len(), RetailSpec::default().sales);
+    assert_tags(&out, &["vectorized", "vec.hash_join", "opt.join_order"]);
+
+    let off = engine_optimizer_off().sql(q).unwrap();
+    assert!(rows.bag_eq(off.result().unwrap()));
+
+    let text = engine().explain(q).unwrap();
+    assert!(
+        text.contains("[opt.join_order] sales ⋈ customers ⋈ products — as written"),
+        "{text}"
+    );
+}
+
+/// Q4 — snowflake: `categories` hangs off `products`, not the fact. The
+/// chain (fact → products → categories) is already the cheapest order.
+#[test]
+fn q4_snowflake_count_by_category() {
+    let q = "SELECT name, COUNT(name) FROM sales \
+             JOIN products ON sales.product_id = products.id \
+             JOIN categories ON products.cat_id = categories.id \
+             GROUP BY name";
+    let spec = RetailSpec::default();
+    let products = retail::products(&spec);
+    let want = fact_oracle(
+        |_, p, _| {
+            let cat = products.rows()[p as usize][1].as_int().unwrap();
+            format!("cat{cat}")
+        },
+        |_, _| 1,
+    );
+
+    let out = engine().sql(q).unwrap();
+    assert_eq!(grouped(&out), want);
+    assert_eq!(want.len(), spec.categories);
+    assert_tags(&out, &["vectorized", "vec.hash_join", "opt.join_order"]);
+
+    let text = engine().explain(q).unwrap();
+    assert!(
+        text.contains("[opt.join_order] sales ⋈ products ⋈ categories — as written"),
+        "{text}"
+    );
+}
+
+/// Q5 — four-way star over every dimension at once.
+#[test]
+fn q5_four_table_star_count_by_state() {
+    let q = "SELECT state, COUNT(state) FROM sales \
+             JOIN customers ON sales.customer_id = customers.id \
+             JOIN products ON sales.product_id = products.id \
+             JOIN stores ON sales.store_id = stores.id \
+             GROUP BY state";
+    let spec = RetailSpec::default();
+    let stores = retail::stores(&spec);
+    let want = fact_oracle(|_, _, s| dim_field(&stores, s, 2), |_, _| 1);
+
+    let out = engine().sql(q).unwrap();
+    assert_eq!(grouped(&out), want);
+    assert_eq!(want.len(), 5, "five US states in the stores dimension");
+    assert_tags(&out, &["vectorized", "vec.hash_join", "opt.join_order"]);
+
+    let text = engine().explain(q).unwrap();
+    assert!(
+        text.contains(
+            "[opt.join_order] sales ⋈ customers ⋈ products ⋈ stores — as written"
+        ),
+        "{text}"
+    );
+}
+
+/// Q6 — a WHERE equality on the fact is lifted into the outer index-set
+/// filter, which pins the nest: no `opt.join_order` decision may fire,
+/// but the chain still executes as a vectorized hash join.
+#[test]
+fn q6_fact_filter_pins_the_join_order() {
+    let q = "SELECT segment, COUNT(segment) FROM sales \
+             JOIN customers ON sales.customer_id = customers.id \
+             JOIN stores ON sales.store_id = stores.id \
+             WHERE sales.store_id = 3 \
+             GROUP BY segment";
+    let spec = RetailSpec::default();
+    let customers = retail::customers(&spec);
+    // The emit loop walks ALL distinct segments of `customers`; segments
+    // with no store-3 sales would surface as 0 (none do at this size).
+    let mut want: BTreeMap<String, i64> = customers
+        .rows()
+        .iter()
+        .map(|r| (r[1].as_str().unwrap().to_string(), 0))
+        .collect();
+    let matches = fact_oracle(
+        |c, _, s| {
+            if s == 3 {
+                dim_field(&customers, c, 1)
+            } else {
+                String::new()
+            }
+        },
+        |_, _| 1,
+    );
+    for (k, v) in matches {
+        if !k.is_empty() {
+            want.insert(k, v);
+        }
+    }
+
+    let out = engine().sql(q).unwrap();
+    assert_eq!(grouped(&out), want);
+    assert_tags(&out, &["vectorized", "vec.hash_join"]);
+    assert!(
+        !out.stats.idioms.contains(&"opt.join_order".to_string()),
+        "pinned nest must not be reordered: {:?}",
+        out.stats.idioms
+    );
+
+    let text = engine().explain(q).unwrap();
+    assert!(!text.contains("[opt.join_order]"), "{text}");
+    assert!(text.contains("vec.hash_join"), "{text}");
+}
+
+/// Q7 — star join + ORDER BY/LIMIT: the join-order DP and the top-k heap
+/// decision compose, and the bounded-heap kernel runs the emission.
+#[test]
+fn q7_top_segments_by_sales() {
+    let q = "SELECT segment, COUNT(segment) AS n FROM sales \
+             JOIN customers ON sales.customer_id = customers.id \
+             JOIN stores ON sales.store_id = stores.id \
+             GROUP BY segment ORDER BY n DESC LIMIT 2";
+    let spec = RetailSpec::default();
+    let customers = retail::customers(&spec);
+    let want = fact_oracle(|c, _, _| dim_field(&customers, c, 1), |_, _| 1);
+    let mut counts: Vec<i64> = want.values().copied().collect();
+    counts.sort_unstable_by(|a, b| b.cmp(a));
+    counts.truncate(2);
+
+    let out = engine().sql(q).unwrap();
+    let rows = out.result().unwrap();
+    assert_eq!(rows.len(), 2);
+    let got: Vec<i64> = rows.rows().iter().map(|r| r[1].as_int().unwrap()).collect();
+    assert_eq!(got, counts, "top-2 counts must match the sorted oracle");
+    for r in rows.rows() {
+        let seg = r[0].as_str().unwrap();
+        assert_eq!(r[1].as_int().unwrap(), want[seg], "`{seg}` carries its true count");
+    }
+    assert_tags(
+        &out,
+        &["vectorized", "vec.hash_join", "vec.topk", "opt.join_order", "opt.topk_heap"],
+    );
+
+    let text = engine().explain(q).unwrap();
+    assert!(
+        text.contains("[opt.join_order] sales ⋈ customers ⋈ stores — as written"),
+        "{text}"
+    );
+    assert!(text.contains("[opt.topk_heap]"), "{text}");
+    assert!(text.contains("vec.topk"), "{text}");
+}
+
+/// Q8 — integer SUM over a reordered star: exact under reordering, the
+/// morsel-parallel driver, and every scheduling policy.
+#[test]
+fn q8_revenue_by_region_is_exact_everywhere() {
+    let q = "SELECT region, SUM(revenue) FROM customers \
+             JOIN sales ON customers.id = sales.customer_id \
+             JOIN products ON sales.product_id = products.id \
+             GROUP BY region";
+    let spec = RetailSpec::default();
+    let customers = retail::customers(&spec);
+    let want = fact_oracle(|c, _, _| dim_field(&customers, c, 2), |_, rev| rev);
+
+    let out = engine().sql(q).unwrap();
+    assert_eq!(grouped(&out), want);
+    assert_eq!(want.len(), 7, "seven customer regions");
+    assert_tags(&out, &["vectorized", "vec.hash_join", "opt.join_order"]);
+
+    let text = engine().explain(q).unwrap();
+    assert!(
+        text.contains(
+            "[opt.join_order] sales ⋈ customers ⋈ products — reordered from \
+             customers ⋈ sales ⋈ products"
+        ),
+        "{text}"
+    );
+
+    // The reordered program under the parallel driver: every policy,
+    // several thread counts, bag-identical to the oracle.
+    let c = catalog();
+    let mut p = forelem::sql::compile_sql(q, &c.schemas()).unwrap();
+    forelem::opt::optimize(&mut p, &c).unwrap();
+    for policy in Policy::ALL {
+        for threads in [2, 5, 8] {
+            let par = forelem::exec::run_parallel_with_policy(&p, &c, threads, policy).unwrap();
+            assert_eq!(
+                grouped(&par),
+                want,
+                "diverged under {policy:?} (threads={threads})"
+            );
+        }
+    }
+}
+
+/// The interpreter is the semantic oracle for the whole suite: for every
+/// workload query, optimizer-on and optimizer-off programs must both
+/// reproduce the reference interpreter's bags on all tiers.
+#[test]
+fn all_queries_agree_with_the_interpreter() {
+    let queries = [
+        "SELECT segment, COUNT(segment) FROM sales \
+         JOIN customers ON sales.customer_id = customers.id \
+         JOIN stores ON sales.store_id = stores.id GROUP BY segment",
+        "SELECT segment, COUNT(segment) FROM customers \
+         JOIN sales ON customers.id = sales.customer_id \
+         JOIN stores ON sales.store_id = stores.id GROUP BY segment",
+        "SELECT customers.segment, products.price, sales.quantity FROM sales \
+         JOIN customers ON sales.customer_id = customers.id \
+         JOIN products ON sales.product_id = products.id",
+        "SELECT name, COUNT(name) FROM sales \
+         JOIN products ON sales.product_id = products.id \
+         JOIN categories ON products.cat_id = categories.id GROUP BY name",
+        "SELECT state, COUNT(state) FROM sales \
+         JOIN customers ON sales.customer_id = customers.id \
+         JOIN products ON sales.product_id = products.id \
+         JOIN stores ON sales.store_id = stores.id GROUP BY state",
+        "SELECT segment, COUNT(segment) FROM sales \
+         JOIN customers ON sales.customer_id = customers.id \
+         JOIN stores ON sales.store_id = stores.id \
+         WHERE sales.store_id = 3 GROUP BY segment",
+        "SELECT region, SUM(revenue) FROM customers \
+         JOIN sales ON customers.id = sales.customer_id \
+         JOIN products ON sales.product_id = products.id GROUP BY region",
+    ];
+    let c = catalog();
+    for q in queries {
+        let p0 = forelem::sql::compile_sql(q, &c.schemas()).unwrap();
+        let reference = forelem::exec::run(&p0, &c).unwrap();
+        let off = forelem::exec::run_compiled(&p0, &c, None).unwrap();
+        assert!(
+            off.result().unwrap().bag_eq(reference.result().unwrap()),
+            "`{q}`: run_compiled(unoptimized) diverged"
+        );
+        let mut p1 = p0.clone();
+        forelem::opt::optimize(&mut p1, &c).unwrap();
+        let interp_opt = forelem::exec::run(&p1, &c).unwrap();
+        assert!(
+            interp_opt.result().unwrap().bag_eq(reference.result().unwrap()),
+            "`{q}`: interpreter(optimized) diverged"
+        );
+        let on = forelem::exec::run_compiled(&p1, &c, None).unwrap();
+        assert!(
+            on.result().unwrap().bag_eq(reference.result().unwrap()),
+            "`{q}`: run_compiled(optimized) diverged"
+        );
+    }
+}
