@@ -1,0 +1,138 @@
+//! Perf baseline: SIMD-shaped batch kernels vs scalar-reference loops.
+//!
+//! Two microbenches over flat columns, isolating the inner loops the
+//! vectorized tier runs under its `vec.simd` tag:
+//!
+//! * **equality filter** — branchless `chunks_exact(LANES)` selection
+//!   building (`select_eq_i64`) vs the obvious branchy
+//!   `if v == key { sel.push(i) }` loop, at ~1/3 selectivity where the
+//!   branch is hardest to predict;
+//! * **group-by sum** — lane-striped dense accumulation
+//!   (`sum_batch_u32_i64_striped` + `fold_lanes_i64`) vs the scalar
+//!   `acc[k] += v` loop, with 90% of rows on one hot key so the scalar
+//!   loop serializes on its store-to-load dependence.
+//!
+//! The acceptance bar is ≥ 1.5× on *both* microbenches (the headline
+//! speedup is the minimum of the two); the run prints a PASS/FAIL line
+//! and emits `BENCH_simd_kernels.json` for the CI perf-trajectory
+//! artifact. Row count scales via BENCH_ROWS.
+
+use forelem::exec::{
+    fold_lanes_i64, select_eq_i64, sum_batch_u32_i64_striped, LANES, MAX_STRIPED_WIDTH,
+};
+use forelem::util::{fmt_duration, time_fn, write_bench_json, Rng};
+
+/// The branchy loop `select_eq_i64` replaces: push each matching index.
+fn select_eq_scalar(vals: &[i64], key: i64, base: usize, sel: &mut Vec<usize>) {
+    for (i, &v) in vals.iter().enumerate() {
+        if v == key {
+            sel.push(base + i);
+        }
+    }
+}
+
+/// The scalar dense group-by sum the striped kernel replaces.
+fn sum_group_scalar(keys: &[u32], vals: &[i64], acc: &mut [i64]) {
+    for (&k, &v) in keys.iter().zip(vals) {
+        acc[k as usize] = acc[k as usize].wrapping_add(v);
+    }
+}
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000_000);
+    let width = 64usize;
+    assert!(width <= MAX_STRIPED_WIDTH);
+    println!(
+        "# SIMD-shaped batch kernels vs scalar reference: {rows} rows, LANES={LANES}, \
+         {width} groups (90% hot-key skew)"
+    );
+
+    let mut rng = Rng::new(7);
+    let vals: Vec<i64> = (0..rows).map(|_| rng.below(3) as i64).collect();
+    let keys: Vec<u32> = (0..rows)
+        .map(|_| {
+            if rng.below(10) < 9 {
+                0
+            } else {
+                rng.below(width as u64) as u32
+            }
+        })
+        .collect();
+    let sums: Vec<i64> = (0..rows).map(|_| rng.range(-1000, 1000)).collect();
+
+    // Sanity: both shapes produce identical results before timing them.
+    let mut want_sel = Vec::new();
+    select_eq_scalar(&vals, 1, 0, &mut want_sel);
+    let mut got_sel = Vec::new();
+    select_eq_i64(&vals, 1, 0, &mut got_sel);
+    assert_eq!(want_sel, got_sel, "branchless selection diverged from the branchy loop");
+    let mut want_acc = vec![0i64; width];
+    sum_group_scalar(&keys, &sums, &mut want_acc);
+    let mut stripes = vec![0i64; LANES * width];
+    sum_batch_u32_i64_striped(&keys, &sums, width, &mut stripes);
+    assert_eq!(want_acc, fold_lanes_i64(width, &stripes), "striped sum diverged from scalar");
+
+    let mut sel = Vec::with_capacity(rows);
+    let filt_scalar = time_fn(2, 9, || {
+        sel.clear();
+        select_eq_scalar(&vals, 1, 0, &mut sel);
+        sel.len()
+    });
+    let mut sel = Vec::with_capacity(rows);
+    let filt_simd = time_fn(2, 9, || {
+        sel.clear();
+        select_eq_i64(&vals, 1, 0, &mut sel);
+        sel.len()
+    });
+
+    let mut acc = vec![0i64; width];
+    let sum_scalar = time_fn(2, 9, || {
+        acc.iter_mut().for_each(|a| *a = 0);
+        sum_group_scalar(&keys, &sums, &mut acc);
+        acc[0]
+    });
+    let mut stripes = vec![0i64; LANES * width];
+    let sum_striped = time_fn(2, 9, || {
+        stripes.iter_mut().for_each(|s| *s = 0);
+        sum_batch_u32_i64_striped(&keys, &sums, width, &mut stripes);
+        fold_lanes_i64(width, &stripes)[0]
+    });
+
+    let mrows = rows as f64 / 1e6;
+    let throughput = |d: std::time::Duration| mrows / d.as_secs_f64();
+    let report = |name: &str, s: &forelem::util::Stats| {
+        println!(
+            "{name:<24} {:>10}  {:>8.2} Mrows/s",
+            fmt_duration(s.median()),
+            throughput(s.median())
+        );
+    };
+    report("filter scalar", &filt_scalar);
+    report("filter simd-shaped", &filt_simd);
+    report("group-sum scalar", &sum_scalar);
+    report("group-sum striped", &sum_striped);
+
+    let filt_speedup = filt_scalar.median().as_secs_f64() / filt_simd.median().as_secs_f64();
+    let sum_speedup = sum_scalar.median().as_secs_f64() / sum_striped.median().as_secs_f64();
+    let speedup = filt_speedup.min(sum_speedup);
+    println!(
+        "filter {filt_speedup:.1}x, group-sum {sum_speedup:.1}x; headline (min) {speedup:.1}x — {}",
+        if speedup >= 1.5 {
+            "PASS (>= 1.5x on both microbenches)"
+        } else {
+            "FAIL (< 1.5x acceptance bar)"
+        }
+    );
+
+    let entries: Vec<(&str, u128)> = vec![
+        ("filter-scalar", filt_scalar.median().as_nanos()),
+        ("filter-simd", filt_simd.median().as_nanos()),
+        ("group-sum-scalar", sum_scalar.median().as_nanos()),
+        ("group-sum-striped", sum_striped.median().as_nanos()),
+    ];
+    let path = write_bench_json("simd_kernels", rows, &entries, speedup).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -36,10 +36,12 @@ impl TableStats {
 
 /// Rows a morsel fan-out must cover before parallel workers amortize
 /// their spin-up (thread spawn + scheduler handshake + state merge).
-/// Calibrated to one `exec::BATCH` morsel: below this the whole scan fits
-/// in a single batch and the sequential driver always wins. The
-/// optimizer's fan-out gate (`opt::should_fan_out`) consumes this.
-pub const PARALLEL_SPINUP_ROWS: u64 = 1024;
+/// Recalibrated to four `exec::BATCH` morsels: the SIMD-shaped batch
+/// kernels (`exec/vector.rs`) raised sequential per-row throughput, so
+/// the fixed spin-up cost now takes several batches to pay off instead
+/// of one. The optimizer's fan-out gate (`opt::should_fan_out`)
+/// consumes this.
+pub const PARALLEL_SPINUP_ROWS: u64 = 4096;
 
 /// Relative per-row cost constants (calibrated on the exec engine; see
 /// EXPERIMENTS.md §Perf — only *ratios* matter for the decisions).

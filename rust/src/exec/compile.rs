@@ -8,7 +8,10 @@
 //! [`CStmt`] trees whose loops carry pre-resolved tables, field ids and
 //! (when the body is a recognized single-statement aggregation) a fused
 //! batch kernel tag ([`FastAgg`]). The vectorized executor (`vector.rs`)
-//! then drives the compiled form in column batches.
+//! then drives the compiled form in column batches; the dense inner
+//! loops behind those kernel tags (selection-vector equality filters,
+//! fused count/sum aggregation) are SIMD-shaped `chunks_exact` bodies
+//! that tag `vec.simd` when the reshaped path fires.
 //!
 //! Join-shaped programs compile too: the Figure-1 nested `forelem` with a
 //! filtered inner index set (`forelem i ∈ pA { forelem j ∈ pB.id[i.b_id]

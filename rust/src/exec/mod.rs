@@ -23,8 +23,8 @@
 //! * [`parallel`] — shared-memory morsel-driven execution: `forall`
 //!   loops, eligible `forelem` scans and compiled hash joins fan out
 //!   over a worker pool pulling chunks through the `sched::Policy`
-//!   machinery (GSS by default), reusing the compiled programs across
-//!   workers.
+//!   machinery (GSS by default, chunk-affinity on by default), reusing
+//!   the compiled programs across workers.
 
 pub mod compile;
 pub mod eval;
@@ -38,8 +38,12 @@ pub use compile::{compile_program, CompiledProgram};
 pub use eval::{ArrayStore, Cursor, Env};
 pub use index::{DistinctIndex, HashIndex, IndexCache, TreeIndex};
 pub use local::{block_bounds, partition_values, run, ExecStats, Output};
-pub use parallel::{run_parallel, run_parallel_with_policy};
+pub use parallel::{
+    run_parallel, run_parallel_compiled_with_opts, run_parallel_with_opts, run_parallel_with_policy,
+};
 pub use plan::{recognize, run_compiled, Idiom};
 pub use vector::{
-    morsel_ranges, run_compiled_program, try_run as run_vectorized, JoinHashTable, TopK, BATCH,
+    count_batch_u32_striped, fold_lanes_i64, morsel_ranges, run_compiled_program, select_eq_i64,
+    select_eq_u32, sum_batch_u32_i64, sum_batch_u32_i64_striped, sum_lanes_i64,
+    try_run as run_vectorized, JoinHashTable, TopK, BATCH, LANES, MAX_STRIPED_WIDTH,
 };

@@ -44,6 +44,18 @@
 //! pushes `"vec.morsel"` plus the active policy (e.g. `"sched.gss"`)
 //! into [`ExecStats::idioms`].
 //!
+//! Dispatch is cache- and affinity-aware by default: the scheduler runs
+//! through [`SharedScheduler::with_affinity`], so each worker pulls the
+//! range adjacent to its last-completed chunk (its column windows stay
+//! hot) and steals only when its neighborhood is drained, tagging
+//! `"sched.affinity"` when an adjacent pull was observed; pass
+//! `affinity = false` to [`run_parallel_with_opts`] for the pure global
+//! policy order. Worker-private [`VecState`]s are padded to cache-line
+//! boundaries so neighboring workers' accumulator stores never
+//! false-share a line, and `sched::pin_worker` best-effort-pins worker
+//! threads to cores when the off-by-default `core_affinity` feature is
+//! enabled.
+//!
 //! Programs outside the vectorized tier fall back to the
 //! interpreter-based fan-out at the bottom of this module.
 
@@ -97,8 +109,23 @@ pub fn run_parallel_with_policy(
     max_threads: usize,
     policy: Policy,
 ) -> Result<Output> {
+    run_parallel_with_opts(program, catalog, max_threads, policy, true)
+}
+
+/// [`run_parallel_with_policy`] with the chunk-affinity machinery
+/// selectable: `affinity = true` (the default everywhere else) routes
+/// the pool through [`SharedScheduler::with_affinity`]; `false` uses the
+/// policy's pure global chunk order. The interpreter fallback ignores
+/// the flag (it chunks statically either way).
+pub fn run_parallel_with_opts(
+    program: &Program,
+    catalog: &StorageCatalog,
+    max_threads: usize,
+    policy: Policy,
+    affinity: bool,
+) -> Result<Output> {
     let mut out = match compile_program(program, catalog) {
-        Some(cp) => run_parallel_compiled_with_policy(&cp, max_threads, policy)?,
+        Some(cp) => run_parallel_compiled_with_opts(&cp, max_threads, policy, affinity)?,
         None => run_parallel_interp(program, catalog, max_threads)?,
     };
     out.stats.note_opt_tags(&program.opt_tags);
@@ -123,7 +150,17 @@ struct MorselJob<'a> {
     units: usize,
     workers: usize,
     policy: Policy,
+    /// Route chunks through the affinity-aware scheduler (adjacent-range
+    /// pulls per worker) and best-effort-pin worker threads.
+    affinity: bool,
 }
+
+/// Cache-line-aligned box for worker-private state: per-worker
+/// [`VecState`]s (and fused-aggregation contexts) live at least one
+/// 64-byte line apart, so the hot per-morsel accumulator stores of
+/// neighboring workers never false-share a line.
+#[repr(align(64))]
+struct CacheAligned<T>(T);
 
 /// The shared morsel-dispatch driver unifying the `forall`, scan and join
 /// fan-outs: `workers` scoped threads pull [`Chunk`]s of `[0, units)`
@@ -137,32 +174,40 @@ fn morsel_dispatch<C>(
     init: impl Fn(&mut VecState) -> C + Sync,
     body: impl Fn(&mut VecState, &mut C, Chunk) -> Result<()> + Sync,
     finish: impl Fn(&mut VecState, C) -> Result<()> + Sync,
-) -> Result<Vec<VecState>> {
+) -> Result<(Vec<VecState>, bool)> {
     let MorselJob {
         cp,
         scalars,
         units,
         workers,
         policy,
+        affinity,
     } = job;
-    let sched = SharedScheduler::new(policy, units, workers);
+    let sched = if affinity {
+        SharedScheduler::with_affinity(policy, units, workers)
+    } else {
+        SharedScheduler::new(policy, units, workers)
+    };
     let sched = &sched;
     let (init, body, finish) = (&init, &body, &finish);
     let states: Vec<Result<VecState>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|w| {
                 scope.spawn(move || -> Result<VecState> {
-                    let mut st = VecState::new(cp);
-                    st.scalars.clear();
-                    st.scalars.extend_from_slice(scalars);
-                    let mut ctx = init(&mut st);
+                    if affinity {
+                        let _ = crate::sched::pin_worker(w);
+                    }
+                    let mut st = CacheAligned(VecState::new(cp));
+                    st.0.scalars.clear();
+                    st.0.scalars.extend_from_slice(scalars);
+                    let mut ctx = CacheAligned(init(&mut st.0));
                     while let Some(chunk) = sched.next_chunk(w) {
                         let t0 = Instant::now();
-                        body(&mut st, &mut ctx, chunk)?;
+                        body(&mut st.0, &mut ctx.0, chunk)?;
                         sched.report(w, chunk, t0.elapsed());
                     }
-                    finish(&mut st, ctx)?;
-                    Ok(st)
+                    finish(&mut st.0, ctx.0)?;
+                    Ok(st.0)
                 })
             })
             .collect();
@@ -171,7 +216,9 @@ fn morsel_dispatch<C>(
             .map(|h| h.join().expect("morsel worker panicked"))
             .collect()
     });
-    states.into_iter().collect()
+    let engaged = sched.affinity_engaged();
+    let states: Result<Vec<VecState>> = states.into_iter().collect();
+    Ok((states?, engaged))
 }
 
 /// True when `v` is the additive identity. Worker-private accumulators
@@ -212,6 +259,17 @@ pub fn run_parallel_compiled_with_policy(
     max_threads: usize,
     policy: Policy,
 ) -> Result<Output> {
+    run_parallel_compiled_with_opts(cp, max_threads, policy, true)
+}
+
+/// [`run_parallel_compiled_with_policy`] with the chunk-affinity
+/// machinery selectable (see [`run_parallel_with_opts`]).
+pub fn run_parallel_compiled_with_opts(
+    cp: &CompiledProgram,
+    max_threads: usize,
+    policy: Policy,
+    affinity: bool,
+) -> Result<Output> {
     let threads = clamp_threads(max_threads);
     let mut master = VecState::new(cp);
     for s in &cp.body {
@@ -241,13 +299,14 @@ pub fn run_parallel_compiled_with_policy(
                 let n = (hi - lo) as usize + 1;
                 let workers = threads.min(n);
                 let slot = *slot;
-                let states = morsel_dispatch(
+                let (states, engaged) = morsel_dispatch(
                     MorselJob {
                         cp,
                         scalars: &master.scalars,
                         units: n,
                         workers,
                         policy,
+                        affinity,
                     },
                     |_st| (),
                     |st, _ctx, c| {
@@ -264,6 +323,9 @@ pub fn run_parallel_compiled_with_policy(
                 }
                 master.note_idiom("vec.morsel");
                 master.note_idiom(&format!("sched.{}", policy.name()));
+                if engaged {
+                    master.note_idiom("sched.affinity");
+                }
             }
             // Ordered/bounded emission (the group-by emit half, or an
             // annotated plain scan): workers run disjoint morsels of the
@@ -275,7 +337,7 @@ pub fn run_parallel_compiled_with_policy(
             // `vec.topk` output row-for-row, ties included. This is the
             // bounded case of morsel-driven distinct emission.
             CStmt::Scan(sl) if threads > 1 && emit_parallel_safe(sl) => {
-                emit_topk_fanout(cp, sl, &mut master, threads, policy)?;
+                emit_topk_fanout(cp, sl, &mut master, threads, policy, affinity)?;
             }
             CStmt::Scan(sl)
                 if threads > 1
@@ -300,13 +362,14 @@ pub fn run_parallel_compiled_with_policy(
                 let len = sl.table.len();
                 let units = len.div_ceil(BATCH);
                 let workers = threads.min(units);
-                let states = morsel_dispatch(
+                let (states, engaged) = morsel_dispatch(
                     MorselJob {
                         cp,
                         scalars: &master.scalars,
                         units,
                         workers,
                         policy,
+                        affinity,
                     },
                     // Per-worker fused aggregation state, fed one morsel
                     // range per chunk and materialized once at the end
@@ -328,11 +391,15 @@ pub fn run_parallel_compiled_with_policy(
                         if let Some(fa) = fast {
                             let tag = fa.idiom();
                             let extra = fa.extra_idiom();
+                            let simd = fa.simd();
                             let array = sl.fast.expect("ctx implies fast").array();
                             fa.finish(&mut st.arrays[array]);
                             st.note_idiom(tag);
                             if let Some(extra) = extra {
                                 st.note_idiom(extra);
+                            }
+                            if simd {
+                                st.note_idiom("vec.simd");
                             }
                         }
                         Ok(())
@@ -343,6 +410,9 @@ pub fn run_parallel_compiled_with_policy(
                 }
                 master.note_idiom("vec.morsel");
                 master.note_idiom(&format!("sched.{}", policy.name()));
+                if engaged {
+                    master.note_idiom("sched.affinity");
+                }
             }
             CStmt::Join(jl)
                 if threads > 1
@@ -380,13 +450,14 @@ pub fn run_parallel_compiled_with_policy(
                 } else {
                     policy
                 };
-                let states = morsel_dispatch(
+                let (states, engaged) = morsel_dispatch(
                     MorselJob {
                         cp,
                         scalars: &master.scalars,
                         units,
                         workers,
                         policy: jpolicy,
+                        affinity,
                     },
                     |_st| (),
                     |st, _ctx, c| {
@@ -399,6 +470,9 @@ pub fn run_parallel_compiled_with_policy(
                 }
                 master.note_idiom("vec.morsel");
                 master.note_idiom(&format!("sched.{}", jpolicy.name()));
+                if engaged {
+                    master.note_idiom("sched.affinity");
+                }
             }
             other => master.exec_stmts(cp, std::slice::from_ref(other))?,
         }
@@ -422,6 +496,7 @@ fn emit_topk_fanout(
     master: &mut VecState,
     threads: usize,
     policy: Policy,
+    affinity: bool,
 ) -> Result<()> {
     let spec = sl.emit.clone().expect("emit_parallel_safe implies emit");
     // The distinct domain (group-by emit) iterates one representative
@@ -495,6 +570,7 @@ fn emit_topk_fanout(
                 units,
                 workers,
                 policy,
+                affinity,
             },
             |st| {
                 st.set_shared_arrays(shared.clone());
@@ -530,13 +606,14 @@ fn emit_topk_fanout(
     // stats come back. Dropping the worker states releases their `Arc`
     // handles, so the store can be restored onto the master without a
     // copy — on the error path too, before propagating.
-    let stats_only: Result<()> = states.map(|sts| {
+    let stats_only: Result<bool> = states.map(|(sts, engaged)| {
         for st in sts {
             master.stats.rows_visited += st.stats.rows_visited;
         }
+        engaged
     });
     master.arrays = Arc::try_unwrap(shared).unwrap_or_else(|a| (*a).clone());
-    stats_only?;
+    let engaged = stats_only?;
     let mut merged = TopKSet::new(spec, cp.result_schemas.len());
     for frame in collected.lock().expect("no poisoned lock").drain(..) {
         merged.merge(frame);
@@ -549,6 +626,9 @@ fn emit_topk_fanout(
     master.note_idiom("vec.topk");
     master.note_idiom("vec.morsel");
     master.note_idiom(&format!("sched.{}", policy.name()));
+    if engaged {
+        master.note_idiom("sched.affinity");
+    }
     Ok(())
 }
 
@@ -1012,12 +1092,12 @@ mod tests {
         assert!(!par.stats.idioms.contains(&"vec.morsel".to_string()));
     }
 
-    /// Group-by with enough distinct groups (> one BATCH) that the
-    /// top-k emit fan-out engages.
+    /// Group-by with enough distinct groups (> the spin-up gate) that
+    /// the top-k emit fan-out engages.
     fn topk_setup() -> (Program, StorageCatalog) {
         use crate::ir::{DataType, Multiset, Schema, Value};
         let mut m = Multiset::new(Schema::new(vec![("k", DataType::Str)]));
-        for i in 0..3000usize {
+        for i in 0..6000usize {
             for _ in 0..(1 + i % 7) {
                 m.push(vec![Value::str(format!("key{i:04}"))]);
             }
@@ -1093,6 +1173,60 @@ mod tests {
             par.stats.idioms.contains(&"vec.topk".to_string()),
             "{:?}",
             par.stats.idioms
+        );
+    }
+
+    #[test]
+    fn spinup_gate_holds_small_tables_and_releases_big_ones() {
+        // The recalibrated PARALLEL_SPINUP_ROWS: a 100-row scan stays
+        // sequential (and says so), a 100k-row scan fans out.
+        let (p, c) = scan_setup(100);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let par = run_parallel(&p, &c, 8).unwrap();
+        assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+        assert!(
+            par.stats.idioms.contains(&"opt.small_scan_seq".to_string()),
+            "{:?}",
+            par.stats.idioms
+        );
+        assert!(!par.stats.idioms.contains(&"vec.morsel".to_string()));
+
+        let (p, c) = scan_setup(100_000);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let par = run_parallel(&p, &c, 8).unwrap();
+        assert!(par.result().unwrap().bag_eq(seq.result().unwrap()));
+        assert!(
+            par.stats.idioms.contains(&"vec.morsel".to_string()),
+            "{:?}",
+            par.stats.idioms
+        );
+        assert!(!par.stats.idioms.contains(&"opt.small_scan_seq".to_string()));
+    }
+
+    #[test]
+    fn affinity_toggle_matches_and_tags() {
+        // Affinity on/off must be semantically invisible; with a
+        // fixed-chunk policy every worker pulls multiple chunks from its
+        // home region, so the adjacency signal deterministically engages
+        // and the fan-out tags `sched.affinity` (and only then).
+        let (p, c) = scan_setup(100_000);
+        let seq = super::super::local::run(&p, &c).unwrap();
+        let cp = compile_program(&p, &c).unwrap();
+        let on =
+            run_parallel_compiled_with_opts(&cp, 4, Policy::FixedChunk(4), true).unwrap();
+        assert!(on.result().unwrap().bag_eq(seq.result().unwrap()));
+        assert!(
+            on.stats.idioms.contains(&"sched.affinity".to_string()),
+            "{:?}",
+            on.stats.idioms
+        );
+        let off =
+            run_parallel_compiled_with_opts(&cp, 4, Policy::FixedChunk(4), false).unwrap();
+        assert!(off.result().unwrap().bag_eq(seq.result().unwrap()));
+        assert!(
+            !off.stats.idioms.contains(&"sched.affinity".to_string()),
+            "{:?}",
+            off.stats.idioms
         );
     }
 

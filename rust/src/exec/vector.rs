@@ -26,6 +26,14 @@
 //! stream and float rounding (fold order is preserved; fused float sums
 //! only fire from a zero accumulator, and join probes visit matches in
 //! the interpreter's nested-loop order).
+//!
+//! The dense inner loops are *SIMD-shaped*: selection vectors are built
+//! branchlessly and the integer count/sum kernels accumulate into
+//! [`LANES`] interleaved per-lane partials folded at scan end (exact,
+//! because wrapping integer addition is associative and commutative).
+//! Float folds are never reshaped — reassociating them would change
+//! rounding versus the interpreter. Kernels that fired the SIMD path tag
+//! `"vec.simd"`; see `docs/ARCHITECTURE.md` § Kernel vectorization.
 
 use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::Arc;
@@ -47,6 +55,61 @@ use super::local::{block_bounds, ExecStats, Output};
 /// Rows per batch: large enough to amortize dispatch, small enough to
 /// keep the touched column windows cache-resident.
 pub const BATCH: usize = 1024;
+
+/// Fixed lane width the SIMD-shaped kernels are written against: the
+/// branchless selection builders and the striped integer accumulators
+/// iterate `chunks_exact(LANES)` bodies so the autovectorizer sees a
+/// constant trip count with no data-dependent branches. Eight 64-bit
+/// lanes is one AVX-512 register / two AVX2 registers / four NEON
+/// registers — wide enough to fill any current unit without spilling.
+pub const LANES: usize = 8;
+
+/// Widest dense-dictionary domain the striped kernels will allocate
+/// per-lane accumulators for ([`LANES`] stripes of `width` slots each).
+/// Past this the stripes stop fitting in L2 and the extra fold cost
+/// outweighs the broken store-to-load dependence, so the aggregation
+/// states fall back to a single scalar stripe.
+pub const MAX_STRIPED_WIDTH: usize = 1 << 16;
+
+/// Branchless equality selection: append `base + i` for every `i` with
+/// `vals[i] == key`. The body writes the candidate index unconditionally
+/// and advances the output cursor by the comparison result, so there is
+/// no branch on data — the autovectorizer turns the `chunks_exact(LANES)`
+/// loop into compare-to-mask + compress/store sequences. `sel` grows in
+/// ascending order exactly like the branchy reference loop.
+fn select_eq<T: Copy + PartialEq>(vals: &[T], key: T, base: usize, sel: &mut Vec<usize>) {
+    let start = sel.len();
+    // Reserve worst-case output; writes below stay in-bounds because the
+    // cursor advances at most once per element processed.
+    sel.resize(start + vals.len(), 0);
+    let out = &mut sel[start..];
+    let mut n = 0usize;
+    let mut row = base;
+    let mut chunks = vals.chunks_exact(LANES);
+    for chunk in &mut chunks {
+        for (i, &v) in chunk.iter().enumerate() {
+            out[n] = row + i;
+            n += (v == key) as usize;
+        }
+        row += LANES;
+    }
+    for (i, &v) in chunks.remainder().iter().enumerate() {
+        out[n] = row + i;
+        n += (v == key) as usize;
+    }
+    sel.truncate(start + n);
+}
+
+/// [`select_eq`] over flat `i64` columns (public for the bench harness).
+pub fn select_eq_i64(vals: &[i64], key: i64, base: usize, sel: &mut Vec<usize>) {
+    select_eq(vals, key, base, sel);
+}
+
+/// [`select_eq`] over dictionary-code columns (public for the bench
+/// harness).
+pub fn select_eq_u32(keys: &[u32], key: u32, base: usize, sel: &mut Vec<usize>) {
+    select_eq(keys, key, base, sel);
+}
 
 /// Iterate `[lo, hi)` as `(start, end)` windows of at most [`BATCH`]
 /// rows — the shared morsel granularity used by this module's scan and
@@ -99,20 +162,8 @@ impl<'a> EqFilter<'a> {
     /// `sel` (in ascending row order).
     pub(crate) fn select(&self, lo: usize, hi: usize, sel: &mut Vec<usize>) {
         match self {
-            EqFilter::Ints(vals, k) => {
-                for (i, &v) in vals[lo..hi].iter().enumerate() {
-                    if v == *k {
-                        sel.push(lo + i);
-                    }
-                }
-            }
-            EqFilter::Dict(keys, code) => {
-                for (i, &c) in keys[lo..hi].iter().enumerate() {
-                    if c == *code {
-                        sel.push(lo + i);
-                    }
-                }
-            }
+            EqFilter::Ints(vals, k) => select_eq_i64(&vals[lo..hi], *k, lo, sel),
+            EqFilter::Dict(keys, code) => select_eq_u32(&keys[lo..hi], *code, lo, sel),
             EqFilter::Compressed(c, k) => c.find_eq_in(*k, lo, hi, sel),
             EqFilter::Never => {}
             EqFilter::Boxed(col, key) => {
@@ -146,6 +197,13 @@ impl<'a> EqFilter<'a> {
             EqFilter::Compressed(..) => Some("vec.rle_filter"),
             _ => None,
         }
+    }
+
+    /// True when [`select`](Self::select) runs the branchless
+    /// `chunks_exact(LANES)` builder (flat ints and dict codes) — the
+    /// scan drivers tag `"vec.simd"` for these.
+    pub(crate) fn simd(&self) -> bool {
+        matches!(self, EqFilter::Ints(..) | EqFilter::Dict(..))
     }
 }
 
@@ -818,6 +876,11 @@ impl VecState {
         if let Some(tag) = efilt.as_ref().and_then(|f| f.idiom()) {
             self.note_idiom(tag);
         }
+        if let Some(f) = &efilt {
+            if f.simd() {
+                self.note_idiom("vec.simd");
+            }
+        }
         let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
         for (base, end) in morsel_ranges(lo, hi) {
             self.stats.rows_visited += (end - base) as u64;
@@ -967,26 +1030,30 @@ impl VecState {
                     }
                     (JoinSide::Build, Column::DictStrs { keys, dict }) => {
                         // Gather matched build-row dict codes and drive the
-                        // shared dense count kernel batch-wise.
-                        let mut counts = vec![0i64; dict.len()];
+                        // striped dense count kernel batch-wise.
+                        let mut counts = StripedI64::new(dict.len());
+                        let simd = counts.striped();
                         let mut batch: Vec<u32> = Vec::with_capacity(BATCH);
                         for row in lo..hi {
                             for &irow in build.probe(&pcol.value(row)) {
                                 matched += 1;
                                 batch.push(keys[irow as usize]);
                                 if batch.len() == BATCH {
-                                    count_batch_u32(&batch, &mut counts);
+                                    counts.add_counts(&batch);
                                     batch.clear();
                                 }
                             }
                         }
-                        count_batch_u32(&batch, &mut counts);
+                        counts.add_counts(&batch);
                         let store = &mut self.arrays[array];
-                        for (k, &n) in counts.iter().enumerate() {
+                        for (k, n) in counts.totals().into_iter().enumerate() {
                             if n != 0 {
                                 let s = dict.decode(k as u32).expect("dict key in range").clone();
                                 store.insert(vec![Value::Str(s)], Value::Int(n));
                             }
+                        }
+                        if simd {
+                            self.note_idiom("vec.simd");
                         }
                     }
                     (JoinSide::Build, Column::Ints(keys)) => {
@@ -1085,24 +1152,44 @@ impl VecState {
                         }
                     }
                     (Column::DictStrs { keys, dict }, Column::Ints(vs)) => {
-                        let mut sums = vec![0i64; dict.len()];
+                        // Gather matched (code, value) pairs and drive the
+                        // striped integer sum kernel batch-wise (wrapping
+                        // addition is associative, so striping is exact).
+                        let mut sums = StripedI64::new(dict.len());
+                        let simd = sums.striped();
                         let mut seen = vec![false; dict.len()];
+                        let mut kb: Vec<u32> = Vec::with_capacity(BATCH);
+                        let mut vb: Vec<i64> = Vec::with_capacity(BATCH);
+                        let mut flush = |kb: &mut Vec<u32>, vb: &mut Vec<i64>| {
+                            sums.add_sums(kb, vb);
+                            for &k in kb.iter() {
+                                seen[k as usize] = true;
+                            }
+                            kb.clear();
+                            vb.clear();
+                        };
                         for row in lo..hi {
                             for &irow in build.probe(&pcol.value(row)) {
                                 matched += 1;
                                 let irow = irow as usize;
-                                let k = keys[pick(key_side, row, irow)] as usize;
-                                sums[k] = sums[k].wrapping_add(vs[pick(val_side, row, irow)]);
-                                seen[k] = true;
+                                kb.push(keys[pick(key_side, row, irow)]);
+                                vb.push(vs[pick(val_side, row, irow)]);
+                                if kb.len() == BATCH {
+                                    flush(&mut kb, &mut vb);
+                                }
                             }
                         }
+                        flush(&mut kb, &mut vb);
                         let store = &mut self.arrays[array];
-                        for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                        for (k, (s, &was)) in sums.totals().into_iter().zip(&seen).enumerate() {
                             if was {
                                 let key =
                                     dict.decode(k as u32).expect("dict key in range").clone();
                                 store.insert(vec![Value::Str(key)], Value::Int(s));
                             }
+                        }
+                        if simd {
+                            self.note_idiom("vec.simd");
                         }
                     }
                     (Column::Ints(ks), Column::Floats(vs)) => {
@@ -1267,6 +1354,9 @@ impl VecState {
             if let Some(tag) = f.idiom() {
                 self.note_idiom(tag);
             }
+            if f.simd() {
+                self.note_idiom("vec.simd");
+            }
             let mut sel: Vec<usize> = Vec::with_capacity(BATCH);
             for (base, end) in morsel_ranges(lo, hi) {
                 self.stats.rows_visited += (end - base) as u64;
@@ -1355,10 +1445,14 @@ impl VecState {
         st.update(lo, hi);
         let tag = st.idiom();
         let extra = st.extra_idiom();
+        let simd = st.simd();
         st.finish(&mut self.arrays[fast.array()]);
         self.note_idiom(tag);
         if let Some(extra) = extra {
             self.note_idiom(extra);
+        }
+        if simd {
+            self.note_idiom("vec.simd");
         }
         true
     }
@@ -1392,7 +1486,7 @@ pub(crate) enum FastAggState<'a> {
     CountDense {
         keys: &'a [u32],
         dict: &'a Dictionary,
-        counts: Vec<i64>,
+        counts: StripedI64,
     },
     CountInts {
         keys: &'a [i64],
@@ -1413,7 +1507,7 @@ pub(crate) enum FastAggState<'a> {
         keys: &'a [u32],
         vals: &'a [i64],
         dict: &'a Dictionary,
-        sums: Vec<i64>,
+        sums: StripedI64,
         seen: Vec<bool>,
     },
     SumIntFloat {
@@ -1468,7 +1562,7 @@ impl<'a> FastAggState<'a> {
                 Column::DictStrs { keys, dict } => Some(FastAggState::CountDense {
                     keys,
                     dict,
-                    counts: vec![0i64; dict.len()],
+                    counts: StripedI64::new(dict.len()),
                 }),
                 Column::Ints(keys) => Some(FastAggState::CountInts {
                     keys,
@@ -1503,7 +1597,7 @@ impl<'a> FastAggState<'a> {
                         keys,
                         vals,
                         dict,
-                        sums: vec![0i64; dict.len()],
+                        sums: StripedI64::new(dict.len()),
                         seen: vec![false; dict.len()],
                     })
                 }
@@ -1550,7 +1644,7 @@ impl<'a> FastAggState<'a> {
     pub(crate) fn update(&mut self, lo: usize, hi: usize) {
         match self {
             FastAggState::CountDense { keys, counts, .. } => {
-                count_batch_u32(&keys[lo..hi], counts);
+                counts.add_counts(&keys[lo..hi]);
             }
             FastAggState::CountInts { keys, map } => {
                 for &k in &keys[lo..hi] {
@@ -1586,8 +1680,8 @@ impl<'a> FastAggState<'a> {
                 seen,
                 ..
             } => {
-                for (&k, &v) in keys[lo..hi].iter().zip(&vals[lo..hi]) {
-                    sums[k as usize] = sums[k as usize].wrapping_add(v);
+                sums.add_sums(&keys[lo..hi], &vals[lo..hi]);
+                for &k in &keys[lo..hi] {
                     seen[k as usize] = true;
                 }
             }
@@ -1637,7 +1731,7 @@ impl<'a> FastAggState<'a> {
             }
             FastAggState::SumRleInt { col, vals, map } => {
                 for (k, rlo, rhi) in col.run_windows(lo, hi) {
-                    let run = vals[rlo..rhi].iter().fold(0i64, |a, &v| a.wrapping_add(v));
+                    let run = sum_lanes_i64(&vals[rlo..rhi]);
                     let e = map.entry(k).or_insert(0);
                     *e = e.wrapping_add(run);
                 }
@@ -1649,7 +1743,7 @@ impl<'a> FastAggState<'a> {
     pub(crate) fn finish(self, store: &mut FxHashMap<Tuple, Value>) {
         match self {
             FastAggState::CountDense { dict, counts, .. } => {
-                for (k, &n) in counts.iter().enumerate() {
+                for (k, n) in counts.totals().into_iter().enumerate() {
                     if n != 0 {
                         let s = dict.decode(k as u32).expect("dict key in range").clone();
                         store.insert(vec![Value::Str(s)], Value::Int(n));
@@ -1679,7 +1773,7 @@ impl<'a> FastAggState<'a> {
             FastAggState::SumDenseInt {
                 dict, sums, seen, ..
             } => {
-                for (k, (&s, &was)) in sums.iter().zip(&seen).enumerate() {
+                for (k, (s, &was)) in sums.totals().into_iter().zip(&seen).enumerate() {
                     if was {
                         let key = dict.decode(k as u32).expect("dict key in range").clone();
                         store.insert(vec![Value::Str(key)], Value::Int(s));
@@ -1744,6 +1838,19 @@ impl<'a> FastAggState<'a> {
             | FastAggState::SumRleFloat { .. }
             | FastAggState::SumRleInt { .. } => Some("vec.rle_agg"),
             _ => None,
+        }
+    }
+
+    /// True when the state's update loop runs a SIMD-shaped kernel — the
+    /// striped integer histograms or the RLE `LANES`-wide pre-fold — so
+    /// callers can tag `"vec.simd"`. Float states never qualify: their
+    /// folds keep the interpreter's row order.
+    pub(crate) fn simd(&self) -> bool {
+        match self {
+            FastAggState::CountDense { counts, .. } => counts.striped(),
+            FastAggState::SumDenseInt { sums, .. } => sums.striped(),
+            FastAggState::SumRleInt { .. } => true,
+            _ => false,
         }
     }
 }
@@ -1832,10 +1939,22 @@ fn eval_ops(
 // Shared batch kernels: the dense inner loops used by (1) this tier's
 // fused aggregations, (2) the idiom kernels' native fallbacks in plan.rs,
 // and (3) the distributed coordinator's per-node `process_chunk`.
+//
+// Dense-width contract: every `acc[k as usize]` below indexes without a
+// runtime bounds branch on the hot path in release builds only because
+// the caller sizes `acc` to the key column's *dense domain* — a
+// dictionary column's codes are `0..dict.len()` by construction, and the
+// i64-keyed variants are only driven with accumulators pre-sized to the
+// (validated, non-negative) key range. The `debug_assert!`s document and
+// check that contract in debug/test builds.
 // ---------------------------------------------------------------------------
 
 /// `acc[k] += 1` over a batch of dictionary keys.
 pub fn count_batch_u32(keys: &[u32], acc: &mut [i64]) {
+    debug_assert!(
+        keys.iter().all(|&k| (k as usize) < acc.len()),
+        "dense-width contract: every dict code must fit the accumulator"
+    );
     for &k in keys {
         acc[k as usize] += 1;
     }
@@ -1843,6 +1962,10 @@ pub fn count_batch_u32(keys: &[u32], acc: &mut [i64]) {
 
 /// `acc[k] += 1` over a batch of integer keys.
 pub fn count_batch_i64(keys: &[i64], acc: &mut [i64]) {
+    debug_assert!(
+        keys.iter().all(|&k| 0 <= k && (k as usize) < acc.len()),
+        "dense-width contract: every key must be in [0, acc.len())"
+    );
     for &k in keys {
         acc[k as usize] += 1;
     }
@@ -1850,6 +1973,10 @@ pub fn count_batch_i64(keys: &[i64], acc: &mut [i64]) {
 
 /// f64-accumulator variant (the coordinator's wire format).
 pub fn count_batch_u32_f64(keys: &[u32], acc: &mut [f64]) {
+    debug_assert!(
+        keys.iter().all(|&k| (k as usize) < acc.len()),
+        "dense-width contract: every dict code must fit the accumulator"
+    );
     for &k in keys {
         acc[k as usize] += 1.0;
     }
@@ -1857,6 +1984,10 @@ pub fn count_batch_u32_f64(keys: &[u32], acc: &mut [f64]) {
 
 /// f64-accumulator variant (the coordinator's wire format).
 pub fn count_batch_i64_f64(keys: &[i64], acc: &mut [f64]) {
+    debug_assert!(
+        keys.iter().all(|&k| 0 <= k && (k as usize) < acc.len()),
+        "dense-width contract: every key must be in [0, acc.len())"
+    );
     for &k in keys {
         acc[k as usize] += 1.0;
     }
@@ -1864,6 +1995,10 @@ pub fn count_batch_i64_f64(keys: &[i64], acc: &mut [f64]) {
 
 /// `acc[k] += v` over aligned key/value batches (dictionary keys).
 pub fn sum_batch_u32(keys: &[u32], vals: &[f64], acc: &mut [f64]) {
+    debug_assert!(
+        keys.iter().all(|&k| (k as usize) < acc.len()),
+        "dense-width contract: every dict code must fit the accumulator"
+    );
     for (&k, &v) in keys.iter().zip(vals) {
         acc[k as usize] += v;
     }
@@ -1871,8 +2006,161 @@ pub fn sum_batch_u32(keys: &[u32], vals: &[f64], acc: &mut [f64]) {
 
 /// `acc[k] += v` over aligned key/value batches (integer keys).
 pub fn sum_batch_i64(keys: &[i64], vals: &[f64], acc: &mut [f64]) {
+    debug_assert!(
+        keys.iter().all(|&k| 0 <= k && (k as usize) < acc.len()),
+        "dense-width contract: every key must be in [0, acc.len())"
+    );
     for (&k, &v) in keys.iter().zip(vals) {
         acc[k as usize] += v;
+    }
+}
+
+/// `acc[k] = acc[k].wrapping_add(v)` over aligned key/value batches —
+/// the scalar single-stripe fallback the integer-sum states use when the
+/// dictionary is too wide for striping (see [`MAX_STRIPED_WIDTH`]).
+pub fn sum_batch_u32_i64(keys: &[u32], vals: &[i64], acc: &mut [i64]) {
+    debug_assert!(
+        keys.iter().all(|&k| (k as usize) < acc.len()),
+        "dense-width contract: every dict code must fit the accumulator"
+    );
+    for (&k, &v) in keys.iter().zip(vals) {
+        acc[k as usize] = acc[k as usize].wrapping_add(v);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD-shaped striped kernels (`vec.simd`): fixed-trip-count
+// `chunks_exact(LANES)` bodies over LANES independent per-lane partials.
+// Lane `l`'s partial for dense slot `k` lives at `stripes[l * width + k]`,
+// so a chunk's LANES updates hit LANES disjoint histograms — repeated
+// keys never serialize on one store-to-load chain, and the autovectorizer
+// sees a branch-free constant-width body. Only *integer* accumulators are
+// striped: wrapping `i64` addition is associative and commutative, so the
+// end-of-scan stripe fold is bit-exact with the scalar loop. Float folds
+// are never striped — they keep the interpreter's row order (see the
+// module doc's semantics contract).
+// ---------------------------------------------------------------------------
+
+/// Striped `acc[k] += 1`: fold rows into `LANES` interleaved count
+/// histograms. `stripes.len()` must be `LANES * width`.
+pub fn count_batch_u32_striped(keys: &[u32], width: usize, stripes: &mut [i64]) {
+    debug_assert_eq!(stripes.len(), LANES * width);
+    debug_assert!(
+        keys.iter().all(|&k| (k as usize) < width),
+        "dense-width contract: every dict code must fit the accumulator"
+    );
+    let mut chunks = keys.chunks_exact(LANES);
+    for chunk in &mut chunks {
+        for (l, &k) in chunk.iter().enumerate() {
+            stripes[l * width + k as usize] += 1;
+        }
+    }
+    for &k in chunks.remainder() {
+        stripes[k as usize] += 1;
+    }
+}
+
+/// Striped `acc[k] += v` over aligned key/value batches (wrapping `i64`
+/// sums). `stripes.len()` must be `LANES * width`.
+pub fn sum_batch_u32_i64_striped(keys: &[u32], vals: &[i64], width: usize, stripes: &mut [i64]) {
+    debug_assert_eq!(stripes.len(), LANES * width);
+    debug_assert_eq!(keys.len(), vals.len());
+    debug_assert!(
+        keys.iter().all(|&k| (k as usize) < width),
+        "dense-width contract: every dict code must fit the accumulator"
+    );
+    let mut kc = keys.chunks_exact(LANES);
+    let mut vc = vals.chunks_exact(LANES);
+    for (ks, vs) in (&mut kc).zip(&mut vc) {
+        for (l, (&k, &v)) in ks.iter().zip(vs).enumerate() {
+            let slot = &mut stripes[l * width + k as usize];
+            *slot = slot.wrapping_add(v);
+        }
+    }
+    for (&k, &v) in kc.remainder().iter().zip(vc.remainder()) {
+        let slot = &mut stripes[k as usize];
+        *slot = slot.wrapping_add(v);
+    }
+}
+
+/// Fold `LANES` (or one) interleaved stripes back into a single dense
+/// `width`-slot vector. Accepts the single-stripe layout too, so callers
+/// can finish either path through one code shape.
+pub fn fold_lanes_i64(width: usize, stripes: &[i64]) -> Vec<i64> {
+    if width == 0 {
+        return Vec::new();
+    }
+    let mut out = vec![0i64; width];
+    for stripe in stripes.chunks_exact(width) {
+        for (o, &s) in out.iter_mut().zip(stripe) {
+            *o = o.wrapping_add(s);
+        }
+    }
+    out
+}
+
+/// Fixed-width pre-fold of a flat `i64` slice (wrapping addition): the
+/// RLE run-aggregation kernel sums each run's values through `LANES`
+/// partials folded at the end — exact for integers, and the shape the
+/// autovectorizer turns into vertical adds plus one horizontal reduce.
+pub fn sum_lanes_i64(vals: &[i64]) -> i64 {
+    let mut parts = [0i64; LANES];
+    let mut chunks = vals.chunks_exact(LANES);
+    for chunk in &mut chunks {
+        for (p, &v) in parts.iter_mut().zip(chunk) {
+            *p = p.wrapping_add(v);
+        }
+    }
+    let mut total = parts.iter().fold(0i64, |a, &p| a.wrapping_add(p));
+    for &v in chunks.remainder() {
+        total = total.wrapping_add(v);
+    }
+    total
+}
+
+/// LANES-striped dense `i64` accumulator shared by the fused count and
+/// integer-sum states: allocates `LANES` stripes for dictionary widths up
+/// to [`MAX_STRIPED_WIDTH`] (the `vec.simd` path) and a single scalar
+/// stripe beyond that.
+pub(crate) struct StripedI64 {
+    width: usize,
+    data: Vec<i64>,
+}
+
+impl StripedI64 {
+    pub(crate) fn new(width: usize) -> StripedI64 {
+        let striped = width <= MAX_STRIPED_WIDTH;
+        let stripes = if striped { LANES } else { 1 };
+        StripedI64 {
+            width,
+            data: vec![0i64; width * stripes],
+        }
+    }
+
+    /// True when per-lane stripes were allocated (the `vec.simd` path).
+    pub(crate) fn striped(&self) -> bool {
+        self.data.len() > self.width
+    }
+
+    pub(crate) fn add_counts(&mut self, keys: &[u32]) {
+        if self.striped() {
+            count_batch_u32_striped(keys, self.width, &mut self.data);
+        } else {
+            count_batch_u32(keys, &mut self.data);
+        }
+    }
+
+    pub(crate) fn add_sums(&mut self, keys: &[u32], vals: &[i64]) {
+        if self.striped() {
+            sum_batch_u32_i64_striped(keys, vals, self.width, &mut self.data);
+        } else {
+            sum_batch_u32_i64(keys, vals, &mut self.data);
+        }
+    }
+
+    /// Fold the stripes into one dense `width`-slot total vector.
+    pub(crate) fn totals(&self) -> Vec<i64> {
+        fold_lanes_i64(self.width, &self.data)
     }
 }
 
@@ -2434,5 +2722,81 @@ mod tests {
         count_batch_strs(&strs, &mut m);
         assert_eq!(m[&Arc::<str>::from("/a")], 2.0);
         assert_eq!(m[&Arc::<str>::from("/b")], 1.0);
+    }
+
+    /// The dense-width contract the `debug_assert!`s in the batch kernels
+    /// document: every code a dictionary column stores decodes, i.e. the
+    /// widest code fits a `dict.len()`-slot accumulator.
+    #[test]
+    fn widest_dict_code_fits_the_dense_accumulator() {
+        let c = catalog(2000, true);
+        let t = c.get("access").unwrap();
+        let Column::DictStrs { keys, dict } = t.column(0) else {
+            panic!("url column must be dict-encoded");
+        };
+        let widest = keys.iter().copied().max().unwrap() as usize;
+        assert!(
+            widest < dict.len(),
+            "widest code {widest} must index a len-{} accumulator",
+            dict.len()
+        );
+        // And the kernels accept exactly that width.
+        let mut acc = vec![0i64; dict.len()];
+        count_batch_u32(keys, &mut acc);
+        assert_eq!(acc.iter().sum::<i64>(), t.len() as i64);
+        let mut striped = StripedI64::new(dict.len());
+        striped.add_counts(keys);
+        assert_eq!(striped.totals(), acc);
+    }
+
+    /// The striped kernels and the LANES pre-fold are bit-exact with the
+    /// scalar loops (wrapping integer addition is associative), across
+    /// remainder lengths around LANES boundaries.
+    #[test]
+    fn striped_kernels_fold_to_the_scalar_totals() {
+        for n in [0, 1, LANES - 1, LANES, 3 * LANES + 2, 5000] {
+            let keys: Vec<u32> = (0..n as u32).map(|i| i % 37).collect();
+            let vals: Vec<i64> = (0..n as i64).map(|i| (i % 11) - 5).collect();
+            let width = 37;
+
+            let mut scalar_counts = vec![0i64; width];
+            count_batch_u32(&keys, &mut scalar_counts);
+            let mut striped = vec![0i64; LANES * width];
+            count_batch_u32_striped(&keys, width, &mut striped);
+            assert_eq!(fold_lanes_i64(width, &striped), scalar_counts, "n={n}");
+
+            let mut scalar_sums = vec![0i64; width];
+            sum_batch_u32_i64(&keys, &vals, &mut scalar_sums);
+            let mut striped = vec![0i64; LANES * width];
+            sum_batch_u32_i64_striped(&keys, &vals, width, &mut striped);
+            assert_eq!(fold_lanes_i64(width, &striped), scalar_sums, "n={n}");
+
+            let seq = vals.iter().fold(0i64, |a, &v| a.wrapping_add(v));
+            assert_eq!(sum_lanes_i64(&vals), seq, "n={n}");
+        }
+        assert_eq!(fold_lanes_i64(0, &[]), Vec::<i64>::new());
+        // Past the striping width cap the accumulator stays scalar.
+        assert!(!StripedI64::new(MAX_STRIPED_WIDTH + 1).striped());
+        assert!(StripedI64::new(64).striped());
+    }
+
+    /// The branchless selection builder appends exactly the branchy
+    /// reference's rows, in order, across remainder lengths — including
+    /// when appending to a non-empty selection vector.
+    #[test]
+    fn branchless_select_matches_reference_across_remainders() {
+        for n in [0, 1, LANES - 1, LANES, 2 * LANES + 3, 1000] {
+            let vals: Vec<i64> = (0..n as i64).map(|i| i % 7).collect();
+            let reference: Vec<usize> = (0..n).filter(|&i| vals[i] == 3).map(|i| 100 + i).collect();
+            let mut sel = vec![42usize];
+            select_eq_i64(&vals, 3, 100, &mut sel);
+            assert_eq!(sel[0], 42, "n={n}: existing entries must survive");
+            assert_eq!(&sel[1..], &reference[..], "n={n}");
+
+            let codes: Vec<u32> = vals.iter().map(|&v| v as u32).collect();
+            let mut sel = Vec::new();
+            select_eq_u32(&codes, 3, 100, &mut sel);
+            assert_eq!(sel, reference, "n={n}");
+        }
     }
 }

@@ -34,7 +34,7 @@ use crate::analysis::cost::PARALLEL_SPINUP_ROWS;
 
 /// The morsel fan-out gate: parallel workers only pay off once the
 /// iteration space amortizes thread spin-up and state merging
-/// ([`PARALLEL_SPINUP_ROWS`], one `exec::BATCH` morsel). `exec::parallel`
+/// ([`PARALLEL_SPINUP_ROWS`], four `exec::BATCH` morsels). `exec::parallel`
 /// consults this for every eligible scan and join probe; a rejected
 /// fan-out runs sequentially on the master state and tags
 /// `opt.small_scan_seq` / `opt.small_join_seq`.
@@ -56,9 +56,13 @@ mod tests {
 
     #[test]
     fn spinup_constant_tracks_the_morsel_batch_size() {
-        // The gate is documented as "one BATCH morsel"; if BATCH is ever
-        // retuned (e.g. for SIMD width), recalibrate the spin-up constant
-        // together with it instead of letting the two drift silently.
-        assert_eq!(PARALLEL_SPINUP_ROWS, crate::exec::BATCH as u64);
+        // The gate is documented as "four BATCH morsels" — the SIMD-shaped
+        // kernels made sequential scans fast enough that fan-out only pays
+        // past several batches. Keep the constant an exact BATCH multiple
+        // so the two never drift silently.
+        assert_eq!(PARALLEL_SPINUP_ROWS, 4 * crate::exec::BATCH as u64);
+        // The gate still holds tiny tables sequential and releases big ones.
+        assert!(!should_fan_out(100, 8));
+        assert!(should_fan_out(100_000, 2));
     }
 }

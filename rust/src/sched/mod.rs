@@ -7,6 +7,15 @@
 //! scheme runs dynamic scheduling over super-chunks that are executed
 //! with a static schedule inside, so a node failure costs exactly one
 //! super-chunk of recompute.
+//!
+//! [`SharedScheduler::with_affinity`] adds *cache affinity* on top of
+//! any policy: each worker owns a contiguous home region of the
+//! iteration space and pulls the range adjacent to its last-completed
+//! chunk (chunk sizes still follow the policy), stealing from the
+//! largest remaining region only once its neighborhood is drained.
+//! Fan-outs that observed an adjacent pull tag `"sched.affinity"`.
+//! [`pin_worker`] optionally pins worker threads to cores — best-effort,
+//! behind the off-by-default `core_affinity` feature, a no-op elsewhere.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
@@ -224,6 +233,43 @@ impl Scheduler {
         Some(Chunk { lo, hi })
     }
 
+    /// Chunk *size* the policy would issue with `remaining` iterations
+    /// left — the position-free half of [`next_chunk`](Self::next_chunk),
+    /// used by the affinity-aware shared scheduler, which carves chunks
+    /// off per-worker regions rather than off one global cursor.
+    /// Factoring degrades to its per-chunk size (regions shrink
+    /// independently, so batches cannot be pre-carved); StaticBlock takes
+    /// the caller's whole region.
+    fn next_size(&mut self, worker: usize, remaining: usize) -> usize {
+        match self.policy {
+            Policy::StaticBlock => remaining,
+            Policy::FixedChunk(s) => s.max(1),
+            Policy::Gss => remaining.div_ceil(self.workers),
+            Policy::Trapezoid => {
+                let s = self.trapezoid_next.round().max(1.0) as usize;
+                self.trapezoid_next = (self.trapezoid_next - self.trapezoid_delta).max(1.0);
+                s
+            }
+            Policy::Factoring => {
+                let batch = (remaining / 2).max(self.workers.min(remaining));
+                (batch / self.workers).max(1)
+            }
+            Policy::FeedbackGuided => {
+                let base = remaining.div_ceil(self.workers);
+                let avg: f64 = self.speeds.iter().sum::<f64>() / self.workers as f64;
+                ((base as f64) * (self.speeds[worker] / avg).clamp(0.25, 4.0))
+                    .round()
+                    .max(1.0) as usize
+            }
+            Policy::Hybrid {
+                super_chunks_per_worker,
+            } => {
+                let total_chunks = self.workers * super_chunks_per_worker.max(1);
+                (self.n / total_chunks).max(1)
+            }
+        }
+    }
+
     /// Report a completed chunk (feedback-guided uses the timing).
     pub fn report(&mut self, worker: usize, chunk: Chunk, elapsed: Duration) {
         if self.policy == Policy::FeedbackGuided {
@@ -264,19 +310,111 @@ impl Scheduler {
 /// morsel — so contention stays negligible next to chunk execution.
 #[derive(Debug)]
 pub struct SharedScheduler {
-    inner: Mutex<Scheduler>,
+    inner: Mutex<SharedInner>,
+}
+
+#[derive(Debug)]
+struct SharedInner {
+    sched: Scheduler,
+    affinity: Option<AffinityState>,
+}
+
+/// Per-worker chunk-affinity state: the iteration space is carved into
+/// one contiguous home region per worker and each region is consumed
+/// front-to-back, so every chunk a worker pulls from its own region is
+/// adjacent to its previous one (the column windows it just touched stay
+/// cache-resident). Chunk *sizes* still follow the wrapped policy.
+#[derive(Debug)]
+struct AffinityState {
+    /// Un-issued remainder of each worker's contiguous share of `[0, n)`.
+    regions: Vec<Chunk>,
+    /// End of the last chunk each worker pulled, for the adjacency check.
+    last_hi: Vec<Option<usize>>,
+    /// Some worker pulled the range adjacent to its previous chunk.
+    engaged: bool,
+    /// Iterations not yet issued, across all regions.
+    remaining: usize,
 }
 
 impl SharedScheduler {
     pub fn new(policy: Policy, n: usize, workers: usize) -> Self {
         SharedScheduler {
-            inner: Mutex::new(Scheduler::new(policy, n, workers)),
+            inner: Mutex::new(SharedInner {
+                sched: Scheduler::new(policy, n, workers),
+                affinity: None,
+            }),
+        }
+    }
+
+    /// Like [`new`](Self::new), but cache- and affinity-aware: `[0, n)`
+    /// is carved into one contiguous home region per worker (via
+    /// `exec::block_bounds`, the static-block shape), and `next_chunk`
+    /// serves worker `w` from region `w` front-to-back — preferentially
+    /// the range adjacent to its last-completed chunk — falling back to
+    /// stealing from the front of the largest remaining region once its
+    /// own neighborhood is drained. [`Policy::StaticBlock`] never steals:
+    /// its affinity regions *are* the static blocks, preserving the
+    /// one-contiguous-range-per-worker guarantee fused joins rely on.
+    pub fn with_affinity(policy: Policy, n: usize, workers: usize) -> Self {
+        let regions: Vec<Chunk> = (0..workers)
+            .map(|w| {
+                let (lo, hi) = crate::exec::block_bounds(n, workers, w);
+                Chunk { lo, hi }
+            })
+            .collect();
+        SharedScheduler {
+            inner: Mutex::new(SharedInner {
+                sched: Scheduler::new(policy, n, workers),
+                affinity: Some(AffinityState {
+                    regions,
+                    last_hi: vec![None; workers],
+                    engaged: false,
+                    remaining: n,
+                }),
+            }),
         }
     }
 
     /// Next chunk for `worker`, or `None` when the space is exhausted.
     pub fn next_chunk(&self, worker: usize) -> Option<Chunk> {
-        self.inner.lock().expect("scheduler lock").next_chunk(worker)
+        let inner = &mut *self.inner.lock().expect("scheduler lock");
+        let Some(aff) = &mut inner.affinity else {
+            return inner.sched.next_chunk(worker);
+        };
+        if aff.remaining == 0 {
+            return None;
+        }
+        // Own region first (the range adjacent to the worker's last
+        // chunk); steal from the largest remainder once it is drained.
+        let source = if !aff.regions[worker].is_empty() {
+            worker
+        } else {
+            if inner.sched.policy == Policy::StaticBlock {
+                return None;
+            }
+            aff.regions
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, r)| r.len())
+                .map(|(w, _)| w)?
+        };
+        let size = inner
+            .sched
+            .next_size(worker, aff.remaining)
+            .clamp(1, aff.regions[source].len());
+        let region = &mut aff.regions[source];
+        let c = Chunk {
+            lo: region.lo,
+            hi: region.lo + size,
+        };
+        region.lo = c.hi;
+        aff.remaining -= c.len();
+        inner.sched.chunks_issued += 1;
+        if source == worker && aff.last_hi[worker] == Some(c.lo) {
+            aff.engaged = true;
+        }
+        aff.last_hi[worker] = Some(c.hi);
+        Some(c)
     }
 
     /// Report a completed chunk (feedback-guided policies use the timing).
@@ -284,12 +422,68 @@ impl SharedScheduler {
         self.inner
             .lock()
             .expect("scheduler lock")
+            .sched
             .report(worker, chunk, elapsed);
     }
 
     /// Total chunks handed out so far.
     pub fn chunks_issued(&self) -> usize {
-        self.inner.lock().expect("scheduler lock").chunks_issued
+        self.inner.lock().expect("scheduler lock").sched.chunks_issued
+    }
+
+    /// True when some worker pulled the range adjacent to its previous
+    /// chunk — the signal fan-outs turn into the `"sched.affinity"` tag.
+    /// Always `false` for schedulers built with [`new`](Self::new).
+    pub fn affinity_engaged(&self) -> bool {
+        match &self.inner.lock().expect("scheduler lock").affinity {
+            Some(a) => a.engaged,
+            None => false,
+        }
+    }
+}
+
+/// Best-effort: pin the calling worker thread to a core chosen by worker
+/// index (round-robin over the machine's cores). Returns whether the pin
+/// took. Compiled to a no-op returning `false` unless the off-by-default
+/// `core_affinity` feature is enabled on Linux — schedulers treat
+/// pinning strictly as a hint, never a requirement.
+#[cfg(all(feature = "core_affinity", target_os = "linux"))]
+pub fn pin_worker(worker: usize) -> bool {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    pin::pin_to_core(worker % cores)
+}
+
+/// No-op fallback: the `core_affinity` feature is off or the platform
+/// has no `sched_setaffinity`.
+#[cfg(not(all(feature = "core_affinity", target_os = "linux")))]
+pub fn pin_worker(_worker: usize) -> bool {
+    false
+}
+
+#[cfg(all(feature = "core_affinity", target_os = "linux"))]
+mod pin {
+    /// `cpu_set_t` as `sched_setaffinity(2)` expects it: 1024 bits.
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16],
+    }
+
+    extern "C" {
+        // std already links libc on Linux, so no new dependency.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+
+    pub fn pin_to_core(core: usize) -> bool {
+        if core >= 16 * 64 {
+            return false;
+        }
+        let mut set = CpuSet { bits: [0u64; 16] };
+        set.bits[core / 64] = 1u64 << (core % 64);
+        // SAFETY: pid 0 targets the calling thread; the mask is a live
+        // local of exactly the size we pass.
+        unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
     }
 }
 
@@ -443,6 +637,130 @@ mod tests {
             );
             assert!(s.chunks_issued() >= workers.min(n));
         }
+    }
+
+    /// Drain an affinity scheduler round-robin and assert exactly-once
+    /// coverage of `0..n` (StaticBlock workers stop at their own region;
+    /// the round-robin still covers everything).
+    fn affinity_coverage(policy: Policy, n: usize, p: usize) {
+        let s = SharedScheduler::with_affinity(policy, n, p);
+        let mut seen = vec![false; n];
+        loop {
+            let mut any = false;
+            for w in 0..p {
+                if let Some(c) = s.next_chunk(w) {
+                    any = true;
+                    s.report(w, c, Duration::from_micros(c.len() as u64));
+                    for i in c.lo..c.hi {
+                        assert!(!seen[i], "{policy:?}: iteration {i} issued twice");
+                        seen[i] = true;
+                    }
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        assert!(
+            seen.iter().all(|&b| b),
+            "{policy:?}: some iteration never issued"
+        );
+    }
+
+    #[test]
+    fn affinity_scheduler_covers_exactly_once() {
+        for policy in Policy::ALL {
+            for (n, p) in [(100, 4), (1000, 8), (5, 8), (1, 1), (64, 3)] {
+                affinity_coverage(policy, n, p);
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_scheduler_covers_exactly_once_under_concurrency() {
+        for policy in Policy::ALL {
+            let n = 10_000;
+            let workers = 4;
+            let s = SharedScheduler::with_affinity(policy, n, workers);
+            let s = &s;
+            let covered: Vec<Vec<Chunk>> = std::thread::scope(|scope| {
+                (0..workers)
+                    .map(|w| {
+                        scope.spawn(move || {
+                            let mut got = Vec::new();
+                            while let Some(c) = s.next_chunk(w) {
+                                s.report(w, c, Duration::from_micros(c.len() as u64));
+                                got.push(c);
+                            }
+                            got
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let mut seen = vec![false; n];
+            for c in covered.iter().flatten() {
+                for i in c.lo..c.hi {
+                    assert!(!seen[i], "{policy:?}: iteration {i} issued twice");
+                    seen[i] = true;
+                }
+            }
+            // StaticBlock workers never steal, so a worker that finishes
+            // early leaves its peers' regions alone — but every region is
+            // still drained by its owner.
+            assert!(
+                seen.iter().all(|&b| b),
+                "{policy:?}: some iteration never issued"
+            );
+        }
+    }
+
+    #[test]
+    fn affinity_workers_pull_adjacent_chunks_and_engage() {
+        let s = SharedScheduler::with_affinity(Policy::FixedChunk(10), 100, 2);
+        assert!(!s.affinity_engaged());
+        let a = s.next_chunk(0).unwrap();
+        assert_eq!((a.lo, a.hi), (0, 10));
+        let b = s.next_chunk(0).unwrap();
+        assert_eq!((b.lo, b.hi), (10, 20), "second pull continues the region");
+        assert!(s.affinity_engaged());
+        // Worker 1 serves its own half, not worker 0's neighborhood.
+        let c = s.next_chunk(1).unwrap();
+        assert_eq!((c.lo, c.hi), (50, 60));
+    }
+
+    #[test]
+    fn affinity_steals_only_after_neighborhood_drained() {
+        let s = SharedScheduler::with_affinity(Policy::FixedChunk(25), 100, 2);
+        // Worker 0 drains its own half, then steals worker 1's remainder.
+        let mut rows = 0;
+        let mut chunks = Vec::new();
+        while let Some(c) = s.next_chunk(0) {
+            rows += c.len();
+            chunks.push(c);
+        }
+        assert_eq!(rows, 100, "dynamic policies steal the whole space");
+        assert!(chunks[0].hi <= 50 && chunks[1].hi <= 50);
+        assert!(chunks.last().unwrap().hi == 100);
+    }
+
+    #[test]
+    fn affinity_static_blocks_stay_pinned() {
+        let s = SharedScheduler::with_affinity(Policy::StaticBlock, 100, 4);
+        for w in 0..4 {
+            let c = s.next_chunk(w).unwrap();
+            assert_eq!((c.lo, c.hi), crate::exec::block_bounds(100, 4, w));
+            assert!(s.next_chunk(w).is_none(), "static never steals");
+        }
+    }
+
+    #[test]
+    fn pin_worker_is_best_effort() {
+        // No-op (false) without the `core_affinity` feature; with it,
+        // pinning to an in-range core must not panic either way.
+        let _ = pin_worker(0);
     }
 
     #[test]

@@ -503,8 +503,9 @@ fn morsel_parallel_scans_match_interpreter_across_policies() {
     // accumulation so the bags are exact under any worker merge order
     // (float folds may reorder across workers by design).
     forall_seeds(6, |rng| {
-        // More rows than one BATCH (1024) so the morsel driver engages.
-        let rows = 1200 + rng.below(1800) as usize;
+        // More rows than the spin-up gate (PARALLEL_SPINUP_ROWS = 4096)
+        // so the morsel driver engages.
+        let rows = 4200 + rng.below(1800) as usize;
         let keys = 1 + rng.below(24);
         let mut m = Multiset::new(Schema::new(vec![
             ("k", DataType::Str),
@@ -561,6 +562,117 @@ fn morsel_parallel_scans_match_interpreter_across_policies() {
                     par.stats.idioms
                 );
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_kernels_agree_across_remainders_policies_and_affinity() {
+    // The SIMD-shaped kernels (branchless selection building, striped
+    // integer accumulators) must be invisible in the results: bag_eq
+    // with the interpreter at every final-batch remainder length
+    // (n mod LANES ∈ {0, 1, LANES−1} — BATCH is a LANES multiple, so
+    // whole extra batches keep the remainder intact), under every
+    // scheduling policy, with chunk-affinity on and off. Float sums are
+    // checked ROW-identical sequentially: the sequential tier never
+    // stripes floats, so its fold order — and every last bit — matches
+    // the interpreter.
+    let lanes = forelem::exec::LANES;
+    let batch = forelem::exec::BATCH;
+    assert_eq!(batch % lanes, 0, "BATCH must stay a LANES multiple");
+    forall_seeds(3, |rng| {
+        for rem in [0, 1, lanes - 1] {
+            // > PARALLEL_SPINUP_ROWS so the morsel driver engages.
+            let rows = (5 + rng.below(3) as usize) * batch + rem;
+            let keys = 1 + rng.below(40);
+            let mut m = Multiset::new(Schema::new(vec![
+                ("k", DataType::Str),
+                ("n", DataType::Int),
+                ("x", DataType::Float),
+            ]));
+            for _ in 0..rows {
+                m.push(vec![
+                    Value::str(format!("key{}", rng.below(keys))),
+                    Value::Int(rng.range(-50, 50)),
+                    Value::Float((rng.f64() - 0.5) * 10.0),
+                ]);
+            }
+            let mut t = forelem::storage::Table::from_multiset(&m).map_err(|e| e.to_string())?;
+            t.dict_encode_field(0).map_err(|e| e.to_string())?;
+            let mut catalog = StorageCatalog::new();
+            catalog.insert("t", t);
+
+            // Integer-exact kernels: striped count/sum and the branchless
+            // dict-code equality filter, sequential then parallel.
+            let queries = [
+                "SELECT k, COUNT(k) FROM t GROUP BY k",
+                "SELECT k, SUM(n) FROM t GROUP BY k",
+                "SELECT k, n FROM t WHERE k = 'key0'",
+            ];
+            for q in queries {
+                let p = forelem::sql::compile_sql(q, &catalog.schemas())
+                    .map_err(|e| e.to_string())?;
+                let reference = forelem::exec::run(&p, &catalog).map_err(|e| e.to_string())?;
+                let out = forelem::exec::run_vectorized(&p, &catalog)
+                    .map_err(|e| e.to_string())?
+                    .ok_or_else(|| format!("vectorized tier skipped `{q}`"))?;
+                prop_assert!(
+                    out.result().unwrap().bag_eq(reference.result().unwrap()),
+                    "`{q}` diverged sequentially (rows={rows}, rem={rem})"
+                );
+                prop_assert!(
+                    out.stats.idioms.contains(&"vec.simd".to_string()),
+                    "`{q}` missing `vec.simd` (rows={rows}): {:?}",
+                    out.stats.idioms
+                );
+                for policy in Policy::ALL {
+                    for affinity in [false, true] {
+                        let threads = 2 + rng.below(7) as usize;
+                        let par = forelem::exec::run_parallel_with_opts(
+                            &p, &catalog, threads, policy, affinity,
+                        )
+                        .map_err(|e| e.to_string())?;
+                        prop_assert!(
+                            par.result().unwrap().bag_eq(reference.result().unwrap()),
+                            "`{q}` diverged under {policy:?} (threads={threads}, \
+                             affinity={affinity}, rows={rows}, rem={rem})"
+                        );
+                        prop_assert!(
+                            par.stats.idioms.contains(&"vec.simd".to_string()),
+                            "`{q}` lost `vec.simd` under {policy:?} (affinity={affinity}): {:?}",
+                            par.stats.idioms
+                        );
+                    }
+                }
+            }
+
+            // Float sums: never striped, so the sequential vectorized tier
+            // must reproduce the interpreter's fold order bit-for-bit.
+            let pf = forelem::sql::compile_sql(
+                "SELECT k, SUM(x) FROM t GROUP BY k",
+                &catalog.schemas(),
+            )
+            .map_err(|e| e.to_string())?;
+            let reference = forelem::exec::run(&pf, &catalog).map_err(|e| e.to_string())?;
+            let out = forelem::exec::run_vectorized(&pf, &catalog)
+                .map_err(|e| e.to_string())?
+                .ok_or_else(|| "vectorized tier skipped the float sum".to_string())?;
+            let float_rows = |o: &forelem::exec::Output| {
+                let mut v: Vec<(String, u64)> = o
+                    .result()
+                    .unwrap()
+                    .rows()
+                    .iter()
+                    .map(|r| (r[0].to_string(), r[1].as_float().unwrap().to_bits()))
+                    .collect();
+                v.sort();
+                v
+            };
+            prop_assert!(
+                float_rows(&out) == float_rows(&reference),
+                "float sums must be row-identical sequentially (rows={rows}, rem={rem})"
+            );
         }
         Ok(())
     });
