@@ -1,0 +1,217 @@
+//! Serving-layer baseline: prepared plans, the plan cache, and the
+//! shared multi-query morsel pool (`serve::Server`).
+//!
+//! Three measurements:
+//!
+//! * **cold compile vs cached plan** (the headline speedup) — planning
+//!   the 3-way retail star query from scratch (parse, lower, Selinger
+//!   join-order DP, transform pipeline) vs re-serving the same statement
+//!   from the engine's plan cache. The tables are deliberately small so
+//!   the number measures the compiler, not the scan. Acceptance bar:
+//!   the cached plan must be ≥ 3× faster to obtain than a cold compile.
+//! * **prepared-execution latency** — p50/p99 per-execution latency of
+//!   one prepared scan+aggregate statement at 1, 4 and 16 concurrent
+//!   clients multiplexed over a single 4-worker shared pool, bindings
+//!   drawn mid-range so no execution re-plans.
+//! * **16 concurrent vs 16 sequential** — wall-clock for 16 parameter
+//!   bindings served concurrently through the shared pool vs the same 16
+//!   queries as literal SQL through back-to-back `Engine::sql` calls
+//!   (compile-per-query, single-threaded execution). Every concurrent
+//!   result is checked `bag_eq`-identical to its sequential counterpart.
+//!
+//! Row count scales via BENCH_ROWS (the access-log table the prepared
+//! statement scans).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use forelem::compiler::Engine;
+use forelem::ir::{Multiset, Value};
+use forelem::serve::Server;
+use forelem::storage::StorageCatalog;
+use forelem::util::{fmt_duration, time_fn, write_bench_json};
+use forelem::workload::retail::{self, RetailSpec};
+use forelem::workload::{access_log_wide, AccessLogSpec};
+
+/// Compile-heavy statement: a 3-way star join the Selinger DP reorders.
+const STAR: &str = "SELECT segment, COUNT(segment) FROM customers \
+                    JOIN sales ON customers.id = sales.customer_id \
+                    JOIN products ON sales.product_id = products.id \
+                    GROUP BY segment";
+
+/// The prepared serving statement; `bytes` is uniform on [200, 100000).
+const PREPARED: &str = "SELECT url, COUNT(*) FROM access WHERE bytes > ? GROUP BY url";
+
+const WORKERS: usize = 4;
+const MAX_INFLIGHT: usize = 8;
+const PER_CLIENT: usize = 8;
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn access_catalog(m: &Multiset) -> StorageCatalog {
+    let mut c = StorageCatalog::new();
+    c.insert_multiset("access", m).unwrap();
+    c
+}
+
+fn main() {
+    let rows: usize = std::env::var("BENCH_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+
+    // ---- 1. cold compile vs cached plan ----------------------------
+    // 2k fact rows: execution is trivial, so the cold/cached gap is the
+    // compiler pipeline itself.
+    let mut star_catalog = StorageCatalog::new();
+    retail::register_retail(
+        &mut star_catalog,
+        &RetailSpec {
+            sales: 2_000,
+            ..RetailSpec::default()
+        },
+    )
+    .unwrap();
+    let mut eng = Engine::new(star_catalog);
+    let sanity = eng.sql(STAR).unwrap();
+    assert!(!sanity.result().unwrap().rows().is_empty());
+
+    let cold = time_fn(2, 9, || eng.compile(STAR).unwrap());
+    // Populate-then-hit: the warmup's first call seeds the cache at the
+    // current statistics epoch, every timed call is a pure cache hit.
+    let cached = time_fn(2, 9, || eng.plan(STAR).unwrap());
+    let (_, hit) = eng.plan_cached(STAR).unwrap();
+    assert!(hit, "cached timing loop must be served by the plan cache");
+
+    println!("# Serving: star-query plan acquisition (2k-row retail catalog)");
+    println!("cold compile (parse+optimize+transform)  {:>10}", fmt_duration(cold.median()));
+    println!("cached plan (normalized-AST cache hit)   {:>10}", fmt_duration(cached.median()));
+    let speedup = cold.median().as_secs_f64() / cached.median().as_secs_f64();
+    println!(
+        "cached-plan speedup over cold compile: {speedup:.1}x — {}",
+        if speedup >= 3.0 {
+            "PASS (>= 3x)"
+        } else {
+            "FAIL (< 3x acceptance bar)"
+        }
+    );
+
+    // ---- 2. prepared-execution latency under concurrency -----------
+    let m = access_log_wide(&AccessLogSpec {
+        rows,
+        urls: 500,
+        skew: 1.1,
+        seed: 47,
+    });
+    let srv = Server::new(Engine::new(access_catalog(&m)), WORKERS, MAX_INFLIGHT);
+    let p = srv.prepare(PREPARED).unwrap();
+    // Settle the rebind baseline mid-range: every measured binding stays
+    // within REBIND_RATIO of it, so no execution re-enters the compiler.
+    srv.execute(&p, &[Value::Int(50_000)]).unwrap();
+
+    println!(
+        "\n# Prepared `{PREPARED}` over {rows} rows, {WORKERS}-worker shared pool"
+    );
+    for &clients in &[1usize, 4, 16] {
+        let latencies = Mutex::new(Vec::new());
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let (srv, p, latencies) = (&srv, &p, &latencies);
+                scope.spawn(move || {
+                    let mut mine = Vec::with_capacity(PER_CLIENT);
+                    for i in 0..PER_CLIENT {
+                        // Deterministic mid-range walk over [30000, 70000).
+                        let bind = 30_000 + ((c * PER_CLIENT + i) * 977) % 40_000;
+                        let q0 = Instant::now();
+                        let out = srv.execute(p, &[Value::Int(bind as i64)]).unwrap();
+                        mine.push(q0.elapsed());
+                        assert!(
+                            !out.stats.idioms.iter().any(|t| t == "opt.rebind"),
+                            "mid-range bindings must not re-plan"
+                        );
+                    }
+                    latencies.lock().unwrap().extend(mine);
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        let mut v = latencies.into_inner().unwrap();
+        v.sort();
+        println!(
+            "{clients:>2} clients  {:>3} execs  p50 {:>10}  p99 {:>10}  wall {:>10}",
+            v.len(),
+            fmt_duration(percentile(&v, 0.50)),
+            fmt_duration(percentile(&v, 0.99)),
+            fmt_duration(wall)
+        );
+    }
+
+    // ---- 3. 16 concurrent prepared vs 16 sequential Engine::sql ----
+    let thresholds: Vec<i64> = (0..16).map(|i| 30_000 + 2_500 * i).collect();
+
+    let mut seq_eng = Engine::new(access_catalog(&m));
+    let t0 = Instant::now();
+    let seq_outs: Vec<_> = thresholds
+        .iter()
+        .map(|t| {
+            seq_eng
+                .sql(&format!(
+                    "SELECT url, COUNT(*) FROM access WHERE bytes > {t} GROUP BY url"
+                ))
+                .unwrap()
+        })
+        .collect();
+    let wall_seq = t0.elapsed();
+
+    let t0 = Instant::now();
+    let conc_outs: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = thresholds
+            .iter()
+            .map(|&t| {
+                let (srv, p) = (&srv, &p);
+                scope.spawn(move || srv.execute(p, &[Value::Int(t)]).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall_conc = t0.elapsed();
+
+    for ((t, seq), conc) in thresholds.iter().zip(&seq_outs).zip(&conc_outs) {
+        assert!(
+            conc.result().unwrap().bag_eq(seq.result().unwrap()),
+            "threshold {t}: concurrent serving diverged from sequential Engine::sql"
+        );
+    }
+    assert!(conc_outs[0].stats.idioms.iter().any(|t| t == "serve.admit"));
+
+    println!("\n# 16 bindings: shared-pool concurrent vs sequential literal SQL");
+    println!("sequential Engine::sql (compile each)    {:>10}", fmt_duration(wall_seq));
+    println!("concurrent serve::Server (prepare once)  {:>10}", fmt_duration(wall_conc));
+    let conc_speedup = wall_seq.as_secs_f64() / wall_conc.as_secs_f64();
+    println!(
+        "concurrent serving speedup: {conc_speedup:.1}x — {}",
+        if conc_speedup > 1.0 {
+            "PASS (beats sequential)"
+        } else {
+            "FAIL (no faster than sequential)"
+        }
+    );
+
+    let path = write_bench_json(
+        "serving",
+        rows,
+        &[
+            ("cold-compile", cold.median().as_nanos()),
+            ("cached-plan", cached.median().as_nanos()),
+            ("sequential-16", wall_seq.as_nanos()),
+            ("concurrent-16", wall_conc.as_nanos()),
+        ],
+        speedup,
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
+}

@@ -6,6 +6,7 @@
 //! compilation options, and exposes one-call `sql()` / `explain()` /
 //! `sql_distributed()` entry points.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -66,11 +67,33 @@ pub struct Compiled {
     pub opt: Option<crate::opt::OptReport>,
 }
 
+/// One cached plan: the compiled artifact plus the statistics epoch it
+/// was optimized under.
+struct CacheEntry {
+    epoch: u64,
+    plan: Arc<Compiled>,
+}
+
+/// The engine's plan cache. Keys are the *normalized* query — the parsed
+/// AST's canonical debug form, so whitespace/keyword-case variants of the
+/// same query share one entry — paired with the compile options (a plan
+/// built for 4 processors is not a plan for 1). Entries carry the catalog
+/// statistics epoch they were optimized under; an import or reformat
+/// bumps the epoch and the stale plan is recompiled on next use.
+#[derive(Default)]
+struct PlanCache {
+    entries: BTreeMap<String, CacheEntry>,
+    hits: u64,
+    misses: u64,
+    invalidations: u64,
+}
+
 /// The embedder API.
 pub struct Engine {
     pub catalog: StorageCatalog,
     pub kernels: Option<Kernels>,
     pub options: CompileOptions,
+    plan_cache: PlanCache,
 }
 
 impl Engine {
@@ -79,6 +102,7 @@ impl Engine {
             catalog,
             kernels: None,
             options: CompileOptions::default(),
+            plan_cache: PlanCache::default(),
         }
     }
 
@@ -94,9 +118,58 @@ impl Engine {
     }
 
     /// Compile a SQL query through the full pipeline. May rewrite the
-    /// stored tables when reformatting is enabled.
+    /// stored tables when reformatting is enabled. Always compiles fresh;
+    /// `plan` is the cached entry point.
     pub fn compile(&mut self, query: &str) -> Result<Compiled> {
         let select = sql::parse(query)?;
+        self.compile_select(&select)
+    }
+
+    /// Compile through the plan cache: repeat queries (same normalized
+    /// AST, same options, same catalog statistics epoch) reuse the cached
+    /// plan without recompiling. This is what `sql`, `explain` and the
+    /// serving layer (`serve::Server::prepare`) go through.
+    pub fn plan(&mut self, query: &str) -> Result<Arc<Compiled>> {
+        Ok(self.plan_cached(query)?.0)
+    }
+
+    /// `plan`, also reporting whether the cache served the plan (`true` on
+    /// a hit). The serving layer uses the flag to tag `serve.cache_hit`.
+    pub fn plan_cached(&mut self, query: &str) -> Result<(Arc<Compiled>, bool)> {
+        let select = sql::parse(query)?;
+        let key = format!("{:?}|{:?}", self.options, select);
+        if let Some(entry) = self.plan_cache.entries.get(&key) {
+            if entry.epoch == self.catalog.stats_epoch() {
+                self.plan_cache.hits += 1;
+                return Ok((entry.plan.clone(), true));
+            }
+            // The catalog changed under the plan: its cardinality
+            // estimates and storage-scheme decisions are stale.
+            self.plan_cache.entries.remove(&key);
+            self.plan_cache.invalidations += 1;
+        }
+        self.plan_cache.misses += 1;
+        let plan = Arc::new(self.compile_select(&select)?);
+        // Key on the POST-compile epoch: an enabled reformat pass rewrites
+        // stored tables *during* compilation (bumping the epoch), and the
+        // plan being cached was optimized against that rewritten layout —
+        // storing the pre-compile epoch would self-invalidate every entry.
+        let entry = CacheEntry {
+            epoch: self.catalog.stats_epoch(),
+            plan: plan.clone(),
+        };
+        self.plan_cache.entries.insert(key, entry);
+        Ok((plan, false))
+    }
+
+    /// Plan-cache counters: `(hits, misses, invalidations)`. Also
+    /// reported by `explain`.
+    pub fn plan_cache_stats(&self) -> (u64, u64, u64) {
+        let c = &self.plan_cache;
+        (c.hits, c.misses, c.invalidations)
+    }
+
+    fn compile_select(&mut self, select: &sql::Select) -> Result<Compiled> {
         // ORDER BY / LIMIT lower INTO the IR as an ordered/bounded
         // emission contract (`EmitOrder` on the emit loop) — the whole
         // query, top-k included, is one program every tier executes.
@@ -108,7 +181,7 @@ impl Engine {
             let fid = t.schema.field_id(field)?;
             catalog.column_stats(rel, fid).ok().map(|cs| cs.ndv)
         };
-        let mut program = sql::lower_with_stats(&select, &self.catalog.schemas(), &ndv)?;
+        let mut program = sql::lower_with_stats(select, &self.catalog.schemas(), &ndv)?;
 
         // Reformat decision happens BEFORE the optimizer and
         // materialization so every strategy cost and cardinality
@@ -185,9 +258,9 @@ impl Engine {
     }
 
     /// Compile + execute in-process (compiled idioms + kernels when
-    /// available).
+    /// available). Repeat queries reuse the plan cache.
     pub fn sql(&mut self, query: &str) -> Result<Output> {
-        let compiled = self.compile(query)?;
+        let compiled = self.plan(query)?;
         self.execute(&compiled)
     }
 
@@ -268,7 +341,7 @@ impl Engine {
     /// `range`), and — explain-analyze style — which execution tier
     /// actually fired with its final `ExecStats.idioms` tags.
     pub fn explain(&mut self, query: &str) -> Result<String> {
-        let compiled = self.compile(query)?;
+        let compiled = self.plan(query)?;
         let executed = self.execute(&compiled)?;
         let mut out = String::new();
         out.push_str(&pretty::program(&compiled.program));
@@ -323,6 +396,10 @@ impl Engine {
         };
         out.push_str(&format!("\n-- tier: {tier}"));
         out.push_str(&format!("\n-- idioms: {}", idioms.join(", ")));
+        let (hits, misses, invalidations) = self.plan_cache_stats();
+        out.push_str(&format!(
+            "\n-- plan cache: hits={hits} misses={misses} invalidations={invalidations}"
+        ));
         out.push('\n');
         Ok(out)
     }
@@ -652,6 +729,137 @@ mod order_limit_tests {
             .unwrap_err()
             .to_string()
             .contains("unknown column"));
+    }
+}
+
+#[cfg(test)]
+mod plan_cache_tests {
+    use super::*;
+    use crate::workload::{access_log, AccessLogSpec};
+
+    fn engine(rows: usize) -> Engine {
+        let m = access_log(&AccessLogSpec {
+            rows,
+            urls: 50,
+            skew: 1.1,
+            seed: 9,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        Engine::new(c)
+    }
+
+    const Q: &str = "SELECT url, COUNT(url) FROM access GROUP BY url";
+
+    #[test]
+    fn repeat_queries_hit_the_plan_cache() {
+        let mut e = engine(1000);
+        let first = e.sql(Q).unwrap();
+        assert_eq!(e.plan_cache_stats(), (0, 1, 0));
+        let second = e.sql(Q).unwrap();
+        assert_eq!(e.plan_cache_stats(), (1, 1, 0));
+        assert!(second.result().unwrap().bag_eq(first.result().unwrap()));
+        // The key is the parsed AST, not the query text: whitespace
+        // variants normalize to the same entry.
+        let _ = e
+            .sql("SELECT url,  COUNT(url)   FROM access GROUP BY url")
+            .unwrap();
+        assert_eq!(e.plan_cache_stats(), (2, 1, 0));
+    }
+
+    #[test]
+    fn options_partition_the_cache() {
+        let mut e = engine(1000);
+        e.sql(Q).unwrap();
+        e.options.processors = 4;
+        // A plan parallelized for 4 processors is a different artifact.
+        e.sql(Q).unwrap();
+        assert_eq!(e.plan_cache_stats(), (0, 2, 0));
+    }
+
+    #[test]
+    fn catalog_changes_invalidate_cached_plans() {
+        let mut e = engine(1000);
+        e.sql(Q).unwrap();
+        e.sql(Q).unwrap();
+        assert_eq!(e.plan_cache_stats(), (1, 1, 0));
+        // Re-importing the table bumps the statistics epoch: the cached
+        // plan was optimized against stale statistics.
+        let m = access_log(&AccessLogSpec {
+            rows: 2000,
+            urls: 50,
+            skew: 1.1,
+            seed: 10,
+        });
+        e.register("access", &m).unwrap();
+        let out = e.sql(Q).unwrap();
+        assert_eq!(out.result().unwrap().len(), 50);
+        assert_eq!(e.plan_cache_stats(), (1, 2, 1));
+    }
+
+    #[test]
+    fn forced_reformat_caches_the_post_reformat_plan() {
+        let mut e = engine(1000);
+        e.options.reformat = ReformatMode::Force;
+        e.sql(Q).unwrap();
+        // The reformat pass rewrote the stored table *during* the first
+        // compile (bumping the epoch); the entry is keyed on the
+        // post-compile epoch, so the repeat run still hits.
+        e.sql(Q).unwrap();
+        assert_eq!(e.plan_cache_stats(), (1, 1, 0));
+        assert!(e.table("access").unwrap().column(0).dictionary().is_some());
+    }
+
+    #[test]
+    fn explain_reports_cache_counters() {
+        let mut e = engine(500);
+        let text = e.explain(Q).unwrap();
+        assert!(
+            text.contains("-- plan cache: hits=0 misses=1 invalidations=0"),
+            "{text}"
+        );
+        let text = e.explain(Q).unwrap();
+        assert!(
+            text.contains("-- plan cache: hits=1 misses=1 invalidations=0"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn prepared_placeholder_queries_share_one_cached_plan() {
+        let mut e = engine(1000);
+        let q = "SELECT url, COUNT(url) FROM access WHERE bytes > ? GROUP BY url";
+        // `engine` tables lack `bytes`; use the wide log instead.
+        let m = crate::workload::access_log_wide(&AccessLogSpec {
+            rows: 1000,
+            urls: 20,
+            skew: 1.1,
+            seed: 3,
+        });
+        e.register("access", &m).unwrap();
+        let p1 = e.plan(q).unwrap();
+        let p2 = e.plan(q).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "second plan must be the cached Arc");
+        let (hits, misses, _) = e.plan_cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+}
+
+#[cfg(test)]
+mod topk_contract_tests {
+    use super::*;
+    use crate::workload::{access_log, AccessLogSpec};
+
+    fn engine() -> Engine {
+        let m = access_log(&AccessLogSpec {
+            rows: 5_000,
+            urls: 40,
+            skew: 1.2,
+            seed: 4,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        Engine::new(c)
     }
 
     #[test]

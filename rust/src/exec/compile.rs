@@ -59,6 +59,11 @@ pub struct ExprProg {
 pub enum Op {
     Const { dst: usize, v: Value },
     LoadScalar { dst: usize, slot: usize },
+    /// Late-bound program parameter: `param` indexes
+    /// [`CompiledProgram::param_names`]. Kept a runtime load (not folded
+    /// to a `Const`) so one compiled program serves every prepared-
+    /// statement binding.
+    LoadParam { dst: usize, param: usize },
     LoadField { dst: usize, cursor: usize, field: usize },
     ReadArray { dst: usize, array: usize, idx: Vec<usize> },
     Binary { dst: usize, op: BinOp, lhs: usize, rhs: usize },
@@ -304,6 +309,12 @@ pub struct CompiledProgram {
     pub n_cursors: usize,
     /// Maximum register count over all expression programs.
     pub n_regs: usize,
+    /// Program parameter names in slot order (`Op::LoadParam` indexes
+    /// this), i.e. `Program::params` key order.
+    pub param_names: Vec<String>,
+    /// The parameter values the program was compiled with — the default
+    /// binding; executors override per run for prepared statements.
+    pub param_inits: Vec<Value>,
     pub body: Vec<CStmt>,
 }
 
@@ -382,6 +393,29 @@ pub fn emit_parallel_safe(sl: &ScanLoop) -> bool {
     matches!(&sl.emit, Some(e) if e.heap) && sl.partition.is_none() && body_ok(&sl.body)
 }
 
+/// True when an **unbounded** distinct-emission scan (the group-by emit
+/// half without ORDER BY/LIMIT) can fan out on the morsel pool: workers
+/// run disjoint slices of the distinct-firsts list against a read-only
+/// snapshot of the master's complete accumulator state, and the master
+/// concatenates the per-chunk row runs in chunk order — which *is* the
+/// sequential emission order, so even ordered consumers see identical
+/// output. Same body discipline as [`emit_parallel_safe`] (result
+/// appends under `If` guards only), but without a bounded heap: rows are
+/// kept verbatim, not top-k-merged. Tags `vec.emit_par` on success.
+pub fn distinct_emit_parallel_safe(sl: &ScanLoop) -> bool {
+    fn body_ok(body: &[CStmt]) -> bool {
+        body.iter().all(|s| match s {
+            CStmt::Result { .. } => true,
+            CStmt::If { then, els, .. } => body_ok(then) && body_ok(els),
+            _ => false,
+        })
+    }
+    sl.distinct.is_some()
+        && sl.emit.is_none()
+        && sl.partition.is_none()
+        && body_ok(&sl.body)
+}
+
 /// Compile a program against a catalog. Returns `None` when the program
 /// uses any construct outside the vectorized tier — callers fall back to
 /// the reference interpreter, which preserves observable behaviour
@@ -421,6 +455,8 @@ pub fn compile_program(p: &Program, catalog: &StorageCatalog) -> Option<Compiled
         result_schemas,
         n_cursors: c.n_cursors,
         n_regs: c.n_regs,
+        param_names: p.params.keys().cloned().collect(),
+        param_inits: p.params.values().cloned().collect(),
         body,
         slots: c.slots,
     })
@@ -948,18 +984,18 @@ impl<'a> Compiler<'a> {
             }
             Expr::Var(name) => {
                 // Interpreter resolution order: env (innermost first),
-                // then params. Params are immutable → folded to consts.
+                // then params. Params compile to a late-bound load so one
+                // compiled program serves every prepared-statement
+                // binding (`exec::vector` substitutes the bound values at
+                // run time).
                 if let Some((_, slot)) = self.scopes.iter().rev().find(|(n, _)| n == name) {
                     let dst = alloc(regs);
                     ops.push(Op::LoadScalar { dst, slot: *slot });
                     return Some(dst);
                 }
-                if let Some(v) = self.program.params.get(name) {
+                if let Some(param) = self.program.params.keys().position(|k| k == name) {
                     let dst = alloc(regs);
-                    ops.push(Op::Const {
-                        dst,
-                        v: v.clone(),
-                    });
+                    ops.push(Op::LoadParam { dst, param });
                     return Some(dst);
                 }
                 None
@@ -1375,7 +1411,10 @@ mod tests {
     }
 
     #[test]
-    fn params_fold_to_constants() {
+    fn params_compile_to_late_bound_loads() {
+        // Params must stay runtime loads — not folded constants — so one
+        // compiled program serves every prepared-statement binding. The
+        // compile-time value survives as the default in `param_inits`.
         let c = catalog();
         let mut p = Program::new("p")
             .with_relation("access", c.schemas()["access"].clone())
@@ -1383,12 +1422,14 @@ mod tests {
             .with_scalar("x", Value::Int(0));
         p.body = vec![Stmt::assign("x", Expr::var("N"))];
         let cp = compile_program(&p, &c).unwrap();
+        assert_eq!(cp.param_names, vec!["N".to_string()]);
+        assert_eq!(cp.param_inits, vec![Value::Int(4)]);
         let CStmt::Assign { value, .. } = &cp.body[0] else {
             panic!("expected assign");
         };
         assert!(matches!(
             value.ops.as_slice(),
-            [Op::Const { v: Value::Int(4), .. }]
+            [Op::LoadParam { param: 0, .. }]
         ));
     }
 

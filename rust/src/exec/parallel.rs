@@ -63,15 +63,15 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::ir::{Domain, LoopKind, Program, Stmt, Value};
 use crate::sched::{Chunk, Policy, SharedScheduler};
 use crate::storage::StorageCatalog;
 
 use super::compile::{
-    compile_program, emit_parallel_safe, join_parallel_safe, scan_parallel_safe, CStmt,
-    CompiledProgram, ScanLoop,
+    compile_program, distinct_emit_parallel_safe, emit_parallel_safe, join_parallel_safe,
+    scan_parallel_safe, CStmt, CompiledProgram, ScanLoop,
 };
 use super::eval::ArrayStore;
 use super::index::DistinctIndex;
@@ -145,6 +145,10 @@ struct MorselJob<'a> {
     /// analyses reject scalar writes in eligible bodies; `forall` bodies
     /// overwrite only their own loop slot).
     scalars: &'a [Value],
+    /// Master parameter binding, fanned out read-only: a prepared
+    /// statement's per-execution values must survive into every worker
+    /// (a fresh `VecState` would only see the compile-time defaults).
+    params: &'a [Value],
     /// Size of the scheduled space (iterations for `forall`, [`BATCH`]-row
     /// morsels for scans and join probes).
     units: usize,
@@ -178,6 +182,7 @@ fn morsel_dispatch<C>(
     let MorselJob {
         cp,
         scalars,
+        params,
         units,
         workers,
         policy,
@@ -200,6 +205,7 @@ fn morsel_dispatch<C>(
                     let mut st = CacheAligned(VecState::new(cp));
                     st.0.scalars.clear();
                     st.0.scalars.extend_from_slice(scalars);
+                    st.0.set_params(params.to_vec());
                     let mut ctx = CacheAligned(init(&mut st.0));
                     while let Some(chunk) = sched.next_chunk(w) {
                         let t0 = Instant::now();
@@ -235,8 +241,9 @@ fn zero_init(v: &Value) -> bool {
 }
 
 /// All accumulator arrays written anywhere in `body` (including nested
-/// loops — `forall` bodies wrap scans) have a zero initial value.
-fn zero_init_accums(cp: &CompiledProgram, body: &[CStmt]) -> bool {
+/// loops — `forall` bodies wrap scans) have a zero initial value. Also
+/// gates the serving pool's fan-out (`crate::serve`).
+pub(crate) fn zero_init_accums(cp: &CompiledProgram, body: &[CStmt]) -> bool {
     body.iter().all(|s| match s {
         CStmt::Accum { array, .. } => zero_init(&cp.array_inits[*array]),
         CStmt::If { then, els, .. } => {
@@ -270,8 +277,43 @@ pub fn run_parallel_compiled_with_opts(
     policy: Policy,
     affinity: bool,
 ) -> Result<Output> {
+    run_parallel_compiled_bound(cp, None, max_threads, policy, affinity)
+}
+
+/// Parallel driver for a prepared statement's per-execution binding:
+/// like [`run_parallel_compiled`], but `Op::LoadParam` slots resolve to
+/// `params` instead of the compile-time defaults — on the master *and*
+/// every morsel worker. The `serve::Server` execute path for programs
+/// big enough to fan out.
+pub fn run_parallel_compiled_with_params(
+    cp: &CompiledProgram,
+    params: Vec<Value>,
+    max_threads: usize,
+) -> Result<Output> {
+    if params.len() != cp.param_names.len() {
+        bail!(
+            "binding has {} values but the program declares {} parameters",
+            params.len(),
+            cp.param_names.len()
+        );
+    }
+    run_parallel_compiled_bound(cp, Some(params), max_threads, DEFAULT_POLICY, true)
+}
+
+/// The one compiled parallel driver behind every public entry point:
+/// `params = None` runs with the compile-time defaults.
+fn run_parallel_compiled_bound(
+    cp: &CompiledProgram,
+    params: Option<Vec<Value>>,
+    max_threads: usize,
+    policy: Policy,
+    affinity: bool,
+) -> Result<Output> {
     let threads = clamp_threads(max_threads);
     let mut master = VecState::new(cp);
+    if let Some(params) = params {
+        master.set_params(params);
+    }
     for s in &cp.body {
         match s {
             // `forall` bodies are assumed privatized by the parallelizing
@@ -303,6 +345,7 @@ pub fn run_parallel_compiled_with_opts(
                     MorselJob {
                         cp,
                         scalars: &master.scalars,
+                        params: &master.params,
                         units: n,
                         workers,
                         policy,
@@ -339,6 +382,14 @@ pub fn run_parallel_compiled_with_opts(
             CStmt::Scan(sl) if threads > 1 && emit_parallel_safe(sl) => {
                 emit_topk_fanout(cp, sl, &mut master, threads, policy, affinity)?;
             }
+            // Unbounded distinct emission (the group-by emit half without
+            // ORDER BY/LIMIT): workers run disjoint slices of the
+            // distinct-firsts list over a shared snapshot of the master's
+            // accumulators and the per-chunk row runs concatenate in
+            // chunk order, which equals the sequential emission order.
+            CStmt::Scan(sl) if threads > 1 && distinct_emit_parallel_safe(sl) => {
+                emit_unbounded_fanout(cp, sl, &mut master, threads, policy, affinity)?;
+            }
             CStmt::Scan(sl)
                 if threads > 1
                     && scan_parallel_safe(sl)
@@ -366,6 +417,7 @@ pub fn run_parallel_compiled_with_opts(
                     MorselJob {
                         cp,
                         scalars: &master.scalars,
+                        params: &master.params,
                         units,
                         workers,
                         policy,
@@ -454,6 +506,7 @@ pub fn run_parallel_compiled_with_opts(
                     MorselJob {
                         cp,
                         scalars: &master.scalars,
+                        params: &master.params,
                         units,
                         workers,
                         policy: jpolicy,
@@ -567,6 +620,7 @@ fn emit_topk_fanout(
             MorselJob {
                 cp,
                 scalars: &master.scalars,
+                params: &master.params,
                 units,
                 workers,
                 policy,
@@ -624,6 +678,105 @@ fn emit_topk_fanout(
         }
     }
     master.note_idiom("vec.topk");
+    master.note_idiom("vec.morsel");
+    master.note_idiom(&format!("sched.{}", policy.name()));
+    if engaged {
+        master.note_idiom("sched.affinity");
+    }
+    Ok(())
+}
+
+/// Morsel-driven fan-out of an **unbounded** distinct-emission scan —
+/// the group-by emit half when no ORDER BY/LIMIT bounds the output, so
+/// there is no heap to merge: every emitted row is kept. Workers pull
+/// [`BATCH`]-sized slices of the distinct-firsts list, run the body over
+/// a read-only `Arc` snapshot of the master's complete accumulator
+/// state, and drain the rows appended during each chunk into a
+/// `(chunk_start, rows)` record; the master sorts the records by chunk
+/// start and concatenates — per-chunk runs in chunk order *are* the
+/// sequential emission order, so even order-sensitive consumers see
+/// identical output. Tags `vec.emit_par`.
+fn emit_unbounded_fanout(
+    cp: &CompiledProgram,
+    sl: &ScanLoop,
+    master: &mut VecState,
+    threads: usize,
+    policy: Policy,
+    affinity: bool,
+) -> Result<()> {
+    let field = sl.distinct.expect("distinct_emit_parallel_safe implies distinct");
+    let firsts = DistinctIndex::build(&sl.table, field).firsts;
+    master.stats.index_builds += 1;
+    if !crate::opt::should_fan_out(firsts.len(), threads) {
+        // Too few distinct groups to amortize worker spin-up: emit on
+        // the master, reusing the index already built for the gate.
+        master.note_idiom("opt.small_scan_seq");
+        return master.run_distinct_rows(cp, sl, &firsts);
+    }
+    let units = firsts.len().div_ceil(BATCH);
+    let workers = threads.min(units);
+    // Share the master's complete accumulator state read-only (one
+    // `Arc`, no per-worker copies), exactly like the top-k fan-out.
+    let shared = Arc::new(std::mem::take(&mut master.arrays));
+    let firsts = &firsts;
+    // Per-chunk emission runs, keyed by the chunk's position in the
+    // firsts list so the master can restore sequential order.
+    type ChunkRun = (usize, Vec<crate::ir::Multiset>);
+    let collected: Mutex<Vec<ChunkRun>> = Mutex::new(Vec::new());
+    let states = {
+        let shared = &shared;
+        let collected = &collected;
+        morsel_dispatch(
+            MorselJob {
+                cp,
+                scalars: &master.scalars,
+                params: &master.params,
+                units,
+                workers,
+                policy,
+                affinity,
+            },
+            |st| st.set_shared_arrays(shared.clone()),
+            |st, _ctx, c| {
+                let (lo, hi) = (c.lo * BATCH, (c.hi * BATCH).min(firsts.len()));
+                st.run_distinct_rows(cp, sl, &firsts[lo..hi])?;
+                // Drain the rows this chunk appended (the worker's
+                // result slots are empty between chunks, so everything
+                // present belongs to this chunk).
+                let fresh: Vec<crate::ir::Multiset> = cp
+                    .result_schemas
+                    .iter()
+                    .map(|s| crate::ir::Multiset::new(s.clone()))
+                    .collect();
+                let run = std::mem::replace(&mut st.results, fresh);
+                collected.lock().expect("no poisoned lock").push((lo, run));
+                Ok(())
+            },
+            |_st, _ctx| Ok(()),
+        )
+    };
+    // Workers never touch accumulators (reads go through the shared
+    // snapshot; the eligibility analysis bans writes) and their result
+    // slots were drained per chunk — only traversal stats come back.
+    // Restore the store before propagating any error.
+    let stats_only: Result<bool> = states.map(|(sts, engaged)| {
+        for st in sts {
+            master.stats.rows_visited += st.stats.rows_visited;
+        }
+        engaged
+    });
+    master.arrays = Arc::try_unwrap(shared).unwrap_or_else(|a| (*a).clone());
+    let engaged = stats_only?;
+    let mut runs = collected.into_inner().expect("no poisoned lock");
+    runs.sort_unstable_by_key(|(lo, _)| *lo);
+    for (_, run) in runs {
+        for (slot, m) in run.into_iter().enumerate() {
+            for row in m.into_rows() {
+                master.results[slot].push(row);
+            }
+        }
+    }
+    master.note_idiom("vec.emit_par");
     master.note_idiom("vec.morsel");
     master.note_idiom(&format!("sched.{}", policy.name()));
     if engaged {
@@ -1142,6 +1295,83 @@ mod tests {
     }
 
     #[test]
+    fn parallel_unbounded_emission_matches_sequential_rows_exactly() {
+        // Group-by with no ORDER BY/LIMIT and enough distinct groups to
+        // clear the spin-up gate: the unbounded emit fan-out's per-chunk
+        // row runs, concatenated in chunk order, must reproduce the
+        // interpreter's emission row-for-row under every policy.
+        use crate::ir::{DataType, Multiset, Schema, Value};
+        let mut m = Multiset::new(Schema::new(vec![("k", DataType::Str)]));
+        for i in 0..6000usize {
+            for _ in 0..(1 + i % 7) {
+                m.push(vec![Value::str(format!("key{i:04}"))]);
+            }
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("t", &m).unwrap();
+        let p = compile_sql("SELECT k, COUNT(k) AS n FROM t GROUP BY k", &c.schemas())
+            .unwrap();
+        let reference = super::super::local::run(&p, &c).unwrap();
+        assert_eq!(reference.result().unwrap().len(), 6000);
+        let cp = compile_program(&p, &c).unwrap();
+        for policy in Policy::ALL {
+            for threads in [2, 4, 8] {
+                let par = run_parallel_compiled_with_policy(&cp, threads, policy).unwrap();
+                assert_eq!(
+                    par.result().unwrap().rows(),
+                    reference.result().unwrap().rows(),
+                    "{policy:?} threads={threads}"
+                );
+                for tag in ["vec.emit_par", "vec.morsel"] {
+                    assert!(
+                        par.stats.idioms.contains(&tag.to_string()),
+                        "{policy:?}: missing {tag}: {:?}",
+                        par.stats.idioms
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bound_params_reach_morsel_workers() {
+        // Compile a parameterized group-by once, execute with two
+        // different bindings on the full pool: each run must match an
+        // interpreter run of the program with that binding installed —
+        // proving workers see the per-execution values, not the
+        // compile-time defaults.
+        use crate::workload::access_log_wide;
+        let m = access_log_wide(&AccessLogSpec {
+            rows: 60_000,
+            urls: 200,
+            skew: 1.1,
+            seed: 11,
+        });
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("access", &m).unwrap();
+        let p = compile_sql(
+            "SELECT url, COUNT(url) FROM access WHERE bytes > ? GROUP BY url",
+            &c.schemas(),
+        )
+        .unwrap();
+        let cp = compile_program(&p, &c).unwrap();
+        assert_eq!(cp.param_names, vec!["$1".to_string()]);
+        for bound in [500i64, 100_000] {
+            let mut bound_p = p.clone();
+            bound_p.params.insert("$1".into(), Value::Int(bound));
+            let seq = super::super::local::run(&bound_p, &c).unwrap();
+            let par =
+                run_parallel_compiled_with_params(&cp, vec![Value::Int(bound)], 8).unwrap();
+            assert!(
+                par.result().unwrap().bag_eq(seq.result().unwrap()),
+                "bound={bound}"
+            );
+        }
+        // Arity mismatches are rejected, not silently defaulted.
+        assert!(run_parallel_compiled_with_params(&cp, vec![], 8).is_err());
+    }
+
+    #[test]
     fn small_topk_emission_stays_sequential_and_matches() {
         // Few groups: the spin-up gate keeps the emit loop on the master
         // (and says so), still row-identical to the interpreter.
@@ -1200,7 +1430,10 @@ mod tests {
             "{:?}",
             par.stats.idioms
         );
-        assert!(!par.stats.idioms.contains(&"opt.small_scan_seq".to_string()));
+        // The 100k-row accumulation scan fans out; the 200-group emit
+        // half stays under its own gate (and says so), so the unbounded
+        // emit fan-out must not have engaged.
+        assert!(!par.stats.idioms.contains(&"vec.emit_par".to_string()));
     }
 
     #[test]

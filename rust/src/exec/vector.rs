@@ -543,10 +543,31 @@ pub fn run_compiled_program(cp: &CompiledProgram) -> Result<Output> {
     Ok(st.finish(cp))
 }
 
+/// Execute an already-compiled program with the given parameter binding
+/// overriding [`CompiledProgram::param_inits`] — the prepared-statement
+/// execute path (`serve::Server`): compile once, run per binding.
+pub fn run_compiled_program_with_params(cp: &CompiledProgram, params: Vec<Value>) -> Result<Output> {
+    if params.len() != cp.param_names.len() {
+        bail!(
+            "binding has {} values but the program declares {} parameters",
+            params.len(),
+            cp.param_names.len()
+        );
+    }
+    let mut st = VecState::new(cp);
+    st.set_params(params);
+    st.exec_stmts(cp, &cp.body)?;
+    Ok(st.finish(cp))
+}
+
 /// Mutable execution state for one compiled-program run. Workers in
 /// `exec::parallel` each own one and merge via [`VecState::absorb`].
 pub struct VecState {
     pub(crate) scalars: Vec<Value>,
+    /// Late-bound parameter values, `Op::LoadParam` slot order. Seeded
+    /// from [`CompiledProgram::param_inits`]; prepared-statement
+    /// executions override per run via [`VecState::set_params`].
+    pub(crate) params: Vec<Value>,
     pub(crate) arrays: Vec<FxHashMap<Tuple, Value>>,
     cursors: Vec<CursorState>,
     pub(crate) results: Vec<crate::ir::Multiset>,
@@ -576,6 +597,7 @@ impl VecState {
     pub fn new(cp: &CompiledProgram) -> Self {
         VecState {
             scalars: cp.scalar_inits.clone(),
+            params: cp.param_inits.clone(),
             arrays: vec![FxHashMap::default(); cp.array_inits.len()],
             cursors: (0..cp.n_cursors)
                 .map(|_| CursorState {
@@ -594,6 +616,13 @@ impl VecState {
             topk: None,
             shared_arrays: None,
         }
+    }
+
+    /// Override the parameter binding for this run (prepared statements).
+    /// The caller must pass one value per [`CompiledProgram::param_names`]
+    /// entry, in slot order.
+    pub fn set_params(&mut self, params: Vec<Value>) {
+        self.params = params;
     }
 
     /// Install a shared read-only accumulator store for expression reads
@@ -684,6 +713,7 @@ impl VecState {
             prog.out,
             &mut self.regs,
             &mut self.scalars,
+            &self.params,
             &self.cursors,
             arrays,
             &cp.array_inits,
@@ -1303,6 +1333,9 @@ impl VecState {
         if let Some(field) = sl.distinct {
             let firsts = DistinctIndex::build(&sl.table, field).firsts;
             self.stats.index_builds += 1;
+            if sl.partition.is_none() {
+                return self.run_distinct_rows(cp, sl, &firsts);
+            }
             self.cursors[sl.cursor].table = Some(sl.table.clone());
             for &row in &firsts {
                 let row = row as usize;
@@ -1329,6 +1362,28 @@ impl VecState {
             None => None,
         };
         self.scan_rows(cp, sl, filter.as_ref(), lo, hi)
+    }
+
+    /// Run a distinct-domain scan body over one slice of the
+    /// distinct-firsts row list, in list order. Unbounded emission:
+    /// result appends land directly in `results` (no top-k frame), so
+    /// the rows come out in firsts order. Shared by the sequential
+    /// distinct branch above (whole list) and `exec::parallel`'s
+    /// unbounded emit fan-out, whose workers each run disjoint slices
+    /// and concatenate the per-chunk runs in chunk order.
+    pub(crate) fn run_distinct_rows(
+        &mut self,
+        cp: &CompiledProgram,
+        sl: &ScanLoop,
+        firsts: &[u32],
+    ) -> Result<()> {
+        self.cursors[sl.cursor].table = Some(sl.table.clone());
+        for &row in firsts {
+            self.stats.rows_visited += 1;
+            self.cursors[sl.cursor].row = row as usize;
+            self.exec_stmts(cp, &sl.body)?;
+        }
+        Ok(())
     }
 
     /// Run a compiled scan's body over rows `[lo, hi)` of its table, with
@@ -1862,6 +1917,7 @@ fn eval_ops(
     out: usize,
     regs: &mut Vec<Value>,
     scalars: &mut Vec<Value>,
+    params: &[Value],
     cursors: &[CursorState],
     arrays: &[FxHashMap<Tuple, Value>],
     inits: &[Value],
@@ -1871,6 +1927,7 @@ fn eval_ops(
         match &ops[pc] {
             Op::Const { dst, v } => regs[*dst] = v.clone(),
             Op::LoadScalar { dst, slot } => regs[*dst] = scalars[*slot].clone(),
+            Op::LoadParam { dst, param } => regs[*dst] = params[*param].clone(),
             Op::LoadField { dst, cursor, field } => {
                 let c = &cursors[*cursor];
                 let t = c.table.as_ref().context("unbound cursor")?;
@@ -1924,7 +1981,9 @@ fn eval_ops(
                 let mut total = Value::Int(0);
                 for k in 1..=n {
                     scalars[*slot] = Value::Int(k);
-                    let v = eval_ops(&body.ops, body.out, regs, scalars, cursors, arrays, inits)?;
+                    let v = eval_ops(
+                        &body.ops, body.out, regs, scalars, params, cursors, arrays, inits,
+                    )?;
                     total = value_binop(BinOp::Add, &total, &v)?;
                 }
                 regs[*dst] = total;

@@ -28,6 +28,9 @@
 //!   channels, partitioning and the data-distribution optimizer (§III-A);
 //! * [`sched`] — static/GSS/trapezoid/factoring/feedback-guided/hybrid
 //!   loop schedulers with fault tolerance (§III-A2/A3);
+//! * [`serve`] — concurrent query serving: prepared statements, the
+//!   engine plan cache, and a shared multi-query morsel worker pool with
+//!   admission control;
 //! * [`coordinator`] — the leader/worker runtime orchestrating chunked
 //!   parallel execution with backpressure and failure recovery;
 //! * [`runtime`] — the PJRT client loading AOT-compiled XLA artifacts
@@ -45,6 +48,7 @@ pub mod mapreduce;
 pub mod opt;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sql;
 pub mod storage;
 pub mod transform;

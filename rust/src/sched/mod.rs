@@ -14,11 +14,15 @@
 //! chunk (chunk sizes still follow the policy), stealing from the
 //! largest remaining region only once its neighborhood is drained.
 //! Fan-outs that observed an adjacent pull tag `"sched.affinity"`.
+//! [`MultiScheduler`] generalizes the shared scheduler to N concurrent
+//! queries over ONE pool: per-query morsel spaces, FIFO admission with a
+//! bounded in-flight count, and fair round-robin chunk interleaving (the
+//! `serve` layer's `"sched.multi"` machinery).
 //! [`pin_worker`] optionally pins worker threads to cores — best-effort,
 //! behind the off-by-default `core_affinity` feature, a no-op elsewhere.
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 /// A contiguous chunk of iterations `[lo, hi)`.
@@ -442,6 +446,224 @@ impl SharedScheduler {
     }
 }
 
+/// The multi-query generalization of [`SharedScheduler`]: N concurrent
+/// queries multiplex ONE worker pool. Each admitted query submits its
+/// morsel space as a *phase* (its own [`Scheduler`], so every query keeps
+/// its own policy state and chunk-size progression); pool workers pull
+/// `(query, chunk)` pairs and the scheduler round-robins across live
+/// phases on every pull, so one long scan cannot starve its neighbors —
+/// fair chunk interleaving, not query-at-a-time draining.
+///
+/// Admission control is a bounded FIFO lane: at most `max_inflight`
+/// queries hold execution slots; later arrivals queue in strict ticket
+/// order (no barging) until a slot frees. The serving layer
+/// (`serve::Server`) turns an admitted query into the `"serve.admit"`
+/// tag and a pool-executed phase into `"sched.multi"`.
+///
+/// Worker threads are expected to poll [`next_chunk`](Self::next_chunk)
+/// in a loop until it returns `None` (which only happens after
+/// [`shutdown`](Self::shutdown)); with [`Policy::StaticBlock`] every
+/// worker must keep polling or its pre-assigned block is never issued —
+/// pools that park workers should use a dynamic policy.
+#[derive(Debug)]
+pub struct MultiScheduler {
+    workers: usize,
+    max_inflight: usize,
+    state: Mutex<MultiState>,
+    /// FIFO admission lane.
+    admit_cv: Condvar,
+    /// Pool workers parked waiting for chunks.
+    work_cv: Condvar,
+    /// Clients parked in `wait_done`.
+    done_cv: Condvar,
+}
+
+#[derive(Debug)]
+struct MultiState {
+    /// Admission tickets: `next_ticket` is handed to the next arrival,
+    /// `now_serving` gates the queue front, `inflight` counts held slots.
+    next_ticket: u64,
+    now_serving: u64,
+    inflight: usize,
+    /// Deepest the overflow queue ever got (observability).
+    queued_peak: usize,
+    /// Live morsel spaces, one per query currently fanning out.
+    phases: Vec<MultiPhase>,
+    /// Most phases ever live at once (observability: >= 2 proves real
+    /// multi-query interleaving happened).
+    phases_peak: usize,
+    /// Completed phase ids awaiting their `wait_done` pickup.
+    finished: BTreeSet<u64>,
+    /// Round-robin cursor for fair interleaving across phases.
+    rr: usize,
+    shutdown: bool,
+}
+
+#[derive(Debug)]
+struct MultiPhase {
+    query: u64,
+    sched: Scheduler,
+    /// Chunks handed to workers and not yet reported back. A phase
+    /// completes when its space is exhausted AND nothing is outstanding.
+    outstanding: usize,
+}
+
+impl MultiScheduler {
+    pub fn new(workers: usize, max_inflight: usize) -> Self {
+        MultiScheduler {
+            workers: workers.max(1),
+            max_inflight: max_inflight.max(1),
+            state: Mutex::new(MultiState {
+                next_ticket: 0,
+                now_serving: 0,
+                inflight: 0,
+                queued_peak: 0,
+                phases: Vec::new(),
+                phases_peak: 0,
+                finished: BTreeSet::new(),
+                rr: 0,
+                shutdown: false,
+            }),
+            admit_cv: Condvar::new(),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Pool width this scheduler was built for (phases are created with
+    /// this worker count).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Admit one query, blocking while `max_inflight` slots are held.
+    /// Returns the query's unique id and whether it had to queue. Strict
+    /// FIFO: tickets are served in arrival order even when several
+    /// arrivals race one freed slot.
+    pub fn admit(&self) -> (u64, bool) {
+        let mut st = self.state.lock().expect("multi-scheduler lock");
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        let depth = (st.next_ticket - st.now_serving) as usize;
+        st.queued_peak = st.queued_peak.max(depth.saturating_sub(1));
+        let mut waited = false;
+        while !(st.now_serving == ticket && st.inflight < self.max_inflight) {
+            waited = true;
+            st = self.admit_cv.wait(st).expect("multi-scheduler lock");
+        }
+        st.now_serving += 1;
+        st.inflight += 1;
+        drop(st);
+        // The next ticket in line may also fit (inflight could still be
+        // under the bound); let it re-check.
+        self.admit_cv.notify_all();
+        (ticket, waited)
+    }
+
+    /// Release an admitted query's slot (its execution finished).
+    pub fn release(&self, _query: u64) {
+        let mut st = self.state.lock().expect("multi-scheduler lock");
+        st.inflight -= 1;
+        drop(st);
+        self.admit_cv.notify_all();
+    }
+
+    /// Deepest the admission overflow queue ever got.
+    pub fn queued_peak(&self) -> usize {
+        self.state.lock().expect("multi-scheduler lock").queued_peak
+    }
+
+    /// Most phases ever live at once.
+    pub fn phases_peak(&self) -> usize {
+        self.state.lock().expect("multi-scheduler lock").phases_peak
+    }
+
+    /// Open query `query`'s morsel space of `n` iterations under
+    /// `policy`. An empty space completes immediately.
+    pub fn submit(&self, query: u64, policy: Policy, n: usize) {
+        let mut st = self.state.lock().expect("multi-scheduler lock");
+        if n == 0 {
+            st.finished.insert(query);
+            drop(st);
+            self.done_cv.notify_all();
+            return;
+        }
+        st.phases.push(MultiPhase {
+            query,
+            sched: Scheduler::new(policy, n, self.workers),
+            outstanding: 0,
+        });
+        let live = st.phases.len();
+        st.phases_peak = st.phases_peak.max(live);
+        drop(st);
+        self.work_cv.notify_all();
+    }
+
+    /// Next `(query, chunk)` for `worker`. Blocks while no phase has
+    /// work; returns `None` only after [`shutdown`](Self::shutdown).
+    /// Consecutive pulls rotate across live phases (fair interleaving).
+    pub fn next_chunk(&self, worker: usize) -> Option<(u64, Chunk)> {
+        let mut st = self.state.lock().expect("multi-scheduler lock");
+        loop {
+            let len = st.phases.len();
+            if len > 0 {
+                let start = st.rr % len;
+                for i in 0..len {
+                    let idx = (start + i) % len;
+                    if let Some(c) = st.phases[idx].sched.next_chunk(worker) {
+                        st.phases[idx].outstanding += 1;
+                        let query = st.phases[idx].query;
+                        st.rr = idx + 1;
+                        return Some((query, c));
+                    }
+                }
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.work_cv.wait(st).expect("multi-scheduler lock");
+        }
+    }
+
+    /// Report a completed chunk. The phase retires (waking its
+    /// `wait_done` caller) once its space is exhausted and every issued
+    /// chunk has been reported.
+    pub fn report(&self, query: u64, worker: usize, chunk: Chunk, elapsed: Duration) {
+        let mut st = self.state.lock().expect("multi-scheduler lock");
+        let Some(idx) = st.phases.iter().position(|p| p.query == query) else {
+            return;
+        };
+        let p = &mut st.phases[idx];
+        p.sched.report(worker, chunk, elapsed);
+        p.outstanding -= 1;
+        if p.outstanding == 0 && p.sched.exhausted() {
+            st.phases.remove(idx);
+            st.finished.insert(query);
+            drop(st);
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Block until `query`'s submitted space has fully executed (every
+    /// chunk issued and reported).
+    pub fn wait_done(&self, query: u64) {
+        let mut st = self.state.lock().expect("multi-scheduler lock");
+        while !st.finished.contains(&query) {
+            st = self.done_cv.wait(st).expect("multi-scheduler lock");
+        }
+        st.finished.remove(&query);
+    }
+
+    /// Wake every parked worker and make `next_chunk` return `None` once
+    /// the remaining phases are drained. Call after all queries finished.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().expect("multi-scheduler lock");
+        st.shutdown = true;
+        drop(st);
+        self.work_cv.notify_all();
+    }
+}
+
 /// Best-effort: pin the calling worker thread to a core chosen by worker
 /// index (round-robin over the machine's cores). Returns whether the pin
 /// took. Compiled to a no-op returning `false` unless the off-by-default
@@ -774,5 +996,111 @@ mod tests {
         );
         assert_eq!(chunks.len(), 16);
         assert!(chunks.iter().all(|c| c.len() == 100));
+    }
+
+    #[test]
+    fn multi_scheduler_interleaves_two_queries_fairly() {
+        // One worker, two equal phases of 4 fixed chunks each: pulls must
+        // strictly alternate between the queries, not drain one first.
+        let s = MultiScheduler::new(1, 4);
+        let (a, _) = s.admit();
+        let (b, _) = s.admit();
+        s.submit(a, Policy::FixedChunk(10), 40);
+        s.submit(b, Policy::FixedChunk(10), 40);
+        let mut order = Vec::new();
+        for _ in 0..8 {
+            let (q, c) = s.next_chunk(0).expect("work remains");
+            order.push(q);
+            s.report(q, 0, c, Duration::from_micros(1));
+        }
+        assert_eq!(order, vec![a, b, a, b, a, b, a, b], "{order:?}");
+        s.wait_done(a);
+        s.wait_done(b);
+        s.release(a);
+        s.release(b);
+        assert_eq!(s.phases_peak(), 2);
+        s.shutdown();
+        assert!(s.next_chunk(0).is_none());
+    }
+
+    #[test]
+    fn multi_scheduler_admission_is_bounded_fifo() {
+        use std::sync::mpsc;
+        let s = std::sync::Arc::new(MultiScheduler::new(2, 2));
+        let (a, wa) = s.admit();
+        let (b, wb) = s.admit();
+        assert!(!wa && !wb, "slots were free: no queueing");
+        // A third arrival must block until a slot is released.
+        let (tx, rx) = mpsc::channel();
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            let (c, waited) = s2.admit();
+            tx.send((c, waited)).unwrap();
+            s2.release(c);
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(
+            rx.try_recv().is_err(),
+            "third query admitted past the in-flight bound"
+        );
+        s.release(a);
+        let (c, waited) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(waited, "the overflowed query must report it queued");
+        assert!(c > b);
+        t.join().unwrap();
+        s.release(b);
+        assert!(s.queued_peak() >= 1);
+    }
+
+    #[test]
+    fn multi_scheduler_covers_every_query_exactly_once_under_concurrency() {
+        let workers = 4;
+        let s = MultiScheduler::new(workers, 8);
+        let sizes = [1000usize, 500, 2000];
+        let seen: Vec<Mutex<Vec<bool>>> = sizes
+            .iter()
+            .map(|&n| Mutex::new(vec![false; n]))
+            .collect();
+        let (s, seen) = (&s, &seen);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                scope.spawn(move || {
+                    while let Some((q, c)) = s.next_chunk(w) {
+                        let mut bits = seen[q as usize].lock().unwrap();
+                        for i in c.lo..c.hi {
+                            assert!(!bits[i], "query {q} iteration {i} issued twice");
+                            bits[i] = true;
+                        }
+                        drop(bits);
+                        s.report(q, w, c, Duration::from_micros(c.len() as u64));
+                    }
+                });
+            }
+            for (q, &n) in sizes.iter().enumerate() {
+                let (id, _) = s.admit();
+                assert_eq!(id, q as u64);
+                s.submit(id, Policy::Gss, n);
+            }
+            for q in 0..sizes.len() as u64 {
+                s.wait_done(q);
+                s.release(q);
+            }
+            s.shutdown();
+        });
+        for (q, bits) in seen.iter().enumerate() {
+            assert!(
+                bits.lock().unwrap().iter().all(|&b| b),
+                "query {q}: some iteration never issued"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_scheduler_empty_space_completes_immediately() {
+        let s = MultiScheduler::new(2, 2);
+        let (q, _) = s.admit();
+        s.submit(q, Policy::Gss, 0);
+        s.wait_done(q); // must not hang: no worker is polling
+        s.release(q);
     }
 }

@@ -1,0 +1,223 @@
+//! The serving layer's long-lived worker pool.
+//!
+//! One set of OS threads serves EVERY query the server admits — the
+//! morsel-driven analogue of a database's shared executor pool, in
+//! contrast to `exec::parallel`'s scoped per-query thread spawn. Workers
+//! park in [`MultiScheduler::next_chunk`] and pull `(query, chunk)`
+//! pairs from whichever admitted queries currently have morsel phases
+//! open; the scheduler round-robins across phases, so concurrent
+//! queries' chunks interleave fairly instead of executing back-to-back.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::sched::{Chunk, MultiScheduler, Policy};
+
+/// Per-chunk work a phase hands the pool: `(worker, chunk)` → result.
+/// Captures everything it needs by `Arc` (the compiled program, scalar
+/// and parameter snapshots, the merge collector) because the worker
+/// threads outlive any one query.
+pub(crate) type ChunkFn = Box<dyn Fn(usize, Chunk) -> Result<()> + Send + Sync>;
+
+/// One open morsel phase: the chunk body plus the first error any chunk
+/// produced (remaining chunks still drain — the scheduler has no
+/// cancellation — but the phase reports the first failure).
+struct PhaseJob {
+    run: ChunkFn,
+    error: Mutex<Option<anyhow::Error>>,
+}
+
+/// A fixed-width worker pool multiplexed across admitted queries by a
+/// [`MultiScheduler`]. Dropping the pool shuts the scheduler down and
+/// joins every worker.
+pub struct SharedPool {
+    sched: Arc<MultiScheduler>,
+    jobs: Arc<Mutex<BTreeMap<u64, Arc<PhaseJob>>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SharedPool {
+    /// Spawn `workers` threads (clamped to at least 1) multiplexed over
+    /// at most `max_inflight` concurrently executing queries.
+    pub fn new(workers: usize, max_inflight: usize) -> Self {
+        let workers = workers.max(1);
+        let sched = Arc::new(MultiScheduler::new(workers, max_inflight));
+        let jobs: Arc<Mutex<BTreeMap<u64, Arc<PhaseJob>>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let handles = (0..workers)
+            .map(|w| {
+                let sched = Arc::clone(&sched);
+                let jobs = Arc::clone(&jobs);
+                std::thread::spawn(move || {
+                    // Parked in `next_chunk` between phases; `None` only
+                    // after shutdown.
+                    while let Some((q, chunk)) = sched.next_chunk(w) {
+                        let job = jobs.lock().expect("pool jobs lock").get(&q).cloned();
+                        let t0 = Instant::now();
+                        if let Some(job) = job {
+                            if let Err(e) = (job.run)(w, chunk) {
+                                let mut slot = job.error.lock().expect("phase error lock");
+                                if slot.is_none() {
+                                    *slot = Some(e);
+                                }
+                            }
+                        }
+                        // Always report — completion tracking must see
+                        // every issued chunk, errors included.
+                        sched.report(q, w, chunk, t0.elapsed());
+                    }
+                })
+            })
+            .collect();
+        SharedPool {
+            sched,
+            jobs,
+            workers: handles,
+        }
+    }
+
+    /// Pool width (phases are scheduled for this worker count).
+    pub fn workers(&self) -> usize {
+        self.sched.workers()
+    }
+
+    /// Admit one query (FIFO, bounded in-flight): returns its unique id
+    /// and whether it had to queue.
+    pub fn admit(&self) -> (u64, bool) {
+        self.sched.admit()
+    }
+
+    /// Release an admitted query's execution slot.
+    pub fn release(&self, query: u64) {
+        self.sched.release(query);
+    }
+
+    /// Deepest the admission overflow queue ever got.
+    pub fn queued_peak(&self) -> usize {
+        self.sched.queued_peak()
+    }
+
+    /// Most concurrently open morsel phases ever observed — `>= 2`
+    /// proves chunks of different queries actually interleaved.
+    pub fn phases_peak(&self) -> usize {
+        self.sched.phases_peak()
+    }
+
+    /// Run one morsel phase of `units` chunks for admitted query
+    /// `query`, blocking until every chunk has executed. Sequential
+    /// phases of one query reuse its id.
+    pub(crate) fn run_phase(
+        &self,
+        query: u64,
+        policy: Policy,
+        units: usize,
+        run: ChunkFn,
+    ) -> Result<()> {
+        let job = Arc::new(PhaseJob {
+            run,
+            error: Mutex::new(None),
+        });
+        self.jobs
+            .lock()
+            .expect("pool jobs lock")
+            .insert(query, Arc::clone(&job));
+        self.sched.submit(query, policy, units);
+        self.sched.wait_done(query);
+        self.jobs.lock().expect("pool jobs lock").remove(&query);
+        match job.error.lock().expect("phase error lock").take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for SharedPool {
+    fn drop(&mut self) {
+        self.sched.shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_a_phase_and_reports_errors() {
+        let pool = SharedPool::new(4, 4);
+        let (q, queued) = pool.admit();
+        assert!(!queued);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        pool.run_phase(
+            q,
+            Policy::Gss,
+            10,
+            Box::new(move |_w, c| {
+                h.fetch_add(c.len(), Ordering::Relaxed);
+                Ok(())
+            }),
+        )
+        .unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        // A failing chunk surfaces as the phase error; the pool survives.
+        let err = pool
+            .run_phase(
+                q,
+                Policy::Gss,
+                4,
+                Box::new(|_w, c| {
+                    if c.lo == 0 {
+                        anyhow::bail!("chunk zero exploded")
+                    }
+                    Ok(())
+                }),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("chunk zero exploded"));
+        pool.release(q);
+        // Still serviceable after an error.
+        let (q2, _) = pool.admit();
+        pool.run_phase(q2, Policy::Gss, 3, Box::new(|_w, _c| Ok(())))
+            .unwrap();
+        pool.release(q2);
+    }
+
+    #[test]
+    fn concurrent_phases_share_the_pool() {
+        let pool = Arc::new(SharedPool::new(4, 8));
+        let done = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..6 {
+                let pool = Arc::clone(&pool);
+                let done = Arc::clone(&done);
+                scope.spawn(move || {
+                    let (q, _) = pool.admit();
+                    let touched = Arc::new(AtomicUsize::new(0));
+                    let t = Arc::clone(&touched);
+                    pool.run_phase(
+                        q,
+                        Policy::Gss,
+                        64,
+                        Box::new(move |_w, c| {
+                            t.fetch_add(c.len(), Ordering::Relaxed);
+                            Ok(())
+                        }),
+                    )
+                    .unwrap();
+                    assert_eq!(touched.load(Ordering::Relaxed), 64);
+                    pool.release(q);
+                    done.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 6);
+    }
+}

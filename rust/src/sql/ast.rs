@@ -42,6 +42,10 @@ impl ColumnRef {
 pub enum SqlExpr {
     Column(ColumnRef),
     Literal(Value),
+    /// Prepared-statement parameter (1-based index): `?` placeholders are
+    /// numbered left-to-right by the parser, `$n` is explicit. Lowered to
+    /// a late-bound IR parameter slot (`$n`), never constant-folded.
+    Param(usize),
     Binary {
         op: SqlBinOp,
         lhs: Box<SqlExpr>,

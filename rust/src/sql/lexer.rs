@@ -88,6 +88,24 @@ pub fn lex(input: &str) -> Result<Vec<Token>> {
                     i += 1;
                 }
             }
+            '?' => {
+                out.push(Token::Param(None));
+                i += 1;
+            }
+            '$' => {
+                // `$n` placeholder (1-based explicit parameter index).
+                let start = i + 1;
+                let mut j = start;
+                while j < chars.len() && chars[j].is_ascii_digit() {
+                    j += 1;
+                }
+                if j == start {
+                    bail!("`$` must be followed by a parameter number (e.g. $1)");
+                }
+                let text: String = chars[start..j].iter().collect();
+                out.push(Token::Param(Some(text.parse()?)));
+                i = j;
+            }
             '\'' => {
                 // String literal with '' escaping.
                 let mut s = String::new();

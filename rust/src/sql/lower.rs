@@ -282,6 +282,11 @@ impl<'a> LowerCtx<'a> {
                 Expr::field(&var, &field)
             }
             SqlExpr::Literal(v) => Expr::Const(v.clone()),
+            // Prepared-statement placeholder → a late-bound IR parameter
+            // slot. The slot is a plain Var the interpreter and compiler
+            // resolve against `Program::params`, so one lowered program
+            // serves every binding.
+            SqlExpr::Param(n) => Expr::var(&param_slot(*n)),
             SqlExpr::Binary { op, lhs, rhs } => Expr::bin(
                 binop(*op),
                 self.expr(lhs)?,
@@ -298,6 +303,10 @@ impl<'a> LowerCtx<'a> {
                 s.dtype(s.field_id(&field).unwrap())
             }
             SqlExpr::Literal(v) => v.data_type().unwrap_or(DataType::Int),
+            // Bindings are untyped until execute; Int is the placeholder
+            // dtype (comparisons coerce, and placeholders only appear in
+            // predicates/arguments, never as result columns).
+            SqlExpr::Param(_) => DataType::Int,
             SqlExpr::Binary { op, lhs, rhs } => {
                 if matches!(
                     op,
@@ -495,6 +504,7 @@ impl<'a> LowerCtx<'a> {
         }
 
         program.body = vec![Stmt::Loop(loop1), Stmt::Loop(loop2)];
+        program = register_params(sel, program);
         crate::ir::validate(&program)?;
         Ok(program)
     }
@@ -719,6 +729,7 @@ impl<'a> LowerCtx<'a> {
             nest = nest.with_emit(e);
         }
         program.body = vec![Stmt::Loop(nest)];
+        program = register_params(sel, program);
         crate::ir::validate(&program)?;
         Ok(program)
     }
@@ -766,9 +777,20 @@ impl<'a> LowerCtx<'a> {
             scan = scan.with_emit(e);
         }
         program.body = vec![Stmt::Loop(scan)];
+        program = register_params(sel, program);
         crate::ir::validate(&program)?;
         Ok(program)
     }
+}
+
+/// Register a default-initialized late-bound slot for every placeholder
+/// the statement mentions, so validation sees the `$n` vars in scope and
+/// callers re-bind them via [`Program::with_param`] at execute time.
+fn register_params(sel: &Select, mut program: Program) -> Program {
+    for n in param_indices(sel) {
+        program = program.with_param(&param_slot(n), crate::ir::value::Value::Int(0));
+    }
+    program
 }
 
 /// Comma-separated catalog table names, for error messages.
@@ -794,8 +816,43 @@ fn display_name(e: &SqlExpr) -> String {
     match e {
         SqlExpr::Column(c) => c.column.clone(),
         SqlExpr::Literal(v) => v.to_string(),
+        SqlExpr::Param(n) => param_slot(*n),
         SqlExpr::Binary { .. } => "expr".to_string(),
     }
+}
+
+/// IR name of the late-bound slot for SQL parameter `n` (1-based).
+pub fn param_slot(n: usize) -> String {
+    format!("${n}")
+}
+
+/// Collect every parameter index mentioned anywhere in the statement, in
+/// ascending order.
+pub fn param_indices(sel: &Select) -> Vec<usize> {
+    fn walk(e: &SqlExpr, out: &mut Vec<usize>) {
+        match e {
+            SqlExpr::Param(n) => out.push(*n),
+            SqlExpr::Binary { lhs, rhs, .. } => {
+                walk(lhs, out);
+                walk(rhs, out);
+            }
+            SqlExpr::Column(_) | SqlExpr::Literal(_) => {}
+        }
+    }
+    let mut out = Vec::new();
+    for item in &sel.items {
+        match item {
+            SelectItem::Expr { expr, .. } => walk(expr, &mut out),
+            SelectItem::Agg { expr: Some(e), .. } => walk(e, &mut out),
+            SelectItem::Agg { expr: None, .. } | SelectItem::Wildcard => {}
+        }
+    }
+    if let Some(f) = &sel.filter {
+        walk(f, &mut out);
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
 }
 
 fn binop(op: SqlBinOp) -> BinOp {
@@ -1200,6 +1257,31 @@ mod tests {
         .to_string();
         assert!(err.contains("ORDER BY unknown column `nope`"), "{err}");
         assert!(err.contains("result columns: url, n"), "{err}");
+    }
+
+    #[test]
+    fn placeholders_lower_to_late_bound_param_slots() {
+        let c = catalog();
+        let p = compile_sql("SELECT grade FROM Grades WHERE studentID = ?", &c).unwrap();
+        // The placeholder registers as a program parameter...
+        assert!(p.params.contains_key("$1"), "{:?}", p.params);
+        let text = pretty::program(&p);
+        // ...and stays a residual guard, never an index-set lift: one
+        // lowered program must serve every binding.
+        assert!(text.contains("i ∈ pGrades)"), "{text}");
+        assert!(text.contains("$1"), "{text}");
+
+        // Explicit `$n` indices and positional `?` interleave; every
+        // mentioned index registers exactly once.
+        let p = compile_sql(
+            "SELECT grade FROM Grades WHERE studentID = $2 AND grade > ? AND weight < $2",
+            &c,
+        )
+        .unwrap();
+        assert_eq!(
+            p.params.keys().cloned().collect::<Vec<_>>(),
+            vec!["$1".to_string(), "$2".to_string()]
+        );
     }
 
     #[test]

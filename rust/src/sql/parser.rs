@@ -10,7 +10,11 @@ use crate::ir::value::Value;
 /// Parse one SELECT statement.
 pub fn parse(input: &str) -> Result<Select> {
     let tokens = lex(input)?;
-    let mut p = Parser { tokens, pos: 0 };
+    let mut p = Parser {
+        tokens,
+        pos: 0,
+        next_param: 0,
+    };
     let sel = p.select()?;
     p.eat_if(&Token::Semicolon);
     p.expect(Token::Eof)?;
@@ -20,6 +24,9 @@ pub fn parse(input: &str) -> Result<Select> {
 struct Parser {
     tokens: Vec<Token>,
     pos: usize,
+    /// Positional `?` placeholders seen so far (they number left-to-right,
+    /// 1-based, interleaving with any explicit `$n`).
+    next_param: usize,
 }
 
 impl Parser {
@@ -280,6 +287,21 @@ impl Parser {
                 } else {
                     Ok(SqlExpr::Column(ColumnRef::new(&first)))
                 }
+            }
+            Token::Param(explicit) => {
+                let n = match explicit {
+                    Some(n) => {
+                        if n == 0 {
+                            bail!("parameter indices are 1-based; $0 is invalid");
+                        }
+                        n
+                    }
+                    None => {
+                        self.next_param += 1;
+                        self.next_param
+                    }
+                };
+                Ok(SqlExpr::Param(n))
             }
             Token::LParen => {
                 let e = self.expr()?;

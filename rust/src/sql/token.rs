@@ -32,6 +32,9 @@ pub enum Token {
     Int(i64),
     Float(f64),
     Str(String),
+    /// Prepared-statement placeholder: `?` (positional, `None`) or `$n`
+    /// (explicit 1-based index, `Some(n)`).
+    Param(Option<usize>),
     // Punctuation.
     Star,
     Comma,
@@ -59,6 +62,8 @@ impl fmt::Display for Token {
             Token::Int(i) => write!(f, "{i}"),
             Token::Float(x) => write!(f, "{x}"),
             Token::Str(s) => write!(f, "'{s}'"),
+            Token::Param(Some(n)) => write!(f, "${n}"),
+            Token::Param(None) => write!(f, "?"),
             other => write!(f, "{other:?}"),
         }
     }

@@ -26,6 +26,12 @@ pub struct StorageCatalog {
     /// the executors hold; the mutex is uncontended on the hot path
     /// (stats are read at *compile* time, not per row).
     stats_cache: Mutex<BTreeMap<(String, usize), Arc<ColumnStats>>>,
+    /// Statistics epoch: bumped on every table insert/replace (any
+    /// mutation that can change schemas, cardinalities or cached column
+    /// stats). Plan caches key compiled programs on this — a cached plan
+    /// whose epoch no longer matches was optimized against stale
+    /// statistics and must be recompiled.
+    epoch: u64,
 }
 
 impl Clone for StorageCatalog {
@@ -33,9 +39,18 @@ impl Clone for StorageCatalog {
         StorageCatalog {
             tables: self.tables.clone(),
             stats_cache: Mutex::new(self.stats_cache.lock().unwrap().clone()),
+            epoch: self.epoch,
         }
     }
 }
+
+/// Concurrent compilation contract: the serving layer hands one catalog
+/// to N compiling/executing threads behind a shared reference, so the
+/// catalog (tables, stats cache, epoch) must be `Send + Sync`.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<StorageCatalog>();
+};
 
 impl StorageCatalog {
     pub fn new() -> Self {
@@ -74,10 +89,18 @@ impl StorageCatalog {
     }
 
     fn invalidate_stats(&mut self, name: &str) {
+        self.epoch += 1;
         self.stats_cache
             .get_mut()
             .unwrap()
             .retain(|(t, _), _| t != name);
+    }
+
+    /// The current statistics epoch (see the field docs). Monotonically
+    /// increasing; equal epochs guarantee no table was inserted or
+    /// replaced in between.
+    pub fn stats_epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// The schema catalog view the SQL front-end needs.
@@ -199,6 +222,55 @@ mod tests {
         let c = catalog_with_access(10, 3);
         assert!(c.column_stats("access", 7).is_err());
         assert!(c.column_stats("nope", 0).is_err());
+    }
+
+    #[test]
+    fn stats_epoch_bumps_on_insert_and_replace_only() {
+        let mut c = catalog_with_access(100, 5);
+        let e0 = c.stats_epoch();
+        // Reads (stats collection included) never move the epoch.
+        let _ = c.column_stats("access", 0).unwrap();
+        let _ = c.schemas();
+        assert_eq!(c.stats_epoch(), e0);
+        let t = (**c.get("access").unwrap()).clone();
+        c.replace("access", t);
+        assert_eq!(c.stats_epoch(), e0 + 1);
+        let m = Multiset::new(Schema::new(vec![("x", DataType::Int)]));
+        c.insert_multiset("other", &m).unwrap();
+        assert_eq!(c.stats_epoch(), e0 + 2);
+        // Clones carry the epoch (a cloned catalog sees the same stats).
+        assert_eq!(c.clone().stats_epoch(), c.stats_epoch());
+    }
+
+    #[test]
+    fn concurrent_stats_lookups_are_safe_and_converge() {
+        // Two threads compiling against one shared catalog race the lazy
+        // stats collection: both must get correct stats, and the cache
+        // must end up holding exactly one entry they agree with.
+        let c = catalog_with_access(10_000, 64);
+        let c = &c;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut ndvs = Vec::new();
+                        for _ in 0..50 {
+                            ndvs.push(c.column_stats("access", 0).unwrap().ndv);
+                        }
+                        ndvs
+                    })
+                })
+                .collect();
+            for h in handles {
+                for ndv in h.join().unwrap() {
+                    assert_eq!(ndv, 64);
+                }
+            }
+        });
+        // After the race, repeated reads hit one settled cache entry.
+        let a = c.column_stats("access", 0).unwrap();
+        let b = c.column_stats("access", 0).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
     }
 
     #[test]

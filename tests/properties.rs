@@ -1107,6 +1107,97 @@ fn compressed_and_raw_storage_agree_across_tiers_and_policies() {
 }
 
 #[test]
+fn concurrent_prepared_serving_matches_sequential_engine() {
+    // N concurrent clients executing one prepared statement with random
+    // bindings on the shared serving pool must each produce exactly the
+    // bag a sequential `Engine::sql` of the literal-substituted query
+    // produces — while the statement compiles exactly once (the plan
+    // cache serves every later prepare) and the serving tags surface.
+    use forelem::serve::Server;
+    use forelem::workload::{access_log_wide, AccessLogSpec};
+    forall_seeds(4, |rng| {
+        let m = access_log_wide(&AccessLogSpec {
+            // Above the parallel spin-up gate so executions actually run
+            // as morsel phases on the shared pool.
+            rows: 6_000 + rng.below(6_000) as usize,
+            urls: 10 + rng.below(30) as usize,
+            skew: 1.1,
+            seed: rng.below(1 << 30),
+        });
+        let mut catalog = StorageCatalog::new();
+        catalog.insert_multiset("access", &m).unwrap();
+        let srv = Server::new(Engine::new(catalog.clone()), 4, 3);
+        let q = "SELECT url, COUNT(*) FROM access WHERE bytes > ? GROUP BY url";
+        let prepared = srv.prepare(q).map_err(|e| e.to_string())?;
+
+        // Bindings from the middle of the uniform [200, 100000) byte
+        // range: selectivities stay within REBIND_RATIO of each other, so
+        // every execution must reuse the one compiled plan.
+        let n = 6 + rng.below(5) as usize;
+        let bindings: Vec<i64> = (0..n).map(|_| rng.range(30_000, 70_000)).collect();
+        let outs: Vec<Result<forelem::exec::Output, String>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = bindings
+                .iter()
+                .map(|&b| {
+                    let (srv, prepared) = (&srv, &prepared);
+                    scope.spawn(move || {
+                        srv.execute(prepared, &[Value::Int(b)])
+                            .map_err(|e| e.to_string())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let mut reference = Engine::new(catalog);
+        for (&b, out) in bindings.iter().zip(&outs) {
+            let out = out.as_ref().map_err(|e| e.clone())?;
+            let want = reference
+                .sql(&format!(
+                    "SELECT url, COUNT(*) FROM access WHERE bytes > {b} GROUP BY url"
+                ))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                out.result().unwrap().bag_eq(want.result().unwrap()),
+                "binding {b} diverged from the sequential engine"
+            );
+            for tag in ["serve.admit", "sched.multi", "vec.morsel"] {
+                prop_assert!(
+                    out.stats.idioms.iter().any(|t| t == tag),
+                    "binding {b} missing `{tag}`: {:?}",
+                    out.stats.idioms
+                );
+            }
+            prop_assert!(
+                !out.stats.idioms.iter().any(|t| t == "opt.rebind"),
+                "binding {b} must not re-plan (ordinary drift): {:?}",
+                out.stats.idioms
+            );
+        }
+
+        // The plan cache must have served every prepare after the first:
+        // re-preparing is a hit, and no execution re-entered the compiler.
+        let again = srv.prepare(q).map_err(|e| e.to_string())?;
+        prop_assert!(again.cache_hit(), "second prepare missed the plan cache");
+        let hit_out = srv
+            .execute(&again, &[Value::Int(bindings[0])])
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            hit_out.stats.idioms.iter().any(|t| t == "serve.cache_hit"),
+            "cache-served plan missing `serve.cache_hit`: {:?}",
+            hit_out.stats.idioms
+        );
+        let (hits, misses, invalidations) = srv.plan_cache_stats();
+        prop_assert!(
+            (hits, misses, invalidations) == (1, 1, 0),
+            "statement must compile exactly once: hits={hits} misses={misses} \
+             invalidations={invalidations}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn hadoop_sim_equals_interpreter_for_random_tables() {
     forall_seeds(10, |rng| {
         let m = random_multiset(rng, 300);
