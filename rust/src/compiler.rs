@@ -278,6 +278,14 @@ impl Engine {
     }
 
     /// Compile + execute a recognized aggregate on the simulated cluster.
+    ///
+    /// Single-table group-by aggregates chunk the table through the
+    /// coordinator. A recognized join + GROUP BY nest additionally routes
+    /// by the optimizer's shipping decision: `opt.dist_broadcast`
+    /// replicates the build side as a shared hash table and chunks the
+    /// probe (`JoinProbe`), `opt.dist_shuffle` hash-partitions both sides
+    /// across the workers, salting heavy-hitter keys
+    /// (`coordinator::run_shuffle_join`).
     pub fn sql_distributed(
         &mut self,
         query: &str,
@@ -290,40 +298,44 @@ impl Engine {
         let compiled = self.compile(query);
         self.options.processors = saved;
         let compiled = compiled?;
-        let Some(idiom) = exec::recognize(&compiled.program) else {
+        let (r, result) = if let Some(idiom) = exec::recognize(&compiled.program) {
+            let (table_name, key_field, result) = match &idiom {
+                exec::Idiom::GroupCount {
+                    table,
+                    key_field,
+                    result,
+                } => (table.clone(), key_field.clone(), result.clone()),
+                exec::Idiom::GroupSum {
+                    table,
+                    key_field,
+                    result,
+                    ..
+                } => (table.clone(), key_field.clone(), result.clone()),
+            };
+            let table = self.catalog.get(&table_name)?.clone();
+            let kf = table
+                .schema
+                .field_id(&key_field)
+                .context("key field missing")?;
+            let job = match &idiom {
+                exec::Idiom::GroupCount { .. } => AggJob::count(table, kf),
+                exec::Idiom::GroupSum { val_field, .. } => {
+                    let vf = self
+                        .catalog
+                        .get(&table_name)?
+                        .schema
+                        .field_id(val_field)
+                        .context("val field missing")?;
+                    AggJob::sum(self.catalog.get(&table_name)?.clone(), kf, vf)
+                }
+            };
+            (crate::coordinator::run_job(cluster, &job)?, result)
+        } else if let Some(join) = recognize_dist_join(&compiled.program) {
+            let result = join.result.clone();
+            (self.run_dist_join(&join, &compiled, cluster)?, result)
+        } else {
             bail!("query does not lower to a distributable aggregate idiom");
         };
-        let (table_name, key_field, result) = match &idiom {
-            exec::Idiom::GroupCount {
-                table,
-                key_field,
-                result,
-            } => (table.clone(), key_field.clone(), result.clone()),
-            exec::Idiom::GroupSum {
-                table,
-                key_field,
-                result,
-                ..
-            } => (table.clone(), key_field.clone(), result.clone()),
-        };
-        let table = self.catalog.get(&table_name)?.clone();
-        let kf = table
-            .schema
-            .field_id(&key_field)
-            .context("key field missing")?;
-        let job = match &idiom {
-            exec::Idiom::GroupCount { .. } => AggJob::count(table, kf),
-            exec::Idiom::GroupSum { val_field, .. } => {
-                let vf = self
-                    .catalog
-                    .get(&table_name)?
-                    .schema
-                    .field_id(val_field)
-                    .context("val field missing")?;
-                AggJob::sum(self.catalog.get(&table_name)?.clone(), kf, vf)
-            }
-        };
-        let r = crate::coordinator::run_job(cluster, &job)?;
         let schema = compiled.program.results[&result].clone();
         let mut m = r.to_multiset(schema);
         // The coordinator computes the aggregate map off-IR; honour the
@@ -332,6 +344,92 @@ impl Engine {
             emit.apply_rows(m.rows_mut());
         }
         Ok((r, m))
+    }
+
+    /// Ship a recognized join by the optimizer's `opt.dist_*` decision.
+    /// SUM jobs always broadcast — the shuffle executor computes matched
+    /// pair counts.
+    fn run_dist_join(
+        &mut self,
+        join: &DistJoin,
+        compiled: &Compiled,
+        cluster: &ClusterConfig,
+    ) -> Result<JobResult> {
+        let probe_t = self.catalog.get(&join.probe)?.clone();
+        let build_t = self.catalog.get(&join.build)?.clone();
+        let shuffle = join.val_field.is_none()
+            && compiled
+                .opt
+                .as_ref()
+                .is_some_and(|o| o.has("opt.dist_shuffle"));
+        if shuffle {
+            let spec = crate::coordinator::ShuffleJoinSpec {
+                probe: (*probe_t).clone(),
+                probe_key: join.probe_key.clone(),
+                build: (*build_t).clone(),
+                build_key: join.build_key.clone(),
+                group_by: join.group_by.clone(),
+                repartition: true,
+            };
+            return crate::coordinator::run_shuffle_join(cluster, &spec);
+        }
+        let bkf = build_t
+            .schema
+            .field_id(&join.build_key)
+            .context("build key missing")?;
+        let pkf = probe_t
+            .schema
+            .field_id(&join.probe_key)
+            .context("probe key missing")?;
+        let gkf = probe_t
+            .schema
+            .field_id(&join.group_by)
+            .context("group field missing")?;
+        let probe = crate::coordinator::JoinProbe::new(&build_t, bkf, pkf);
+        let job = match &join.val_field {
+            None => AggJob::count_join(probe_t, gkf, probe),
+            Some(v) => {
+                let vf = probe_t
+                    .schema
+                    .field_id(v)
+                    .context("sum field missing")?;
+                AggJob::sum_join(probe_t, gkf, vf, probe)
+            }
+        };
+        let mut r = crate::coordinator::run_job(cluster, &job)?;
+        r.metrics.note_tag("dist.broadcast");
+        Ok(r)
+    }
+
+    /// `explain`, distributed: compile the query, execute it on the
+    /// simulated cluster, and report the shipping decision
+    /// (`opt.dist_*`), the fault/skew events the run survived (the
+    /// `dist.*` runtime tags) and the coordinator's full metrics line.
+    pub fn explain_distributed(
+        &mut self,
+        query: &str,
+        cluster: &ClusterConfig,
+    ) -> Result<String> {
+        let saved = self.options.processors;
+        self.options.processors = 1;
+        let compiled = self.compile(query);
+        self.options.processors = saved;
+        let compiled = compiled?;
+        let (r, _) = self.sql_distributed(query, cluster)?;
+        let mut out = String::new();
+        out.push_str("-- distributed plan:");
+        if let Some(opt) = &compiled.opt {
+            for d in opt.decisions.iter().filter(|d| d.tag.starts_with("opt.")) {
+                out.push_str(&format!("\n--   [{}] {}", d.tag, d.detail));
+            }
+        }
+        out.push_str(&format!(
+            "\n-- cluster: {} workers, {:?} scheduling",
+            cluster.workers, cluster.policy
+        ));
+        out.push_str(&format!("\n-- run: {}", r.metrics.render()));
+        out.push('\n');
+        Ok(out)
     }
 
     /// Human-readable compilation report: the optimized IR, the pass
@@ -413,6 +511,124 @@ impl Engine {
     pub fn table(&self, name: &str) -> Result<Arc<crate::storage::Table>> {
         Ok(self.catalog.get(name)?.clone())
     }
+}
+
+/// The distributable join + GROUP BY shape: the Figure-1 nest
+/// accumulating one aggregate into a per-group array, followed by the
+/// distinct emit loop. The group key (and, for SUM, the value column)
+/// must live on the probe (outer) table — that is the side the
+/// coordinator chunks across workers.
+struct DistJoin {
+    probe: String,
+    /// Probe-side field compared against the build key.
+    probe_key: String,
+    build: String,
+    build_key: String,
+    /// Probe-side GROUP BY field.
+    group_by: String,
+    /// Probe-side SUM argument (None = COUNT).
+    val_field: Option<String>,
+    result: String,
+}
+
+/// Match the join counterpart of `exec::recognize`'s aggregate idioms.
+/// Shape only — the optimizer has already oriented the nest (build side
+/// inner) by the time this runs.
+fn recognize_dist_join(p: &Program) -> Option<DistJoin> {
+    use crate::ir::{AccumOp, Domain, Expr, Stmt, Value};
+    let [Stmt::Loop(outer), Stmt::Loop(emit)] = p.body.as_slice() else {
+        return None;
+    };
+    let Domain::IndexSet(ox) = &outer.domain else {
+        return None;
+    };
+    if ox.field_filter.is_some() || ox.distinct.is_some() || ox.partition.is_some() {
+        return None;
+    }
+    let [Stmt::Loop(inner)] = outer.body.as_slice() else {
+        return None;
+    };
+    let Domain::IndexSet(iix) = &inner.domain else {
+        return None;
+    };
+    if iix.distinct.is_some() || iix.partition.is_some() {
+        return None;
+    }
+    let Some((build_key, key)) = &iix.field_filter else {
+        return None;
+    };
+    let Expr::Field {
+        var: kvar,
+        field: probe_key,
+    } = key
+    else {
+        return None;
+    };
+    if kvar != &outer.var || outer.var == inner.var {
+        return None;
+    }
+    // A single additive accumulation, grouped by a probe-side field.
+    let [Stmt::Accum {
+        array,
+        indices,
+        op: AccumOp::Add,
+        value,
+    }] = inner.body.as_slice()
+    else {
+        return None;
+    };
+    let [Expr::Field {
+        var: gvar,
+        field: group_by,
+    }] = indices.as_slice()
+    else {
+        return None;
+    };
+    if gvar != &outer.var {
+        return None;
+    }
+    let val_field = match value {
+        Expr::Const(Value::Int(1)) => None,
+        Expr::Field { var, field } if var == &outer.var => Some(field.clone()),
+        _ => return None,
+    };
+    // Emit loop: distinct group keys of the probe table, emitting
+    // (key, array[key]).
+    let Domain::IndexSet(eix) = &emit.domain else {
+        return None;
+    };
+    if eix.relation != ox.relation || eix.field_filter.is_some() || eix.partition.is_some() {
+        return None;
+    }
+    if eix.distinct.as_deref() != Some(group_by.as_str()) {
+        return None;
+    }
+    let [Stmt::ResultUnion { result, tuple }] = emit.body.as_slice() else {
+        return None;
+    };
+    let [Expr::Field { var: ev1, field: ef1 }, Expr::ArrayRef { array: ea, indices: eidx }] =
+        tuple.as_slice()
+    else {
+        return None;
+    };
+    if ev1 != &emit.var || ef1 != group_by || ea != array {
+        return None;
+    }
+    let [Expr::Field { var: ev2, field: ef2 }] = eidx.as_slice() else {
+        return None;
+    };
+    if ev2 != &emit.var || ef2 != group_by {
+        return None;
+    }
+    Some(DistJoin {
+        probe: ox.relation.clone(),
+        probe_key: probe_key.clone(),
+        build: iix.relation.clone(),
+        build_key: build_key.clone(),
+        group_by: group_by.clone(),
+        val_field,
+        result: result.clone(),
+    })
 }
 
 #[cfg(test)]
@@ -623,6 +839,76 @@ mod optimizer_tests {
         );
         assert!(text.contains("[opt.compressed_scan]"), "{text}");
         assert!(text.contains("vec.rle_filter"), "{text}");
+    }
+
+    /// Build side a large fraction of the probe side: shuffling both
+    /// sides moves fewer rows than replicating the build table.
+    fn comparable_join_engine() -> Engine {
+        let mut dim = Multiset::new(Schema::new(vec![("id", DataType::Int)]));
+        for i in 0..2000i64 {
+            dim.push(vec![Value::Int(i % 500)]);
+        }
+        let mut fact = Multiset::new(Schema::new(vec![
+            ("a_id", DataType::Int),
+            ("w", DataType::Int),
+        ]));
+        let mut rng = Rng::new(23);
+        for _ in 0..3000 {
+            fact.push(vec![
+                Value::Int(rng.range(0, 500)),
+                Value::Int(rng.range(0, 9)),
+            ]);
+        }
+        let mut c = StorageCatalog::new();
+        c.insert_multiset("dim", &dim).unwrap();
+        c.insert_multiset("fact", &fact).unwrap();
+        Engine::new(c)
+    }
+
+    /// Group key on the probe (fact) side — the distributable join shape.
+    const DJQ: &str = "SELECT w, COUNT(w) FROM fact JOIN dim ON fact.a_id = dim.id GROUP BY w";
+
+    #[test]
+    fn distributed_join_broadcasts_a_small_build_side() {
+        let mut e = join_engine();
+        let reference = e.sql(DJQ).unwrap();
+        let cluster = ClusterConfig::new(4, crate::sched::Policy::Gss);
+        let (r, m) = e.sql_distributed(DJQ, &cluster).unwrap();
+        assert!(m.bag_eq(reference.result().unwrap()), "{m:?}");
+        assert!(
+            r.metrics.tags.iter().any(|t| t == "dist.broadcast"),
+            "{:?}",
+            r.metrics.tags
+        );
+        let compiled = e.compile(DJQ).unwrap();
+        assert!(compiled.opt.unwrap().has("opt.dist_broadcast"));
+    }
+
+    #[test]
+    fn distributed_join_shuffles_comparable_sides() {
+        let mut e = comparable_join_engine();
+        let reference = e.sql(DJQ).unwrap();
+        let cluster = ClusterConfig::new(4, crate::sched::Policy::FixedChunk(128));
+        let (r, m) = e.sql_distributed(DJQ, &cluster).unwrap();
+        assert!(m.bag_eq(reference.result().unwrap()), "{m:?}");
+        assert!(
+            r.metrics.tags.iter().any(|t| t == "dist.shuffle"),
+            "{:?}",
+            r.metrics.tags
+        );
+        let compiled = e.compile(DJQ).unwrap();
+        assert!(compiled.opt.unwrap().has("opt.dist_shuffle"));
+    }
+
+    #[test]
+    fn explain_distributed_surfaces_decision_and_metrics() {
+        let mut e = join_engine();
+        let cluster = ClusterConfig::new(3, crate::sched::Policy::Gss);
+        let text = e.explain_distributed(DJQ, &cluster).unwrap();
+        assert!(text.contains("[opt.dist_broadcast]"), "{text}");
+        assert!(text.contains("3 workers"), "{text}");
+        assert!(text.contains("chunks="), "{text}");
+        assert!(text.contains("dist.broadcast"), "{text}");
     }
 
     #[test]

@@ -4,33 +4,60 @@
 //! The leader owns the loop scheduler (§III-A2) and hands chunks to
 //! worker nodes over cost-accounted channels; workers run the generated
 //! inner loop (`job::process_chunk`) and stream partial aggregates back
-//! (bounded queue = backpressure). Node failures (§III-A3) are injected
-//! by configuration: a failing worker abandons its in-flight chunk, and
-//! the leader re-queues exactly that chunk under any dynamic policy — or
-//! reports that a restart is required under a static schedule, matching
-//! the paper's analysis.
+//! (bounded queue = backpressure).
+//!
+//! Resilience (§III-A3) is per-chunk, not per-job: the leader keeps a
+//! *commit set* of merged chunks, so any chunk can safely be executed
+//! more than once — the classic MapReduce re-execution model. Three
+//! recovery paths hang off it, all driven by a deterministic
+//! [`FaultPlan`](crate::distrib::FaultPlan):
+//!
+//! * **crash** — a dead worker's in-flight and unflushed chunks are
+//!   re-queued under any dynamic policy (`dist.retry`); a static
+//!   schedule cannot move the lost block and the whole job restarts on
+//!   the surviving nodes (`dist.restart`), matching the paper's
+//!   "computation has to be restarted" analysis.
+//! * **straggler** — workers report virtual cost units alongside wall
+//!   time; a worker whose per-iteration cost exceeds
+//!   [`STRAGGLER_FACTOR`] × the fastest observed rate is marked a
+//!   straggler. Its subsequent chunks are issued as single-flush
+//!   speculative tasks and duplicated to the next free worker;
+//!   first-result-wins via the commit set (`dist.speculative`).
+//! * **lost result** — a flushed partial dropped in transit is detected
+//!   at the leader (the simulation injects the drop there) and the
+//!   covered chunks are re-queued (`dist.lost_result`).
 
 pub mod job;
+pub mod shuffle;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, Result};
 
-use crate::distrib::{channel, CommStats, LinkModel, Tx};
+use crate::distrib::{channel, CommStats, Crash, FaultPlan, LinkModel, Tx};
 use crate::ir::{Multiset, Schema, Value};
 use crate::sched::{Chunk, Policy, Scheduler};
 
 pub use job::{process_chunk, Acc, AggJob, AggOp, JoinProbe, Partial};
+pub use shuffle::{run_shuffle_join, ShuffleJoinSpec};
 
-/// Failure injection: `worker` dies after completing `after_chunks`.
+/// Legacy failure injection: `worker` dies after completing
+/// `after_chunks`. Kept as a convenience alias for single-crash plans;
+/// [`FaultPlan`] is the general schedule.
 #[derive(Debug, Clone, Copy)]
 pub struct Failure {
     pub worker: usize,
     pub after_chunks: usize,
 }
+
+/// A worker is a straggler when its per-iteration cost is at least this
+/// many times the fastest reporting worker's. Cost is measured in
+/// *virtual units* (rows × injected multiplier), so detection is exact
+/// and deterministic under a [`FaultPlan`] — no wall-clock flakiness.
+pub const STRAGGLER_FACTOR: f64 = 4.0;
 
 /// Cluster configuration (the DAS-4 stand-in).
 #[derive(Clone)]
@@ -39,9 +66,23 @@ pub struct ClusterConfig {
     pub policy: Policy,
     pub link: LinkModel,
     /// Per-worker slowdown multiplier (1.0 = full speed). Shorter than
-    /// `workers` → remaining workers run at 1.0.
+    /// `workers` → remaining workers run at 1.0. Merged with the fault
+    /// plan's latency multipliers (the worse one wins).
     pub slowdown: Vec<f64>,
     pub failure: Option<Failure>,
+    /// The deterministic fault schedule (crashes, stragglers, lost
+    /// results). Applies to the first attempt only: a whole-job restart
+    /// runs on reprovisioned nodes.
+    pub faults: FaultPlan,
+    /// Speculative duplicate launch for detected stragglers (on by
+    /// default; off reproduces pure retry-only recovery).
+    pub speculation: bool,
+    /// Simulated per-row compute/IO cost of a worker node. Zero by
+    /// default (pure wall-clock); benches set it so per-node load
+    /// imbalance shows up in elapsed time independent of host core
+    /// count, the same calibrated-sleep style `mapreduce::hadoop_sim`
+    /// uses.
+    pub row_cost: Duration,
     /// Result-queue capacity (backpressure bound).
     pub queue_capacity: usize,
     /// Workers merge this many chunks locally before flushing a partial
@@ -61,6 +102,9 @@ impl ClusterConfig {
             link: LinkModel::instant(),
             slowdown: vec![],
             failure: None,
+            faults: FaultPlan::none(),
+            speculation: true,
+            row_cost: Duration::ZERO,
             queue_capacity: 64,
             flush_every: 8,
         }
@@ -86,12 +130,45 @@ impl ClusterConfig {
         self
     }
 
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    pub fn with_speculation(mut self, on: bool) -> Self {
+        self.speculation = on;
+        self
+    }
+
+    pub fn with_row_cost(mut self, per_row: Duration) -> Self {
+        self.row_cost = per_row;
+        self
+    }
+
     fn slowdown_of(&self, w: usize) -> f64 {
-        self.slowdown.get(w).copied().unwrap_or(1.0).max(1.0)
+        let legacy = self.slowdown.get(w).copied().unwrap_or(1.0).max(1.0);
+        legacy.max(self.faults.multiplier_of(w))
+    }
+
+    fn crash_of(&self, w: usize) -> Option<Crash> {
+        self.faults.crash_of(w).or(self
+            .failure
+            .filter(|f| f.worker == w)
+            .map(|f| Crash {
+                worker: f.worker,
+                after_chunks: f.after_chunks,
+            }))
     }
 }
 
 /// Execution metrics.
+///
+/// `chunks`/`chunks_per_worker` count chunks *committed into the result*
+/// (each chunk exactly once, final attempt only after a restart);
+/// re-executed work is accounted separately in `chunks_retried` so
+/// recovery cost is visible without double-counting result work.
+/// Communication counters accumulate across restart attempts — the
+/// traffic of an aborted attempt was still paid.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub elapsed: Duration,
@@ -100,7 +177,64 @@ pub struct Metrics {
     pub comm_messages: u64,
     pub failures_recovered: usize,
     pub restarts: usize,
+    /// Chunk re-executions enqueued (crash losses, dropped flushes,
+    /// duplicate-contaminated batches, and work redone by a restart).
+    pub chunks_retried: usize,
+    /// Flushed partials dropped in transit (injected lost results).
+    pub lost_flushes: usize,
+    /// Workers detected as stragglers.
+    pub stragglers_detected: usize,
+    /// Speculative duplicate chunk copies launched.
+    pub speculative_launched: usize,
+    /// Duplicates that committed before the straggler's own copy.
+    pub speculative_won: usize,
+    /// `dist.*` execution tags describing which distributed-runtime
+    /// paths fired (the runtime counterpart of `Program::opt_tags`).
+    pub tags: Vec<String>,
     pub chunks_per_worker: BTreeMap<usize, usize>,
+}
+
+impl Metrics {
+    /// Record a `dist.*` execution tag (deduplicated).
+    pub fn note_tag(&mut self, tag: &str) {
+        if !self.tags.iter().any(|t| t == tag) {
+            self.tags.push(tag.to_string());
+        }
+    }
+
+    /// Derive the fault-path tags from the counters.
+    pub(crate) fn finalize_fault_tags(&mut self) {
+        if self.restarts > 0 {
+            self.note_tag("dist.restart");
+        }
+        if self.failures_recovered > 0 || self.chunks_retried > 0 {
+            self.note_tag("dist.retry");
+        }
+        if self.stragglers_detected > 0 {
+            self.note_tag("dist.speculative");
+        }
+        if self.lost_flushes > 0 {
+            self.note_tag("dist.lost_result");
+        }
+    }
+
+    /// One-line summary for `Engine::explain_distributed` and logs.
+    pub fn render(&self) -> String {
+        format!(
+            "chunks={} retried={} failures_recovered={} stragglers={} \
+             speculative={}/{} lost_flushes={} restarts={} comm_msgs={} tags=[{}]",
+            self.chunks,
+            self.chunks_retried,
+            self.failures_recovered,
+            self.stragglers_detected,
+            self.speculative_won,
+            self.speculative_launched,
+            self.lost_flushes,
+            self.restarts,
+            self.comm_messages,
+            self.tags.join(", ")
+        )
+    }
 }
 
 /// A completed job.
@@ -130,180 +264,440 @@ impl JobResult {
 enum WorkerMsg {
     Request { worker: usize },
     /// A flushed batch: the chunks covered + their merged partial.
+    /// `units` is the batch's virtual cost (rows × latency multiplier);
+    /// `spec` marks a single-chunk speculative flush.
     Done {
         worker: usize,
         chunks: Vec<Chunk>,
         partial: Partial,
         elapsed: Duration,
+        units: u64,
+        spec: bool,
     },
     Failed { worker: usize },
 }
 
-/// Run a distributed aggregation job, retrying whole-job restarts when a
-/// static schedule loses work (§III-A3: "the computation has to be
-/// restarted").
+/// A leader→worker assignment.
+enum Task {
+    /// Process into the local batch (normal path).
+    Chunk(Chunk),
+    /// Process standalone and flush immediately — used for contested
+    /// chunks (a straggler's own chunk and its speculative duplicate) so
+    /// a lost race never contaminates a multi-chunk batch.
+    Spec(Chunk),
+    /// Flush the local batch now, then ask again (the leader wants the
+    /// worker's finished-but-unflushed chunks made durable before
+    /// parking it).
+    Drain,
+}
+
+/// `run_once` failure modes: a lost static schedule asks for a whole-job
+/// restart and hands back the aborted attempt's metrics so the retry can
+/// account for them.
+enum RunError {
+    Restart { metrics: Box<Metrics>, reason: String },
+    Fatal(anyhow::Error),
+}
+
+/// Run a distributed aggregation job. Dynamic schedules recover every
+/// injected fault in place (per-chunk retry + speculation); a static
+/// schedule that loses work restarts once on the surviving nodes with
+/// the fault plan cleared (§III-A3: "the computation has to be
+/// restarted"), accounting the aborted attempt's work as retried.
 pub fn run_job(cfg: &ClusterConfig, job: &AggJob) -> Result<JobResult> {
     let t0 = Instant::now();
-    let mut restarts = 0;
-    loop {
-        match run_once(cfg, job, restarts) {
-            Ok(mut r) => {
-                r.metrics.restarts = restarts;
-                r.metrics.elapsed = t0.elapsed();
-                return Ok(r);
-            }
-            Err(e) if e.to_string().contains("restart required") => {
-                restarts += 1;
-                if restarts > 3 {
-                    bail!("job failed after {restarts} restarts: {e}");
+    match run_once(cfg, job, 0) {
+        Ok(mut r) => {
+            r.metrics.elapsed = t0.elapsed();
+            r.metrics.finalize_fault_tags();
+            Ok(r)
+        }
+        Err(RunError::Restart { metrics: aborted, reason }) => {
+            // On restart the failed node is excluded (the cluster
+            // manager reprovisions): run with one fewer worker and no
+            // further injected faults.
+            let mut cfg2 = cfg.clone();
+            cfg2.failure = None;
+            cfg2.faults = FaultPlan::none();
+            cfg2.workers = (cfg.workers - 1).max(1);
+            let mut r = run_once(&cfg2, job, 1).map_err(|e| match e {
+                RunError::Restart { reason: r2, .. } => {
+                    anyhow!("job failed after restart ({reason}): {r2}")
                 }
-                // On restart the failed node is excluded (the cluster
-                // manager reprovisions): run with one fewer worker and no
-                // further injected failure.
-                let mut cfg2 = cfg.clone();
-                cfg2.failure = None;
-                cfg2.workers = (cfg.workers - 1).max(1);
-                let mut r = run_once(&cfg2, job, restarts)?;
-                r.metrics.restarts = restarts;
-                r.metrics.elapsed = t0.elapsed();
-                return Ok(r);
+                RunError::Fatal(e) => e,
+            })?;
+            // Merge the aborted attempt's accounting without
+            // double-counting committed work: result chunks are the
+            // final attempt's; the aborted attempt's completed chunks
+            // become retried work; comm traffic accumulates.
+            r.metrics.restarts = 1;
+            r.metrics.chunks_retried += aborted.chunks + aborted.chunks_retried;
+            r.metrics.comm_bytes += aborted.comm_bytes;
+            r.metrics.comm_messages += aborted.comm_messages;
+            r.metrics.failures_recovered += aborted.failures_recovered;
+            r.metrics.lost_flushes += aborted.lost_flushes;
+            r.metrics.stragglers_detected += aborted.stragglers_detected;
+            r.metrics.speculative_launched += aborted.speculative_launched;
+            r.metrics.speculative_won += aborted.speculative_won;
+            r.metrics.elapsed = t0.elapsed();
+            r.metrics.finalize_fault_tags();
+            Ok(r)
+        }
+        Err(RunError::Fatal(e)) => Err(e),
+    }
+}
+
+/// Leader-side bookkeeping for one attempt. Owns everything the message
+/// handlers mutate; the result accumulator stays outside (it needs the
+/// job).
+struct Leader<'a> {
+    scheduler: Scheduler,
+    supports_requeue: bool,
+    speculation: bool,
+    workers: usize,
+    plan: &'a FaultPlan,
+    chunk_txs: Vec<Option<Sender<Option<Task>>>>,
+    /// Chunks merged into the result exactly once (first result wins).
+    committed: HashSet<Chunk>,
+    /// Rows committed; the attempt is done when this reaches `n`.
+    completed: usize,
+    /// The chunk each worker currently holds.
+    outstanding: Vec<Option<Chunk>>,
+    /// Chunks a worker finished but has not flushed yet: lost with the
+    /// node's memory if it dies (re-queued on failure).
+    unflushed: Vec<Vec<Chunk>>,
+    /// Speculative duplicates awaiting a rival worker: (chunk, owner).
+    spec_queue: VecDeque<(Chunk, usize)>,
+    /// Chunks currently raced by two workers → original owner.
+    contested: HashMap<Chunk, usize>,
+    /// Workers idling because nothing was assignable when they asked.
+    parked: Vec<usize>,
+    /// Per-worker virtual cost units and iterations (straggler signal).
+    units: Vec<f64>,
+    iters: Vec<u64>,
+    straggler: Vec<bool>,
+    /// Per-worker count of flushes seen (lost-flush injection ordinal).
+    flushes_seen: Vec<usize>,
+    metrics: Metrics,
+}
+
+impl Leader<'_> {
+    fn send(&mut self, worker: usize, task: Task) {
+        if let Some(tx) = &self.chunk_txs[worker] {
+            if tx.send(Some(task)).is_err() {
+                self.chunk_txs[worker] = None;
             }
-            Err(e) => return Err(e),
+        }
+    }
+
+    /// Try to hand `worker` its next task; false → nothing assignable.
+    fn assign(&mut self, worker: usize) -> bool {
+        // Speculative duplicates first — never raced against their own
+        // owner, and skipped once the race is already decided.
+        self.spec_queue.retain(|(c, _)| !self.committed.contains(c));
+        if let Some(pos) = self
+            .spec_queue
+            .iter()
+            .position(|(_, owner)| *owner != worker)
+        {
+            let (c, _) = self.spec_queue.remove(pos).expect("position valid");
+            self.outstanding[worker] = Some(c);
+            self.send(worker, Task::Spec(c));
+            return true;
+        }
+        let Some(chunk) = self.scheduler.next_chunk(worker) else {
+            return false;
+        };
+        self.outstanding[worker] = Some(chunk);
+        if self.straggler[worker] && self.speculation && self.supports_requeue && self.workers > 1
+        {
+            // Contested chunk: the straggler runs it single-flush and a
+            // duplicate is queued for whoever asks next.
+            self.send(worker, Task::Spec(chunk));
+            self.spec_queue.push_back((chunk, worker));
+            self.contested.insert(chunk, worker);
+            self.metrics.speculative_launched += 1;
+        } else {
+            self.send(worker, Task::Chunk(chunk));
+        }
+        true
+    }
+
+    /// Re-queue chunks for re-execution; a static schedule cannot, so it
+    /// asks for a whole-job restart.
+    fn requeue(&mut self, chunks: Vec<Chunk>, why: &str) -> Result<(), String> {
+        if chunks.is_empty() {
+            return Ok(());
+        }
+        if !self.supports_requeue {
+            return Err(format!("{why} under a static schedule; restart required"));
+        }
+        self.metrics.chunks_retried += chunks.len();
+        for c in chunks {
+            self.scheduler.requeue(c);
+        }
+        Ok(())
+    }
+
+    /// Give every parked worker another chance (new work may exist).
+    fn drain_parked(&mut self) {
+        let parked = std::mem::take(&mut self.parked);
+        for w in parked {
+            if !self.assign(w) {
+                self.parked.push(w);
+            }
+        }
+    }
+
+    /// Re-run straggler detection over the reported per-iteration costs.
+    /// Units are exact (rows × injected multiplier), so this is
+    /// deterministic: a worker is flagged iff its multiplier is at least
+    /// `STRAGGLER_FACTOR ×` the fastest reporting worker's.
+    fn detect_stragglers(&mut self) {
+        let rates: Vec<(usize, f64)> = (0..self.workers)
+            .filter(|&w| self.iters[w] > 0)
+            .map(|w| (w, self.units[w] / self.iters[w] as f64))
+            .collect();
+        if rates.len() < 2 {
+            return;
+        }
+        let fastest = rates.iter().map(|(_, r)| *r).fold(f64::INFINITY, f64::min);
+        for (w, rate) in rates {
+            if !self.straggler[w] && rate >= STRAGGLER_FACTOR * fastest {
+                self.straggler[w] = true;
+                self.metrics.stragglers_detected += 1;
+            }
+        }
+    }
+
+    fn handle_request(&mut self, worker: usize, n: usize) {
+        // The previously assigned chunk is now processed (the worker
+        // asks again only after finishing) but unflushed.
+        if let Some(done) = self.outstanding[worker].take() {
+            self.unflushed[worker].push(done);
+        }
+        if self.assign(worker) {
+            return;
+        }
+        if self.completed < n {
+            if self.unflushed[worker].is_empty() {
+                // Nothing to hand out, nothing at risk: idle until a
+                // retry or speculative duplicate shows up.
+                self.parked.push(worker);
+            } else {
+                // Make the worker's finished chunks durable first, so a
+                // fully-parked cluster implies every chunk is committed
+                // or queued.
+                self.send(worker, Task::Drain);
+            }
+        } else {
+            self.send_stop(worker);
+        }
+    }
+
+    /// Returns the partial to merge when the flush is accepted.
+    fn handle_done(
+        &mut self,
+        worker: usize,
+        chunks: Vec<Chunk>,
+        partial: Partial,
+        elapsed: Duration,
+        units: u64,
+        spec: bool,
+    ) -> Result<Option<Partial>, String> {
+        let nth = self.flushes_seen[worker];
+        self.flushes_seen[worker] += 1;
+        // Flushed chunks leave the worker's memory either way.
+        self.unflushed[worker].retain(|c| !chunks.contains(c));
+        if let Some(c) = self.outstanding[worker] {
+            if chunks.contains(&c) {
+                self.outstanding[worker] = None;
+            }
+        }
+        if self.plan.loses_flush(worker, nth) {
+            // Injected lost result: the partial evaporates in transit;
+            // recover by re-executing whatever it covered.
+            self.metrics.lost_flushes += 1;
+            let lost: Vec<Chunk> = chunks
+                .into_iter()
+                .filter(|c| !self.committed.contains(c))
+                .collect();
+            self.requeue(lost, "result flush lost")?;
+            return Ok(None);
+        }
+        if chunks.iter().any(|c| self.committed.contains(c)) {
+            // A rival already committed part of this flush. The merged
+            // partial is all-or-nothing, so discard it and re-run any
+            // still-uncommitted chunks it covered. (Speculative flushes
+            // cover exactly one chunk — a lost race costs nothing.)
+            let fresh: Vec<Chunk> = chunks
+                .into_iter()
+                .filter(|c| !self.committed.contains(c))
+                .collect();
+            self.requeue(fresh, "duplicate-contaminated batch")?;
+            return Ok(None);
+        }
+        // First result wins: commit every covered chunk.
+        let batch: usize = chunks.iter().map(|c| c.len()).sum();
+        for chunk in &chunks {
+            self.scheduler.report(
+                worker,
+                *chunk,
+                elapsed.mul_f64(chunk.len() as f64 / batch.max(1) as f64),
+            );
+            self.committed.insert(*chunk);
+            if let Some(owner) = self.contested.remove(chunk) {
+                if spec && owner != worker {
+                    self.metrics.speculative_won += 1;
+                }
+            }
+        }
+        self.completed += batch;
+        self.metrics.chunks += chunks.len();
+        *self.metrics.chunks_per_worker.entry(worker).or_default() += chunks.len();
+        self.units[worker] += units as f64;
+        self.iters[worker] += batch as u64;
+        self.detect_stragglers();
+        Ok(Some(partial))
+    }
+
+    /// Crash recovery: in-flight AND unflushed chunks are lost with the
+    /// node's memory.
+    fn handle_failed(&mut self, worker: usize) -> Result<(), String> {
+        let mut lost: Vec<Chunk> = self.unflushed[worker].drain(..).collect();
+        lost.extend(self.outstanding[worker].take());
+        self.chunk_txs[worker] = None; // node is gone
+        if !lost.is_empty() {
+            self.requeue(lost, &format!("node {worker} failed"))?;
+            self.metrics.failures_recovered += 1;
+        } else if !self.supports_requeue && !self.scheduler.exhausted() {
+            // Even with no in-flight chunk, a static schedule cannot
+            // move the node's unprocessed block.
+            return Err(format!(
+                "node {worker} failed under a static schedule; restart required"
+            ));
+        }
+        Ok(())
+    }
+
+    fn send_stop(&mut self, worker: usize) {
+        if let Some(tx) = &self.chunk_txs[worker] {
+            let _ = tx.send(None);
         }
     }
 }
 
-fn run_once(cfg: &ClusterConfig, job: &AggJob, attempt: usize) -> Result<JobResult> {
+fn run_once(cfg: &ClusterConfig, job: &AggJob, attempt: usize) -> Result<JobResult, RunError> {
     let n = job.rows();
     let stats = CommStats::new();
-    let mut scheduler = Scheduler::new(cfg.policy, n, cfg.workers);
+    let scheduler = Scheduler::new(cfg.policy, n, cfg.workers);
     let supports_requeue = scheduler.supports_requeue();
 
     // Accounted, bounded worker→leader channel (backpressure).
     let (msg_tx, msg_rx) = channel::<WorkerMsg>(cfg.queue_capacity, stats.clone(), cfg.link);
-    let job = job.clone();
-    let job_arc = Arc::new(job);
+    let job_arc = Arc::new(job.clone());
 
-    std::thread::scope(|scope| -> Result<JobResult> {
+    std::thread::scope(|scope| -> Result<JobResult, RunError> {
         // Leader→worker chunk channels (plain; replies are tiny).
-        let mut chunk_txs: Vec<Option<Sender<Option<Chunk>>>> = Vec::new();
+        let mut chunk_txs: Vec<Option<Sender<Option<Task>>>> = Vec::new();
         let mut handles = Vec::new();
         for w in 0..cfg.workers {
-            let (ctx, crx) = std::sync::mpsc::channel::<Option<Chunk>>();
+            let (ctx, crx) = std::sync::mpsc::channel::<Option<Task>>();
             chunk_txs.push(Some(ctx));
             let msg_tx = msg_tx.clone();
             let job = job_arc.clone();
-            let slowdown = cfg.slowdown_of(w);
-            // Failure only fires on the first attempt.
-            let failure = cfg.failure.filter(|f| f.worker == w && attempt == 0);
+            let multiplier = cfg.slowdown_of(w);
+            // Faults only fire on the first attempt (the restart runs on
+            // reprovisioned nodes).
+            let crash = if attempt == 0 { cfg.crash_of(w) } else { None };
             let flush_every = cfg.flush_every.max(1);
+            let row_cost = cfg.row_cost;
             handles.push(scope.spawn(move || {
-                worker_loop(w, &job, crx, msg_tx, slowdown, failure, flush_every);
+                worker_loop(w, &job, crx, msg_tx, multiplier, crash, flush_every, row_cost);
             }));
         }
         drop(msg_tx); // leader keeps only the rx side
 
         let mut acc = Acc::for_job(&job_arc);
-        let mut metrics = Metrics::default();
-        let mut completed = 0usize;
-        let mut outstanding: Vec<Option<Chunk>> = vec![None; cfg.workers];
-        // Chunks a worker finished but has not flushed yet: lost with the
-        // node's memory if it dies (re-queued on failure).
-        let mut unflushed: Vec<Vec<Chunk>> = vec![Vec::new(); cfg.workers];
-        let mut lost_work = false;
+        let mut leader = Leader {
+            scheduler,
+            supports_requeue,
+            speculation: cfg.speculation,
+            workers: cfg.workers,
+            plan: &cfg.faults,
+            chunk_txs,
+            committed: HashSet::new(),
+            completed: 0,
+            outstanding: vec![None; cfg.workers],
+            unflushed: vec![Vec::new(); cfg.workers],
+            spec_queue: VecDeque::new(),
+            contested: HashMap::new(),
+            parked: Vec::new(),
+            units: vec![0.0; cfg.workers],
+            iters: vec![0; cfg.workers],
+            straggler: vec![false; cfg.workers],
+            flushes_seen: vec![0; cfg.workers],
+            metrics: Metrics::default(),
+        };
 
-        while completed < n {
+        let mut abort: Option<String> = None;
+        while leader.completed < n {
             let Ok(msg) = msg_rx.recv() else {
                 // All workers gone before completion.
-                if lost_work || completed < n {
-                    bail!("workers exited early; restart required");
-                }
+                abort = Some("workers exited early; restart required".into());
                 break;
             };
-            match msg {
+            let outcome = match msg {
                 WorkerMsg::Request { worker } => {
-                    // The previously assigned chunk is now processed (the
-                    // worker asks again only after finishing) but unflushed.
-                    if let Some(done) = outstanding[worker].take() {
-                        unflushed[worker].push(done);
-                    }
-                    let chunk = scheduler.next_chunk(worker);
-                    outstanding[worker] = chunk;
-                    if let Some(tx) = &chunk_txs[worker] {
-                        let _ = tx.send(chunk);
-                    }
+                    leader.handle_request(worker, n);
+                    Ok(())
                 }
                 WorkerMsg::Done {
                     worker,
                     chunks,
                     partial,
                     elapsed,
-                } => {
-                    let batch: usize = chunks.iter().map(|c| c.len()).sum();
-                    for chunk in &chunks {
-                        scheduler.report(
-                            worker,
-                            *chunk,
-                            elapsed.mul_f64(chunk.len() as f64 / batch.max(1) as f64),
-                        );
-                    }
-                    // These chunks are now durable at the leader.
-                    unflushed[worker].retain(|c| !chunks.contains(c));
-                    if let Some(c) = outstanding[worker] {
-                        if chunks.contains(&c) {
-                            outstanding[worker] = None;
+                    units,
+                    spec,
+                } => leader
+                    .handle_done(worker, chunks, partial, elapsed, units, spec)
+                    .map(|p| {
+                        if let Some(partial) = p {
+                            acc.merge(partial);
                         }
-                    }
-                    acc.merge(partial);
-                    completed += batch;
-                    metrics.chunks += chunks.len();
-                    *metrics.chunks_per_worker.entry(worker).or_default() += chunks.len();
-                }
-                WorkerMsg::Failed { worker } => {
-                    // In-flight AND unflushed chunks are lost with the
-                    // node's memory.
-                    let mut lost: Vec<Chunk> = unflushed[worker].drain(..).collect();
-                    lost.extend(outstanding[worker].take());
-                    chunk_txs[worker] = None; // node is gone
-                    if !lost.is_empty() {
-                        if supports_requeue {
-                            for chunk in lost {
-                                scheduler.requeue(chunk);
-                            }
-                            metrics.failures_recovered += 1;
-                        } else {
-                            lost_work = true;
-                        }
-                    } else if !supports_requeue {
-                        // Even with no in-flight chunk, a static schedule
-                        // cannot move the node's unprocessed block.
-                        if !scheduler.exhausted() {
-                            lost_work = true;
-                        }
-                    }
-                    if lost_work {
-                        bail!(
-                            "node {worker} failed under a static schedule; restart required"
-                        );
-                    }
-                }
+                    }),
+                WorkerMsg::Failed { worker } => leader.handle_failed(worker),
+            };
+            if let Err(reason) = outcome {
+                abort = Some(reason);
+                break;
             }
+            // Retries and speculative duplicates may have created work
+            // for idle workers.
+            leader.drain_parked();
         }
 
-        // Tell idle workers to stop.
-        for tx in chunk_txs.iter().flatten() {
-            let _ = tx.send(None);
+        // Tell everyone to stop (normal completion or abort), then drain
+        // in-flight messages so workers blocked on the bounded queue can
+        // exit, and join.
+        for w in 0..cfg.workers {
+            leader.send_stop(w);
         }
-        drop(chunk_txs);
-        // Drain any in-flight messages so workers blocked on the bounded
-        // queue can exit, then join.
+        leader.chunk_txs.clear();
         while msg_rx.try_recv().is_ok() {}
         for h in handles {
             let _ = h.join();
         }
 
+        let mut metrics = leader.metrics;
         metrics.comm_bytes = stats.total_bytes();
         metrics.comm_messages = stats.total_messages();
+        if let Some(reason) = abort {
+            return Err(RunError::Restart {
+                metrics: Box::new(metrics),
+                reason,
+            });
+        }
         Ok(JobResult {
             pairs: acc.into_pairs(&job_arc),
             metrics,
@@ -311,57 +705,72 @@ fn run_once(cfg: &ClusterConfig, job: &AggJob, attempt: usize) -> Result<JobResu
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
     job: &AggJob,
-    chunk_rx: std::sync::mpsc::Receiver<Option<Chunk>>,
+    chunk_rx: std::sync::mpsc::Receiver<Option<Task>>,
     msg_tx: Tx<WorkerMsg>,
-    slowdown: f64,
-    failure: Option<Failure>,
+    multiplier: f64,
+    crash: Option<Crash>,
     flush_every: usize,
+    row_cost: Duration,
 ) {
     let mut processed = 0usize;
     // Local accumulation between flushes (amortizes leader merge + comm).
     let mut local = Acc::for_job(job);
     let mut covered: Vec<Chunk> = Vec::new();
     let mut batch_t = Duration::ZERO;
+    let mut batch_units = 0u64;
 
     let flush = |local: &mut Acc,
                  covered: &mut Vec<Chunk>,
-                 batch_t: &mut Duration|
+                 batch_t: &mut Duration,
+                 batch_units: &mut u64|
      -> bool {
         if covered.is_empty() {
             return true;
         }
         let partial = std::mem::replace(local, Acc::for_job(job)).into_partial();
         let bytes = partial.wire_bytes();
-        let ok = msg_tx.send(
+        msg_tx.send(
             WorkerMsg::Done {
                 worker: w,
                 chunks: std::mem::take(covered),
                 partial,
                 elapsed: std::mem::replace(batch_t, Duration::ZERO),
+                units: std::mem::replace(batch_units, 0),
+                spec: false,
             },
             bytes,
-        );
-        ok
+        )
     };
 
     loop {
         if !msg_tx.send(WorkerMsg::Request { worker: w }, 16) {
             return;
         }
-        let chunk = match chunk_rx.recv() {
-            Ok(Some(c)) => c,
+        let task = match chunk_rx.recv() {
+            Ok(Some(t)) => t,
             _ => {
                 // Loop exhausted: flush what we hold, then exit.
-                let _ = flush(&mut local, &mut covered, &mut batch_t);
+                let _ = flush(&mut local, &mut covered, &mut batch_t, &mut batch_units);
                 return;
             }
         };
+        let (chunk, is_spec) = match task {
+            Task::Drain => {
+                if !flush(&mut local, &mut covered, &mut batch_t, &mut batch_units) {
+                    return;
+                }
+                continue;
+            }
+            Task::Chunk(c) => (c, false),
+            Task::Spec(c) => (c, true),
+        };
         // Injected crash: die holding the in-flight chunk AND any
         // unflushed local state (both are lost with this node's memory).
-        if let Some(f) = failure {
+        if let Some(f) = crash {
             if processed >= f.after_chunks {
                 let _ = msg_tx.send(WorkerMsg::Failed { worker: w }, 16);
                 return;
@@ -369,20 +778,48 @@ fn worker_loop(
         }
         let t0 = Instant::now();
         let partial = process_chunk(job, chunk.lo, chunk.hi);
-        local.merge(partial);
-        covered.push(chunk);
         let real = t0.elapsed();
-        if slowdown > 1.0 {
-            std::thread::sleep(real.mul_f64(slowdown - 1.0));
+        // Simulated extra latency: the node's calibrated per-row cost
+        // plus the injected slowdown, both scaled by the multiplier.
+        let sim = row_cost.mul_f64(chunk.len() as f64 * multiplier);
+        let extra = real.mul_f64(multiplier - 1.0) + sim;
+        if extra > Duration::ZERO {
+            std::thread::sleep(extra);
         }
-        batch_t += t0.elapsed();
+        let elapsed = t0.elapsed();
+        let units = (chunk.len() as f64 * multiplier) as u64;
         processed += 1;
-        if covered.len() >= flush_every && !flush(&mut local, &mut covered, &mut batch_t) {
-            return;
+        if is_spec {
+            // Contested chunk: flush standalone so a lost race never
+            // contaminates the local batch.
+            let bytes = partial.wire_bytes();
+            let ok = msg_tx.send(
+                WorkerMsg::Done {
+                    worker: w,
+                    chunks: vec![chunk],
+                    partial,
+                    elapsed,
+                    units,
+                    spec: true,
+                },
+                bytes,
+            );
+            if !ok {
+                return;
+            }
+        } else {
+            local.merge(partial);
+            covered.push(chunk);
+            batch_t += elapsed;
+            batch_units += units;
+            if covered.len() >= flush_every
+                && !flush(&mut local, &mut covered, &mut batch_t, &mut batch_units)
+            {
+                return;
+            }
         }
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -583,5 +1020,110 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn restart_accounting_spans_both_attempts() {
+        // Pins the whole-job-restart fix: the aborted attempt's traffic
+        // and completed work used to be silently discarded, so a
+        // restarted job reported *less* communication than a fault-free
+        // one. The restarted attempt alone sends 9 messages here (3
+        // surviving workers × (2 requests + 1 final flush)); attempt 0's
+        // request/failure traffic must come on top.
+        let t = table(50_000, 300, true);
+        let clean = run_job(
+            &ClusterConfig::new(3, Policy::StaticBlock),
+            &AggJob::count(t.clone(), 0),
+        )
+        .unwrap();
+        let cfg = ClusterConfig::new(4, Policy::StaticBlock).with_failure(Failure {
+            worker: 1,
+            after_chunks: 0,
+        });
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        assert_eq!(r.metrics.restarts, 1);
+        assert!(
+            r.metrics.comm_messages > clean.metrics.comm_messages,
+            "aborted attempt's messages must accumulate: {} <= {}",
+            r.metrics.comm_messages,
+            clean.metrics.comm_messages
+        );
+        // Result accounting stays single-attempt: 4 static blocks exist,
+        // but only the 3 surviving workers' chunks are committed.
+        assert_eq!(r.metrics.chunks, 3);
+        assert_eq!(r.metrics.chunks_per_worker.values().sum::<usize>(), 3);
+        assert!(r.metrics.tags.iter().any(|x| x == "dist.restart"));
+    }
+
+    #[test]
+    fn straggler_is_detected_and_speculated_deterministically() {
+        let t = table(40_000, 300, true);
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(1024))
+            .with_faults(FaultPlan::none().slow(3, 8.0));
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        // units = rows × multiplier, so per-iteration cost is exactly
+        // the injected 8× — detection is a certainty, not a race.
+        assert_eq!(r.metrics.stragglers_detected, 1);
+        assert!(r.metrics.speculative_launched >= 1);
+        assert!(r.metrics.tags.iter().any(|x| x == "dist.speculative"));
+        assert_eq!(r.metrics.restarts, 0);
+    }
+
+    #[test]
+    fn speculation_off_still_completes_with_a_straggler() {
+        let t = table(20_000, 200, true);
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(1024))
+            .with_faults(FaultPlan::none().slow(2, 10.0))
+            .with_speculation(false);
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        assert_eq!(r.metrics.speculative_launched, 0);
+        assert_eq!(r.metrics.speculative_won, 0);
+    }
+
+    #[test]
+    fn lost_flush_is_detected_and_reexecuted() {
+        let t = table(30_000, 200, true);
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(1024))
+            .with_flush_every(4)
+            .with_faults(FaultPlan::none().lose_flush(1, 0));
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        assert_eq!(r.metrics.lost_flushes, 1);
+        // A worker's first flush always covers exactly `flush_every`
+        // chunks, all of which must be re-executed.
+        assert_eq!(r.metrics.chunks_retried, 4);
+        assert!(r.metrics.tags.iter().any(|x| x == "dist.lost_result"));
+    }
+
+    #[test]
+    fn crash_retry_counts_match_the_injected_plan() {
+        let t = table(50_000, 300, true);
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(512))
+            .with_flush_every(4)
+            .with_faults(FaultPlan::none().crash(2, 5));
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check(&r, &t);
+        assert_eq!(r.metrics.failures_recovered, 1);
+        // 5 chunks done = one flush of 4 + 1 unflushed; dying on receipt
+        // of chunk 6 loses the unflushed chunk and the in-flight one.
+        assert_eq!(r.metrics.chunks_retried, 2);
+        assert_eq!(r.metrics.chunks_per_worker.get(&2), Some(&4));
+        assert!(r.metrics.tags.iter().any(|x| x == "dist.retry"));
+    }
+
+    #[test]
+    fn fault_free_runs_carry_no_fault_tags() {
+        let t = table(10_000, 100, true);
+        let r = run_job(
+            &ClusterConfig::new(4, Policy::Gss),
+            &AggJob::count(t.clone(), 0),
+        )
+        .unwrap();
+        check(&r, &t);
+        assert!(r.metrics.tags.is_empty(), "{:?}", r.metrics.tags);
+        assert!(!r.metrics.render().is_empty());
     }
 }

@@ -1,0 +1,533 @@
+//! The shuffle-join executor: partition-pinned distributed joins with
+//! skew-resistant repartitioning.
+//!
+//! [`run_job`](super::run_job) ships work morsel-by-morsel from one
+//! global iteration space — perfect load balance, but every worker needs
+//! the whole probe relation. When the optimizer decides a join is too
+//! big to broadcast (`opt.dist_shuffle`), both sides are hash-shuffled
+//! on the join key instead and each worker owns exactly its shard
+//! (`dist.shuffle`): worker `k` probes shard `k` against the build rows
+//! whose keys hash to `k`. Ownership is what makes key skew hurt — a
+//! heavy-hitter key piles its entire partition onto one node — and what
+//! [`detect_heavy_hitters`] + salting fix (`dist.repartition_skew`):
+//! hot-key probe rows are dealt round-robin into per-node sub-shards and
+//! the matching build rows are replicated, so the coordinator's final
+//! merge reassembles the hot groups exactly.
+//!
+//! Faults follow the same [`FaultPlan`](crate::distrib::FaultPlan)
+//! semantics as the morsel path: a dead worker's remaining chunks are
+//! re-queued to survivors (who fetch the shard — charged), a dropped
+//! flush re-executes the chunks it covered. There is no speculation
+//! here: shards are pinned, so a straggler is a *skew* problem and the
+//! salting pass is the mitigation.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::distrib::{
+    channel, detect_heavy_hitters, hash_value, redistribute, redistribute_skew, split_direct,
+    tuple_bytes, CommStats, Partitioning, SkewPlan,
+};
+use crate::ir::Value;
+use crate::storage::{ColumnStats, Table};
+
+use super::{ClusterConfig, JobResult, Metrics};
+
+/// Target chunk count for a perfectly balanced cluster: every worker's
+/// shard splits into ~this many chunks of uniform row width. The width
+/// is global, so a skew-bloated shard shows up directly as more chunks
+/// on its pinned worker — and as proportionally more re-queued work when
+/// that worker dies.
+const CHUNKS_PER_WORKER: usize = 16;
+
+/// A distributed group-aggregate over an equi-join, executed by
+/// shuffling both sides on the join key. Group key and the optional
+/// summed field live on the probe side (the `AggJob::count_join` shape).
+#[derive(Clone)]
+pub struct ShuffleJoinSpec {
+    pub probe: Table,
+    pub probe_key: String,
+    pub build: Table,
+    pub build_key: String,
+    /// Probe-side field the aggregate groups by.
+    pub group_by: String,
+    /// Detect heavy hitters and salt them across nodes; off = plain hash
+    /// partitioning (the skew-suffering baseline the bench measures).
+    pub repartition: bool,
+}
+
+/// One unit of probe work: rows `[lo, hi)` of probe shard `shard`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ChunkRef {
+    shard: usize,
+    lo: usize,
+    hi: usize,
+}
+
+impl ChunkRef {
+    fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+enum WorkerMsg {
+    Request { worker: usize },
+    Done {
+        worker: usize,
+        chunks: Vec<ChunkRef>,
+        partial: HashMap<Value, f64>,
+    },
+    Failed { worker: usize },
+}
+
+enum Task {
+    Chunk(ChunkRef),
+    /// Flush the local batch, then ask again.
+    Drain,
+}
+
+fn partial_bytes(p: &HashMap<Value, f64>) -> usize {
+    p.iter().map(|(k, _)| tuple_bytes(&[k.clone()]) + 8).sum()
+}
+
+/// Run the shuffle join. Results are exact under any fault plan a
+/// dynamic-schedule cluster survives; metrics carry the `dist.shuffle` /
+/// `dist.repartition_skew` tags plus the usual recovery counters.
+pub fn run_shuffle_join(cfg: &ClusterConfig, spec: &ShuffleJoinSpec) -> Result<JobResult> {
+    let t0 = Instant::now();
+    let n = cfg.workers.max(1);
+    let pk = field(&spec.probe, &spec.probe_key)?;
+    let bk = field(&spec.build, &spec.build_key)?;
+    let gb = field(&spec.probe, &spec.group_by)?;
+
+    let comm = CommStats::new();
+
+    // Shuffle the probe side: resident direct blocks → hash (or salted)
+    // key partitioning, moved tuples charged.
+    let plan = if spec.repartition {
+        let stats = ColumnStats::collect(&spec.probe, pk);
+        detect_heavy_hitters(&spec.probe, &spec.probe_key, &stats, n)?
+    } else {
+        SkewPlan::default()
+    };
+    let resident = split_direct(&spec.probe, n);
+    let probe_shards = if plan.is_empty() {
+        redistribute(
+            &resident,
+            &Partitioning::HashKey(spec.probe_key.clone()),
+            &comm,
+        )?
+    } else {
+        redistribute_skew(&resident, &spec.probe_key, &plan, &comm)?
+    };
+
+    // Build side: per-shard key→multiplicity maps. Cold keys go to the
+    // shard their hash owns; hot keys are replicated everywhere (their
+    // probe rows are spread). Each shipped copy is charged.
+    let mut mult: Vec<HashMap<Value, f64>> = vec![HashMap::new(); n];
+    let mut build_moved = 0usize;
+    for row in 0..spec.build.len() {
+        let k = spec.build.value(row, bk);
+        let bytes = tuple_bytes(&spec.build.tuple(row));
+        if plan.is_hot(&k) {
+            build_moved += bytes * (n - 1);
+            for m in mult.iter_mut() {
+                *m.entry(k.clone()).or_insert(0.0) += 1.0;
+            }
+        } else {
+            let dst = (hash_value(&k) % n as u64) as usize;
+            build_moved += bytes;
+            *mult[dst].entry(k).or_insert(0.0) += 1.0;
+        }
+    }
+    comm.record(build_moved);
+
+    let total_rows: usize = probe_shards.iter().map(|t| t.len()).sum();
+    let shards = Arc::new(probe_shards);
+    let mult = Arc::new(mult);
+
+    // Per-shard chunk queues of globally uniform row width; worker k
+    // owns queue k (pinned).
+    let per = total_rows.div_ceil(n * CHUNKS_PER_WORKER).max(1);
+    let mut queues: Vec<VecDeque<ChunkRef>> = (0..n)
+        .map(|s| {
+            let len = shards[s].len();
+            let mut q = VecDeque::new();
+            let mut lo = 0;
+            while lo < len {
+                let hi = (lo + per).min(len);
+                q.push_back(ChunkRef { shard: s, lo, hi });
+                lo = hi;
+            }
+            q
+        })
+        .collect();
+
+    let (msg_tx, msg_rx) = channel::<WorkerMsg>(cfg.queue_capacity, comm.clone(), cfg.link);
+
+    let mut metrics = Metrics::default();
+    metrics.note_tag("dist.shuffle");
+    if !plan.is_empty() {
+        metrics.note_tag("dist.repartition_skew");
+    }
+
+    let result = std::thread::scope(|scope| -> Result<HashMap<Value, f64>> {
+        let mut chunk_txs: Vec<Option<Sender<Option<Task>>>> = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..n {
+            let (ctx, crx) = std::sync::mpsc::channel::<Option<Task>>();
+            chunk_txs.push(Some(ctx));
+            let msg_tx = msg_tx.clone();
+            let shards = shards.clone();
+            let mult = mult.clone();
+            let multiplier = cfg.slowdown_of(w);
+            let crash = cfg.crash_of(w);
+            let flush_every = cfg.flush_every.max(1);
+            let row_cost = cfg.row_cost;
+            handles.push(scope.spawn(move || {
+                shuffle_worker(
+                    w, &shards, &mult, pk, gb, crx, msg_tx, multiplier,
+                    crash.map(|c| c.after_chunks), flush_every, row_cost,
+                );
+            }));
+        }
+        drop(msg_tx);
+
+        // Chunks orphaned by a death or a dropped flush: any survivor may
+        // take them (it fetches the rows — charged on requeue).
+        let mut reassign: VecDeque<ChunkRef> = VecDeque::new();
+        let mut outstanding: Vec<Option<ChunkRef>> = vec![None; n];
+        let mut unflushed: Vec<Vec<ChunkRef>> = vec![Vec::new(); n];
+        let mut parked: Vec<usize> = Vec::new();
+        let mut flushes_seen = vec![0usize; n];
+        let mut alive = vec![true; n];
+        let mut completed = 0usize;
+        let mut acc: HashMap<Value, f64> = HashMap::new();
+
+        let requeue = |chunks: Vec<ChunkRef>,
+                       reassign: &mut VecDeque<ChunkRef>,
+                       metrics: &mut Metrics,
+                       charge_fetch: bool| {
+            metrics.chunks_retried += chunks.len();
+            if charge_fetch {
+                // The new owner pulls the rows from distributed storage.
+                let bytes: usize = chunks
+                    .iter()
+                    .map(|c| {
+                        (c.lo..c.hi)
+                            .map(|r| tuple_bytes(&shards[c.shard].tuple(r)))
+                            .sum::<usize>()
+                    })
+                    .sum();
+                comm.record(bytes);
+            }
+            reassign.extend(chunks);
+        };
+
+        fn assign(
+            w: usize,
+            queues: &mut [VecDeque<ChunkRef>],
+            reassign: &mut VecDeque<ChunkRef>,
+        ) -> Option<ChunkRef> {
+            queues[w].pop_front().or_else(|| reassign.pop_front())
+        }
+
+        while completed < total_rows {
+            let Ok(msg) = msg_rx.recv() else {
+                bail!("all workers failed before the shuffle join completed");
+            };
+            match msg {
+                WorkerMsg::Request { worker } => {
+                    if let Some(done) = outstanding[worker].take() {
+                        unflushed[worker].push(done);
+                    }
+                    if let Some(c) = assign(worker, &mut queues, &mut reassign) {
+                        outstanding[worker] = Some(c);
+                        send(&mut chunk_txs, worker, Some(Task::Chunk(c)));
+                    } else if completed < total_rows {
+                        if unflushed[worker].is_empty() {
+                            parked.push(worker);
+                        } else {
+                            send(&mut chunk_txs, worker, Some(Task::Drain));
+                        }
+                    } else {
+                        send(&mut chunk_txs, worker, None);
+                    }
+                }
+                WorkerMsg::Done {
+                    worker,
+                    chunks,
+                    partial,
+                } => {
+                    let nth = flushes_seen[worker];
+                    flushes_seen[worker] += 1;
+                    unflushed[worker].retain(|c| !chunks.contains(c));
+                    if let Some(c) = outstanding[worker] {
+                        if chunks.contains(&c) {
+                            outstanding[worker] = None;
+                        }
+                    }
+                    if cfg.faults.loses_flush(worker, nth) {
+                        metrics.lost_flushes += 1;
+                        requeue(chunks, &mut reassign, &mut metrics, false);
+                    } else {
+                        completed += chunks.iter().map(ChunkRef::len).sum::<usize>();
+                        metrics.chunks += chunks.len();
+                        *metrics.chunks_per_worker.entry(worker).or_default() += chunks.len();
+                        for (k, v) in partial {
+                            *acc.entry(k).or_insert(0.0) += v;
+                        }
+                    }
+                }
+                WorkerMsg::Failed { worker } => {
+                    alive[worker] = false;
+                    chunk_txs[worker] = None;
+                    let mut lost: Vec<ChunkRef> = unflushed[worker].drain(..).collect();
+                    lost.extend(outstanding[worker].take());
+                    lost.extend(std::mem::take(&mut queues[worker]));
+                    if alive.iter().filter(|&&a| a).count() == 0 {
+                        bail!("all workers failed before the shuffle join completed");
+                    }
+                    if !lost.is_empty() {
+                        metrics.failures_recovered += 1;
+                        requeue(lost, &mut reassign, &mut metrics, true);
+                    }
+                }
+            }
+            // New work may have arrived for parked workers.
+            let waiting = std::mem::take(&mut parked);
+            for w in waiting {
+                if let Some(c) = assign(w, &mut queues, &mut reassign) {
+                    outstanding[w] = Some(c);
+                    send(&mut chunk_txs, w, Some(Task::Chunk(c)));
+                } else {
+                    parked.push(w);
+                }
+            }
+        }
+
+        for w in 0..n {
+            send(&mut chunk_txs, w, None);
+        }
+        chunk_txs.clear();
+        while msg_rx.try_recv().is_ok() {}
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(acc)
+    })?;
+
+    metrics.comm_bytes = comm.total_bytes();
+    metrics.comm_messages = comm.total_messages();
+    metrics.elapsed = t0.elapsed();
+    metrics.finalize_fault_tags();
+    let mut pairs: Vec<(Value, f64)> = result.into_iter().collect();
+    pairs.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(JobResult { pairs, metrics })
+}
+
+fn field(t: &Table, name: &str) -> Result<usize> {
+    t.schema
+        .field_id(name)
+        .ok_or_else(|| anyhow::anyhow!("no field `{name}`"))
+}
+
+fn send(txs: &mut [Option<Sender<Option<Task>>>], w: usize, task: Option<Task>) {
+    if let Some(tx) = &txs[w] {
+        if tx.send(task).is_err() {
+            txs[w] = None;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shuffle_worker(
+    w: usize,
+    shards: &[Table],
+    mult: &[HashMap<Value, f64>],
+    pk: usize,
+    gb: usize,
+    chunk_rx: std::sync::mpsc::Receiver<Option<Task>>,
+    msg_tx: crate::distrib::Tx<WorkerMsg>,
+    multiplier: f64,
+    crash_after: Option<usize>,
+    flush_every: usize,
+    row_cost: Duration,
+) {
+    let mut processed = 0usize;
+    let mut local: HashMap<Value, f64> = HashMap::new();
+    let mut covered: Vec<ChunkRef> = Vec::new();
+
+    let flush = |local: &mut HashMap<Value, f64>, covered: &mut Vec<ChunkRef>| -> bool {
+        if covered.is_empty() {
+            return true;
+        }
+        let partial = std::mem::take(local);
+        let bytes = partial_bytes(&partial);
+        msg_tx.send(
+            WorkerMsg::Done {
+                worker: w,
+                chunks: std::mem::take(covered),
+                partial,
+            },
+            bytes,
+        )
+    };
+
+    loop {
+        if !msg_tx.send(WorkerMsg::Request { worker: w }, 16) {
+            return;
+        }
+        let chunk = match chunk_rx.recv() {
+            Ok(Some(Task::Chunk(c))) => c,
+            Ok(Some(Task::Drain)) => {
+                if !flush(&mut local, &mut covered) {
+                    return;
+                }
+                continue;
+            }
+            _ => {
+                let _ = flush(&mut local, &mut covered);
+                return;
+            }
+        };
+        if let Some(after) = crash_after {
+            if processed >= after {
+                let _ = msg_tx.send(WorkerMsg::Failed { worker: w }, 16);
+                return;
+            }
+        }
+        let t0 = Instant::now();
+        let shard = &shards[chunk.shard];
+        let table = &mult[chunk.shard];
+        for row in chunk.lo..chunk.hi {
+            let Some(&m) = table.get(&shard.value(row, pk)) else {
+                continue;
+            };
+            *local.entry(shard.value(row, gb)).or_insert(0.0) += m;
+        }
+        let real = t0.elapsed();
+        let sim = row_cost.mul_f64(chunk.len() as f64 * multiplier);
+        let extra = real.mul_f64(multiplier - 1.0) + sim;
+        if extra > Duration::ZERO {
+            std::thread::sleep(extra);
+        }
+        processed += 1;
+        covered.push(chunk);
+        if covered.len() >= flush_every && !flush(&mut local, &mut covered) {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distrib::FaultPlan;
+    use crate::ir::{DataType, Multiset, Schema};
+    use crate::sched::Policy;
+
+    /// A skewed fact (60% of rows on key 0) joined to a small dim.
+    fn spec(rows: usize, skew: bool, repartition: bool) -> ShuffleJoinSpec {
+        let fact_schema = Schema::new(vec![("k", DataType::Int), ("g", DataType::Int)]);
+        let mut fact = Multiset::new(fact_schema);
+        let hot = if skew { (rows as f64 * 0.6) as usize } else { 0 };
+        for i in 0..rows {
+            let k = if i < hot { 0 } else { (i % 40) as i64 };
+            fact.push(vec![Value::Int(k), Value::Int((i % 7) as i64)]);
+        }
+        let dim_schema = Schema::new(vec![("id", DataType::Int)]);
+        let mut dim = Multiset::new(dim_schema);
+        for k in 0..40i64 {
+            dim.push(vec![Value::Int(k)]);
+        }
+        ShuffleJoinSpec {
+            probe: Table::from_multiset(&fact).unwrap(),
+            probe_key: "k".into(),
+            build: Table::from_multiset(&dim).unwrap(),
+            build_key: "id".into(),
+            group_by: "g".into(),
+            repartition,
+        }
+    }
+
+    /// Sequential oracle: group counts of the joined rows.
+    fn oracle(s: &ShuffleJoinSpec) -> Vec<(Value, f64)> {
+        let pk = s.probe.schema.field_id(&s.probe_key).unwrap();
+        let bk = s.build.schema.field_id(&s.build_key).unwrap();
+        let gb = s.probe.schema.field_id(&s.group_by).unwrap();
+        let mut mult: HashMap<Value, f64> = HashMap::new();
+        for r in 0..s.build.len() {
+            *mult.entry(s.build.value(r, bk)).or_insert(0.0) += 1.0;
+        }
+        let mut acc: HashMap<Value, f64> = HashMap::new();
+        for r in 0..s.probe.len() {
+            if let Some(&m) = mult.get(&s.probe.value(r, pk)) {
+                *acc.entry(s.probe.value(r, gb)).or_insert(0.0) += m;
+            }
+        }
+        let mut v: Vec<_> = acc.into_iter().collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    #[test]
+    fn shuffle_join_matches_oracle_with_and_without_salting() {
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(64));
+        for repartition in [false, true] {
+            let s = spec(4000, true, repartition);
+            let r = run_shuffle_join(&cfg, &s).unwrap();
+            assert_eq!(r.pairs, oracle(&s));
+            assert!(r.metrics.tags.iter().any(|t| t == "dist.shuffle"));
+            assert_eq!(
+                r.metrics.tags.iter().any(|t| t == "dist.repartition_skew"),
+                repartition,
+                "salting tag must track the decision: {:?}",
+                r.metrics.tags
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_keys_never_trigger_the_salting_tag() {
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(64));
+        let s = spec(4000, false, true);
+        let r = run_shuffle_join(&cfg, &s).unwrap();
+        assert_eq!(r.pairs, oracle(&s));
+        assert!(!r.metrics.tags.iter().any(|t| t == "dist.repartition_skew"));
+    }
+
+    #[test]
+    fn salting_rebalances_the_hot_shard() {
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(64));
+        let skewed = run_shuffle_join(&cfg, &spec(4000, true, false)).unwrap();
+        let salted = run_shuffle_join(&cfg, &spec(4000, true, true)).unwrap();
+        let max_of = |m: &Metrics| *m.chunks_per_worker.values().max().unwrap();
+        assert!(
+            max_of(&salted.metrics) < max_of(&skewed.metrics),
+            "salting must shrink the hottest worker's share: {:?} vs {:?}",
+            salted.metrics.chunks_per_worker,
+            skewed.metrics.chunks_per_worker
+        );
+    }
+
+    #[test]
+    fn crash_and_lost_flush_recover_exactly() {
+        let s = spec(4000, true, true);
+        let want = oracle(&s);
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(64))
+            .with_flush_every(2)
+            .with_faults(FaultPlan::none().crash(1, 2).lose_flush(0, 0));
+        let r = run_shuffle_join(&cfg, &s).unwrap();
+        assert_eq!(r.pairs, want);
+        assert_eq!(r.metrics.lost_flushes, 1);
+        assert!(r.metrics.failures_recovered >= 1);
+        assert!(r.metrics.chunks_retried >= 2);
+        assert!(r.metrics.tags.iter().any(|t| t == "dist.retry"));
+        assert!(r.metrics.tags.iter().any(|t| t == "dist.lost_result"));
+    }
+}

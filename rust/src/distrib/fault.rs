@@ -1,0 +1,182 @@
+//! Deterministic fault and latency injection for the simulated cluster.
+//!
+//! A [`FaultPlan`] is the *entire* failure schedule of one distributed
+//! run, fixed up front: which workers crash (and after how many chunks),
+//! which workers run slow (latency multipliers), and which flushed
+//! partials are dropped in transit. The coordinator and the Hadoop
+//! simulator both consume the plan, so every resilience path — per-chunk
+//! retry, straggler speculation, lost-result recovery, whole-job restart
+//! — is reproducible from a seed: the same plan always exercises the
+//! same recovery code and yields the same counters.
+//!
+//! Latency multipliers double as the straggler-detection signal: workers
+//! report virtual cost units (`chunk rows × multiplier`) alongside wall
+//! time, so detection thresholds compare exact injected ratios instead
+//! of noisy wall-clock measurements. Tests stay deterministic; the wall
+//! clock still slows down (the worker sleeps the extra time) so benches
+//! see the real effect.
+
+use crate::util::Rng;
+
+/// A worker crash: the node dies when handed its next chunk after
+/// completing `after_chunks`, taking its in-flight chunk and any
+/// unflushed local partials with it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Crash {
+    pub worker: usize,
+    pub after_chunks: usize,
+}
+
+/// A slow worker: every chunk takes `multiplier ×` its normal time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowWorker {
+    pub worker: usize,
+    pub multiplier: f64,
+}
+
+/// A lost result: the `nth_flush`-th (0-based) partial a worker flushes
+/// is dropped in transit — the worker believes it delivered, the leader
+/// never merges it and must re-queue the covered chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LostFlush {
+    pub worker: usize,
+    pub nth_flush: usize,
+}
+
+/// The full seeded failure schedule of one distributed run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub crashes: Vec<Crash>,
+    pub slow: Vec<SlowWorker>,
+    pub lost_flushes: Vec<LostFlush>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.slow.is_empty() && self.lost_flushes.is_empty()
+    }
+
+    /// Add a crash of `worker` after it completes `after_chunks` chunks.
+    pub fn crash(mut self, worker: usize, after_chunks: usize) -> Self {
+        self.crashes.push(Crash {
+            worker,
+            after_chunks,
+        });
+        self
+    }
+
+    /// Add a latency multiplier (`>= 1.0`) for `worker`.
+    pub fn slow(mut self, worker: usize, multiplier: f64) -> Self {
+        self.slow.push(SlowWorker {
+            worker,
+            multiplier: multiplier.max(1.0),
+        });
+        self
+    }
+
+    /// Drop `worker`'s `nth_flush`-th flushed partial in transit.
+    pub fn lose_flush(mut self, worker: usize, nth_flush: usize) -> Self {
+        self.lost_flushes.push(LostFlush { worker, nth_flush });
+        self
+    }
+
+    /// The crash scheduled for `worker`, if any (first match wins).
+    pub fn crash_of(&self, worker: usize) -> Option<Crash> {
+        self.crashes.iter().copied().find(|c| c.worker == worker)
+    }
+
+    /// The latency multiplier for `worker` (1.0 = full speed).
+    pub fn multiplier_of(&self, worker: usize) -> f64 {
+        self.slow
+            .iter()
+            .filter(|s| s.worker == worker)
+            .map(|s| s.multiplier)
+            .fold(1.0, f64::max)
+    }
+
+    /// True when `worker`'s `nth`-th flush (0-based) must be dropped.
+    pub fn loses_flush(&self, worker: usize, nth: usize) -> bool {
+        self.lost_flushes
+            .iter()
+            .any(|l| l.worker == worker && l.nth_flush == nth)
+    }
+
+    /// A seeded random plan over `workers` nodes: independently maybe one
+    /// crash, one straggler, one lost flush — the property-test driver.
+    /// With a single worker the plan is empty (there is nobody left to
+    /// recover on).
+    pub fn random(rng: &mut Rng, workers: usize) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if workers < 2 {
+            return plan;
+        }
+        if rng.below(2) == 1 {
+            plan = plan.crash(
+                rng.below(workers as u64) as usize,
+                rng.below(4) as usize,
+            );
+        }
+        if rng.below(2) == 1 {
+            plan = plan.slow(
+                rng.below(workers as u64) as usize,
+                6.0 + rng.f64() * 10.0,
+            );
+        }
+        if rng.below(2) == 1 {
+            plan = plan.lose_flush(rng.below(workers as u64) as usize, 0);
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_accumulate_and_query() {
+        let p = FaultPlan::none()
+            .crash(2, 3)
+            .slow(1, 8.0)
+            .slow(1, 4.0)
+            .lose_flush(0, 1);
+        assert!(!p.is_empty());
+        assert_eq!(p.crash_of(2), Some(Crash { worker: 2, after_chunks: 3 }));
+        assert_eq!(p.crash_of(0), None);
+        // Multiple slow entries: the worst multiplier wins.
+        assert_eq!(p.multiplier_of(1), 8.0);
+        assert_eq!(p.multiplier_of(5), 1.0);
+        assert!(p.loses_flush(0, 1));
+        assert!(!p.loses_flush(0, 0));
+    }
+
+    #[test]
+    fn multipliers_clamp_to_full_speed() {
+        let p = FaultPlan::none().slow(0, 0.25);
+        assert_eq!(p.multiplier_of(0), 1.0);
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic_and_in_range() {
+        for seed in 0..20u64 {
+            let a = FaultPlan::random(&mut Rng::new(seed), 6);
+            let b = FaultPlan::random(&mut Rng::new(seed), 6);
+            assert_eq!(a, b, "seed {seed} not reproducible");
+            for c in &a.crashes {
+                assert!(c.worker < 6 && c.after_chunks < 4);
+            }
+            for s in &a.slow {
+                assert!(s.worker < 6 && s.multiplier >= 1.0);
+            }
+            for l in &a.lost_flushes {
+                assert!(l.worker < 6);
+            }
+        }
+        assert!(FaultPlan::random(&mut Rng::new(3), 1).is_empty());
+    }
+}

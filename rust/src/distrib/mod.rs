@@ -4,13 +4,17 @@
 
 pub mod comm;
 pub mod distribution;
+pub mod fault;
 pub mod partition;
 pub mod redistribute;
 
 pub use comm::{channel, CommStats, LinkModel, Tx};
 pub use distribution::{collect_demands, optimize, DistributionPlan, LoopDemand};
+pub use fault::{Crash, FaultPlan, LostFlush, SlowWorker};
 pub use partition::{
     hash_value, shard_bytes, split, split_direct, split_hash, split_range, tuple_bytes,
     Partitioning,
 };
-pub use redistribute::{estimated_cost_bytes, redistribute};
+pub use redistribute::{
+    detect_heavy_hitters, estimated_cost_bytes, redistribute, redistribute_skew, SkewPlan,
+};

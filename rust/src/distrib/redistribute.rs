@@ -2,17 +2,182 @@
 //! communication cost accounted — the "expensive data re-distribution"
 //! §III-A4 teaches the compiler to avoid.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::exec::block_bounds;
 use crate::ir::{Multiset, Value};
-use crate::storage::Table;
+use crate::storage::{ColumnStats, Table};
 
 use super::comm::CommStats;
 use super::partition::{hash_value, shard_bytes, tuple_bytes, Partitioning};
+
+/// The heavy hitters of one key column: values whose row count exceeds a
+/// fair-share threshold, i.e. keys a plain hash partitioning would pile
+/// onto one node. Produced by [`detect_heavy_hitters`], consumed by
+/// [`redistribute_skew`] and the coordinator's shuffle join.
+#[derive(Debug, Clone, Default)]
+pub struct SkewPlan {
+    /// The key field the plan describes.
+    pub field: String,
+    /// Hot `(value, row_count)` pairs, heaviest first.
+    pub hot: Vec<(Value, u64)>,
+    /// The row-count bar a key had to clear to be listed.
+    pub threshold: u64,
+}
+
+impl SkewPlan {
+    pub fn is_empty(&self) -> bool {
+        self.hot.is_empty()
+    }
+
+    pub fn is_hot(&self, v: &Value) -> bool {
+        self.hot.iter().any(|(h, _)| h == v)
+    }
+
+    /// Short human-readable summary for `Engine::explain` details.
+    pub fn render(&self) -> String {
+        let keys: Vec<String> = self
+            .hot
+            .iter()
+            .map(|(v, n)| format!("{v:?}×{n}"))
+            .collect();
+        format!("threshold={} hot=[{}]", self.threshold, keys.join(", "))
+    }
+}
+
+/// Detect heavy-hitter values of `table.field` using the column's
+/// statistics to keep the scan cheap: a value's count can never exceed
+/// its histogram bucket's count, so buckets below the threshold are
+/// pruned before any exact counting; low-NDV columns (the usual join-key
+/// shape — dictionary NDV is exact) fall back to a full count pass; a
+/// high-NDV column with no histogram cannot concentrate mass and reports
+/// no skew.
+///
+/// The threshold is half a node's fair share, `rows / (2·nodes)`: a key
+/// above it visibly unbalances a hash partitioning over `nodes`.
+pub fn detect_heavy_hitters(
+    table: &Table,
+    field: &str,
+    stats: &ColumnStats,
+    nodes: usize,
+) -> Result<SkewPlan> {
+    let fid = table
+        .schema
+        .field_id(field)
+        .ok_or_else(|| anyhow::anyhow!("no field `{field}`"))?;
+    let rows = table.len() as u64;
+    let mut plan = SkewPlan {
+        field: field.to_string(),
+        hot: Vec::new(),
+        threshold: (rows / (2 * nodes.max(1) as u64)).max(2),
+    };
+    if rows == 0 || nodes < 2 {
+        return Ok(plan);
+    }
+
+    // Which rows are worth counting exactly?
+    enum Scan {
+        /// Count every value (low NDV: the count map stays small).
+        Full,
+        /// Count only values landing in histogram buckets that could
+        /// hold a heavy hitter.
+        Buckets { lo: f64, width: f64, hot: Vec<bool> },
+        /// No concentration possible.
+        Skip,
+    }
+    let scan = if stats.ndv <= nodes as u64 * 64 {
+        Scan::Full
+    } else if let Some(h) = &stats.histogram {
+        let hot: Vec<bool> = h.counts.iter().map(|&c| c >= plan.threshold).collect();
+        if hot.iter().any(|&b| b) {
+            let width = (h.hi - h.lo) / h.counts.len() as f64;
+            Scan::Buckets { lo: h.lo, width, hot }
+        } else {
+            Scan::Skip
+        }
+    } else {
+        Scan::Skip
+    };
+
+    let mut counts: HashMap<Value, u64> = HashMap::new();
+    match scan {
+        Scan::Skip => return Ok(plan),
+        Scan::Full => {
+            for row in 0..table.len() {
+                *counts.entry(table.value(row, fid)).or_insert(0) += 1;
+            }
+        }
+        Scan::Buckets { lo, width, hot } => {
+            for row in 0..table.len() {
+                let v = table.value(row, fid);
+                let x = match &v {
+                    Value::Int(i) => *i as f64,
+                    Value::Float(f) => *f,
+                    _ => continue,
+                };
+                let idx = (((x - lo) / width) as usize).min(hot.len() - 1);
+                if hot[idx] {
+                    *counts.entry(v).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+    plan.hot = counts
+        .into_iter()
+        .filter(|&(_, n)| n >= plan.threshold)
+        .collect();
+    plan.hot.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    Ok(plan)
+}
+
+/// Hash-redistribute `shards` on `field`, except that rows carrying a
+/// hot key from `plan` are *salted*: dealt round-robin across all nodes
+/// instead of hashed, splitting each hot partition into per-node
+/// sub-shards (the coordinator merges the sub-aggregates, so correctness
+/// is unaffected). Moved tuples are charged to `stats` exactly like
+/// [`redistribute`].
+pub fn redistribute_skew(
+    shards: &[Table],
+    field: &str,
+    plan: &SkewPlan,
+    stats: &Arc<CommStats>,
+) -> Result<Vec<Table>> {
+    let n = shards.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let schema = shards[0].schema.clone();
+    let fid = schema
+        .field_id(field)
+        .ok_or_else(|| anyhow::anyhow!("no field `{field}`"))?;
+    let hot: HashSet<&Value> = plan.hot.iter().map(|(v, _)| v).collect();
+    let mut parts: Vec<Multiset> = (0..n).map(|_| Multiset::new(schema.clone())).collect();
+    let mut moved = 0usize;
+    let mut salt = 0usize;
+    for (src, t) in shards.iter().enumerate() {
+        for row in 0..t.len() {
+            let tuple = t.tuple(row);
+            let dst = if hot.contains(&tuple[fid]) {
+                salt += 1;
+                (salt - 1) % n
+            } else {
+                (hash_value(&tuple[fid]) % n as u64) as usize
+            };
+            if dst != src {
+                moved += tuple_bytes(&tuple);
+            }
+            parts[dst].push(tuple);
+        }
+    }
+    stats.record(moved);
+    parts
+        .iter()
+        .map(|m| Table::from_multiset(m))
+        .collect::<Result<Vec<_>>>()
+}
 
 /// Redistribute shards to the `target` partitioning, charging every tuple
 /// that crosses nodes to `stats`. Tuples already resident on their target
@@ -231,5 +396,103 @@ mod tests {
         let est = estimated_cost_bytes(&s);
         let total: usize = s.iter().map(shard_bytes).sum();
         assert!(est > 0 && est < total);
+    }
+
+    /// One key holds `hot_frac` of the rows; the rest spread uniformly.
+    fn skewed_table(n: usize, hot_frac: f64, cold_keys: i64) -> Table {
+        let schema = Schema::new(vec![("k", DataType::Int), ("v", DataType::Int)]);
+        let mut m = Multiset::new(schema);
+        let hot_rows = (n as f64 * hot_frac) as usize;
+        for i in 0..n {
+            let k = if i < hot_rows {
+                0
+            } else {
+                1 + (i as i64 % cold_keys)
+            };
+            m.push(vec![Value::Int(k), Value::Int(i as i64)]);
+        }
+        Table::from_multiset(&m).unwrap()
+    }
+
+    #[test]
+    fn heavy_hitters_found_on_skew_and_absent_on_uniform() {
+        use crate::storage::ColumnStats;
+        let skewed = skewed_table(4000, 0.5, 100);
+        let stats = ColumnStats::collect(&skewed, 0);
+        let plan = detect_heavy_hitters(&skewed, "k", &stats, 4).unwrap();
+        assert!(!plan.is_empty());
+        assert_eq!(plan.hot[0].0, Value::Int(0), "{plan:?}");
+        assert!(plan.hot[0].1 >= 2000);
+        assert!(plan.is_hot(&Value::Int(0)) && !plan.is_hot(&Value::Int(7)));
+
+        // Uniform keys: nothing clears half a node's fair share.
+        let uniform = skewed_table(4000, 0.0, 100);
+        let stats = ColumnStats::collect(&uniform, 0);
+        let plan = detect_heavy_hitters(&uniform, "k", &stats, 4).unwrap();
+        assert!(plan.is_empty(), "{plan:?}");
+    }
+
+    #[test]
+    fn histogram_pruning_skips_high_ndv_uniform_columns() {
+        use crate::storage::ColumnStats;
+        // NDV far above nodes×64 and no bucket concentration: the
+        // detector must bail without building a count map.
+        let schema = Schema::new(vec![("k", DataType::Int)]);
+        let mut m = Multiset::new(schema);
+        for i in 0..20_000i64 {
+            m.push(vec![Value::Int(i)]);
+        }
+        let t = Table::from_multiset(&m).unwrap();
+        let stats = ColumnStats::collect(&t, 0);
+        assert!(stats.ndv > 4 * 64);
+        let plan = detect_heavy_hitters(&t, "k", &stats, 4).unwrap();
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn salted_redistribution_balances_hot_keys() {
+        use crate::storage::ColumnStats;
+        let base = skewed_table(4000, 0.6, 100);
+        let stats_col = ColumnStats::collect(&base, 0);
+        let plan = detect_heavy_hitters(&base, "k", &stats_col, 4).unwrap();
+        assert!(!plan.is_empty());
+        let resident = split_direct(&base, 4);
+
+        // Plain hash routing piles the hot key onto one node…
+        let comm = CommStats::new();
+        let hashed = redistribute(&resident, &Partitioning::HashKey("k".into()), &comm).unwrap();
+        let hashed_max = hashed.iter().map(|t| t.len()).max().unwrap();
+        assert!(hashed_max >= 2400, "hot key must dominate one shard");
+
+        // …salting deals it round-robin: near-perfect balance.
+        let comm = CommStats::new();
+        let salted = redistribute_skew(&resident, "k", &plan, &comm).unwrap();
+        assert_eq!(total_rows(&salted), 4000);
+        let salted_max = salted.iter().map(|t| t.len()).max().unwrap();
+        assert!(
+            salted_max < hashed_max / 2,
+            "salting must at least halve the hottest shard: {salted_max} vs {hashed_max}"
+        );
+        assert!(comm.total_bytes() > 0, "moved tuples must be charged");
+
+        // Cold keys stay colocated (only hot keys are salted).
+        let mut owner: std::collections::HashMap<i64, usize> = Default::default();
+        for (s, t) in salted.iter().enumerate() {
+            for row in 0..t.len() {
+                let k = t.value(row, 0).as_int().unwrap();
+                if k == 0 {
+                    continue;
+                }
+                if let Some(prev) = owner.insert(k, s) {
+                    assert_eq!(prev, s, "cold key {k} split across shards");
+                }
+            }
+        }
+        // The hot key lands on every shard.
+        let hot_shards = salted
+            .iter()
+            .filter(|t| (0..t.len()).any(|r| t.value(r, 0) == Value::Int(0)))
+            .count();
+        assert_eq!(hot_shards, 4);
     }
 }

@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::distrib::hash_value;
+use crate::distrib::{hash_value, FaultPlan};
 use crate::ir::Value;
 use crate::storage::{temp_path, Table};
 
@@ -46,6 +46,12 @@ pub struct HadoopConfig {
     pub job_startup: Duration,
     /// Per-task dispatch latency (task-tracker heartbeat scheduling).
     pub task_dispatch: Duration,
+    /// Deterministic fault schedule, interpreted per *task index* (the
+    /// JobTracker's view): a crash fails that task's first attempt (the
+    /// attempt's partial spill is discarded and the task re-dispatched,
+    /// Hadoop's task-level re-execution), a latency multiplier slows
+    /// that task's dispatch (a loaded tracker heartbeating late).
+    pub faults: FaultPlan,
 }
 
 impl Default for HadoopConfig {
@@ -59,6 +65,7 @@ impl Default for HadoopConfig {
             task_slots: 14,
             job_startup: Duration::from_millis(2500),
             task_dispatch: Duration::from_millis(120),
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -72,7 +79,14 @@ impl HadoopConfig {
             task_slots: map_tasks.max(reducers),
             job_startup: Duration::ZERO,
             task_dispatch: Duration::ZERO,
+            faults: FaultPlan::none(),
         }
+    }
+
+    /// Inject a deterministic fault schedule (see the `faults` field).
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
     }
 }
 
@@ -84,6 +98,8 @@ pub struct HadoopMetrics {
     pub reduce_tasks: usize,
     pub spill_bytes: u64,
     pub shuffle_records: u64,
+    /// Task attempts that failed and were re-dispatched (map + reduce).
+    pub tasks_retried: u64,
 }
 
 /// The job result: (key, aggregate) pairs + metrics.
@@ -111,7 +127,7 @@ pub fn run(cfg: &HadoopConfig, mr: &MapReduceProgram, input: &Table) -> Result<H
     }
     let spills = Arc::new(spills);
 
-    run_task_pool(cfg, m_tasks, |m| {
+    let map_retries = run_task_pool(cfg, m_tasks, |m| {
         let (lo, hi) = crate::exec::block_bounds(input.len(), m_tasks, m);
         // Partition buffers of serialized records.
         let mut buffers: Vec<Vec<String>> = vec![Vec::new(); reducers];
@@ -151,7 +167,7 @@ pub fn run(cfg: &HadoopConfig, mr: &MapReduceProgram, input: &Table) -> Result<H
     // ---- Shuffle + Reduce phase ------------------------------------------
     let outputs: Arc<Mutex<Vec<Vec<(Value, f64)>>>> =
         Arc::new(Mutex::new(vec![Vec::new(); reducers]));
-    run_task_pool(cfg, reducers, |r| {
+    let reduce_retries = run_task_pool(cfg, reducers, |r| {
         // Fetch this reducer's partition from every map's spill (disk read).
         let mut records: Vec<(String, f64)> = Vec::new();
         for m in 0..m_tasks {
@@ -207,14 +223,18 @@ pub fn run(cfg: &HadoopConfig, mr: &MapReduceProgram, input: &Table) -> Result<H
             reduce_tasks: reducers,
             spill_bytes: spill_bytes.load(Ordering::Relaxed),
             shuffle_records: shuffle_records.load(Ordering::Relaxed),
+            tasks_retried: map_retries + reduce_retries,
         },
     })
 }
 
 /// Run `n` tasks on `cfg.task_slots` concurrent slots, charging the
-/// per-task dispatch latency.
-fn run_task_pool(cfg: &HadoopConfig, n: usize, task: impl Fn(usize) + Sync) {
+/// per-task dispatch latency and applying the fault schedule per task
+/// index. Returns the number of re-dispatched (failed-then-retried)
+/// attempts.
+fn run_task_pool(cfg: &HadoopConfig, n: usize, task: impl Fn(usize) + Sync) -> u64 {
     let next = AtomicUsize::new(0);
+    let retried = AtomicU64::new(0);
     let slots = cfg.task_slots.max(1).min(n.max(1));
     std::thread::scope(|scope| {
         for _ in 0..slots {
@@ -223,13 +243,24 @@ fn run_task_pool(cfg: &HadoopConfig, n: usize, task: impl Fn(usize) + Sync) {
                 if i >= n {
                     return;
                 }
-                if !cfg.task_dispatch.is_zero() {
-                    std::thread::sleep(cfg.task_dispatch);
+                let mult = cfg.faults.multiplier_of(i);
+                let dispatch = cfg.task_dispatch.mul_f64(mult);
+                if !dispatch.is_zero() {
+                    std::thread::sleep(dispatch);
+                }
+                if cfg.faults.crash_of(i).is_some() {
+                    // First attempt dies; its partial output is discarded
+                    // and the JobTracker re-dispatches the whole task.
+                    retried.fetch_add(1, Ordering::Relaxed);
+                    if !dispatch.is_zero() {
+                        std::thread::sleep(dispatch);
+                    }
                 }
                 task(i);
             });
         }
     });
+    retried.load(Ordering::Relaxed)
 }
 
 #[cfg(test)]
@@ -302,6 +333,25 @@ mod tests {
         cfg.job_startup = Duration::from_millis(80);
         let r = run(&cfg, &count_program(), &t).unwrap();
         assert!(r.metrics.elapsed >= Duration::from_millis(80));
+    }
+
+    #[test]
+    fn faulted_tasks_are_retried_and_results_stay_exact() {
+        use crate::distrib::FaultPlan;
+        let t = access_table(5000, 37);
+        // Task index 2 crashes once (both pools have a task 2: one map
+        // retry + one reduce retry); task 1 runs slow.
+        let cfg = HadoopConfig::instant(8, 3)
+            .with_faults(FaultPlan::none().crash(2, 0).slow(1, 5.0));
+        let r = run(&cfg, &count_program(), &t).unwrap();
+        assert_eq!(r.metrics.tasks_retried, 2);
+        // The retried attempts' spills are not double-counted.
+        assert_eq!(r.metrics.shuffle_records, 5000);
+        assert_eq!(r.pairs.iter().map(|(_, n)| *n).sum::<f64>(), 5000.0);
+        assert_eq!(r.pairs.len(), 37);
+        // A fault-free run retries nothing.
+        let clean = run(&HadoopConfig::instant(8, 3), &count_program(), &t).unwrap();
+        assert_eq!(clean.metrics.tasks_retried, 0);
     }
 
     #[test]

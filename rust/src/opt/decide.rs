@@ -138,6 +138,9 @@ pub fn optimize(p: &mut Program, catalog: &StorageCatalog) -> Result<OptReport> 
     for s in &mut p.body {
         choose_join_build_side(s, &est, &mut report);
     }
+    for s in &p.body {
+        choose_dist_strategy(s, &est, &mut report);
+    }
     let mut scopes = BTreeMap::new();
     for s in &mut p.body {
         reorder_guards(s, &est, &mut scopes, &mut report);
@@ -509,6 +512,79 @@ fn choose_join_build_side(s: &mut Stmt, est: &Estimator, report: &mut OptReport)
     *s = Stmt::Loop(swapped);
 }
 
+/// Nominal cluster width for the distributed-shipping decision. The
+/// decision is recorded at plan time, before any concrete
+/// `ClusterConfig` exists; 8 workers matches the simulated cluster's
+/// default scale (the paper's testbed order of magnitude).
+const DIST_NOMINAL_WORKERS: u64 = 8;
+
+/// Record how a Figure-1 join nest should ship when executed on the
+/// simulated cluster: broadcast the build side to every worker (moves
+/// `build_rows × (W-1)` rows, probe rows stay put) or hash-shuffle both
+/// sides so every row travels to its key's owning node (moves
+/// `(probe + build) × (W-1)/W` rows). Runs after
+/// `choose_join_build_side`, so the nest is already oriented
+/// probe-outer / build-inner. Record-only: `Engine::sql_distributed`
+/// reads the tag to pick between the shared-hash-table broadcast path
+/// and the repartitioning shuffle executor.
+fn choose_dist_strategy(s: &Stmt, est: &Estimator, report: &mut OptReport) {
+    let Stmt::Loop(outer) = s else { return };
+    if outer.kind != LoopKind::Forelem || outer.emit.is_some() {
+        return;
+    }
+    let Domain::IndexSet(ox) = &outer.domain else {
+        return;
+    };
+    if ox.field_filter.is_some() || ox.distinct.is_some() || ox.partition.is_some() {
+        return;
+    }
+    let [Stmt::Loop(inner)] = outer.body.as_slice() else {
+        return;
+    };
+    if inner.kind != LoopKind::Forelem {
+        return;
+    }
+    let Domain::IndexSet(iix) = &inner.domain else {
+        return;
+    };
+    if iix.distinct.is_some() || iix.partition.is_some() {
+        return;
+    }
+    let Some((_, key)) = &iix.field_filter else {
+        return;
+    };
+    let Expr::Field { var: kvar, .. } = key else {
+        return;
+    };
+    if kvar != &outer.var {
+        return;
+    }
+    // Deeper chains (the inner body being yet another filtered loop)
+    // belong to the N-way order pass; the shipping decision covers the
+    // two-table nest `sql_distributed` executes.
+    if matches!(inner.body.as_slice(), [Stmt::Loop(_)]) {
+        return;
+    }
+    let probe_rows = est.table_rows(&ox.relation);
+    let build_rows = est.table_rows(&iix.relation);
+    let w = DIST_NOMINAL_WORKERS;
+    let broadcast_cost = build_rows.saturating_mul(w - 1);
+    let shuffle_cost = (probe_rows + build_rows) / w * (w - 1);
+    let (tag, verdict) = if broadcast_cost <= shuffle_cost {
+        ("opt.dist_broadcast", "replicate the build side")
+    } else {
+        ("opt.dist_shuffle", "hash-partition both sides")
+    };
+    report.decisions.push(Decision {
+        tag: tag.into(),
+        detail: format!(
+            "{verdict}: probe `{}` ({probe_rows} rows), build `{}` ({build_rows} rows); \
+             broadcast moves {broadcast_cost} rows vs shuffle {shuffle_cost} (W={w})",
+            ox.relation, iix.relation
+        ),
+    });
+}
+
 /// Reorder conjunctive guards most-selective-first (short-circuit `&&`
 /// rejects rows at the cheapest conjunct). Only pure `field cmp literal`
 /// conjuncts are moved; anything else leaves the guard untouched.
@@ -851,6 +927,37 @@ mod tests {
                 "`{q}` changed results"
             );
         }
+    }
+
+    #[test]
+    fn dist_strategy_broadcasts_a_small_build_side() {
+        let c = join_catalog(50, 5000);
+        let mut p = compile_sql(
+            "SELECT w, COUNT(w) FROM big JOIN small ON big.a_id = small.id GROUP BY w",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        // Replicating 50 dimension rows beats moving ~7/8 of 5050 rows.
+        assert!(report.has("opt.dist_broadcast"), "{report:?}");
+        assert!(!report.has("opt.dist_shuffle"));
+        assert!(p.opt_tags.contains(&"opt.dist_broadcast".to_string()));
+    }
+
+    #[test]
+    fn dist_strategy_shuffles_comparable_sides() {
+        let c = join_catalog(3000, 4000);
+        let mut p = compile_sql(
+            "SELECT w, COUNT(w) FROM big JOIN small ON big.a_id = small.id GROUP BY w",
+            &c.schemas(),
+        )
+        .unwrap();
+        let report = optimize(&mut p, &c).unwrap();
+        // Replicating 3000 build rows to 7 peers costs more than moving
+        // ~7/8 of the 7000 total rows to their hash owners.
+        assert!(report.has("opt.dist_shuffle"), "{report:?}");
+        assert!(!report.has("opt.dist_broadcast"));
+        assert!(p.opt_tags.contains(&"opt.dist_shuffle".to_string()));
     }
 
     #[test]

@@ -25,8 +25,10 @@ use std::collections::{BTreeSet, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
-/// A contiguous chunk of iterations `[lo, hi)`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// A contiguous chunk of iterations `[lo, hi)`. `Hash` lets the
+/// coordinator keep its commit set of merged chunks, so duplicated work
+/// (speculative re-execution, re-queued retries) is merged exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Chunk {
     pub lo: usize,
     pub hi: usize,

@@ -1,0 +1,241 @@
+//! Deterministic fault/skew injection matrix (§III-A3: loop scheduling
+//! as the fault-tolerance mechanism, extended to speculation and lost
+//! results).
+//!
+//! Every scenario fixes the *entire* failure schedule up front as a
+//! [`FaultPlan`], so each run exercises exactly the planned recovery
+//! path: the distributed result must stay bag-identical to the
+//! sequential `Engine::sql`, and the retry/speculation counters must
+//! equal what the injected schedule implies — not merely "some recovery
+//! happened".
+
+use std::sync::Arc;
+
+use forelem::compiler::Engine;
+use forelem::coordinator::{run_job, AggJob, ClusterConfig};
+use forelem::distrib::FaultPlan;
+use forelem::ir::Value;
+use forelem::sched::Policy;
+use forelem::storage::{StorageCatalog, Table};
+use forelem::workload::{access_log, AccessLogSpec};
+
+const Q: &str = "SELECT url, COUNT(url) FROM access GROUP BY url";
+
+fn workload(rows: usize) -> forelem::ir::Multiset {
+    access_log(&AccessLogSpec {
+        rows,
+        urls: 300,
+        skew: 1.1,
+        seed: 17,
+    })
+}
+
+fn engine(rows: usize) -> Engine {
+    let mut c = StorageCatalog::new();
+    c.insert_multiset("access", &workload(rows)).unwrap();
+    let mut e = Engine::new(c);
+    e.options.reformat = forelem::compiler::ReformatMode::Force;
+    e
+}
+
+fn table(rows: usize) -> Arc<Table> {
+    let mut t = Table::from_multiset(&workload(rows)).unwrap();
+    t.dict_encode_field(0).unwrap();
+    Arc::new(t)
+}
+
+fn check_exact(t: &Arc<Table>, pairs: &[(Value, f64)]) {
+    let mut want: std::collections::HashMap<Value, f64> = Default::default();
+    for r in 0..t.len() {
+        *want.entry(t.value(r, 0)).or_insert(0.0) += 1.0;
+    }
+    assert_eq!(pairs.len(), want.len());
+    for (k, x) in pairs {
+        assert_eq!(want[k], *x, "key {k}");
+    }
+}
+
+/// The four seeded scenarios of the matrix. Each returns (name, plan).
+fn matrix() -> Vec<(&'static str, FaultPlan)> {
+    vec![
+        ("crash-only", FaultPlan::none().crash(2, 5)),
+        ("straggler-only", FaultPlan::none().slow(3, 8.0)),
+        (
+            "crash+straggler",
+            FaultPlan::none().crash(1, 5).slow(3, 8.0),
+        ),
+        ("lost-result", FaultPlan::none().lose_flush(1, 0)),
+    ]
+}
+
+/// Every matrix entry leaves `sql_distributed` bag-identical to the
+/// sequential engine, and the derived `dist.*` tags route correctly.
+#[test]
+fn every_seeded_fault_plan_is_bag_identical_to_sql() {
+    let mut e = engine(60_000);
+    let reference = e.sql(Q).unwrap();
+    for (name, plan) in matrix() {
+        let cfg = ClusterConfig::new(4, Policy::FixedChunk(512))
+            .with_flush_every(4)
+            .with_faults(plan.clone());
+        let (r, m) = e.sql_distributed(Q, &cfg).unwrap();
+        assert!(
+            m.bag_eq(reference.result().unwrap()),
+            "{name}: distributed result diverged: {}",
+            r.metrics.render()
+        );
+        let has = |t: &str| r.metrics.tags.iter().any(|x| x == t);
+        match name {
+            "crash-only" => assert!(has("dist.retry"), "{name}: {:?}", r.metrics.tags),
+            "straggler-only" => {
+                assert!(has("dist.speculative"), "{name}: {:?}", r.metrics.tags)
+            }
+            "crash+straggler" => assert!(
+                has("dist.retry") && has("dist.speculative"),
+                "{name}: {:?}",
+                r.metrics.tags
+            ),
+            "lost-result" => assert!(
+                has("dist.lost_result") && has("dist.retry"),
+                "{name}: {:?}",
+                r.metrics.tags
+            ),
+            _ => unreachable!(),
+        }
+        assert_eq!(r.metrics.restarts, 0, "{name}: dynamic policy never restarts");
+    }
+}
+
+/// Crash after 5 completed chunks with flush_every=4: the first flush
+/// committed 4 chunks; the 5th (unflushed) and the in-flight 6th die
+/// with the node — exactly 2 re-queued chunks, 1 recovered failure, and
+/// the dead worker's committed count frozen at 4.
+#[test]
+fn crash_retry_counters_equal_the_injected_schedule() {
+    let t = table(60_000);
+    let cfg = ClusterConfig::new(4, Policy::FixedChunk(512))
+        .with_flush_every(4)
+        .with_faults(FaultPlan::none().crash(2, 5));
+    let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+    check_exact(&t, &r.pairs);
+    assert_eq!(r.metrics.failures_recovered, 1);
+    assert_eq!(r.metrics.chunks_retried, 2);
+    assert_eq!(r.metrics.chunks_per_worker.get(&2), Some(&4));
+    assert_eq!(r.metrics.restarts, 0);
+    assert!(r.metrics.tags.iter().any(|t| t == "dist.retry"));
+}
+
+/// An 8× straggler against the 4× detection threshold: exactly one
+/// straggler detected (virtual cost units make the ratio exact, not
+/// wall-clock-noisy), with speculative duplicates launched for its
+/// remaining chunks.
+#[test]
+fn straggler_detection_is_deterministic() {
+    let t = table(60_000);
+    let cfg = ClusterConfig::new(4, Policy::FixedChunk(1024))
+        .with_faults(FaultPlan::none().slow(3, 8.0));
+    let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+    check_exact(&t, &r.pairs);
+    assert_eq!(r.metrics.stragglers_detected, 1);
+    assert!(r.metrics.speculative_launched >= 1);
+    assert!(r.metrics.speculative_won <= r.metrics.speculative_launched);
+    assert!(r.metrics.tags.iter().any(|t| t == "dist.speculative"));
+    assert_eq!(r.metrics.restarts, 0);
+
+    // Speculation off: the same plan still completes exactly, with the
+    // straggler detected but never duplicated.
+    let cfg_off = ClusterConfig::new(4, Policy::FixedChunk(1024))
+        .with_faults(FaultPlan::none().slow(3, 8.0))
+        .with_speculation(false);
+    let r2 = run_job(&cfg_off, &AggJob::count(t.clone(), 0)).unwrap();
+    check_exact(&t, &r2.pairs);
+    assert_eq!(r2.metrics.speculative_launched, 0);
+    assert_eq!(r2.metrics.speculative_won, 0);
+}
+
+/// Losing worker 1's first flush (flush_every=4) drops exactly one
+/// partial covering 4 chunks: the leader detects the gap via the flush
+/// ordinal and re-queues those 4 chunks.
+#[test]
+fn lost_result_requeues_exactly_the_dropped_batch() {
+    let t = table(60_000);
+    let cfg = ClusterConfig::new(4, Policy::FixedChunk(512))
+        .with_flush_every(4)
+        .with_faults(FaultPlan::none().lose_flush(1, 0));
+    let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+    check_exact(&t, &r.pairs);
+    assert_eq!(r.metrics.lost_flushes, 1);
+    assert_eq!(r.metrics.chunks_retried, 4);
+    assert_eq!(r.metrics.failures_recovered, 0);
+    assert!(r.metrics.tags.iter().any(|t| t == "dist.lost_result"));
+}
+
+/// Crash and straggler in one schedule: both recovery paths fire in the
+/// same run and the counters stay independent.
+#[test]
+fn combined_crash_and_straggler_recover_in_one_run() {
+    let t = table(60_000);
+    let cfg = ClusterConfig::new(4, Policy::FixedChunk(512))
+        .with_flush_every(4)
+        .with_faults(FaultPlan::none().crash(1, 5).slow(3, 8.0));
+    let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+    check_exact(&t, &r.pairs);
+    assert_eq!(r.metrics.failures_recovered, 1);
+    assert_eq!(r.metrics.stragglers_detected, 1);
+    assert!(r.metrics.chunks_retried >= 2);
+    let tags = &r.metrics.tags;
+    assert!(tags.iter().any(|t| t == "dist.retry"), "{tags:?}");
+    assert!(tags.iter().any(|t| t == "dist.speculative"), "{tags:?}");
+}
+
+/// The promoted example's policy sweep: a node dies immediately, and
+/// every scheduling discipline still counts every row — they differ
+/// only in recovery cost (restart for static, chunk re-queue for
+/// dynamic, super-chunk for hybrid).
+#[test]
+fn every_policy_survives_an_immediate_node_death() {
+    let t = table(60_000);
+    for policy in [
+        Policy::StaticBlock,
+        Policy::Gss,
+        Policy::Trapezoid,
+        Policy::Hybrid {
+            super_chunks_per_worker: 8,
+        },
+    ] {
+        let cfg = ClusterConfig::new(4, policy).with_faults(FaultPlan::none().crash(3, 0));
+        let r = run_job(&cfg, &AggJob::count(t.clone(), 0)).unwrap();
+        check_exact(&t, &r.pairs);
+        let total: f64 = r.pairs.iter().map(|(_, n)| *n).sum();
+        assert_eq!(total as usize, 60_000);
+        if matches!(policy, Policy::StaticBlock) {
+            assert_eq!(r.metrics.restarts, 1, "static schedules must restart");
+            assert!(r.metrics.tags.iter().any(|t| t == "dist.restart"));
+        } else {
+            assert_eq!(r.metrics.restarts, 0, "{policy:?} must recover in place");
+            assert_eq!(r.metrics.failures_recovered, 1);
+        }
+    }
+}
+
+/// Fault-free runs carry no fault tags: the tag set is a faithful
+/// record, not a constant.
+#[test]
+fn clean_runs_carry_no_fault_tags() {
+    let mut e = engine(20_000);
+    let reference = e.sql(Q).unwrap();
+    let cfg = ClusterConfig::new(4, Policy::Gss);
+    let (r, m) = e.sql_distributed(Q, &cfg).unwrap();
+    assert!(m.bag_eq(reference.result().unwrap()));
+    assert!(
+        !r.metrics.tags.iter().any(|t| t.starts_with("dist.")
+            && t != "dist.shuffle"
+            && t != "dist.broadcast"),
+        "{:?}",
+        r.metrics.tags
+    );
+    assert_eq!(r.metrics.failures_recovered, 0);
+    assert_eq!(r.metrics.chunks_retried, 0);
+    assert_eq!(r.metrics.lost_flushes, 0);
+    assert_eq!(r.metrics.stragglers_detected, 0);
+}

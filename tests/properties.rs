@@ -1236,3 +1236,148 @@ fn hadoop_sim_equals_interpreter_for_random_tables() {
         Ok(())
     });
 }
+
+/// Fault-tag consistency: the `dist.*` tag set is derived from the
+/// counters, and the counters never exceed what the plan injected.
+fn fault_tags_match_counters(
+    m: &forelem::coordinator::Metrics,
+    plan: &forelem::distrib::FaultPlan,
+) -> Result<(), String> {
+    let has = |t: &str| m.tags.iter().any(|x| x == t);
+    prop_assert!(
+        has("dist.retry") == (m.failures_recovered > 0 || m.chunks_retried > 0),
+        "dist.retry out of sync: {m:?}"
+    );
+    prop_assert!(
+        has("dist.speculative") == (m.stragglers_detected > 0),
+        "dist.speculative out of sync: {m:?}"
+    );
+    prop_assert!(
+        has("dist.lost_result") == (m.lost_flushes > 0),
+        "dist.lost_result out of sync: {m:?}"
+    );
+    prop_assert!(
+        has("dist.restart") == (m.restarts > 0),
+        "dist.restart out of sync: {m:?}"
+    );
+    prop_assert!(
+        m.failures_recovered <= plan.crashes.len(),
+        "more failures recovered than crashes injected: {m:?} vs {plan:?}"
+    );
+    prop_assert!(
+        m.lost_flushes <= plan.lost_flushes.len(),
+        "more flushes lost than injected: {m:?} vs {plan:?}"
+    );
+    prop_assert!(
+        m.stragglers_detected <= plan.slow.len(),
+        "more stragglers detected than slowed workers: {m:?} vs {plan:?}"
+    );
+    if plan.is_empty() {
+        prop_assert!(
+            !has("dist.retry")
+                && !has("dist.speculative")
+                && !has("dist.lost_result")
+                && !has("dist.restart"),
+            "clean run carries fault tags: {:?}",
+            m.tags
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn distributed_retail_matches_local_under_random_skew_and_faults() {
+    use forelem::coordinator::ClusterConfig;
+    use forelem::distrib::FaultPlan;
+    use forelem::workload::retail::{self, RetailSpec};
+
+    const JOIN_Q: &str = "SELECT store_id, COUNT(store_id) FROM sales \
+                          JOIN products ON sales.product_id = products.id \
+                          GROUP BY store_id";
+    const FLAT_Q: &str = "SELECT store_id, COUNT(store_id) FROM sales GROUP BY store_id";
+
+    forall_seeds(8, |rng| {
+        let skewed = rng.below(2) == 1;
+        let sales = 2_000 + rng.below(4_000) as usize;
+        // Build-side size picks the shipping strategy deterministically:
+        // a 40-row dimension broadcasts, a sales/4-row one shuffles.
+        let shuffle_sides = rng.below(2) == 1;
+        let products = if shuffle_sides { (sales / 4).max(64) } else { 40 };
+        let spec = RetailSpec {
+            sales,
+            customers: 50,
+            products,
+            stores: 12,
+            categories: 8,
+            product_domain_factor: 1,
+            skew: if skewed { 2.0 } else { 0.0 },
+            seed: rng.below(1 << 30),
+        };
+        let mut catalog = StorageCatalog::new();
+        retail::register_retail(&mut catalog, &spec).map_err(|e| e.to_string())?;
+        let mut e = Engine::new(catalog);
+
+        let workers = 2 + rng.below(5) as usize;
+        let plan = FaultPlan::random(rng, workers);
+        let cfg = ClusterConfig::new(workers, Policy::FixedChunk(128))
+            .with_flush_every(2 + rng.below(6) as usize)
+            .with_faults(plan.clone());
+
+        for q in [FLAT_Q, JOIN_Q] {
+            let reference = e.sql(q).map_err(|e| e.to_string())?;
+            let want = reference.result().ok_or("no sequential result")?.clone();
+            let (r, got) = e.sql_distributed(q, &cfg).map_err(|e| e.to_string())?;
+            prop_assert!(
+                got.bag_eq(&want),
+                "diverged: sales={sales} products={products} workers={workers} \
+                 skew={} plan={plan:?} q={q}: {}",
+                spec.skew,
+                r.metrics.render()
+            );
+            fault_tags_match_counters(&r.metrics, &plan)?;
+            if q == JOIN_Q {
+                let has = |t: &str| r.metrics.tags.iter().any(|x| x == t);
+                let opt = e.compile(q).map_err(|e| e.to_string())?;
+                let opt = opt.opt.ok_or("optimizer report missing")?;
+                if shuffle_sides {
+                    prop_assert!(
+                        opt.has("opt.dist_shuffle") && !opt.has("opt.dist_broadcast"),
+                        "sales={sales} products={products}: expected shuffle decision"
+                    );
+                    prop_assert!(
+                        has("dist.shuffle") && !has("dist.broadcast"),
+                        "decision did not route to the shuffle executor: {:?}",
+                        r.metrics.tags
+                    );
+                } else {
+                    prop_assert!(
+                        opt.has("opt.dist_broadcast") && !opt.has("opt.dist_shuffle"),
+                        "sales={sales} products={products}: expected broadcast decision"
+                    );
+                    prop_assert!(
+                        has("dist.broadcast") && !has("dist.shuffle"),
+                        "decision did not route to the broadcast executor: {:?}",
+                        r.metrics.tags
+                    );
+                }
+                if shuffle_sides && skewed {
+                    // Zipf(2.0) concentrates >40% of the fact on the top
+                    // product — far past the rows/(2*nodes) hot threshold.
+                    prop_assert!(
+                        has("dist.repartition_skew"),
+                        "skewed shuffle without salting: {:?}",
+                        r.metrics.tags
+                    );
+                }
+                if !skewed {
+                    prop_assert!(
+                        !has("dist.repartition_skew"),
+                        "uniform keys flagged as skewed: {:?}",
+                        r.metrics.tags
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
